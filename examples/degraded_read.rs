@@ -1,0 +1,55 @@
+//! Degraded read (paper Exp 3) on the real mini-HDFS data path: a client
+//! reads a block whose node just died; the stack rebuilds it on the fly
+//! through the PJRT GF kernels with D³'s inner-rack aggregation.
+//!
+//! Run: `make artifacts && cargo run --release --example degraded_read`
+
+use std::sync::Arc;
+
+use d3ec::cluster::MiniCluster;
+use d3ec::codes::CodeSpec;
+use d3ec::placement::{D3Placement, RddPlacement};
+use d3ec::runtime::default_artifacts_dir;
+use d3ec::topology::{Location, SystemSpec};
+
+fn main() -> anyhow::Result<()> {
+    let backend = if default_artifacts_dir().join("manifest.json").exists() {
+        "pjrt"
+    } else {
+        "native"
+    };
+    let mut spec = SystemSpec::paper_default();
+    spec.block_size = 1 << 20; // 1 MiB blocks for a fast demo
+    spec.net.inner_mbps = 4000.0;
+    spec.net.cross_mbps = 400.0;
+    println!("degraded read demo — (6,3)-RS, 1 MiB blocks, backend={backend}\n");
+    println!("{:<6} {:>12} {:>14}", "policy", "latency", "rate(MB/s)");
+    for name in ["d3", "rdd"] {
+        let code = CodeSpec::Rs { k: 6, m: 3 };
+        let policy: Arc<dyn d3ec::placement::Placement> = match name {
+            "d3" => Arc::new(D3Placement::new(code, spec.cluster)?),
+            _ => Arc::new(RddPlacement::new(code, spec.cluster, 9)),
+        };
+        let cluster = MiniCluster::new(spec, policy, backend, 9)?;
+        let mut total = std::time::Duration::ZERO;
+        let samples = 5u64;
+        for sid in 0..samples {
+            let data: Vec<Vec<u8>> =
+                (0..6).map(|b| vec![(sid as u8) ^ (b as u8 * 7); spec.block_size as usize]).collect();
+            cluster.write_stripe(sid, &data)?;
+            let victim = cluster.locate(sid, 0);
+            cluster.fail_node(victim);
+            let (got, lat) = cluster.degraded_read(sid, 0, Location::new(7, 1))?;
+            assert_eq!(got, data[0], "degraded read returned wrong bytes");
+            total += lat;
+        }
+        let avg = total / samples as u32;
+        println!(
+            "{name:<6} {:>12.2?} {:>14.1}",
+            avg,
+            spec.block_size as f64 / avg.as_secs_f64() / 1e6
+        );
+    }
+    println!("\n(paper Fig 10: D³ cuts (6,3) degraded-read latency by ~47% vs RDD)");
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Recovery comparison — D³ vs RDD vs HDD on the fluid simulator at the
+//! paper's full scale (Exp 1/2 scenario), plus the ablation variants.
+//!
+//! Run: `cargo run --release --example recovery_comparison`
+
+use d3ec::codes::CodeSpec;
+use d3ec::experiments::{avg_recovery, build_policy};
+use d3ec::topology::SystemSpec;
+
+fn main() {
+    let spec = SystemSpec::paper_default();
+    println!("simulated testbed: 8 racks × 3 DataNodes, 16 MB blocks, 1000 Mb/s ToR, 100 Mb/s core");
+    for (k, m) in [(2usize, 1usize), (3, 2), (6, 3)] {
+        let code = CodeSpec::Rs { k, m };
+        println!("\n--- {} ---", code.name());
+        println!("{:<10} {:>12} {:>8}", "policy", "MB/s", "λ");
+        let mut base = 0.0;
+        for name in ["rdd", "hdd", "d3-norot", "d3-rr", "d3"] {
+            let policy = build_policy(name, code, &spec, 3);
+            let out = avg_recovery(&policy, &spec, 1008, 3, 3);
+            if name == "rdd" {
+                base = out.throughput_mb_s;
+            }
+            println!(
+                "{:<10} {:>8.1} ({:>4.2}x) {:>8.3}",
+                name,
+                out.throughput_mb_s,
+                out.throughput_mb_s / base,
+                out.lambda
+            );
+        }
+    }
+}

@@ -1,0 +1,102 @@
+"""AOT-lower the Layer-2 graphs to HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser on the Rust side reassigns ids and round-trips cleanly.
+
+Outputs (under --out-dir, default ../artifacts):
+  gf_combine_k{k}_w{W}.hlo.txt       k in 1..=KMAX (btab (k,8) + data (k,W))
+  gf_matmul_m{m}_k{k}_w{W}.hlo.txt   (m, k) per supported code variant
+  xor_k{k}_w{W}.hlo.txt              k in 2..=KMAX (LRC local groups)
+  manifest.json                      shape/dtype index consumed by runtime/
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Largest per-combination fan-in we lower.  Covers (6,3)-RS (k=6 decode,
+# aggregation fan-in <= m=3+...), (4,2,1)-LRC (global repair fan-in l+g=3),
+# and headroom for wide-stripe demos.
+KMAX = 12
+# (m, k) encode variants: HDFS-EC built-ins + the paper's LRC + wide-stripe.
+MATMUL_VARIANTS = [(1, 2), (2, 3), (3, 6), (1, 4), (2, 4), (4, 10), (4, 12)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    # return_tuple=False: all entry points are single-output, and a bare
+    # array result lets the rust side use pjrt_buffer_copy_raw_to_host_sync
+    # (no tuple unwrap / literal round-trip — §Perf).
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    # print_large_constants=True: the GF log/exp tables are embedded as
+    # dense constants; the default printer elides them to "{...}" which the
+    # rust-side parser silently turns into garbage.
+    return comp.as_hlo_text(True)
+
+
+def lower_entry(fn, specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=str(pathlib.Path(__file__).resolve().parents[2] / "artifacts"))
+    ap.add_argument("--out", default=None, help="compat: ignored single-file target")
+    ap.add_argument("--width", type=int, default=model.DEFAULT_W)
+    ap.add_argument("--kmax", type=int, default=KMAX)
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    w = args.width
+    manifest: dict = {"width": w, "dtype": "u8", "iface": "btab-v2", "entries": []}
+
+    def emit(name: str, fn, specs, io: dict) -> None:
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(lower_entry(fn, specs))
+        manifest["entries"].append({"name": name, "file": path.name, **io})
+        print(f"  wrote {path.name}")
+
+    for k in range(1, args.kmax + 1):
+        emit(
+            f"gf_combine_k{k}_w{w}",
+            model.combine,
+            model.combine_spec(k, w),
+            {"op": "combine", "k": k, "w": w},
+        )
+    for m, k in MATMUL_VARIANTS:
+        emit(
+            f"gf_matmul_m{m}_k{k}_w{w}",
+            model.matmul,
+            model.matmul_spec(m, k, w),
+            {"op": "matmul", "m": m, "k": k, "w": w},
+        )
+    for k in range(2, args.kmax + 1):
+        emit(
+            f"xor_k{k}_w{w}",
+            model.xor,
+            model.xor_spec(k, w),
+            {"op": "xor", "k": k, "w": w},
+        )
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {len(manifest['entries'])} artifacts to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,214 @@
+"""Layer-1 Pallas kernels: GF(2^8) linear combination and XOR reduction.
+
+The erasure-coding hot-spot of the D^3 paper is the byte-wise Galois-field
+matrix multiply ``out = coeffs (x) data`` over GF(2^8) with the standard
+erasure-coding polynomial x^8 + x^4 + x^3 + x^2 + 1 (0x11d, as used by
+ISA-L / Jerasure).  By RS *linearity* (paper section 2.2) one primitive covers
+
+  * encode      - coeffs = generator-matrix rows,
+  * decode      - coeffs = rows of the inverted sub-generator,
+  * aggregation - coeffs = the partial sums D^3's recovery sends inner-rack.
+
+The kernels use log/exp-table arithmetic: ``mul(a, b) = exp[log a + log b]``
+with a doubled exp table so no ``mod 255`` is needed on the summed logs.
+
+TPU adaptation (DESIGN.md section 3): the kernel is tiled over the block
+width W with BlockSpec ``(k, TILE_W)``; on TPU TILE_W would be ~8 KiB so a
+grid step holds <= ~128 KiB in VMEM (the CPU artifacts use panel-sized
+tiles - see TILE_W below). GF math cannot use the MXU, so this is a
+VPU/memory-bound kernel - the roofline is bytes moved, ~(k+1) bytes per
+output byte. ``interpret=True`` everywhere: the CPU PJRT client cannot
+execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# GF(2^8) modulus used throughout the repo (must match rust/src/gf/mod.rs).
+GF_POLY = 0x11D
+# 0x02 is a generator of GF(256)* for poly 0x11d.
+GF_GENERATOR = 0x02
+
+# Width (in bytes) of one kernel tile per grid step.
+#
+# Target-dependent (perf pass, EXPERIMENTS.md §Perf): on a real TPU this
+# would be ~8192 so a (k, TILE_W) tile fits VMEM with double-buffering
+# headroom. The shipped artifacts target the CPU PJRT backend, where the
+# pallas interpret-mode grid lowers to an XLA while-loop whose per-step
+# overhead dominates at small tiles (measured 6 MB/s at 8 KiB vs 790 MB/s
+# at 1 MiB for k=6); panel-sized tiles (grid=1) let XLA fuse and vectorize
+# the whole bit-linear combine.
+TILE_W = 1 << 20
+
+
+def _build_tables() -> tuple[np.ndarray, np.ndarray]:
+    """Build log/exp tables for GF(2^8) mod GF_POLY.
+
+    Returns (log, exp2) where ``log`` has 256 entries (log[0] is a sentinel,
+    never consumed because zero operands are masked) and ``exp2`` has 512
+    entries: exp2[i] = g^(i mod 255), doubled so ``log a + log b`` (< 510)
+    indexes directly.
+    """
+    exp = np.zeros(512, dtype=np.uint8)
+    log = np.zeros(256, dtype=np.int32)
+    x = 1
+    for i in range(255):
+        exp[i] = x
+        log[x] = i
+        x <<= 1
+        if x & 0x100:
+            x ^= GF_POLY
+    exp[255:510] = exp[:255]
+    # exp2[510], exp2[511] unused (max log sum = 254 + 254 = 508).
+    return log, exp
+
+_LOG_NP, _EXP_NP = _build_tables()
+
+
+def gf_combine_kernel(btab_ref, data_ref, out_ref, *, k: int):
+    """out[0, :] = XOR_i gfmul(c_i, data[i, :]) over one W-tile (bit-linear).
+
+    GF(2^8) multiplication by a constant c is GF(2)-LINEAR: with
+    btab[i][b] = gfmul(c_i, 1 << b), the product of c_i and byte x is
+    XOR_{b: bit b of x set} btab[i][b]. The kernel therefore needs only
+    shifts, masks and XORs - no gathers - which vectorizes on any VPU
+    (TPU VPUs and XLA:CPU both execute gathers scalarly; this formulation
+    is the perf-pass replacement for the log/exp-table version, kept below
+    as gf_combine_tables_kernel for cross-validation). See EXPERIMENTS.md
+    section Perf.
+
+    btab_ref: (k, 8)    uint8   - per-coefficient bit tables
+    data_ref: (k, Wt)   uint8   - the k surviving/source shards (one tile)
+    out_ref:  (1, Wt)   uint8
+    """
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.uint8)
+    for i in range(k):
+        row = data_ref[i, :][None, :]
+        for b in range(8):
+            bit = (row >> b) & jnp.uint8(1)
+            # bit is 0/1; multiply selects btab[i, b] where the bit is set
+            acc = acc ^ (bit * btab_ref[i, b])
+    out_ref[...] = acc
+
+
+def gf_combine_tables_kernel(coef_ref, data_ref, log_ref, exp_ref, out_ref, *, k: int):
+    """Log/exp-table variant (original formulation; cross-validation and
+    ablation baseline for the bit-linear kernel above)."""
+    logt = log_ref[...]
+    expt = exp_ref[...]
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.uint8)
+    # k <= 16 in any deployed code; unroll so the accumulator stays live.
+    for i in range(k):
+        c = coef_ref[i]
+        row = data_ref[i, :][None, :]
+        log_sum = logt[c.astype(jnp.int32)] + jnp.take(logt, row.astype(jnp.int32))
+        prod = jnp.take(expt, log_sum)
+        # gfmul(a, 0) = gfmul(0, b) = 0: mask both operand-zero cases.
+        prod = jnp.where((row == 0) | (c == 0), jnp.uint8(0), prod)
+        acc = acc ^ prod
+    out_ref[...] = acc
+
+
+def gf_mul_scalar(a: int, b: int) -> int:
+    """Host-side scalar GF multiply (table-based) for btab construction."""
+    if a == 0 or b == 0:
+        return 0
+    return int(_EXP_NP[int(_LOG_NP[a]) + int(_LOG_NP[b])])
+
+
+def coeffs_to_btab(coeffs) -> np.ndarray:
+    """btab[i][b] = gfmul(coeffs[i], 1 << b) - the kernel's bit tables."""
+    coeffs = np.asarray(coeffs, dtype=np.uint8)
+    out = np.zeros((coeffs.shape[0], 8), dtype=np.uint8)
+    for i, c in enumerate(coeffs):
+        for b in range(8):
+            out[i, b] = gf_mul_scalar(int(c), 1 << b)
+    return out
+
+
+def xor_reduce_kernel(data_ref, out_ref, *, k: int):
+    """out[0, :] = XOR_i data[i, :] - LRC local-parity special case."""
+    acc = jnp.zeros(out_ref.shape, dtype=jnp.uint8)
+    for i in range(k):
+        acc = acc ^ data_ref[i, :][None, :]
+    out_ref[...] = acc
+
+
+def _tile_width(w: int) -> int:
+    return min(w, TILE_W)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _noop(x, interpret=True):  # pragma: no cover - keeps jit cache warm in tests
+    return x
+
+
+def gf_combine(btab: jax.Array, data: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Pallas-backed GF(2^8) linear combination (bit-linear kernel).
+
+    btab: (k, 8) uint8 (see coeffs_to_btab); data: (k, W) uint8 -> (1, W).
+    W must be a multiple of the tile width (the AOT path guarantees this;
+    tests pick small W where one tile covers everything).
+    """
+    k, w = data.shape
+    assert btab.shape == (k, 8), (btab.shape, k)
+    tw = _tile_width(w)
+    assert w % tw == 0, f"W={w} not a multiple of tile width {tw}"
+    grid = (w // tw,)
+    return pl.pallas_call(
+        functools.partial(gf_combine_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, 8), lambda j: (0, 0)),
+            pl.BlockSpec((k, tw), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, tw), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, w), jnp.uint8),
+        interpret=interpret,
+    )(btab, data)
+
+
+def gf_combine_tables(coeffs: jax.Array, data: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Log/exp-table variant of gf_combine (ablation / cross-validation)."""
+    k, w = data.shape
+    assert coeffs.shape == (k,), (coeffs.shape, k)
+    tw = _tile_width(w)
+    assert w % tw == 0, f"W={w} not a multiple of tile width {tw}"
+    log_t = jnp.asarray(_LOG_NP)
+    exp_t = jnp.asarray(_EXP_NP)
+    grid = (w // tw,)
+    return pl.pallas_call(
+        functools.partial(gf_combine_tables_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k,), lambda j: (0,)),
+            pl.BlockSpec((k, tw), lambda j: (0, j)),
+            pl.BlockSpec((256,), lambda j: (0,)),
+            pl.BlockSpec((512,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, tw), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, w), jnp.uint8),
+        interpret=interpret,
+    )(coeffs, data, log_t, exp_t)
+
+
+def xor_reduce(data: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Pallas-backed XOR reduction over axis 0: (k, W) uint8 -> (1, W)."""
+    k, w = data.shape
+    tw = _tile_width(w)
+    assert w % tw == 0, f"W={w} not a multiple of tile width {tw}"
+    grid = (w // tw,)
+    return pl.pallas_call(
+        functools.partial(xor_reduce_kernel, k=k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((k, tw), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((1, tw), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, w), jnp.uint8),
+        interpret=interpret,
+    )(data)

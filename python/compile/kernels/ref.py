@@ -1,0 +1,147 @@
+"""Pure-numpy correctness oracle for the GF(2^8) kernels.
+
+Deliberately *independent* of the table construction in ``gf.py``: multiply
+is implemented polynomial-basis (Russian-peasant shift/xor, reducing by
+x^8 + x^4 + x^3 + x^2 + 1) so a table bug cannot self-validate.  Also hosts
+the small dense-matrix GF linear algebra (inversion) the python tests use to
+exercise full encode -> erase -> decode round trips.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+GF_POLY = 0x11D
+
+
+def gf_mul(a: int, b: int) -> int:
+    """Polynomial-basis GF(2^8) multiply (scalar oracle)."""
+    a, b, acc = int(a), int(b), 0
+    for _ in range(8):
+        if b & 1:
+            acc ^= a
+        b >>= 1
+        a <<= 1
+        if a & 0x100:
+            a ^= GF_POLY
+    return acc
+
+
+def gf_mul_vec(c: int, v: np.ndarray) -> np.ndarray:
+    """Vectorized polynomial-basis multiply of a scalar by a uint8 vector."""
+    acc = np.zeros_like(v, dtype=np.uint16)
+    a = np.asarray(v, dtype=np.uint16)
+    c = int(c)
+    for _ in range(8):
+        if c & 1:
+            acc ^= a
+        c >>= 1
+        a = a << 1
+        overflow = (a & 0x100) != 0
+        a = np.where(overflow, a ^ GF_POLY, a)
+    return acc.astype(np.uint8)
+
+
+def gf_pow(a: int, e: int) -> int:
+    acc = 1
+    for _ in range(e):
+        acc = gf_mul(acc, a)
+    return acc
+
+
+def gf_inv(a: int) -> int:
+    """Multiplicative inverse via Fermat: a^(2^8 - 2)."""
+    if a == 0:
+        raise ZeroDivisionError("gf_inv(0)")
+    return gf_pow(a, 254)
+
+
+def gf_combine_ref(coeffs: np.ndarray, data: np.ndarray) -> np.ndarray:
+    """Oracle for kernels.gf.gf_combine: (k,), (k, W) -> (1, W)."""
+    k, w = data.shape
+    acc = np.zeros((w,), dtype=np.uint8)
+    for i in range(k):
+        acc ^= gf_mul_vec(int(coeffs[i]), data[i])
+    return acc[None, :]
+
+
+def gf_matmul_ref(mat: np.ndarray, data: np.ndarray) -> np.ndarray:
+    """(m, k) x (k, W) GF matmul oracle."""
+    return np.concatenate([gf_combine_ref(row, data) for row in mat], axis=0)
+
+
+def xor_reduce_ref(data: np.ndarray) -> np.ndarray:
+    out = np.zeros((1, data.shape[1]), dtype=np.uint8)
+    for row in data:
+        out[0] ^= row
+    return out
+
+
+def gf_matrix_inv(m: np.ndarray) -> np.ndarray:
+    """Invert a square GF(2^8) matrix by Gauss-Jordan (oracle-grade, O(n^3))."""
+    n = m.shape[0]
+    assert m.shape == (n, n)
+    a = m.astype(np.uint8).copy()
+    inv = np.eye(n, dtype=np.uint8)
+    for col in range(n):
+        piv = next((r for r in range(col, n) if a[r, col] != 0), None)
+        if piv is None:
+            raise ValueError("singular GF matrix")
+        if piv != col:
+            a[[col, piv]] = a[[piv, col]]
+            inv[[col, piv]] = inv[[piv, col]]
+        s = gf_inv(int(a[col, col]))
+        a[col] = gf_mul_vec(s, a[col])
+        inv[col] = gf_mul_vec(s, inv[col])
+        for r in range(n):
+            if r != col and a[r, col] != 0:
+                f = int(a[r, col])
+                a[r] ^= gf_mul_vec(f, a[col])
+                inv[r] ^= gf_mul_vec(f, inv[col])
+    return inv
+
+
+def rs_generator(k: int, m: int) -> np.ndarray:
+    """Parity rows of the systematic Cauchy generator used across the repo.
+
+    Must match rust/src/codes/rs.rs: entry (i, j) = 1 / (x_i + y_j) with
+    x_i = i + k, y_j = j for i in [0, m), j in [0, k).  Cauchy matrices have
+    every square submatrix nonsingular, so the systematic code is MDS.
+    """
+    g = np.zeros((m, k), dtype=np.uint8)
+    for i in range(m):
+        for j in range(k):
+            g[i, j] = gf_inv((i + k) ^ j)
+    return g
+
+
+def rs_encode_ref(data: np.ndarray, m: int) -> np.ndarray:
+    """(k, W) data -> (m, W) parity via the systematic Cauchy generator."""
+    k = data.shape[0]
+    return gf_matmul_ref(rs_generator(k, m), data)
+
+
+def full_generator(k: int, m: int) -> np.ndarray:
+    """(k+m, k) systematic generator: identity stacked on Cauchy parity."""
+    return np.concatenate([np.eye(k, dtype=np.uint8), rs_generator(k, m)], axis=0)
+
+
+def rs_decode_coeffs(k: int, m: int, available: list[int], target: int) -> np.ndarray:
+    """Coefficients expressing stripe block ``target`` from ``available``.
+
+    ``available`` is a list of k distinct surviving block indices in
+    [0, k+m); returns (k,) uint8 c with  B_target = XOR_i c_i * B_available[i].
+    """
+    assert len(available) == k
+    g = full_generator(k, m)
+    sub = g[available, :]           # (k, k) rows of the generator
+    inv = gf_matrix_inv(sub)        # data = inv @ avail
+    trow = g[target, :]             # target = trow @ data
+    # target = trow @ inv @ avail
+    out = np.zeros(k, dtype=np.uint8)
+    for j in range(k):
+        acc = 0
+        for t in range(k):
+            acc ^= gf_mul(int(trow[t]), int(inv[t, j]))
+        out[j] = acc
+    return out

@@ -1,0 +1,71 @@
+"""Layer-2: the erasure-coding compute graph, built on the Layer-1 kernels.
+
+By RS linearity (paper section 2.2) every coding operation the D^3 recovery
+pipeline performs - encode, single-block decode, and the inner-rack *partial
+aggregation* that minimizes cross-rack traffic - is one GF(2^8) linear
+combination ``out = XOR_i c_i * shard_i``.  The coefficients are computed by
+the Rust coordinator (rust/src/gf, rust/src/codes); this module only defines
+the data-plane graphs that get AOT-lowered to HLO.
+
+Entry points (all uint8, fixed chunk width W; Rust chunks blocks into
+W-column panels). Coefficients enter as *bit tables* btab[i][b] =
+gfmul(c_i, 1 << b) — see kernels.gf.gf_combine (bit-linear form):
+
+  combine(k)   : btab (k, 8), data (k, W)        -> (1, W)
+  matmul(m, k) : btab (m, k, 8), data (k, W)     -> (m, W)   (encode: all
+                 parities of one stripe in one PJRT call)
+  xor(k)       : data (k, W)                     -> (1, W)   (LRC local
+                 parity / replication-style aggregation)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gf as gfk
+
+# Chunk width the AOT artifacts are lowered at. 1 MiB panels (perf pass,
+# EXPERIMENTS.md section Perf): 16x fewer PJRT dispatches than the original
+# 64 KiB panels; a (k=12, W) input panel is 12 MiB - fine for host memory,
+# while the Pallas grid still tiles VMEM at TILE_W = 8 KiB.
+DEFAULT_W = 1 << 20
+
+
+def combine(btab: jax.Array, data: jax.Array) -> jax.Array:
+    """One GF(2^8) linear combination (decode / aggregate primitive)."""
+    return gfk.gf_combine(btab, data)
+
+
+def matmul(btab: jax.Array, data: jax.Array) -> jax.Array:
+    """(m, k, 8) x (k, W) GF matmul - encodes all m parities in one call.
+
+    Row-wise over the Layer-1 combine kernel; XLA fuses the shared data
+    loads across rows at lowering time.
+    """
+    m = btab.shape[0]
+    rows = [gfk.gf_combine(btab[i], data) for i in range(m)]
+    return jnp.concatenate(rows, axis=0)
+
+
+def xor(data: jax.Array) -> jax.Array:
+    """XOR reduce over shards - LRC local parity."""
+    return gfk.xor_reduce(data)
+
+
+def combine_spec(k: int, w: int = DEFAULT_W):
+    return (
+        jax.ShapeDtypeStruct((k, 8), jnp.uint8),
+        jax.ShapeDtypeStruct((k, w), jnp.uint8),
+    )
+
+
+def matmul_spec(m: int, k: int, w: int = DEFAULT_W):
+    return (
+        jax.ShapeDtypeStruct((m, k, 8), jnp.uint8),
+        jax.ShapeDtypeStruct((k, w), jnp.uint8),
+    )
+
+
+def xor_spec(k: int, w: int = DEFAULT_W):
+    return (jax.ShapeDtypeStruct((k, w), jnp.uint8),)

@@ -1,0 +1,139 @@
+"""L1 kernel correctness: Pallas gf_combine / xor_reduce vs the independent
+polynomial-basis oracle in ref.py, swept over shapes with hypothesis."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gf, ref
+
+SEED = np.random.default_rng(1234)
+
+
+def rand_u8(shape):
+    return SEED.integers(0, 256, size=shape, dtype=np.uint8)
+
+
+# ---------------------------------------------------------------- tables
+
+
+def test_tables_match_polynomial_basis():
+    """Every exp-table entry agrees with repeated polynomial multiplication."""
+    log, exp = gf._build_tables()
+    x = 1
+    for i in range(255):
+        assert exp[i] == x
+        assert log[x] == i
+        x = ref.gf_mul(x, gf.GF_GENERATOR)
+    assert np.array_equal(exp[255:510], exp[:255])
+
+
+def test_table_mul_equals_ref_mul_exhaustive_diagonalish():
+    """gfmul via tables == polynomial mul on a dense sample of pairs."""
+    log, exp = gf._build_tables()
+
+    def tmul(a, b):
+        if a == 0 or b == 0:
+            return 0
+        return int(exp[log[a] + log[b]])
+
+    for a in range(0, 256, 7):
+        for b in range(256):
+            assert tmul(a, b) == ref.gf_mul(a, b), (a, b)
+
+
+# ---------------------------------------------------------------- combine
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(1, 12),
+    w=st.sampled_from([1, 2, 16, 64, 256, 1024]),
+    seed=st.integers(0, 2**31),
+)
+def test_gf_combine_matches_ref(k, w, seed):
+    rng = np.random.default_rng(seed)
+    coeffs = rng.integers(0, 256, size=(k,), dtype=np.uint8)
+    data = rng.integers(0, 256, size=(k, w), dtype=np.uint8)
+    out = np.asarray(gf.gf_combine(jnp.asarray(gf.coeffs_to_btab(coeffs)), jnp.asarray(data)))
+    np.testing.assert_array_equal(out, ref.gf_combine_ref(coeffs, data))
+    # cross-validate the table-based variant against the bit-linear one
+    out_t = np.asarray(gf.gf_combine_tables(jnp.asarray(coeffs), jnp.asarray(data)))
+    np.testing.assert_array_equal(out_t, out)
+
+
+def test_gf_combine_multi_tile():
+    """W spanning several TILE_W grid steps."""
+    k, w = 3, gf.TILE_W * 3
+    coeffs, data = rand_u8((k,)), rand_u8((k, w))
+    out = np.asarray(gf.gf_combine(jnp.asarray(gf.coeffs_to_btab(coeffs)), jnp.asarray(data)))
+    np.testing.assert_array_equal(out, ref.gf_combine_ref(coeffs, data))
+
+
+def test_gf_combine_zero_coeffs_is_zero():
+    data = rand_u8((4, 128))
+    out = np.asarray(gf.gf_combine(jnp.zeros((4, 8), jnp.uint8), jnp.asarray(data)))
+    assert not out.any()
+
+
+def test_gf_combine_identity_coeff_selects_row():
+    data = rand_u8((3, 128))
+    coeffs = np.array([0, 1, 0], dtype=np.uint8)
+    btab = jnp.asarray(gf.coeffs_to_btab(coeffs))
+    out = np.asarray(gf.gf_combine(btab, jnp.asarray(data)))
+    np.testing.assert_array_equal(out[0], data[1])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_gf_combine_is_linear(seed):
+    """combine(c, a ^ b) == combine(c, a) ^ combine(c, b) (GF addition = xor)."""
+    rng = np.random.default_rng(seed)
+    c = rng.integers(0, 256, size=(5,), dtype=np.uint8)
+    bt = jnp.asarray(gf.coeffs_to_btab(c))
+    a = rng.integers(0, 256, size=(5, 64), dtype=np.uint8)
+    b = rng.integers(0, 256, size=(5, 64), dtype=np.uint8)
+    lhs = np.asarray(gf.gf_combine(bt, jnp.asarray(a ^ b)))
+    rhs = np.asarray(gf.gf_combine(bt, jnp.asarray(a))) ^ np.asarray(
+        gf.gf_combine(bt, jnp.asarray(b))
+    )
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+# ---------------------------------------------------------------- xor
+
+
+@settings(max_examples=25, deadline=None)
+@given(k=st.integers(2, 12), w=st.sampled_from([1, 8, 128, 1024]), seed=st.integers(0, 2**31))
+def test_xor_reduce_matches_ref(k, w, seed):
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 256, size=(k, w), dtype=np.uint8)
+    out = np.asarray(gf.xor_reduce(jnp.asarray(data)))
+    np.testing.assert_array_equal(out, ref.xor_reduce_ref(data))
+
+
+def test_xor_reduce_self_inverse():
+    data = rand_u8((2, 256))
+    dup = np.concatenate([data, data], axis=0)
+    out = np.asarray(gf.xor_reduce(jnp.asarray(dup)))
+    assert not out.any()
+
+
+# ---------------------------------------------------------------- field oracle
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=st.integers(0, 255), b=st.integers(0, 255), c=st.integers(0, 255))
+def test_ref_field_axioms(a, b, c):
+    m = ref.gf_mul
+    assert m(a, b) == m(b, a)
+    assert m(a, m(b, c)) == m(m(a, b), c)
+    assert m(a, b ^ c) == m(a, b) ^ m(a, c)
+    assert m(a, 1) == a
+
+
+@settings(max_examples=40, deadline=None)
+@given(a=st.integers(1, 255))
+def test_ref_inverse(a):
+    assert ref.gf_mul(a, ref.gf_inv(a)) == 1

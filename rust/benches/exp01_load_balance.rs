@@ -1,0 +1,11 @@
+//! Regenerates Fig 8 (Exp 1: repair load balance) at the paper's configuration.
+//! Run: `cargo bench --bench exp01_load_balance` (all benches: `cargo bench`).
+use d3ec::experiments as exp;
+use d3ec::topology::SystemSpec;
+
+fn main() {
+    let spec = SystemSpec::paper_default();
+    let t0 = std::time::Instant::now();
+    let _ = exp::exp01_load_balance(&spec, exp::STRIPES);
+    eprintln!("[exp01_load_balance] completed in {:.2?}", t0.elapsed());
+}

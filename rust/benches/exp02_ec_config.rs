@@ -1,0 +1,11 @@
+//! Regenerates Fig 9 (Exp 2: erasure-code configuration) at the paper's configuration.
+//! Run: `cargo bench --bench exp02_ec_config` (all benches: `cargo bench`).
+use d3ec::experiments as exp;
+use d3ec::topology::SystemSpec;
+
+fn main() {
+    let spec = SystemSpec::paper_default();
+    let t0 = std::time::Instant::now();
+    let _ = exp::exp02_ec_config(&spec, exp::STRIPES);
+    eprintln!("[exp02_ec_config] completed in {:.2?}", t0.elapsed());
+}

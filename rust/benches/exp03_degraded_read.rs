@@ -1,0 +1,11 @@
+//! Regenerates Figs 10/11 (Exp 3: degraded read) at the paper's configuration.
+//! Run: `cargo bench --bench exp03_degraded_read` (all benches: `cargo bench`).
+use d3ec::experiments as exp;
+use d3ec::topology::SystemSpec;
+
+fn main() {
+    let spec = SystemSpec::paper_default();
+    let t0 = std::time::Instant::now();
+    let _ = exp::exp03_degraded_read(&spec);
+    eprintln!("[exp03_degraded_read] completed in {:.2?}", t0.elapsed());
+}

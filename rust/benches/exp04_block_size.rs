@@ -1,0 +1,11 @@
+//! Regenerates Fig 12 (Exp 4: block size) at the paper's configuration.
+//! Run: `cargo bench --bench exp04_block_size` (all benches: `cargo bench`).
+use d3ec::experiments as exp;
+use d3ec::topology::SystemSpec;
+
+fn main() {
+    let spec = SystemSpec::paper_default();
+    let t0 = std::time::Instant::now();
+    let _ = exp::exp04_block_size(&spec, exp::STRIPES);
+    eprintln!("[exp04_block_size] completed in {:.2?}", t0.elapsed());
+}

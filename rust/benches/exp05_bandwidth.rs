@@ -1,0 +1,11 @@
+//! Regenerates Fig 13 (Exp 5: cross-rack bandwidth) at the paper's configuration.
+//! Run: `cargo bench --bench exp05_bandwidth` (all benches: `cargo bench`).
+use d3ec::experiments as exp;
+use d3ec::topology::SystemSpec;
+
+fn main() {
+    let spec = SystemSpec::paper_default();
+    let t0 = std::time::Instant::now();
+    let _ = exp::exp05_bandwidth(&spec, exp::STRIPES);
+    eprintln!("[exp05_bandwidth] completed in {:.2?}", t0.elapsed());
+}

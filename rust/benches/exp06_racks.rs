@@ -1,0 +1,11 @@
+//! Regenerates Fig 14 (Exp 6: number of racks) at the paper's configuration.
+//! Run: `cargo bench --bench exp06_racks` (all benches: `cargo bench`).
+use d3ec::experiments as exp;
+use d3ec::topology::SystemSpec;
+
+fn main() {
+    let spec = SystemSpec::paper_default();
+    let t0 = std::time::Instant::now();
+    let _ = exp::exp06_racks(&spec, exp::STRIPES);
+    eprintln!("[exp06_racks] completed in {:.2?}", t0.elapsed());
+}

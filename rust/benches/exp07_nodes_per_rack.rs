@@ -1,0 +1,11 @@
+//! Regenerates Fig 15 (Exp 7: nodes per rack) at the paper's configuration.
+//! Run: `cargo bench --bench exp07_nodes_per_rack` (all benches: `cargo bench`).
+use d3ec::experiments as exp;
+use d3ec::topology::SystemSpec;
+
+fn main() {
+    let spec = SystemSpec::paper_default();
+    let t0 = std::time::Instant::now();
+    let _ = exp::exp07_nodes_per_rack(&spec, exp::STRIPES);
+    eprintln!("[exp07_nodes_per_rack] completed in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,12 @@
+//! Regenerates Figs 16/17 (Exps 8-9: LRC recovery + block size) at the paper's configuration.
+//! Run: `cargo bench --bench exp08_lrc` (all benches: `cargo bench`).
+use d3ec::experiments as exp;
+use d3ec::topology::SystemSpec;
+
+fn main() {
+    let spec = SystemSpec::paper_default();
+    let t0 = std::time::Instant::now();
+    let _ = exp::exp08_lrc_recovery(&spec, exp::STRIPES);
+    let _ = exp::exp09_lrc_block_size(&spec, exp::STRIPES);
+    eprintln!("[exp08_lrc] completed in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,12 @@
+//! Regenerates Figs 18/19 (Exps 10-11: front-end benchmarks) at the paper's configuration.
+//! Run: `cargo bench --bench exp10_frontend` (all benches: `cargo bench`).
+use d3ec::experiments as exp;
+use d3ec::topology::SystemSpec;
+
+fn main() {
+    let spec = SystemSpec::paper_default();
+    let t0 = std::time::Instant::now();
+    let _ = exp::frontend_exp::exp10_frontend_normal(&spec);
+    let _ = exp::frontend_exp::exp11_frontend_recovery(&spec, 3000);
+    eprintln!("[exp10_frontend] completed in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,75 @@
+//! Hot-path microbenchmarks (§Perf): GF combine throughput native vs PJRT,
+//! matrix inversion, placement lookups, and simulator event rate.
+use d3ec::codes::CodeSpec;
+use d3ec::gf;
+use d3ec::placement::{D3Placement, Placement};
+use d3ec::recovery::node_recovery_plans;
+use d3ec::runtime::Coder;
+use d3ec::sim::recovery::{run_recovery, RecoveryConfig};
+use d3ec::topology::{Location, SystemSpec};
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name}: {:.3} ms/iter", per * 1e3);
+    per
+}
+
+fn main() {
+    println!("=== hot path: GF combine (k=6, 16 MB blocks) ===");
+    let len = 16 << 20;
+    let shards: Vec<Vec<u8>> = (0..6).map(|i| vec![i as u8 + 1; len]).collect();
+    let refs: Vec<&[u8]> = shards.iter().map(|v| v.as_slice()).collect();
+    let coeffs: Vec<u8> = (1..=6u8).collect();
+
+    let native = Coder::native();
+    let per = bench("native combine", 5, || {
+        let _ = native.combine(&coeffs, &refs).unwrap();
+    });
+    println!("  native: {:.0} MB/s output, {:.0} MB/s streamed", len as f64 / per / 1e6, (len * 6) as f64 / per / 1e6);
+
+    match Coder::pjrt() {
+        Ok(pjrt) => {
+            let per = bench("pjrt combine", 5, || {
+                let _ = pjrt.combine(&coeffs, &refs).unwrap();
+            });
+            println!("  pjrt: {:.0} MB/s output, {:.0} MB/s streamed", len as f64 / per / 1e6, (len * 6) as f64 / per / 1e6);
+        }
+        Err(e) => eprintln!("pjrt skipped: {e}"),
+    }
+
+    println!("\n=== hot path: xor fast path (c=1) ===");
+    let per = bench("xor combine (k=2)", 10, || {
+        let _ = gf::combine(&[1, 1], &[&refs[0], &refs[1]]);
+    });
+    println!("  {:.0} MB/s output", len as f64 / per / 1e6);
+
+    println!("\n=== control path: placement + planning ===");
+    let spec = SystemSpec::paper_default();
+    let policy = D3Placement::new(CodeSpec::Rs { k: 6, m: 3 }, spec.cluster).unwrap();
+    bench("stripe() x 10k", 10, || {
+        for sid in 0..10_000u64 {
+            let _ = std::hint::black_box(policy.stripe(sid));
+        }
+    });
+    bench("node_recovery_plans(1000 stripes)", 5, || {
+        let _ = std::hint::black_box(node_recovery_plans(&policy, 1000, Location::new(0, 0), 0));
+    });
+
+    println!("\n=== simulator: full recovery run (1000 stripes) ===");
+    let plans = node_recovery_plans(&policy, 1000, Location::new(0, 0), 0);
+    println!("  plans: {}", plans.len());
+    bench("run_recovery", 3, || {
+        let _ = std::hint::black_box(run_recovery(
+            &spec,
+            &plans,
+            Location::new(0, 0),
+            RecoveryConfig::default(),
+        ));
+    });
+}

@@ -1,0 +1,101 @@
+//! The coding service: a dedicated thread owning the [`Coder`] (the PJRT
+//! client is not `Send`, and a single coding executor per host models the
+//! paper's per-node coding CPU anyway). DataNode workers submit combine
+//! requests over a channel and block on the reply.
+
+use std::sync::mpsc;
+
+use crate::runtime::Coder;
+
+pub struct CodeRequest {
+    pub coeffs: Vec<u8>,
+    pub shards: Vec<Vec<u8>>,
+    pub reply: mpsc::Sender<anyhow::Result<Vec<u8>>>,
+}
+
+/// Handle to the coding thread. Cheap to clone; dropping all handles shuts
+/// the thread down.
+#[derive(Clone)]
+pub struct CoderService {
+    tx: mpsc::Sender<CodeRequest>,
+}
+
+impl CoderService {
+    /// Spawn the service. `backend` = "native" or "pjrt".
+    pub fn spawn(backend: &str) -> anyhow::Result<CoderService> {
+        let (tx, rx) = mpsc::channel::<CodeRequest>();
+        let backend = backend.to_string();
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        std::thread::Builder::new()
+            .name("coder-service".into())
+            .spawn(move || {
+                let coder = match backend.as_str() {
+                    "pjrt" => match Coder::pjrt() {
+                        Ok(c) => {
+                            let _ = ready_tx.send(Ok(()));
+                            c
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    },
+                    _ => {
+                        let _ = ready_tx.send(Ok(()));
+                        Coder::native()
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    let refs: Vec<&[u8]> = req.shards.iter().map(|s| s.as_slice()).collect();
+                    let out = coder.combine(&req.coeffs, &refs);
+                    let _ = req.reply.send(out);
+                }
+            })
+            .expect("spawn coder service");
+        ready_rx.recv().expect("coder thread died before ready")?;
+        Ok(CoderService { tx })
+    }
+
+    /// One GF linear combination, executed on the service thread.
+    pub fn combine(&self, coeffs: Vec<u8>, shards: Vec<Vec<u8>>) -> anyhow::Result<Vec<u8>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(CodeRequest { coeffs, shards, reply })
+            .map_err(|_| anyhow::anyhow!("coder service stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("coder service dropped request"))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf;
+
+    #[test]
+    fn native_service_roundtrip() {
+        let svc = CoderService::spawn("native").unwrap();
+        let a = vec![1u8, 2, 3];
+        let b = vec![4u8, 5, 6];
+        let got = svc.combine(vec![1, 1], vec![a.clone(), b.clone()]).unwrap();
+        assert_eq!(got, gf::combine(&[1, 1], &[&a, &b]));
+    }
+
+    #[test]
+    fn service_usable_from_many_threads() {
+        let svc = CoderService::spawn("native").unwrap();
+        let handles: Vec<_> = (0..8u8)
+            .map(|i| {
+                let svc = svc.clone();
+                std::thread::spawn(move || {
+                    let a = vec![i; 128];
+                    let b = vec![i ^ 0xff; 128];
+                    let got = svc.combine(vec![1, 1], vec![a, b]).unwrap();
+                    assert_eq!(got, vec![0xff; 128]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,375 @@
+//! (k, l, g) Locally Repairable Codes (§2.3, §4.4) — Xorbas-style [9].
+//!
+//! Layout per stripe: `[d_0..d_{k-1}, local_0..local_{l-1}, global_0..global_{g-1}]`
+//! (paper Fig 6). Local parity j is the XOR of the k/l data blocks of local
+//! group j. Global parities are Cauchy rows **adjusted so they sum to the
+//! all-ones row** (the Xorbas "implied parity" alignment): the XOR of all
+//! global parities equals the XOR of all data, which equals the XOR of all
+//! local parities. This gives exactly the paper's repair properties:
+//!
+//! * data / local parity: rebuilt from the k/l other blocks of its local
+//!   group (coefficients all 1 — pure XOR),
+//! * global parity: rebuilt from the other l + g − 1 parity blocks,
+//! * arbitrary failures up to g + l recovered when information-
+//!   theoretically decodable (generic solver [`LrcCode::decode_multi`]).
+
+use crate::gf::{self, matrix::cauchy, Matrix};
+
+#[derive(Clone, Debug)]
+pub struct LrcCode {
+    k: usize,
+    l: usize,
+    g: usize,
+    /// Full generator: (k + l + g) × k over the data blocks.
+    full: Matrix,
+}
+
+impl LrcCode {
+    pub fn new(k: usize, l: usize, g: usize) -> LrcCode {
+        assert!(l >= 1 && g >= 1, "(k,l,g)-LRC needs l,g >= 1");
+        assert!(k % l == 0, "(k,l,g)-LRC requires l | k (equal local groups)");
+        assert!(k + l + g <= 256, "GF(256) limited to len <= 256");
+        let group = k / l;
+        let mut full = Matrix::zero(k + l + g, k);
+        for i in 0..k {
+            full[(i, i)] = 1;
+        }
+        // local parity rows: XOR over the group
+        for j in 0..l {
+            for i in 0..group {
+                full[(k + j, j * group + i)] = 1;
+            }
+        }
+        // global parity rows: cauchy rows, last row adjusted so that the
+        // rows XOR to all-ones (implied-parity alignment).
+        let c = cauchy(g, k, k + 16); // offset avoids x==y with data ids
+        let mut sum = vec![0u8; k];
+        for j in 0..g - 1 {
+            for i in 0..k {
+                full[(k + l + j, i)] = c[(j, i)];
+                sum[i] ^= c[(j, i)];
+            }
+        }
+        for i in 0..k {
+            full[(k + l + g - 1, i)] = 1 ^ sum[i];
+        }
+        LrcCode { k, l, g, full }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn l(&self) -> usize {
+        self.l
+    }
+
+    pub fn g(&self) -> usize {
+        self.g
+    }
+
+    pub fn len(&self) -> usize {
+        self.k + self.l + self.g
+    }
+
+    /// Data blocks per local group (k / l).
+    pub fn group_size(&self) -> usize {
+        self.k / self.l
+    }
+
+    /// Local group of a data block index.
+    pub fn group_of_data(&self, idx: usize) -> usize {
+        assert!(idx < self.k);
+        idx / self.group_size()
+    }
+
+    /// Parity rows (l + g) × k — encode matrix for the AOT path.
+    pub fn parity_rows(&self) -> Matrix {
+        let idx: Vec<usize> = (self.k..self.len()).collect();
+        self.full.select_rows(&idx)
+    }
+
+    /// Generator row for any block.
+    pub fn generator_row(&self, idx: usize) -> &[u8] {
+        self.full.row(idx)
+    }
+
+    /// Minimal single-failure repair: `(sources, coeffs)` with
+    /// `block[target] = XOR_i coeffs_i * block[sources_i]`.
+    ///
+    /// Matches §5.2: data/local → local group (k/l reads), global → the
+    /// other l + g − 1 parity blocks.
+    pub fn repair_plan(&self, target: usize) -> (Vec<usize>, Vec<u8>) {
+        let (k, l) = (self.k, self.l);
+        let group = self.group_size();
+        assert!(target < self.len(), "target out of range");
+        if target < k {
+            // data block: other data of its group + the local parity
+            let gid = target / group;
+            let mut src: Vec<usize> = (gid * group..(gid + 1) * group)
+                .filter(|&i| i != target)
+                .collect();
+            src.push(k + gid);
+            let coeffs = vec![1u8; src.len()];
+            (src, coeffs)
+        } else if target < k + l {
+            // local parity: its data group
+            let gid = target - k;
+            let src: Vec<usize> = (gid * group..(gid + 1) * group).collect();
+            let coeffs = vec![1u8; src.len()];
+            (src, coeffs)
+        } else {
+            // global parity: all locals + the other globals (implied parity)
+            let mut src: Vec<usize> = (k..k + l).collect();
+            src.extend((k + l..self.len()).filter(|&i| i != target));
+            let coeffs = vec![1u8; src.len()];
+            (src, coeffs)
+        }
+    }
+
+    /// Encode: data shards (k) -> l + g parity shards.
+    pub fn encode(&self, data: &[&[u8]]) -> Vec<Vec<u8>> {
+        assert_eq!(data.len(), self.k);
+        let parity = self.parity_rows();
+        (0..self.l + self.g)
+            .map(|i| gf::combine(parity.row(i), data))
+            .collect()
+    }
+
+    /// Rebuild one failed block using its minimal repair plan.
+    /// `lookup` maps a stripe block index to its surviving bytes.
+    pub fn repair<'a, F>(&self, target: usize, lookup: F) -> Vec<u8>
+    where
+        F: Fn(usize) -> &'a [u8],
+    {
+        let (src, coeffs) = self.repair_plan(target);
+        let shards: Vec<&[u8]> = src.iter().map(|&i| lookup(i)).collect();
+        gf::combine(&coeffs, &shards)
+    }
+
+    /// Generic multi-failure decode: reconstruct `targets` from `available`
+    /// (any subset). Returns `None` when not information-theoretically
+    /// decodable (rank < k on the needed data span).
+    pub fn decode_multi(
+        &self,
+        available: &[usize],
+        shards: &[&[u8]],
+        targets: &[usize],
+    ) -> Option<Vec<Vec<u8>>> {
+        assert_eq!(available.len(), shards.len());
+        let k = self.k;
+        let width = shards.first().map_or(0, |s| s.len());
+        // Solve A x = b where rows of A are generator rows of the
+        // available blocks and b their byte panels; x = the data blocks.
+        let a = self.full.select_rows(available);
+        // Gaussian elimination with the byte panels carried along.
+        let rows = available.len();
+        let mut mat = a;
+        let mut panels: Vec<Vec<u8>> = shards.iter().map(|s| s.to_vec()).collect();
+        let mut pivot_of_col = vec![usize::MAX; k];
+        let mut rank = 0usize;
+        for col in 0..k {
+            let Some(piv) = (rank..rows).find(|&r| mat[(r, col)] != 0) else {
+                continue;
+            };
+            if piv != rank {
+                for c in 0..k {
+                    let (x, y) = (mat[(piv, c)], mat[(rank, c)]);
+                    mat[(piv, c)] = y;
+                    mat[(rank, c)] = x;
+                }
+                panels.swap(piv, rank);
+            }
+            let s = gf::inv(mat[(rank, col)]);
+            for c in 0..k {
+                mat[(rank, c)] = gf::mul(mat[(rank, c)], s);
+            }
+            scale_panel(&mut panels[rank], s);
+            for r in 0..rows {
+                if r != rank && mat[(r, col)] != 0 {
+                    let f = mat[(r, col)];
+                    for c in 0..k {
+                        let v = gf::mul(f, mat[(rank, c)]);
+                        mat[(r, c)] ^= v;
+                    }
+                    let (src, dst) = if r < rank {
+                        let (a, b) = panels.split_at_mut(rank);
+                        (&b[0], &mut a[r])
+                    } else {
+                        let (a, b) = panels.split_at_mut(r);
+                        (&a[rank], &mut b[0])
+                    };
+                    gf::combine_into(dst, f, src);
+                }
+            }
+            pivot_of_col[col] = rank;
+            rank += 1;
+        }
+        // Recover each target: its generator row must lie in the span of
+        // the pivoted columns.
+        let mut out = Vec::with_capacity(targets.len());
+        for &t in targets {
+            let trow = self.full.row(t);
+            let mut acc = vec![0u8; width];
+            for (col, &tv) in trow.iter().enumerate() {
+                if tv == 0 {
+                    continue;
+                }
+                let piv = pivot_of_col[col];
+                if piv == usize::MAX {
+                    return None; // needed data dimension unseen: undecodable
+                }
+                gf::combine_into(&mut acc, tv, &panels[piv]);
+            }
+            out.push(acc);
+        }
+        Some(out)
+    }
+}
+
+fn scale_panel(panel: &mut [u8], s: u8) {
+    if s == 1 {
+        return;
+    }
+    for b in panel.iter_mut() {
+        *b = gf::mul(*b, s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_shards(k: usize, len: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15) | 1;
+        (0..k)
+            .map(|_| {
+                (0..len)
+                    .map(|_| {
+                        s ^= s << 13;
+                        s ^= s >> 7;
+                        s ^= s << 17;
+                        (s >> 24) as u8
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn stripe(code: &LrcCode, seed: u64) -> Vec<Vec<u8>> {
+        let data = rand_shards(code.k(), 64, seed);
+        let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+        let parity = code.encode(&refs);
+        let mut all = data;
+        all.extend(parity);
+        all
+    }
+
+    #[test]
+    fn global_parities_xor_to_all_data_xor() {
+        for (k, l, g) in [(4, 2, 1), (6, 2, 2), (12, 2, 2), (8, 4, 2)] {
+            let code = LrcCode::new(k, l, g);
+            let all = stripe(&code, 9);
+            let mut xor_globals = vec![0u8; 64];
+            for t in k + l..code.len() {
+                gf::combine_into(&mut xor_globals, 1, &all[t]);
+            }
+            let mut xor_data = vec![0u8; 64];
+            for t in 0..k {
+                gf::combine_into(&mut xor_data, 1, &all[t]);
+            }
+            assert_eq!(xor_globals, xor_data, "({k},{l},{g})");
+        }
+    }
+
+    #[test]
+    fn single_failure_repair_every_block() {
+        for (k, l, g) in [(4, 2, 1), (6, 2, 2), (6, 3, 2), (12, 2, 2)] {
+            let code = LrcCode::new(k, l, g);
+            let all = stripe(&code, (k + l * 10 + g * 100) as u64);
+            for target in 0..code.len() {
+                let rebuilt = code.repair(target, |i| {
+                    assert_ne!(i, target, "plan reads the failed block");
+                    &all[i]
+                });
+                assert_eq!(rebuilt, all[target], "({k},{l},{g}) target {target}");
+            }
+        }
+    }
+
+    #[test]
+    fn repair_read_counts_match_paper() {
+        // §5.2: data/local parity read k/l blocks; global parity reads
+        // l + g − 1 parity blocks.
+        let code = LrcCode::new(4, 2, 1);
+        for t in 0..4 {
+            assert_eq!(code.repair_plan(t).0.len(), 2, "data reads k/l");
+        }
+        for t in 4..6 {
+            assert_eq!(code.repair_plan(t).0.len(), 2, "local reads k/l");
+        }
+        assert_eq!(code.repair_plan(6).0.len(), 2, "global reads l+g-1");
+
+        let wide = LrcCode::new(12, 2, 2);
+        assert_eq!(wide.repair_plan(0).0.len(), 6);
+        assert_eq!(wide.repair_plan(14).0.len(), 3); // l + g - 1
+    }
+
+    #[test]
+    fn global_repair_reads_only_parity_blocks() {
+        let code = LrcCode::new(6, 2, 2);
+        for t in 8..10 {
+            let (src, _) = code.repair_plan(t);
+            assert!(src.iter().all(|&i| i >= 6), "global repair src {src:?}");
+        }
+    }
+
+    #[test]
+    fn multi_failure_decode_when_decodable() {
+        let code = LrcCode::new(6, 2, 2);
+        let all = stripe(&code, 77);
+        // erase one data + one global (decodable: g+1 = 3 covers 2)
+        let lost = [1usize, 9];
+        let avail: Vec<usize> = (0..code.len()).filter(|i| !lost.contains(i)).collect();
+        let shards: Vec<&[u8]> = avail.iter().map(|&i| all[i].as_slice()).collect();
+        let rec = code.decode_multi(&avail, &shards, &lost).unwrap();
+        assert_eq!(rec[0], all[1]);
+        assert_eq!(rec[1], all[9]);
+    }
+
+    #[test]
+    fn multi_failure_beyond_capability_returns_none() {
+        let code = LrcCode::new(4, 2, 1);
+        let all = stripe(&code, 3);
+        // erase an entire local group incl. its parity: 3 failures with only
+        // the global parity to help -> not decodable
+        let lost = [0usize, 1, 4];
+        let avail: Vec<usize> = (0..code.len()).filter(|i| !lost.contains(i)).collect();
+        let shards: Vec<&[u8]> = avail.iter().map(|&i| all[i].as_slice()).collect();
+        assert!(code.decode_multi(&avail, &shards, &lost).is_none());
+    }
+
+    #[test]
+    fn repair_coeffs_verify_against_generator() {
+        // c · G_sources == G_target row-for-row for every block.
+        for (k, l, g) in [(4, 2, 1), (6, 2, 2), (12, 2, 2)] {
+            let code = LrcCode::new(k, l, g);
+            for t in 0..code.len() {
+                let (src, coeffs) = code.repair_plan(t);
+                let mut acc = vec![0u8; k];
+                for (&s, &c) in src.iter().zip(&coeffs) {
+                    for (a, &gv) in acc.iter_mut().zip(code.generator_row(s)) {
+                        *a ^= gf::mul(c, gv);
+                    }
+                }
+                assert_eq!(acc.as_slice(), code.generator_row(t), "({k},{l},{g}) t={t}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "l | k")]
+    fn unequal_groups_rejected() {
+        LrcCode::new(5, 2, 1);
+    }
+}

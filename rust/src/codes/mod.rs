@@ -1,0 +1,154 @@
+//! Erasure codes: Reed-Solomon (§2.2) and Locally Repairable Codes (§2.3).
+//!
+//! Everything placement/recovery needs from a code is captured by
+//! [`CodeSpec`] (shape) plus the concrete coefficient machinery in
+//! [`rs::RsCode`] / [`lrc::LrcCode`]. Block indices within a stripe are
+//! `0..len`: data first, then parity (for LRC: data, local parities,
+//! global parities — matching paper Fig 6).
+
+pub mod lrc;
+pub mod rs;
+
+pub use lrc::LrcCode;
+pub use rs::RsCode;
+
+/// The role a block plays within its stripe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockKind {
+    Data,
+    /// LRC local parity for group `group`.
+    LocalParity { group: usize },
+    /// RS parity / LRC global parity.
+    GlobalParity,
+}
+
+/// Code shape, serializable for configs and the CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodeSpec {
+    /// (k, m)-RS: k data, m parity, MDS.
+    Rs { k: usize, m: usize },
+    /// (k, l, g)-LRC: k data in l local groups (XOR local parity each)
+    /// plus g global parities.
+    Lrc { k: usize, l: usize, g: usize },
+}
+
+impl CodeSpec {
+    /// Stripe size len = number of blocks per stripe.
+    pub fn len(&self) -> usize {
+        match *self {
+            CodeSpec::Rs { k, m } => k + m,
+            CodeSpec::Lrc { k, l, g } => k + l + g,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        match *self {
+            CodeSpec::Rs { k, .. } | CodeSpec::Lrc { k, .. } => k,
+        }
+    }
+
+    /// Number of parity blocks.
+    pub fn parity(&self) -> usize {
+        match *self {
+            CodeSpec::Rs { m, .. } => m,
+            CodeSpec::Lrc { l, g, .. } => l + g,
+        }
+    }
+
+    /// Max blocks of one stripe a rack may hold while tolerating a single
+    /// rack failure: m for RS (§4.1); 1 for LRC (maximum rack-level fault
+    /// tolerance, §4.4 basic rules).
+    pub fn rack_limit(&self) -> usize {
+        match *self {
+            CodeSpec::Rs { m, .. } => m,
+            CodeSpec::Lrc { .. } => 1,
+        }
+    }
+
+    pub fn kind(&self, idx: usize) -> BlockKind {
+        assert!(idx < self.len(), "block index out of range");
+        match *self {
+            CodeSpec::Rs { k, .. } => {
+                if idx < k {
+                    BlockKind::Data
+                } else {
+                    BlockKind::GlobalParity
+                }
+            }
+            CodeSpec::Lrc { k, l, .. } => {
+                if idx < k {
+                    BlockKind::Data
+                } else if idx < k + l {
+                    BlockKind::LocalParity { group: idx - k }
+                } else {
+                    BlockKind::GlobalParity
+                }
+            }
+        }
+    }
+
+    pub fn is_lrc(&self) -> bool {
+        matches!(self, CodeSpec::Lrc { .. })
+    }
+
+    /// Human-readable name, e.g. "(6,3)-RS" or "(4,2,1)-LRC".
+    pub fn name(&self) -> String {
+        match *self {
+            CodeSpec::Rs { k, m } => format!("({k},{m})-RS"),
+            CodeSpec::Lrc { k, l, g } => format!("({k},{l},{g})-LRC"),
+        }
+    }
+
+    /// Parse "rs-6-3" / "lrc-4-2-1" (CLI format).
+    pub fn parse(s: &str) -> Option<CodeSpec> {
+        let parts: Vec<&str> = s.split('-').collect();
+        match parts.as_slice() {
+            ["rs", k, m] => Some(CodeSpec::Rs { k: k.parse().ok()?, m: m.parse().ok()? }),
+            ["lrc", k, l, g] => Some(CodeSpec::Lrc {
+                k: k.parse().ok()?,
+                l: l.parse().ok()?,
+                g: g.parse().ok()?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_shapes() {
+        let rs = CodeSpec::Rs { k: 6, m: 3 };
+        assert_eq!(rs.len(), 9);
+        assert_eq!(rs.rack_limit(), 3);
+        assert_eq!(rs.kind(5), BlockKind::Data);
+        assert_eq!(rs.kind(6), BlockKind::GlobalParity);
+
+        let lrc = CodeSpec::Lrc { k: 4, l: 2, g: 1 };
+        assert_eq!(lrc.len(), 7);
+        assert_eq!(lrc.rack_limit(), 1);
+        assert_eq!(lrc.kind(3), BlockKind::Data);
+        assert_eq!(lrc.kind(4), BlockKind::LocalParity { group: 0 });
+        assert_eq!(lrc.kind(5), BlockKind::LocalParity { group: 1 });
+        assert_eq!(lrc.kind(6), BlockKind::GlobalParity);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(CodeSpec::parse("rs-6-3"), Some(CodeSpec::Rs { k: 6, m: 3 }));
+        assert_eq!(
+            CodeSpec::parse("lrc-4-2-1"),
+            Some(CodeSpec::Lrc { k: 4, l: 2, g: 1 })
+        );
+        assert_eq!(CodeSpec::parse("nope"), None);
+        assert_eq!(CodeSpec::parse("rs-x-3"), None);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(CodeSpec::Rs { k: 2, m: 1 }.name(), "(2,1)-RS");
+        assert_eq!(CodeSpec::Lrc { k: 4, l: 2, g: 1 }.name(), "(4,2,1)-LRC");
+    }
+}

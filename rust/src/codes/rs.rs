@@ -1,0 +1,225 @@
+//! (k, m) Reed-Solomon over GF(2^8) with a systematic Cauchy generator.
+//!
+//! The generator's parity rows are `cauchy(m, k, offset = k)` — every
+//! square submatrix of a Cauchy matrix is nonsingular, so any k of the
+//! k + m blocks reconstruct the stripe (MDS). Must match
+//! `python/compile/kernels/ref.py::rs_generator` so coefficients computed
+//! here drive the AOT artifacts.
+
+use crate::gf::{self, matrix::cauchy, Matrix};
+
+#[derive(Clone, Debug)]
+pub struct RsCode {
+    k: usize,
+    m: usize,
+    /// Full systematic generator: (k+m) × k; rows 0..k are identity.
+    full: Matrix,
+}
+
+impl RsCode {
+    pub fn new(k: usize, m: usize) -> RsCode {
+        assert!(k >= 1 && m >= 1, "(k,m)-RS needs k,m >= 1");
+        assert!(k + m <= 256, "GF(256) RS limited to len <= 256");
+        let parity = cauchy(m, k, k);
+        let mut full = Matrix::zero(k + m, k);
+        for i in 0..k {
+            full[(i, i)] = 1;
+        }
+        for i in 0..m {
+            for j in 0..k {
+                full[(k + i, j)] = parity[(i, j)];
+            }
+        }
+        RsCode { k, m, full }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn len(&self) -> usize {
+        self.k + self.m
+    }
+
+    /// Parity rows of the generator, shape (m, k) — the encode matrix fed
+    /// to the `gf_matmul` artifact.
+    pub fn parity_rows(&self) -> Matrix {
+        let idx: Vec<usize> = (self.k..self.len()).collect();
+        self.full.select_rows(&idx)
+    }
+
+    /// Coefficients c with `block[target] = XOR_i c_i * block[available[i]]`
+    /// for any k distinct surviving indices (RS *linearity*, §2.2).
+    ///
+    /// Returns `None` only if `available` violates the contract
+    /// (wrong count / duplicates / contains target).
+    pub fn decode_coeffs(&self, available: &[usize], target: usize) -> Option<Vec<u8>> {
+        if available.len() != self.k || target >= self.len() {
+            return None;
+        }
+        let mut seen = vec![false; self.len()];
+        for &a in available {
+            if a >= self.len() || seen[a] || a == target {
+                return None;
+            }
+            seen[a] = true;
+        }
+        let sub = self.full.select_rows(available);
+        let inv = sub.inverse().expect("Cauchy submatrix is always invertible");
+        // target_row (1×k) * inv (k×k) = coefficients over `available`
+        let trow = self.full.row(target);
+        Some(inv_apply(trow, &inv))
+    }
+
+    /// Encode: data shards (k × len) -> m parity shards.
+    pub fn encode(&self, data: &[&[u8]]) -> Vec<Vec<u8>> {
+        assert_eq!(data.len(), self.k);
+        let parity = self.parity_rows();
+        (0..self.m)
+            .map(|i| gf::combine(parity.row(i), data))
+            .collect()
+    }
+
+    /// Reconstruct one block from exactly k survivors.
+    pub fn reconstruct(
+        &self,
+        available: &[usize],
+        shards: &[&[u8]],
+        target: usize,
+    ) -> Option<Vec<u8>> {
+        let coeffs = self.decode_coeffs(available, target)?;
+        Some(gf::combine(&coeffs, shards))
+    }
+}
+
+/// trow (1×k) × inv (k×k) worked out per-column.
+fn inv_apply(trow: &[u8], inv: &Matrix) -> Vec<u8> {
+    let k = trow.len();
+    let mut out = vec![0u8; k];
+    for (j, o) in out.iter_mut().enumerate() {
+        let mut acc = 0u8;
+        for (t, &tv) in trow.iter().enumerate() {
+            acc ^= gf::mul(tv, inv[(t, j)]);
+        }
+        *o = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_shards(k: usize, len: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15) | 1;
+        (0..k)
+            .map(|_| {
+                (0..len)
+                    .map(|_| {
+                        s ^= s << 13;
+                        s ^= s >> 7;
+                        s ^= s << 17;
+                        (s >> 24) as u8
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn mds_all_erasure_patterns_small_codes() {
+        // For (2,1), (3,2), (4,2): every k-subset reconstructs every block.
+        for (k, m) in [(2usize, 1usize), (3, 2), (4, 2)] {
+            let code = RsCode::new(k, m);
+            let data = rand_shards(k, 64, (k * 10 + m) as u64);
+            let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+            let parity = code.encode(&refs);
+            let mut all: Vec<&[u8]> = refs.clone();
+            all.extend(parity.iter().map(|v| v.as_slice()));
+            let n = k + m;
+            // iterate over all k-subsets via bitmask
+            for mask in 0u32..(1 << n) {
+                if mask.count_ones() as usize != k {
+                    continue;
+                }
+                let avail: Vec<usize> = (0..n).filter(|&i| mask >> i & 1 == 1).collect();
+                let shards: Vec<&[u8]> = avail.iter().map(|&i| all[i]).collect();
+                for target in 0..n {
+                    if avail.contains(&target) {
+                        continue;
+                    }
+                    let rec = code.reconstruct(&avail, &shards, target).unwrap();
+                    assert_eq!(rec, all[target], "k={k} m={m} mask={mask:b} t={target}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hdfs_builtin_codes_roundtrip() {
+        for (k, m) in [(2, 1), (3, 2), (6, 3), (10, 4), (12, 4)] {
+            let code = RsCode::new(k, m);
+            let data = rand_shards(k, 256, 42);
+            let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+            let parity = code.encode(&refs);
+            let mut all: Vec<&[u8]> = refs.clone();
+            all.extend(parity.iter().map(|v| v.as_slice()));
+            // erase the first m blocks, recover each from the rest
+            let avail: Vec<usize> = (m..k + m).collect();
+            let shards: Vec<&[u8]> = avail.iter().map(|&i| all[i]).collect();
+            for target in 0..m {
+                let rec = code.reconstruct(&avail, &shards, target).unwrap();
+                assert_eq!(rec, all[target], "({k},{m}) target {target}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_coeffs_rejects_bad_input() {
+        let code = RsCode::new(3, 2);
+        assert!(code.decode_coeffs(&[0, 1], 4).is_none()); // too few
+        assert!(code.decode_coeffs(&[0, 1, 1], 4).is_none()); // dup
+        assert!(code.decode_coeffs(&[0, 1, 4], 4).is_none()); // contains target
+        assert!(code.decode_coeffs(&[0, 1, 9], 4).is_none()); // out of range
+        assert!(code.decode_coeffs(&[0, 1, 2], 9).is_none()); // target oob
+    }
+
+    #[test]
+    fn coefficients_for_data_from_data_are_identityish() {
+        // reconstructing a data block when all of data survives: the
+        // coefficient vector selects exactly that block.
+        let code = RsCode::new(4, 2);
+        let avail = vec![0, 1, 2, 3];
+        let c = code.decode_coeffs(&avail, 4).unwrap(); // parity from data
+        // parity row 0 of the cauchy generator
+        let pr = code.parity_rows();
+        assert_eq!(&c, pr.row(0));
+    }
+
+    #[test]
+    fn partial_aggregation_identity() {
+        // The D³ inner-rack aggregation (§3.2.1): splitting the coefficient
+        // set by rack and XOR-ing partial sums equals the direct combine.
+        let code = RsCode::new(6, 3);
+        let data = rand_shards(6, 128, 7);
+        let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+        let parity = code.encode(&refs);
+        let mut all: Vec<&[u8]> = refs.clone();
+        all.extend(parity.iter().map(|v| v.as_slice()));
+
+        let avail = vec![1, 2, 3, 4, 5, 6];
+        let shards: Vec<&[u8]> = avail.iter().map(|&i| all[i]).collect();
+        let c = code.decode_coeffs(&avail, 0).unwrap();
+        let direct = gf::combine(&c, &shards);
+
+        let agg_a = gf::combine(&c[..3], &shards[..3]);
+        let agg_b = gf::combine(&c[3..], &shards[3..]);
+        let via = gf::combine(&[1, 1], &[&agg_a, &agg_b]);
+        assert_eq!(direct, via);
+        assert_eq!(direct, all[0]);
+    }
+}

@@ -1,0 +1,271 @@
+//! Dense GF(2^8) matrices: the control-path linear algebra behind decode
+//! coefficient computation (Gauss-Jordan inversion of generator submatrices).
+
+use super::{div, inv, mul};
+
+/// A dense row-major GF(2^8) matrix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<u8>,
+}
+
+impl Matrix {
+    pub fn zero(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        let mut m = Matrix::zero(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[u8]]) -> Matrix {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut m = Matrix::zero(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn row(&self, i: usize) -> &[u8] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Select a subset of rows into a new matrix.
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut m = Matrix::zero(idx.len(), self.cols);
+        for (out, &i) in idx.iter().enumerate() {
+            let (s, c) = (i * self.cols, self.cols);
+            m.data[out * c..(out + 1) * c].copy_from_slice(&self.data[s..s + c]);
+        }
+        m
+    }
+
+    /// Matrix product over GF(2^8).
+    pub fn matmul(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.cols, rhs.rows, "shape mismatch");
+        let mut out = Matrix::zero(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for t in 0..self.cols {
+                let a = self[(i, t)];
+                if a == 0 {
+                    continue;
+                }
+                for j in 0..rhs.cols {
+                    out[(i, j)] ^= mul(a, rhs[(t, j)]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Row-vector times matrix: `v * self`.
+    pub fn vecmul_left(&self, v: &[u8]) -> Vec<u8> {
+        assert_eq!(v.len(), self.rows);
+        let mut out = vec![0u8; self.cols];
+        for (t, &a) in v.iter().enumerate() {
+            if a == 0 {
+                continue;
+            }
+            for j in 0..self.cols {
+                out[j] ^= mul(a, self[(t, j)]);
+            }
+        }
+        out
+    }
+
+    /// Gauss-Jordan inverse. Returns `None` for singular matrices.
+    pub fn inverse(&self) -> Option<Matrix> {
+        assert_eq!(self.rows, self.cols, "inverse of non-square");
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut out = Matrix::identity(n);
+        for col in 0..n {
+            let piv = (col..n).find(|&r| a[(r, col)] != 0)?;
+            if piv != col {
+                a.swap_rows(piv, col);
+                out.swap_rows(piv, col);
+            }
+            let s = inv(a[(col, col)]);
+            a.scale_row(col, s);
+            out.scale_row(col, s);
+            for r in 0..n {
+                if r != col && a[(r, col)] != 0 {
+                    let f = a[(r, col)];
+                    a.axpy_row(r, col, f);
+                    out.axpy_row(r, col, f);
+                }
+            }
+        }
+        Some(out)
+    }
+
+    /// Determinant by elimination (used by MDS-property tests).
+    pub fn det(&self) -> u8 {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut det = 1u8;
+        for col in 0..n {
+            let Some(piv) = (col..n).find(|&r| a[(r, col)] != 0) else {
+                return 0;
+            };
+            if piv != col {
+                a.swap_rows(piv, col); // char 2: swap does not flip sign
+            }
+            det = mul(det, a[(col, col)]);
+            let s = inv(a[(col, col)]);
+            a.scale_row(col, s);
+            for r in col + 1..n {
+                if a[(r, col)] != 0 {
+                    let f = a[(r, col)];
+                    a.axpy_row(r, col, f);
+                }
+            }
+        }
+        det
+    }
+
+    fn swap_rows(&mut self, i: usize, j: usize) {
+        for c in 0..self.cols {
+            self.data.swap(i * self.cols + c, j * self.cols + c);
+        }
+    }
+
+    fn scale_row(&mut self, i: usize, s: u8) {
+        for c in 0..self.cols {
+            self[(i, c)] = mul(self[(i, c)], s);
+        }
+    }
+
+    /// row_i ^= f * row_j
+    fn axpy_row(&mut self, i: usize, j: usize, f: u8) {
+        for c in 0..self.cols {
+            let v = mul(f, self[(j, c)]);
+            self[(i, c)] ^= v;
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = u8;
+    fn index(&self, (r, c): (usize, usize)) -> &u8 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut u8 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// Cauchy matrix entry (i + k) vs j: every square submatrix is invertible.
+pub fn cauchy(rows: usize, cols: usize, row_offset: usize) -> Matrix {
+    let mut m = Matrix::zero(rows, cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            let x = (i + row_offset) as u8;
+            let y = j as u8;
+            assert_ne!(x, y, "cauchy x/y sets must be disjoint");
+            m[(i, j)] = div(1, x ^ y);
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng_matrix(n: usize, seed: u64) -> Matrix {
+        // xorshift-ish deterministic fill
+        let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15) | 1;
+        let mut m = Matrix::zero(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                m[(i, j)] = (s >> 32) as u8;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        for n in 1..=8 {
+            for seed in 0..8 {
+                let m = rng_matrix(n, seed * 100 + n as u64);
+                if let Some(inv) = m.inverse() {
+                    assert_eq!(m.matmul(&inv), Matrix::identity(n), "n={n} seed={seed}");
+                    assert_eq!(inv.matmul(&m), Matrix::identity(n));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn singular_matrix_returns_none() {
+        let mut m = Matrix::zero(3, 3);
+        m[(0, 0)] = 5;
+        m[(1, 0)] = 9; // column rank 1
+        assert!(m.inverse().is_none());
+        assert_eq!(m.det(), 0);
+    }
+
+    #[test]
+    fn det_multiplicative() {
+        let a = rng_matrix(4, 7);
+        let b = rng_matrix(4, 13);
+        assert_eq!(a.matmul(&b).det(), mul(a.det(), b.det()));
+    }
+
+    #[test]
+    fn cauchy_every_square_submatrix_invertible_small() {
+        let m = 3;
+        let k = 6;
+        let c = cauchy(m, k, k);
+        // all 1x1, 2x2, 3x3 submatrices must be nonsingular
+        for r0 in 0..m {
+            for c0 in 0..k {
+                assert_ne!(c[(r0, c0)], 0);
+                for r1 in r0 + 1..m {
+                    for c1 in c0 + 1..k {
+                        let sub = Matrix::from_rows(&[
+                            &[c[(r0, c0)], c[(r0, c1)]],
+                            &[c[(r1, c0)], c[(r1, c1)]],
+                        ]);
+                        assert_ne!(sub.det(), 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vecmul_left_matches_matmul() {
+        let a = rng_matrix(5, 3);
+        let v = [1u8, 20, 0, 255, 7];
+        let direct = a.vecmul_left(&v);
+        let as_mat = Matrix::from_rows(&[&v]).matmul(&a);
+        assert_eq!(direct, as_mat.row(0));
+    }
+}

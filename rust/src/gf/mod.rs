@@ -1,0 +1,216 @@
+//! GF(2^8) arithmetic over x^8 + x^4 + x^3 + x^2 + 1 (0x11d).
+//!
+//! This is the native mirror of the Layer-1 Pallas kernel's field
+//! (`python/compile/kernels/gf.py` — same modulus, same generator 0x02) so
+//! coefficients computed here feed the AOT artifacts directly, and the
+//! native coder (`runtime::native`) is bit-identical to the PJRT path.
+//!
+//! The hot combine loop is in [`combine_into`]; everything else (inverse,
+//! matrix inversion) runs on the control path only.
+
+pub mod matrix;
+
+pub use matrix::Matrix;
+
+/// The field modulus (must match `python/compile/kernels/gf.py::GF_POLY`).
+pub const GF_POLY: u16 = 0x11d;
+/// 0x02 generates GF(256)* for this modulus.
+pub const GF_GENERATOR: u8 = 0x02;
+
+/// Log/exp tables, built once at startup.
+pub struct Tables {
+    /// log[x] for x != 0; log[0] is a sentinel (never read on valid input).
+    pub log: [u16; 256],
+    /// exp[i] = g^(i mod 255), doubled to 512 entries so `log a + log b`
+    /// indexes without a mod.
+    pub exp: [u8; 512],
+    /// mul[a][b] flat 64 KiB table for the scalar hot path.
+    mul: Box<[u8; 65536]>,
+}
+
+impl Tables {
+    fn build() -> Tables {
+        let mut exp = [0u8; 512];
+        let mut log = [0u16; 256];
+        let mut x: u16 = 1;
+        for i in 0..255u16 {
+            exp[i as usize] = x as u8;
+            log[x as usize] = i;
+            x <<= 1;
+            if x & 0x100 != 0 {
+                x ^= GF_POLY;
+            }
+        }
+        for i in 255..510 {
+            exp[i] = exp[i - 255];
+        }
+        let mut mul = Box::new([0u8; 65536]);
+        for a in 1..256usize {
+            for b in 1..256usize {
+                mul[(a << 8) | b] = exp[(log[a] + log[b]) as usize];
+            }
+        }
+        Tables { log, exp, mul }
+    }
+}
+
+fn tables() -> &'static Tables {
+    use std::sync::OnceLock;
+    static TABLES: OnceLock<Tables> = OnceLock::new();
+    TABLES.get_or_init(Tables::build)
+}
+
+/// GF(2^8) multiply.
+#[inline]
+pub fn mul(a: u8, b: u8) -> u8 {
+    tables().mul[((a as usize) << 8) | b as usize]
+}
+
+/// GF(2^8) addition/subtraction is XOR.
+#[inline]
+pub fn add(a: u8, b: u8) -> u8 {
+    a ^ b
+}
+
+/// Multiplicative inverse. Panics on 0.
+pub fn inv(a: u8) -> u8 {
+    assert!(a != 0, "gf::inv(0)");
+    let t = tables();
+    t.exp[(255 - t.log[a as usize]) as usize]
+}
+
+/// a / b. Panics if b == 0.
+#[inline]
+pub fn div(a: u8, b: u8) -> u8 {
+    mul(a, inv(b))
+}
+
+/// a^e by square-and-multiply (control path only).
+pub fn pow(mut a: u8, mut e: u32) -> u8 {
+    let mut acc = 1u8;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = mul(acc, a);
+        }
+        a = mul(a, a);
+        e >>= 1;
+    }
+    acc
+}
+
+/// `acc[i] ^= c * src[i]` — the byte-crunching inner loop of the native
+/// coder. Specializes c == 0 (no-op) and c == 1 (pure XOR, the LRC/replica
+/// path) before falling back to the 64 KiB row table.
+pub fn combine_into(acc: &mut [u8], c: u8, src: &[u8]) {
+    assert_eq!(acc.len(), src.len());
+    match c {
+        0 => {}
+        1 => {
+            for (a, s) in acc.iter_mut().zip(src) {
+                *a ^= s;
+            }
+        }
+        _ => {
+            let row = &tables().mul[(c as usize) << 8..((c as usize) << 8) + 256];
+            for (a, s) in acc.iter_mut().zip(src) {
+                *a ^= row[*s as usize];
+            }
+        }
+    }
+}
+
+/// `out = XOR_i coeffs[i] * shards[i]` — one GF linear combination.
+/// This is the native twin of the `gf_combine` AOT artifact.
+pub fn combine(coeffs: &[u8], shards: &[&[u8]]) -> Vec<u8> {
+    assert_eq!(coeffs.len(), shards.len());
+    assert!(!shards.is_empty(), "gf::combine with no shards");
+    let len = shards[0].len();
+    let mut out = vec![0u8; len];
+    for (&c, shard) in coeffs.iter().zip(shards) {
+        combine_into(&mut out, c, shard);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Independent polynomial-basis multiply (mirror of python ref.py).
+    fn mul_ref(mut a: u16, mut b: u16) -> u8 {
+        let mut acc = 0u16;
+        for _ in 0..8 {
+            if b & 1 == 1 {
+                acc ^= a;
+            }
+            b >>= 1;
+            a <<= 1;
+            if a & 0x100 != 0 {
+                a ^= GF_POLY;
+            }
+        }
+        acc as u8
+    }
+
+    #[test]
+    fn mul_matches_polynomial_basis_exhaustively() {
+        for a in 0..=255u16 {
+            for b in 0..=255u16 {
+                assert_eq!(mul(a as u8, b as u8), mul_ref(a, b), "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_nonzero_element_has_inverse() {
+        for a in 1..=255u8 {
+            assert_eq!(mul(a, inv(a)), 1, "a={a}");
+        }
+    }
+
+    #[test]
+    fn generator_has_full_order() {
+        let mut x = 1u8;
+        let mut seen = [false; 256];
+        for _ in 0..255 {
+            assert!(!seen[x as usize], "generator order < 255");
+            seen[x as usize] = true;
+            x = mul(x, GF_GENERATOR);
+        }
+        assert_eq!(x, 1);
+    }
+
+    #[test]
+    fn pow_agrees_with_repeated_mul() {
+        for a in [0u8, 1, 2, 7, 131, 255] {
+            let mut acc = 1u8;
+            for e in 0..20u32 {
+                assert_eq!(pow(a, e), acc, "a={a} e={e}");
+                acc = mul(acc, a);
+            }
+        }
+    }
+
+    #[test]
+    fn combine_identity_and_zero() {
+        let a = vec![1u8, 2, 3, 4];
+        let b = vec![5u8, 6, 7, 8];
+        let picked = combine(&[0, 1], &[&a, &b]);
+        assert_eq!(picked, b);
+        let zero = combine(&[0, 0], &[&a, &b]);
+        assert_eq!(zero, vec![0; 4]);
+    }
+
+    #[test]
+    fn combine_is_linear_in_data() {
+        let a = [9u8, 30, 200, 7];
+        let b = [250u8, 3, 17, 99];
+        let ab: Vec<u8> = a.iter().zip(b).map(|(x, y)| x ^ y).collect();
+        let c = [77u8, 140];
+        let lhs = combine(&c, &[&ab, &ab]);
+        let r1 = combine(&c, &[&a[..], &a[..]]);
+        let r2 = combine(&c, &[&b[..], &b[..]]);
+        let rhs: Vec<u8> = r1.iter().zip(r2).map(|(x, y)| x ^ y).collect();
+        assert_eq!(lhs, rhs);
+    }
+}

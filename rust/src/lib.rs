@@ -1,0 +1,29 @@
+//! # d3ec — Deterministic Data Distribution (D³) for erasure-coded storage
+//!
+//! Production-style reproduction of *Deterministic Data Distribution for
+//! Efficient Recovery in Erasure-Coded Storage Systems* (Xu, Lyu, Li, Li,
+//! Xu — TPDS 2020), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * [`gf`], [`codes`] — GF(2⁸) arithmetic and RS/LRC erasure codes;
+//! * [`oa`] — orthogonal arrays (the combinatorial core of D³);
+//! * [`placement`] — D³ (paper §4), RDD and HDD baselines;
+//! * [`recovery`] — minimum-cross-rack repair planning (§5) + migration;
+//! * [`sim`] — flow-level discrete-event cluster simulator (the testbed
+//!   substitute; see DESIGN.md §2);
+//! * [`runtime`] — PJRT execution of the AOT-lowered GF kernels;
+//! * [`cluster`] — mini-HDFS (NameNode + DataNodes) with a real data path;
+//! * [`workloads`], [`metrics`], [`experiments`] — the paper's evaluation.
+
+pub mod cluster;
+pub mod codes;
+pub mod experiments;
+pub mod gf;
+pub mod metrics;
+pub mod oa;
+pub mod placement;
+pub mod recovery;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod util;
+pub mod workloads;

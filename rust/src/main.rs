@@ -1,0 +1,228 @@
+//! d3ctl — CLI for the D³ reproduction.
+//!
+//! ```text
+//! d3ctl exp <1..11|all> [--stripes N] [--racks R] [--nodes N] [--block MB]
+//! d3ctl layout --policy d3|rdd|hdd --code rs-3-2 [--stripes N] [--racks R] [--nodes N]
+//! d3ctl mu --code rs-6-3               # Lemma 4 closed form vs planner
+//! d3ctl oa --n 5 [--cols 4]            # print + verify an orthogonal array
+//! d3ctl cluster-demo [--backend pjrt|native] [--stripes N]
+//! d3ctl calibrate                      # coding throughput, native vs PJRT
+//! ```
+
+use std::collections::HashMap;
+
+use d3ec::cluster::MiniCluster;
+use d3ec::codes::CodeSpec;
+use d3ec::experiments as exp;
+use d3ec::oa::{max_columns, OrthogonalArray};
+use d3ec::recovery::mu::mu_rs;
+use d3ec::runtime::Coder;
+use d3ec::topology::{Location, SystemSpec};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args.get(i + 1).cloned().unwrap_or_default();
+            out.insert(key.to_string(), val);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn spec_from(flags: &HashMap<String, String>) -> SystemSpec {
+    let mut spec = SystemSpec::paper_default();
+    spec.cluster.racks = flag(flags, "racks", spec.cluster.racks);
+    spec.cluster.nodes_per_rack = flag(flags, "nodes", spec.cluster.nodes_per_rack);
+    let mb: u64 = flag(flags, "block", 16u64);
+    spec.block_size = mb << 20;
+    spec.net.cross_mbps = flag(flags, "cross-mbps", spec.net.cross_mbps);
+    spec.net.inner_mbps = flag(flags, "inner-mbps", spec.net.inner_mbps);
+    spec
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args);
+    match cmd {
+        "exp" => cmd_exp(&args, &flags),
+        "layout" => cmd_layout(&flags),
+        "mu" => cmd_mu(&flags),
+        "oa" => cmd_oa(&flags),
+        "cluster-demo" => cmd_cluster_demo(&flags),
+        "calibrate" => cmd_calibrate(&flags),
+        _ => {
+            println!("d3ctl — Deterministic Data Distribution (D³) reproduction");
+            println!("{}", include_str!("main.rs").lines().skip(2).take(9)
+                .map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
+        }
+    }
+}
+
+fn cmd_exp(args: &[String], flags: &HashMap<String, String>) {
+    let which = args.get(1).map(String::as_str).unwrap_or("all");
+    let spec = spec_from(flags);
+    let stripes: u64 = flag(flags, "stripes", exp::STRIPES);
+    let run = |id: usize| match id {
+        1 => drop(exp::exp01_load_balance(&spec, stripes)),
+        2 => drop(exp::exp02_ec_config(&spec, stripes)),
+        3 => drop(exp::exp03_degraded_read(&spec)),
+        4 => drop(exp::exp04_block_size(&spec, stripes)),
+        5 => drop(exp::exp05_bandwidth(&spec, stripes)),
+        6 => drop(exp::exp06_racks(&spec, stripes)),
+        7 => drop(exp::exp07_nodes_per_rack(&spec, stripes)),
+        8 => drop(exp::exp08_lrc_recovery(&spec, stripes)),
+        9 => drop(exp::exp09_lrc_block_size(&spec, stripes)),
+        10 => drop(exp::frontend_exp::exp10_frontend_normal(&spec)),
+        11 => drop(exp::frontend_exp::exp11_frontend_recovery(&spec, stripes)),
+        _ => eprintln!("unknown experiment {id}"),
+    };
+    if which == "all" {
+        for id in 1..=11 {
+            run(id);
+        }
+    } else if let Ok(id) = which.parse::<usize>() {
+        run(id);
+    } else {
+        eprintln!("usage: d3ctl exp <1..11|all>");
+    }
+}
+
+fn cmd_layout(flags: &HashMap<String, String>) {
+    let spec = spec_from(flags);
+    let code = CodeSpec::parse(&flag::<String>(flags, "code", "rs-3-2".into()))
+        .expect("bad --code (rs-K-M or lrc-K-L-G)");
+    let policy_name: String = flag(flags, "policy", "d3".into());
+    let policy = exp::build_policy(&policy_name, code, &spec, flag(flags, "seed", 1u64));
+    let stripes: u64 = flag(flags, "stripes", 9u64);
+    println!(
+        "# {} layout of {} on {} racks × {} nodes",
+        policy.name(),
+        code.name(),
+        spec.cluster.racks,
+        spec.cluster.nodes_per_rack
+    );
+    for sid in 0..stripes {
+        let sp = policy.stripe(sid);
+        let cells: Vec<String> =
+            sp.locs.iter().enumerate().map(|(b, l)| format!("B{b}@{l}")).collect();
+        println!("S{sid}: {}", cells.join("  "));
+    }
+    // per-node totals
+    let mut counts: HashMap<Location, usize> = HashMap::new();
+    for sid in 0..stripes {
+        for l in policy.stripe(sid).locs {
+            *counts.entry(l).or_default() += 1;
+        }
+    }
+    let mut nodes: Vec<_> = counts.into_iter().collect();
+    nodes.sort();
+    println!("\nper-node block counts over {stripes} stripes:");
+    for (l, c) in nodes {
+        println!("  {l}: {c}");
+    }
+}
+
+fn cmd_mu(flags: &HashMap<String, String>) {
+    let code = CodeSpec::parse(&flag::<String>(flags, "code", "rs-3-2".into()))
+        .expect("bad --code");
+    if let CodeSpec::Rs { k, m } = code {
+        println!("Lemma 4: μ({k},{m}) = {:.4} cross-rack blocks/repair", mu_rs(k, m));
+        println!("one-block-per-rack layout reads {k} cross-rack blocks/repair");
+        println!("traffic saving: {:.1}%", (1.0 - mu_rs(k, m) / k as f64) * 100.0);
+    } else {
+        println!("μ closed form applies to RS codes (Lemma 4)");
+    }
+}
+
+fn cmd_oa(flags: &HashMap<String, String>) {
+    let n: usize = flag(flags, "n", 5);
+    let cols: usize = flag(flags, "cols", max_columns(n).min(n));
+    match OrthogonalArray::construct(n, cols) {
+        Ok(oa) => {
+            println!("OA({n},{cols}) — {} rows; Definition 1 verified: {}", oa.rows(), oa.verify());
+            for r in 0..oa.rows() {
+                let row: Vec<String> = (0..cols).map(|c| oa.entry(r, c).to_string()).collect();
+                println!("{}", row.join(" "));
+            }
+        }
+        Err(e) => eprintln!("{e}"),
+    }
+}
+
+fn cmd_cluster_demo(flags: &HashMap<String, String>) {
+    let backend: String = flag(flags, "backend", "pjrt".into());
+    let mut spec = spec_from(flags);
+    spec.block_size = flag::<u64>(flags, "block-kb", 256) << 10;
+    spec.net.inner_mbps = 8000.0;
+    spec.net.cross_mbps = 1600.0;
+    let stripes: u64 = flag(flags, "stripes", 100);
+    let code = CodeSpec::parse(&flag::<String>(flags, "code", "rs-3-2".into())).unwrap();
+    let policy = exp::build_policy("d3", code, &spec, 0);
+    println!("mini-HDFS demo: {} × {stripes} stripes, backend={backend}", code.name());
+    let cluster = MiniCluster::new(spec, policy, &backend, 1).expect("cluster");
+    let t0 = std::time::Instant::now();
+    for sid in 0..stripes {
+        let data: Vec<Vec<u8>> = (0..code.k())
+            .map(|b| vec![(sid as u8).wrapping_mul(31).wrapping_add(b as u8); spec.block_size as usize])
+            .collect();
+        cluster.write_stripe(sid, &data).expect("write");
+    }
+    println!("wrote {stripes} stripes in {:.2?}", t0.elapsed());
+    let failed = Location::new(0, 0);
+    cluster.fail_node(failed);
+    let stats = cluster.recover_node(failed, stripes, 8).expect("recover");
+    println!(
+        "recovered {} blocks ({:.1} MB) in {:.2?} → {:.1} MB/s, λ={:.3}",
+        stats.blocks,
+        stats.bytes as f64 / 1e6,
+        stats.wall,
+        stats.throughput_mb_s,
+        stats.lambda
+    );
+}
+
+fn cmd_calibrate(flags: &HashMap<String, String>) {
+    let len: usize = flag(flags, "len", 16 << 20);
+    let k = 6usize;
+    let shards: Vec<Vec<u8>> = (0..k).map(|i| vec![i as u8 + 1; len]).collect();
+    let refs: Vec<&[u8]> = shards.iter().map(|v| v.as_slice()).collect();
+    let coeffs: Vec<u8> = (1..=k as u8).collect();
+    for backend in ["native", "pjrt"] {
+        let coder = match backend {
+            "native" => Coder::native(),
+            _ => match Coder::pjrt() {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("pjrt unavailable: {e}");
+                    continue;
+                }
+            },
+        };
+        // warmup + timed runs
+        let _ = coder.combine(&coeffs, &refs).unwrap();
+        let t0 = std::time::Instant::now();
+        let iters = 5;
+        for _ in 0..iters {
+            let _ = coder.combine(&coeffs, &refs).unwrap();
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "{backend}: combine k={k} over {} MB: {:.1} ms → {:.0} MB/s output ({:.0} MB/s source-stream)",
+            len >> 20,
+            per * 1e3,
+            len as f64 / per / 1e6,
+            (len * k) as f64 / per / 1e6,
+        );
+    }
+    let _ = flags;
+}

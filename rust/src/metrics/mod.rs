@@ -1,0 +1,104 @@
+//! Evaluation metrics (paper §6.2.1): load-imbalance λ, throughput, and
+//! small summary-statistics helpers shared by the CLI and experiments.
+
+/// λ = (Lmax − Lavg)/Lavg over a set of load samples (paper Exp 1).
+/// Returns 0 for empty/zero loads.
+pub fn lambda(loads: &[f64]) -> f64 {
+    if loads.is_empty() {
+        return 0.0;
+    }
+    let avg = loads.iter().sum::<f64>() / loads.len() as f64;
+    if avg <= 0.0 {
+        return 0.0;
+    }
+    let max = loads.iter().cloned().fold(f64::MIN, f64::max);
+    (max - avg) / avg
+}
+
+/// Coefficient of variation (σ/μ) — secondary balance metric.
+pub fn cv(loads: &[f64]) -> f64 {
+    if loads.is_empty() {
+        return 0.0;
+    }
+    let n = loads.len() as f64;
+    let mean = loads.iter().sum::<f64>() / n;
+    if mean <= 0.0 {
+        return 0.0;
+    }
+    let var = loads.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    var.sqrt() / mean
+}
+
+/// Simple percentile summary over latency samples (seconds).
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+pub fn summarize(samples: &[f64]) -> Summary {
+    assert!(!samples.is_empty(), "summarize of empty sample set");
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| v[((v.len() as f64 - 1.0) * p).round() as usize];
+    Summary {
+        count: v.len(),
+        mean: v.iter().sum::<f64>() / v.len() as f64,
+        p50: pct(0.50),
+        p95: pct(0.95),
+        max: *v.last().unwrap(),
+    }
+}
+
+/// MB/s from bytes and seconds.
+pub fn throughput_mb_s(bytes: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    bytes as f64 / secs / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lambda_balanced_is_zero() {
+        assert_eq!(lambda(&[5.0, 5.0, 5.0, 5.0]), 0.0);
+        assert_eq!(lambda(&[]), 0.0);
+        assert_eq!(lambda(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn lambda_matches_paper_formula() {
+        // Lmax = 9, Lavg = 6 → λ = 0.5
+        let l = lambda(&[3.0, 6.0, 9.0]);
+        assert!((l - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cv_zero_for_uniform_positive_for_skew() {
+        assert_eq!(cv(&[2.0, 2.0]), 0.0);
+        assert!(cv(&[1.0, 3.0]) > 0.4);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let samples: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let s = summarize(&samples);
+        assert_eq!(s.count, 100);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+        assert!((s.p95 - 95.0).abs() <= 1.0);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn throughput() {
+        assert!((throughput_mb_s(32_000_000, 2.0) - 16.0).abs() < 1e-9);
+        assert_eq!(throughput_mb_s(1, 0.0), 0.0);
+    }
+}

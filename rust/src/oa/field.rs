@@ -1,0 +1,271 @@
+//! Small finite fields GF(p^e) for orthogonal-array construction.
+//!
+//! D³ needs OA(n, ·) for n = nodes-per-rack and n = rack-count — small
+//! numbers (≤ ~1024). We build GF(p^e) generically: find an irreducible
+//! monic polynomial of degree e over Z_p by search, then precompute full
+//! add/mul tables indexed by element id (digits base p).
+
+/// A finite field GF(p^e) with dense operation tables.
+pub struct PrimePowerField {
+    pub p: u64,
+    pub e: u32,
+    /// Field order p^e.
+    pub n: usize,
+    add_t: Vec<u16>,
+    mul_t: Vec<u16>,
+}
+
+/// Integer factorization into (prime, exponent) pairs, ascending primes.
+pub fn factorize(mut n: u64) -> Vec<(u64, u32)> {
+    let mut out = Vec::new();
+    let mut d = 2u64;
+    while d * d <= n {
+        if n % d == 0 {
+            let mut e = 0;
+            while n % d == 0 {
+                n /= d;
+                e += 1;
+            }
+            out.push((d, e));
+        }
+        d += 1;
+    }
+    if n > 1 {
+        out.push((n, 1));
+    }
+    out
+}
+
+/// True if n is a prime power (single factor).
+pub fn is_prime_power(n: u64) -> bool {
+    n >= 2 && factorize(n).len() == 1
+}
+
+// -------- Z_p[x] helpers (coefficient vectors, lowest degree first) --------
+
+fn poly_deg(a: &[u64]) -> usize {
+    a.iter().rposition(|&c| c != 0).unwrap_or(0)
+}
+
+/// Remainder of a mod b over Z_p (b monic-ish: leading coeff inverted).
+fn poly_rem(a: &[u64], b: &[u64], p: u64) -> Vec<u64> {
+    let mut r = a.to_vec();
+    let db = poly_deg(b);
+    let lead_inv = mod_inv(b[db], p);
+    while poly_deg(&r) >= db && r.iter().any(|&c| c != 0) {
+        let dr = poly_deg(&r);
+        if dr < db {
+            break;
+        }
+        let f = (r[dr] * lead_inv) % p;
+        if f == 0 {
+            break;
+        }
+        let shift = dr - db;
+        for i in 0..=db {
+            let sub = (f * b[i]) % p;
+            r[i + shift] = (r[i + shift] + p - sub) % p;
+        }
+    }
+    r.truncate(db.max(1));
+    r.resize(db.max(1), 0);
+    r
+}
+
+fn mod_inv(a: u64, p: u64) -> u64 {
+    // Fermat: p prime
+    mod_pow(a % p, p - 2, p)
+}
+
+fn mod_pow(mut a: u64, mut e: u64, p: u64) -> u64 {
+    let mut acc = 1u64;
+    a %= p;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = acc * a % p;
+        }
+        a = a * a % p;
+        e >>= 1;
+    }
+    acc
+}
+
+/// Decode element id into digit vector (degree-e poly over Z_p).
+fn digits(mut id: usize, p: u64, e: u32) -> Vec<u64> {
+    let mut d = vec![0u64; e as usize];
+    for slot in d.iter_mut() {
+        *slot = (id as u64) % p;
+        id /= p as usize;
+    }
+    d
+}
+
+fn undigits(d: &[u64], p: u64) -> usize {
+    let mut id = 0usize;
+    for &c in d.iter().rev() {
+        id = id * p as usize + c as usize;
+    }
+    id
+}
+
+/// Find a monic irreducible polynomial of degree e over Z_p (brute force —
+/// fields here are tiny). Returned lowest-first with leading coeff 1.
+fn find_irreducible(p: u64, e: u32) -> Vec<u64> {
+    assert!(e >= 2);
+    let e = e as usize;
+    // iterate over the non-leading coefficients
+    let count = (p as usize).pow(e as u32);
+    'candidates: for lower in 0..count {
+        let mut f = digits(lower, p, e as u32);
+        f.push(1); // monic, degree e
+        if f[0] == 0 {
+            continue; // divisible by x
+        }
+        // trial divide by every monic poly of degree 1..=e/2
+        for d in 1..=e / 2 {
+            let dcount = (p as usize).pow(d as u32);
+            for lo in 0..dcount {
+                let mut g = digits(lo, p, d as u32);
+                g.push(1);
+                let r = poly_rem(&f, &g, p);
+                if r.iter().all(|&c| c == 0) {
+                    continue 'candidates;
+                }
+            }
+        }
+        return f;
+    }
+    unreachable!("no irreducible polynomial found for p={p} e={e}");
+}
+
+impl PrimePowerField {
+    /// Build GF(n) for prime-power n. Panics otherwise.
+    pub fn new(n: usize) -> PrimePowerField {
+        let factors = factorize(n as u64);
+        assert!(factors.len() == 1, "GF({n}): not a prime power");
+        let (p, e) = factors[0];
+        let mut add_t = vec![0u16; n * n];
+        let mut mul_t = vec![0u16; n * n];
+        if e == 1 {
+            for a in 0..n {
+                for b in 0..n {
+                    add_t[a * n + b] = ((a + b) % n) as u16;
+                    mul_t[a * n + b] = (a * b % n) as u16;
+                }
+            }
+        } else {
+            let modulus = find_irreducible(p, e);
+            for a in 0..n {
+                let da = digits(a, p, e);
+                for b in 0..n {
+                    let db = digits(b, p, e);
+                    // add
+                    let sum: Vec<u64> =
+                        da.iter().zip(&db).map(|(&x, &y)| (x + y) % p).collect();
+                    add_t[a * n + b] = undigits(&sum, p) as u16;
+                    // mul: schoolbook then reduce
+                    let mut prod = vec![0u64; 2 * e as usize];
+                    for (i, &x) in da.iter().enumerate() {
+                        if x == 0 {
+                            continue;
+                        }
+                        for (j, &y) in db.iter().enumerate() {
+                            prod[i + j] = (prod[i + j] + x * y) % p;
+                        }
+                    }
+                    let r = poly_rem(&prod, &modulus, p);
+                    let mut rr = r;
+                    rr.resize(e as usize, 0);
+                    mul_t[a * n + b] = undigits(&rr, p) as u16;
+                }
+            }
+        }
+        PrimePowerField { p, e, n, add_t, mul_t }
+    }
+
+    #[inline]
+    pub fn add(&self, a: usize, b: usize) -> usize {
+        self.add_t[a * self.n + b] as usize
+    }
+
+    #[inline]
+    pub fn mul(&self, a: usize, b: usize) -> usize {
+        self.mul_t[a * self.n + b] as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factorize_basics() {
+        assert_eq!(factorize(360), vec![(2, 3), (3, 2), (5, 1)]);
+        assert_eq!(factorize(2), vec![(2, 1)]);
+        assert_eq!(factorize(1024), vec![(2, 10)]);
+        assert!(is_prime_power(27));
+        assert!(is_prime_power(1021));
+        assert!(!is_prime_power(6));
+        assert!(!is_prime_power(1));
+    }
+
+    fn check_field_axioms(f: &PrimePowerField) {
+        let n = f.n;
+        // additive/multiplicative identity
+        for a in 0..n {
+            assert_eq!(f.add(a, 0), a);
+            assert_eq!(f.mul(a, 1), a);
+            assert_eq!(f.mul(a, 0), 0);
+        }
+        // commutativity + associativity on a sample
+        for a in 0..n.min(16) {
+            for b in 0..n.min(16) {
+                assert_eq!(f.add(a, b), f.add(b, a));
+                assert_eq!(f.mul(a, b), f.mul(b, a));
+                for c in 0..n.min(8) {
+                    assert_eq!(f.mul(a, f.mul(b, c)), f.mul(f.mul(a, b), c));
+                    assert_eq!(
+                        f.mul(a, f.add(b, c)),
+                        f.add(f.mul(a, b), f.mul(a, c))
+                    );
+                }
+            }
+        }
+        // every nonzero element invertible: row a of mul table hits 1
+        for a in 1..n {
+            assert!(
+                (0..n).any(|b| f.mul(a, b) == 1),
+                "no inverse for {a} in GF({n})"
+            );
+        }
+        // addition forms a group: each row of add table is a permutation
+        for a in 0..n {
+            let mut seen = vec![false; n];
+            for b in 0..n {
+                let v = f.add(a, b);
+                assert!(!seen[v]);
+                seen[v] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn prime_fields() {
+        for n in [2, 3, 5, 7, 11, 13] {
+            check_field_axioms(&PrimePowerField::new(n));
+        }
+    }
+
+    #[test]
+    fn prime_power_fields() {
+        for n in [4, 8, 9, 16, 25, 27, 32, 49] {
+            check_field_axioms(&PrimePowerField::new(n));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not a prime power")]
+    fn composite_rejected() {
+        PrimePowerField::new(6);
+    }
+}

@@ -1,0 +1,323 @@
+//! Orthogonal arrays OA(n, k) — the combinatorial core of D³ (paper §2.4).
+//!
+//! Definition 1: an OA(n, k) is an n² × k array over an n-symbol alphabet
+//! such that within any two columns every ordered pair of symbols occurs in
+//! exactly one row.
+//!
+//! Construction: for prime-power n we use the classical linear family over
+//! GF(n) — row (i, j), column c holds `i·x_c + j` where x_c is the c-th
+//! field element. This yields OA(n, n) whose **first n rows (i = 0) are
+//! identical across all columns** (entry = j), exactly the canonical form
+//! §4.5 requires (those rows are dropped to form 𝓜, paper §4.3). For
+//! composite n we take the MacNeish product of the prime-power component
+//! arrays, which preserves both the OA property and the identical-prefix
+//! form, giving OA(n, min pᵢᵉⁱ) columns (Theorem 1).
+
+pub mod field;
+
+use field::{factorize, PrimePowerField};
+
+/// An orthogonal array OA(n, cols): n² rows over symbols 0..n.
+#[derive(Clone, Debug)]
+pub struct OrthogonalArray {
+    n: usize,
+    cols: usize,
+    /// Row-major n² × cols.
+    data: Vec<u16>,
+}
+
+/// Errors from OA construction.
+#[derive(Debug, thiserror::Error)]
+pub enum OaError {
+    #[error("OA(n={n}, cols={cols}): need 2 <= cols <= {max} (Theorem 1 bound for n={n})")]
+    TooManyColumns { n: usize, cols: usize, max: usize },
+    #[error("OA(n={n}): n must be >= 2")]
+    TooSmall { n: usize },
+}
+
+/// Maximum column count our construction supports for a given n
+/// (Theorem 1: min pᵢᵉⁱ over the prime-power factorization; = n for
+/// prime powers).
+pub fn max_columns(n: usize) -> usize {
+    if n < 2 {
+        return 0;
+    }
+    factorize(n as u64)
+        .iter()
+        .map(|&(p, e)| (p as usize).pow(e))
+        .min()
+        .unwrap()
+}
+
+impl OrthogonalArray {
+    /// Construct OA(n, cols) in canonical form (first n rows identical).
+    pub fn construct(n: usize, cols: usize) -> Result<OrthogonalArray, OaError> {
+        if n < 2 {
+            return Err(OaError::TooSmall { n });
+        }
+        let max = max_columns(n);
+        if cols < 2 || cols > max {
+            return Err(OaError::TooManyColumns { n, cols, max });
+        }
+        let comps: Vec<PrimePowerField> = factorize(n as u64)
+            .iter()
+            .map(|&(p, e)| PrimePowerField::new((p as usize).pow(e)))
+            .collect();
+        let mut data = vec![0u16; n * n * cols];
+        // Row id = i * n + j with i, j in mixed radix over the components
+        // (component fields f_0.. with orders n_0..; id = ((d_0)*n_1 + d_1)..).
+        let orders: Vec<usize> = comps.iter().map(|f| f.n).collect();
+        for i in 0..n {
+            let di = to_mixed(i, &orders);
+            for j in 0..n {
+                let dj = to_mixed(j, &orders);
+                let row = i * n + j;
+                for c in 0..cols {
+                    let dc = to_mixed_uniform(c, &orders);
+                    // per-component linear form: i_t * x_c,t + j_t
+                    let mut digs = Vec::with_capacity(comps.len());
+                    for (t, f) in comps.iter().enumerate() {
+                        digs.push(f.add(f.mul(di[t], dc[t]), dj[t]));
+                    }
+                    data[row * cols + c] = from_mixed(&digs, &orders) as u16;
+                }
+            }
+        }
+        Ok(OrthogonalArray { n, cols, data })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn rows(&self) -> usize {
+        self.n * self.n
+    }
+
+    #[inline]
+    pub fn entry(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.rows() && col < self.cols);
+        self.data[row * self.cols + col] as usize
+    }
+
+    pub fn row(&self, row: usize) -> &[u16] {
+        &self.data[row * self.cols..(row + 1) * self.cols]
+    }
+
+    /// Exhaustive check of Definition 1 (O(cols² · n²)).
+    pub fn verify(&self) -> bool {
+        let n = self.n;
+        for c1 in 0..self.cols {
+            for c2 in c1 + 1..self.cols {
+                let mut seen = vec![false; n * n];
+                for r in 0..self.rows() {
+                    let key = self.entry(r, c1) * n + self.entry(r, c2);
+                    if seen[key] {
+                        return false;
+                    }
+                    seen[key] = true;
+                }
+                // n² rows, n² pairs, no dup => all present
+            }
+        }
+        true
+    }
+
+    /// True if the first n rows are identical across all columns
+    /// (canonical form required by §4.3/§4.5).
+    pub fn first_rows_identical(&self) -> bool {
+        (0..self.n).all(|r| {
+            let first = self.entry(r, 0);
+            (1..self.cols).all(|c| self.entry(r, c) == first)
+        })
+    }
+
+    /// The 𝓜 submatrix (paper §4.3): all rows except the first n identical
+    /// ones — n(n−1) rows used to place stripe regions.
+    pub fn m_matrix(&self) -> MMatrix {
+        MMatrix {
+            n: self.n,
+            cols: self.cols,
+            data: self.data[self.n * self.cols..].to_vec(),
+        }
+    }
+}
+
+/// 𝓜 = OA(r, ·) minus its first r rows: r(r−1) rows addressing stripe
+/// regions to racks; the last used column addresses recovered blocks.
+#[derive(Clone, Debug)]
+pub struct MMatrix {
+    n: usize,
+    cols: usize,
+    data: Vec<u16>,
+}
+
+impl MMatrix {
+    pub fn rows(&self) -> usize {
+        self.n * (self.n - 1)
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn entry(&self, row: usize, col: usize) -> usize {
+        debug_assert!(row < self.rows() && col < self.cols);
+        self.data[row * self.cols + col] as usize
+    }
+
+    /// Within any row, all entries of the used columns are pairwise
+    /// distinct? NOT generally true of an OA; but rows of 𝓜 never repeat a
+    /// symbol across columns for the linear construction (i ≠ 0 ⇒ the maps
+    /// c ↦ i·x_c + j are injective). D³ relies on this: a stripe region's
+    /// groups land in distinct racks.
+    pub fn row_entries_distinct(&self, row: usize) -> bool {
+        let mut seen = vec![false; self.n];
+        for c in 0..self.cols {
+            let v = self.entry(row, c);
+            if seen[v] {
+                return false;
+            }
+            seen[v] = true;
+        }
+        true
+    }
+}
+
+fn to_mixed(mut v: usize, orders: &[usize]) -> Vec<usize> {
+    // most-significant component first
+    let mut out = vec![0; orders.len()];
+    for (slot, &o) in out.iter_mut().zip(orders).rev() {
+        *slot = v % o;
+        v /= o;
+    }
+    out
+}
+
+/// Column index -> per-component element id; columns only go up to
+/// min(orders), so the same id is valid in every component.
+fn to_mixed_uniform(c: usize, orders: &[usize]) -> Vec<usize> {
+    vec![c; orders.len()]
+}
+
+fn from_mixed(digs: &[usize], orders: &[usize]) -> usize {
+    let mut v = 0;
+    for (&d, &o) in digs.iter().zip(orders) {
+        v = v * o + d;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_verify_prime_powers() {
+        for n in [2, 3, 4, 5, 7, 8, 9, 11, 16, 25] {
+            let oa = OrthogonalArray::construct(n, max_columns(n)).unwrap();
+            assert!(oa.verify(), "OA({n}) failed Definition 1");
+            assert!(oa.first_rows_identical(), "OA({n}) not canonical");
+        }
+    }
+
+    #[test]
+    fn construct_and_verify_composites() {
+        for (n, want_cols) in [(6, 2), (10, 2), (12, 3), (15, 3), (20, 4)] {
+            assert_eq!(max_columns(n), want_cols, "n={n}");
+            let oa = OrthogonalArray::construct(n, want_cols).unwrap();
+            assert!(oa.verify(), "OA({n}) failed Definition 1");
+            assert!(oa.first_rows_identical(), "OA({n}) not canonical");
+        }
+    }
+
+    #[test]
+    fn property_1_symbol_counts() {
+        // Each column contains each symbol exactly n times (paper Property 1).
+        let oa = OrthogonalArray::construct(7, 5).unwrap();
+        for c in 0..oa.cols() {
+            let mut counts = vec![0usize; 7];
+            for r in 0..oa.rows() {
+                counts[oa.entry(r, c)] += 1;
+            }
+            assert!(counts.iter().all(|&x| x == 7));
+        }
+    }
+
+    #[test]
+    fn property_2_conditional_pairs() {
+        // Given x in column i, each pair (x, y) appears exactly once in
+        // columns (i, j) (paper Property 2).
+        let oa = OrthogonalArray::construct(5, 4).unwrap();
+        for ci in 0..4 {
+            for cj in 0..4 {
+                if ci == cj {
+                    continue;
+                }
+                for x in 0..5 {
+                    let mut seen = [false; 5];
+                    for r in 0..oa.rows() {
+                        if oa.entry(r, ci) == x {
+                            let y = oa.entry(r, cj);
+                            assert!(!seen[y], "dup pair ({x},{y})");
+                            seen[y] = true;
+                        }
+                    }
+                    assert!(seen.iter().all(|&s| s), "missing pair from x={x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn m_matrix_shape_and_distinct_rows() {
+        let oa = OrthogonalArray::construct(5, 4).unwrap();
+        let m = oa.m_matrix();
+        assert_eq!(m.rows(), 20);
+        assert_eq!(m.cols(), 4);
+        for r in 0..m.rows() {
+            assert!(m.row_entries_distinct(r), "row {r} repeats a rack");
+        }
+    }
+
+    #[test]
+    fn m_matrix_column_balance() {
+        // Each column of M contains each symbol exactly n-1 times
+        // (paper Theorem 2's counting argument).
+        let oa = OrthogonalArray::construct(8, 4).unwrap();
+        let m = oa.m_matrix();
+        for c in 0..m.cols() {
+            let mut counts = vec![0usize; 8];
+            for r in 0..m.rows() {
+                counts[m.entry(r, c)] += 1;
+            }
+            assert!(counts.iter().all(|&x| x == 7), "col {c}: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn errors() {
+        assert!(OrthogonalArray::construct(1, 2).is_err());
+        assert!(OrthogonalArray::construct(5, 6).is_err());
+        assert!(OrthogonalArray::construct(6, 3).is_err()); // max is 2
+    }
+
+    #[test]
+    fn paper_example_oa_5_4_shape() {
+        // Fig 5(d): OA(5, 4), 25 rows, first five rows identical.
+        let oa = OrthogonalArray::construct(5, 4).unwrap();
+        assert_eq!(oa.rows(), 25);
+        for r in 0..5 {
+            let v = oa.entry(r, 0);
+            assert_eq!(v, r % 5);
+            for c in 0..4 {
+                assert_eq!(oa.entry(r, c), v);
+            }
+        }
+    }
+}

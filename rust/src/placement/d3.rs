@@ -1,0 +1,431 @@
+//! D³ placement for (k, m)-RS codes (paper §4) and its recovered-block
+//! targets (§5.1.2–5.1.3).
+//!
+//! Layout pipeline:
+//! 1. **Stripe grouping** (§4.1): `len = k + m` blocks → N_g = ⌈len/m⌉
+//!    groups ([`super::d3_groups`]); each group lives in one rack.
+//! 2. **Within-rack balance** (§4.2): an OA(n, N_g) 𝓐 drives node choice —
+//!    the kk-th block of group j of stripe i (within its region of n²
+//!    stripes) goes to node `(a_ij + kk) mod n` of the group's rack.
+//! 3. **Cross-rack balance** (§4.3): an OA(r, N_g + 1) 𝓐′ minus its first r
+//!    identical rows (𝓜, r(r−1) rows) maps region-groups to racks; the last
+//!    column reserves the rack for recovered blocks that need a *new* rack.
+//!
+//! Ablation variants ([`D3Variant`]) keep the grouping but knock out one
+//! balancing mechanism each (DESIGN.md §6).
+
+use crate::codes::CodeSpec;
+use crate::oa::{max_columns, MMatrix, OrthogonalArray};
+use crate::topology::{ClusterSpec, Location};
+
+use super::{d3_group_of, d3_groups, Placement, StripePlacement};
+
+/// Which D³ mechanisms are active (ablations knock one out).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum D3Variant {
+    /// The full paper design.
+    Full,
+    /// Grouping + region map kept; within-rack OA rotation replaced by a
+    /// per-stripe hash offset (ablation for §4.2).
+    NoRotation,
+    /// Grouping + rotation kept; 𝓜 replaced by round-robin region→rack
+    /// assignment (ablation for §4.3).
+    RoundRobinRegions,
+}
+
+/// D³ block placement over (k, m)-RS.
+pub struct D3Placement {
+    code: CodeSpec,
+    cluster: ClusterSpec,
+    groups: Vec<std::ops::Range<usize>>,
+    ng: usize,
+    /// OA(n, N_g): within-rack layout.
+    a: OrthogonalArray,
+    /// 𝓜 from OA(r, N_g + 1): region-group → rack, plus recovery column.
+    m: MMatrix,
+    variant: D3Variant,
+    /// `rank[col][value]` = rows i of 𝓐's column `col` holding `value`,
+    /// ascending — used for round-robin node choice in new racks.
+    rank: Vec<Vec<Vec<u16>>>,
+}
+
+/// Errors from D³ construction (§4.5 validity conditions).
+#[derive(Debug, thiserror::Error)]
+pub enum D3Error {
+    #[error("D³ needs an RS code (use D3LrcPlacement for LRC)")]
+    NotRs,
+    #[error("nodes per rack n={n} must be >= group size {size} (n >= m)")]
+    RackTooSmall { n: usize, size: usize },
+    #[error("within-rack OA(n={n}, {cols}) unavailable: max columns {max} (§4.5)")]
+    NodeOa { n: usize, cols: usize, max: usize },
+    #[error("cross-rack OA(r={r}, {cols}) unavailable: max columns {max}; need r > N_g (§4.5)")]
+    RackOa { r: usize, cols: usize, max: usize },
+}
+
+impl D3Placement {
+    pub fn new(code: CodeSpec, cluster: ClusterSpec) -> Result<D3Placement, D3Error> {
+        D3Placement::with_variant(code, cluster, D3Variant::Full)
+    }
+
+    pub fn with_variant(
+        code: CodeSpec,
+        cluster: ClusterSpec,
+        variant: D3Variant,
+    ) -> Result<D3Placement, D3Error> {
+        let CodeSpec::Rs { k, m } = code else {
+            return Err(D3Error::NotRs);
+        };
+        let len = k + m;
+        let groups = d3_groups(len, m);
+        let ng = groups.len();
+        let n = cluster.nodes_per_rack;
+        let r = cluster.racks;
+        let size_max = groups.iter().map(|g| g.len()).max().unwrap();
+        if n < size_max {
+            return Err(D3Error::RackTooSmall { n, size: size_max });
+        }
+        let a = OrthogonalArray::construct(n, ng.max(2).min(max_columns(n)))
+            .map_err(|_| D3Error::NodeOa { n, cols: ng, max: max_columns(n) })?;
+        if a.cols() < ng {
+            return Err(D3Error::NodeOa { n, cols: ng, max: max_columns(n) });
+        }
+        let a_prime = OrthogonalArray::construct(r, (ng + 1).max(2).min(max_columns(r)))
+            .map_err(|_| D3Error::RackOa { r, cols: ng + 1, max: max_columns(r) })?;
+        if a_prime.cols() < ng + 1 {
+            return Err(D3Error::RackOa { r, cols: ng + 1, max: max_columns(r) });
+        }
+        let m_matrix = a_prime.m_matrix();
+        let rank = build_rank(&a, ng);
+        Ok(D3Placement { code, cluster, groups, ng, a, m: m_matrix, variant, rank })
+    }
+
+    pub fn groups(&self) -> &[std::ops::Range<usize>] {
+        &self.groups
+    }
+
+    pub fn ng(&self) -> usize {
+        self.ng
+    }
+
+    /// Stripes per region: n².
+    pub fn region_size(&self) -> usize {
+        let n = self.cluster.nodes_per_rack;
+        n * n
+    }
+
+    /// Regions before the rack pattern repeats: r(r−1).
+    pub fn region_cycle(&self) -> usize {
+        self.m.rows()
+    }
+
+    fn decompose(&self, sid: u64) -> (usize, usize) {
+        let region_size = self.region_size() as u64;
+        let i = (sid % region_size) as usize;
+        let row = ((sid / region_size) % self.region_cycle() as u64) as usize;
+        (i, row)
+    }
+
+    /// Rack hosting group `j` of the stripe region at 𝓜 row `row`.
+    fn group_rack(&self, row: usize, j: usize) -> usize {
+        match self.variant {
+            D3Variant::RoundRobinRegions => (row + j) % self.cluster.racks,
+            _ => self.m.entry(row, j),
+        }
+    }
+
+    /// Rack reserved for recovered blocks needing a new rack (§5.1.3).
+    fn recovery_rack(&self, row: usize) -> usize {
+        match self.variant {
+            D3Variant::RoundRobinRegions => (row + self.ng) % self.cluster.racks,
+            _ => self.m.entry(row, self.ng),
+        }
+    }
+
+    /// Base node offset for group `j` of within-region stripe `i`.
+    fn group_base_node(&self, sid: u64, i: usize, j: usize) -> usize {
+        match self.variant {
+            D3Variant::NoRotation => {
+                // ablation: hash offset instead of OA entry
+                (splitmix(sid ^ (j as u64).wrapping_mul(0x9e37)) as usize)
+                    % self.cluster.nodes_per_rack
+            }
+            _ => self.a.entry(i, j),
+        }
+    }
+
+    /// Round-robin rank of within-region stripe `i` among the region's
+    /// stripes whose 𝓐 entry at column `j` equals 𝓐's entry for `i`
+    /// (used for node assignment inside a *new* rack, Fig 4(b)).
+    fn new_rack_node(&self, i: usize, j: usize) -> usize {
+        let v = self.a.entry(i, j);
+        let list = &self.rank[j][v];
+        let pos = list.iter().position(|&x| x as usize == i).expect("row in rank list");
+        pos % self.cluster.nodes_per_rack
+    }
+}
+
+fn build_rank(a: &OrthogonalArray, ng: usize) -> Vec<Vec<Vec<u16>>> {
+    let n = a.n();
+    (0..ng)
+        .map(|col| {
+            let mut per_value = vec![Vec::new(); n];
+            for row in 0..a.rows() {
+                per_value[a.entry(row, col)].push(row as u16);
+            }
+            per_value
+        })
+        .collect()
+}
+
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e3779b97f4a7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d049bb133111eb);
+    x ^ (x >> 31)
+}
+
+impl Placement for D3Placement {
+    fn name(&self) -> &'static str {
+        match self.variant {
+            D3Variant::Full => "d3",
+            D3Variant::NoRotation => "d3-norot",
+            D3Variant::RoundRobinRegions => "d3-rr",
+        }
+    }
+
+    fn code(&self) -> CodeSpec {
+        self.code
+    }
+
+    fn cluster(&self) -> ClusterSpec {
+        self.cluster
+    }
+
+    fn stripe(&self, sid: u64) -> StripePlacement {
+        let (i, row) = self.decompose(sid);
+        let n = self.cluster.nodes_per_rack;
+        let mut locs = Vec::with_capacity(self.code.len());
+        for (j, group) in self.groups.iter().enumerate() {
+            let rack = self.group_rack(row, j);
+            let base = self.group_base_node(sid, i, j);
+            for kk in 0..group.len() {
+                locs.push(Location::new(rack, (base + kk) % n));
+            }
+        }
+        StripePlacement { locs }
+    }
+
+    /// §5.1 target selection. Cases keyed by b = len mod m:
+    /// * b = 0 → new rack (𝓜 last column), round-robin node;
+    /// * 0 < b < m−1 → surviving rack R_x: largest-rack-id group with ≤ m−1
+    ///   blocks; node after the stripe's largest-subscript block there;
+    /// * b = m−1, failed block in a size-m group → the rack of the
+    ///   (m−1)-group, node after its largest-subscript block;
+    /// * b = m−1, failed block in the (m−1)-group → new rack, round-robin.
+    fn recovery_target(&self, sid: u64, block: usize, failed: Location) -> Location {
+        let CodeSpec::Rs { k, m } = self.code else { unreachable!() };
+        let len = k + m;
+        let b = len % m;
+        let (i, row) = self.decompose(sid);
+        let n = self.cluster.nodes_per_rack;
+        let placement = self.stripe(sid);
+        debug_assert_eq!(placement.locs[block], failed, "block must be on the failed node");
+        let fg = d3_group_of(&self.groups, block);
+
+        let to_new_rack = b == 0 || (b == m - 1 && self.groups[fg].len() == m - 1);
+        if to_new_rack {
+            let rack = self.recovery_rack(row);
+            return Location::new(rack, self.new_rack_node(i, fg));
+        }
+
+        // Recovered block joins an existing rack R_x.
+        let target_group = if b == m - 1 {
+            // the unique (m−1)-sized group (last group)
+            self.groups
+                .iter()
+                .position(|g| g.len() == m - 1)
+                .expect("b == m-1 implies an (m-1)-group")
+        } else {
+            // 0 < b < m−1: surviving group with ≤ m−1 blocks in the rack
+            // with the largest rack id
+            (0..self.ng)
+                .filter(|&j| j != fg && self.groups[j].len() <= m - 1)
+                .max_by_key(|&j| self.group_rack(row, j))
+                .expect("Lemma 2 guarantees a small surviving group")
+        };
+        let rack = self.group_rack(row, target_group) as u32;
+        // §5.1.2(1): node after the stripe's largest-subscript block in R_x.
+        let largest = placement
+            .locs
+            .iter()
+            .enumerate()
+            .filter(|(bi, l)| l.rack == rack && *bi != block)
+            .map(|(bi, _)| bi)
+            .max()
+            .expect("target rack holds surviving blocks");
+        let jj = placement.locs[largest].node as usize;
+        Location::new(rack as usize, (jj + 1) % n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn paper_cluster() -> ClusterSpec {
+        ClusterSpec::new(8, 3)
+    }
+
+    fn d3(k: usize, m: usize, cluster: ClusterSpec) -> D3Placement {
+        D3Placement::new(CodeSpec::Rs { k, m }, cluster).unwrap()
+    }
+
+    #[test]
+    fn respects_fault_tolerance_invariants() {
+        for (k, m) in [(2, 1), (3, 2), (6, 3), (4, 2)] {
+            let p = d3(k, m, paper_cluster());
+            for sid in 0..2000u64 {
+                let sp = p.stripe(sid);
+                assert!(sp.nodes_distinct(), "({k},{m}) sid={sid}: node collision");
+                assert!(sp.rack_limit_ok(m), "({k},{m}) sid={sid}: rack over limit");
+            }
+        }
+    }
+
+    #[test]
+    fn theorem_2_uniform_distribution() {
+        // Over one full cycle (r(r-1) regions × n² stripes) every node holds
+        // the same number of data blocks and the same number of parity blocks.
+        let cluster = ClusterSpec::new(5, 3);
+        for (k, m) in [(3usize, 2usize), (2, 1)] {
+            let p = d3(k, m, cluster);
+            let total = (p.region_cycle() * p.region_size()) as u64;
+            let mut data_cnt: HashMap<Location, usize> = HashMap::new();
+            let mut parity_cnt: HashMap<Location, usize> = HashMap::new();
+            for sid in 0..total {
+                let sp = p.stripe(sid);
+                for (bi, loc) in sp.locs.iter().enumerate() {
+                    if bi < k {
+                        *data_cnt.entry(*loc).or_default() += 1;
+                    } else {
+                        *parity_cnt.entry(*loc).or_default() += 1;
+                    }
+                }
+            }
+            let nodes = cluster.node_count();
+            assert_eq!(data_cnt.len(), nodes, "({k},{m}): some node holds no data");
+            let d0 = *data_cnt.values().next().unwrap();
+            assert!(data_cnt.values().all(|&c| c == d0), "({k},{m}) data skew: {data_cnt:?}");
+            let p0 = *parity_cnt.values().next().unwrap();
+            assert!(parity_cnt.values().all(|&c| c == p0), "({k},{m}) parity skew");
+        }
+    }
+
+    #[test]
+    fn paper_example_3_2_rs_grouping_layout() {
+        // §3.2: (3,2)-RS on 5 racks × 3 nodes: groups {B0,B1},{B2,B3},{B4};
+        // groups land in 3 distinct racks with sizes 2,2,1.
+        let p = d3(3, 2, ClusterSpec::new(5, 3));
+        for sid in 0..45u64 {
+            let sp = p.stripe(sid);
+            let racks: Vec<u32> = sp.locs.iter().map(|l| l.rack).collect();
+            assert_eq!(racks[0], racks[1], "B0,B1 same rack");
+            assert_eq!(racks[2], racks[3], "B2,B3 same rack");
+            let distinct: std::collections::HashSet<u32> = racks.iter().copied().collect();
+            assert_eq!(distinct.len(), 3, "3 racks per stripe");
+            // within a group, nodes are consecutive (rotation)
+            let n0 = sp.locs[0].node;
+            assert_eq!(sp.locs[1].node, (n0 + 1) % 3);
+        }
+    }
+
+    #[test]
+    fn recovery_target_is_valid() {
+        for (k, m) in [(2usize, 1usize), (3, 2), (6, 3), (4, 2)] {
+            let p = d3(k, m, paper_cluster());
+            for sid in 0..600u64 {
+                let sp = p.stripe(sid);
+                for (bi, &loc) in sp.locs.iter().enumerate() {
+                    let tgt = p.recovery_target(sid, bi, loc);
+                    assert_ne!(tgt, loc, "target == failed");
+                    assert!(
+                        !sp.locs.iter().enumerate().any(|(o, l)| o != bi && *l == tgt),
+                        "({k},{m}) sid={sid} block={bi}: target collides with survivor"
+                    );
+                    // rack limit still holds after placing the recovered copy
+                    let mut count = sp
+                        .locs
+                        .iter()
+                        .enumerate()
+                        .filter(|(o, l)| *o != bi && l.rack == tgt.rack)
+                        .count();
+                    count += 1;
+                    assert!(count <= m, "({k},{m}) sid={sid}: rack {} over limit", tgt.rack);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recovery_new_rack_round_robin_is_balanced() {
+        // (2,1)-RS (b=0): all recovered blocks go to the 𝓜-designated new
+        // rack; within a region each node of that rack receives the same
+        // number of recovered blocks (Fig 4(b)).
+        let p = d3(2, 1, paper_cluster());
+        let failed = Location::new(0, 0);
+        // find stripes of region 0 with a block on `failed`
+        let mut per_node: HashMap<Location, usize> = HashMap::new();
+        for sid in 0..p.region_size() as u64 {
+            let sp = p.stripe(sid);
+            for (bi, &loc) in sp.locs.iter().enumerate() {
+                if loc == failed {
+                    let tgt = p.recovery_target(sid, bi, loc);
+                    *per_node.entry(tgt).or_default() += 1;
+                }
+            }
+        }
+        // all targets in the same (new) rack, spread evenly
+        let racks: std::collections::HashSet<u32> = per_node.keys().map(|l| l.rack).collect();
+        assert_eq!(racks.len(), 1, "one new rack per region: {per_node:?}");
+        let max = per_node.values().max().unwrap();
+        let min = per_node.values().min().unwrap();
+        assert!(max - min <= 1, "unbalanced round robin: {per_node:?}");
+    }
+
+    #[test]
+    fn variants_construct_and_obey_rack_limit() {
+        for v in [D3Variant::NoRotation, D3Variant::RoundRobinRegions] {
+            let p = D3Placement::with_variant(
+                CodeSpec::Rs { k: 3, m: 2 },
+                paper_cluster(),
+                v,
+            )
+            .unwrap();
+            for sid in 0..500u64 {
+                let sp = p.stripe(sid);
+                assert!(sp.rack_limit_ok(2), "{:?} sid={sid}", v);
+                assert!(sp.nodes_distinct());
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        // rack too small: (6,3) group size 3 > 2 nodes/rack
+        assert!(matches!(
+            D3Placement::new(CodeSpec::Rs { k: 6, m: 3 }, ClusterSpec::new(8, 2)),
+            Err(D3Error::RackTooSmall { .. })
+        ));
+        // r <= N_g: (6,3)-RS needs 4 OA columns but r = 3
+        assert!(matches!(
+            D3Placement::new(CodeSpec::Rs { k: 6, m: 3 }, ClusterSpec::new(3, 3)),
+            Err(D3Error::RackOa { .. })
+        ));
+        // LRC spec routed to the wrong type
+        assert!(matches!(
+            D3Placement::new(CodeSpec::Lrc { k: 4, l: 2, g: 1 }, paper_cluster()),
+            Err(D3Error::NotRs)
+        ));
+    }
+}

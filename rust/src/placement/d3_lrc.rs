@@ -1,0 +1,289 @@
+//! D³ placement for (k, l, g)-LRCs (paper §4.4) and recovery targets (§5.2).
+//!
+//! LRC keeps maximum rack-level fault tolerance: **one block per rack**, so
+//! a stripe spans N_g = k + l + g racks and only node choice needs balance:
+//!
+//! * rack level — 𝓜 from OA(r, N_g + 1) maps each block position (its own
+//!   region-group) to a rack; the last column addresses recovered blocks;
+//! * node level — an OA(n, N_g^lrc) with N_g^lrc = max(k/l + 1, l + g)
+//!   columns; each parity block gets its own column; each data block gets a
+//!   column different from its local parity's (§4.4.1), so Property 2
+//!   balances the repair reads of any failed block across the nodes of
+//!   every surviving rack.
+
+use crate::codes::CodeSpec;
+use crate::oa::{max_columns, MMatrix, OrthogonalArray};
+use crate::topology::{ClusterSpec, Location};
+
+use super::{Placement, StripePlacement};
+
+pub struct D3LrcPlacement {
+    code: CodeSpec,
+    cluster: ClusterSpec,
+    ng: usize,
+    /// Node-level OA(n, N_g^lrc).
+    a: OrthogonalArray,
+    /// 𝓜 from OA(r, N_g + 1).
+    m: MMatrix,
+    /// OA column assigned to each block position (§4.4.1 rules).
+    col_of: Vec<usize>,
+    /// rank[col][value] = ascending rows of 𝓐 column `col` equal to `value`.
+    rank: Vec<Vec<Vec<u16>>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum D3LrcError {
+    #[error("D³-LRC needs an LRC code")]
+    NotLrc,
+    #[error("node OA(n={n}, {cols}) unavailable (max {max})")]
+    NodeOa { n: usize, cols: usize, max: usize },
+    #[error("rack OA(r={r}, {cols}) unavailable (max {max}); need r > N_g = k+l+g")]
+    RackOa { r: usize, cols: usize, max: usize },
+}
+
+impl D3LrcPlacement {
+    pub fn new(code: CodeSpec, cluster: ClusterSpec) -> Result<D3LrcPlacement, D3LrcError> {
+        let CodeSpec::Lrc { k, l, g } = code else {
+            return Err(D3LrcError::NotLrc);
+        };
+        assert!(k % l == 0, "(k,l,g)-LRC requires l | k");
+        let ng = k + l + g;
+        let group = k / l;
+        let ng_lrc = (group + 1).max(l + g);
+        let n = cluster.nodes_per_rack;
+        let r = cluster.racks;
+        let a = OrthogonalArray::construct(n, ng_lrc.max(2).min(max_columns(n)))
+            .map_err(|_| D3LrcError::NodeOa { n, cols: ng_lrc, max: max_columns(n) })?;
+        if a.cols() < ng_lrc {
+            return Err(D3LrcError::NodeOa { n, cols: ng_lrc, max: max_columns(n) });
+        }
+        let a_prime = OrthogonalArray::construct(r, (ng + 1).max(2).min(max_columns(r)))
+            .map_err(|_| D3LrcError::RackOa { r, cols: ng + 1, max: max_columns(r) })?;
+        if a_prime.cols() < ng + 1 {
+            return Err(D3LrcError::RackOa { r, cols: ng + 1, max: max_columns(r) });
+        }
+        // §4.4.1 column assignment: parity blocks first (own column each),
+        // then data of group j over the columns != j in order.
+        let mut col_of = vec![0usize; ng];
+        for j in 0..l {
+            col_of[k + j] = j; // local parity j -> column j
+        }
+        for j in 0..g {
+            col_of[k + l + j] = l + j; // global parity j -> column l + j
+        }
+        for gid in 0..l {
+            let avail: Vec<usize> = (0..ng_lrc).filter(|&c| c != gid).collect();
+            for (idx, d) in (gid * group..(gid + 1) * group).enumerate() {
+                col_of[d] = avail[idx % avail.len()];
+            }
+        }
+        let rank = build_rank(&a, ng_lrc);
+        Ok(D3LrcPlacement { code, cluster, ng, a, m: a_prime.m_matrix(), col_of, rank })
+    }
+
+    pub fn region_size(&self) -> usize {
+        let n = self.cluster.nodes_per_rack;
+        n * n
+    }
+
+    pub fn region_cycle(&self) -> usize {
+        self.m.rows()
+    }
+
+    pub fn col_of(&self, block: usize) -> usize {
+        self.col_of[block]
+    }
+
+    fn decompose(&self, sid: u64) -> (usize, usize) {
+        let region_size = self.region_size() as u64;
+        let i = (sid % region_size) as usize;
+        let row = ((sid / region_size) % self.region_cycle() as u64) as usize;
+        (i, row)
+    }
+}
+
+fn build_rank(a: &OrthogonalArray, cols: usize) -> Vec<Vec<Vec<u16>>> {
+    let n = a.n();
+    (0..cols)
+        .map(|col| {
+            let mut per_value = vec![Vec::new(); n];
+            for row in 0..a.rows() {
+                per_value[a.entry(row, col)].push(row as u16);
+            }
+            per_value
+        })
+        .collect()
+}
+
+impl Placement for D3LrcPlacement {
+    fn name(&self) -> &'static str {
+        "d3-lrc"
+    }
+
+    fn code(&self) -> CodeSpec {
+        self.code
+    }
+
+    fn cluster(&self) -> ClusterSpec {
+        self.cluster
+    }
+
+    fn stripe(&self, sid: u64) -> StripePlacement {
+        let (i, row) = self.decompose(sid);
+        let locs = (0..self.ng)
+            .map(|pos| {
+                let rack = self.m.entry(row, pos);
+                let node = self.a.entry(i, self.col_of[pos]);
+                Location::new(rack, node)
+            })
+            .collect();
+        StripePlacement { locs }
+    }
+
+    /// §5.2: recovered blocks go to the rack named by 𝓜's last column,
+    /// nodes chosen round-robin (balanced within each region).
+    fn recovery_target(&self, sid: u64, block: usize, failed: Location) -> Location {
+        let (i, row) = self.decompose(sid);
+        debug_assert_eq!(self.stripe(sid).locs[block], failed);
+        let rack = self.m.entry(row, self.ng);
+        let col = self.col_of[block];
+        let v = self.a.entry(i, col);
+        let list = &self.rank[col][v];
+        let pos = list.iter().position(|&x| x as usize == i).expect("row in rank list");
+        Location::new(rack, pos % self.cluster.nodes_per_rack)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn lrc_421() -> D3LrcPlacement {
+        D3LrcPlacement::new(CodeSpec::Lrc { k: 4, l: 2, g: 1 }, ClusterSpec::new(8, 3)).unwrap()
+    }
+
+    #[test]
+    fn one_block_per_rack() {
+        let p = lrc_421();
+        for sid in 0..1000u64 {
+            let sp = p.stripe(sid);
+            assert!(sp.rack_limit_ok(1), "sid={sid}");
+            assert!(sp.nodes_distinct());
+        }
+    }
+
+    #[test]
+    fn column_assignment_follows_paper_rules() {
+        let p = lrc_421();
+        // parity blocks all on distinct columns
+        let parity_cols: Vec<usize> = (4..7).map(|b| p.col_of(b)).collect();
+        let set: std::collections::HashSet<usize> = parity_cols.iter().copied().collect();
+        assert_eq!(set.len(), 3);
+        // each data block's column differs from its local parity's column
+        for d in 0..4 {
+            let gid = d / 2;
+            assert_ne!(p.col_of(d), p.col_of(4 + gid), "d{d} shares col with its local parity");
+        }
+        // paper Fig 7 grouping: {p0,d2} col 0, {d0,p1} col 1, {d1,d3,p2} col 2
+        assert_eq!(p.col_of(4), 0);
+        assert_eq!(p.col_of(2), 0);
+        assert_eq!(p.col_of(0), 1);
+        assert_eq!(p.col_of(5), 1);
+        assert_eq!(p.col_of(1), 2);
+        assert_eq!(p.col_of(3), 2);
+        assert_eq!(p.col_of(6), 2);
+    }
+
+    #[test]
+    fn theorem_4_uniform_block_type_distribution() {
+        // Over a full cycle each node holds equal counts of data blocks,
+        // local parities, and global parities.
+        let cluster = ClusterSpec::new(8, 3);
+        let p = D3LrcPlacement::new(CodeSpec::Lrc { k: 4, l: 2, g: 1 }, cluster).unwrap();
+        let total = (p.region_cycle() * p.region_size()) as u64;
+        let mut counts: HashMap<(Location, usize), usize> = HashMap::new(); // (node, type)
+        for sid in 0..total {
+            let sp = p.stripe(sid);
+            for (bi, loc) in sp.locs.iter().enumerate() {
+                let ty = if bi < 4 {
+                    0
+                } else if bi < 6 {
+                    1
+                } else {
+                    2
+                };
+                *counts.entry((*loc, ty)).or_default() += 1;
+            }
+        }
+        for ty in 0..3usize {
+            let vals: Vec<usize> = cluster
+                .iter_nodes()
+                .map(|l| counts.get(&(l, ty)).copied().unwrap_or(0))
+                .collect();
+            let first = vals[0];
+            assert!(vals.iter().all(|&v| v == first), "type {ty} skew: {vals:?}");
+        }
+    }
+
+    #[test]
+    fn recovery_target_valid_and_new_rack() {
+        let p = lrc_421();
+        for sid in 0..500u64 {
+            let sp = p.stripe(sid);
+            for (bi, &loc) in sp.locs.iter().enumerate() {
+                let tgt = p.recovery_target(sid, bi, loc);
+                assert_ne!(tgt, loc);
+                // new rack must differ from every rack the stripe occupies
+                assert!(
+                    sp.locs.iter().all(|l| l.rack != tgt.rack),
+                    "sid={sid} block={bi}: recovered block landed in an occupied rack"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn recovery_round_robin_balanced_within_region() {
+        let p = lrc_421();
+        let failed = Location::new(1, 0);
+        let mut per_node: HashMap<Location, usize> = HashMap::new();
+        for sid in 0..p.region_size() as u64 {
+            let sp = p.stripe(sid);
+            for (bi, &loc) in sp.locs.iter().enumerate() {
+                if loc == failed {
+                    *per_node.entry(p.recovery_target(sid, bi, loc)).or_default() += 1;
+                }
+            }
+        }
+        if per_node.is_empty() {
+            return; // this rack holds no block in region 0 (depends on M)
+        }
+        let max = per_node.values().max().unwrap();
+        let min = per_node.values().min().unwrap();
+        assert!(max - min <= 1, "unbalanced: {per_node:?}");
+    }
+
+    #[test]
+    fn too_few_racks_rejected() {
+        // (4,2,1): N_g + 1 = 8 columns need r >= 8
+        assert!(matches!(
+            D3LrcPlacement::new(CodeSpec::Lrc { k: 4, l: 2, g: 1 }, ClusterSpec::new(7, 3)),
+            Err(D3LrcError::RackOa { .. })
+        ));
+    }
+
+    #[test]
+    fn wide_stripe_config() {
+        // (12,2,2)-LRC on 17 racks (prime): N_g + 1 = 17 columns OK
+        let p = D3LrcPlacement::new(
+            CodeSpec::Lrc { k: 12, l: 2, g: 2 },
+            ClusterSpec::new(17, 7),
+        )
+        .unwrap();
+        for sid in 0..200u64 {
+            let sp = p.stripe(sid);
+            assert!(sp.rack_limit_ok(1));
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! HDD — hash-based data distribution baseline (paper §6.2.1, Exp 1).
+//!
+//! CRUSH-style [15]: a Jenkins hash maps (stripe, block, attempt) to a
+//! node; on conflict the attempt counter bumps and the hash reselects,
+//! mirroring CRUSH's reselection behaviour for the three cases the paper
+//! lists: (1) node already used by the stripe, (2) rack limit violated,
+//! (3) node failed (recovery only).
+
+use crate::codes::CodeSpec;
+use crate::topology::{ClusterSpec, Location};
+
+use super::{Placement, StripePlacement};
+
+/// Bob Jenkins' 96-bit mix (the `mix()` used by lookup2/CRUSH's rjenkins1).
+fn jenkins_mix(mut a: u32, mut b: u32, mut c: u32) -> u32 {
+    a = a.wrapping_sub(b).wrapping_sub(c) ^ (c >> 13);
+    b = b.wrapping_sub(c).wrapping_sub(a) ^ (a << 8);
+    c = c.wrapping_sub(a).wrapping_sub(b) ^ (b >> 13);
+    a = a.wrapping_sub(b).wrapping_sub(c) ^ (c >> 12);
+    b = b.wrapping_sub(c).wrapping_sub(a) ^ (a << 16);
+    c = c.wrapping_sub(a).wrapping_sub(b) ^ (b >> 5);
+    a = a.wrapping_sub(b).wrapping_sub(c) ^ (c >> 3);
+    b = b.wrapping_sub(c).wrapping_sub(a) ^ (a << 10);
+    c = c.wrapping_sub(a).wrapping_sub(b) ^ (b >> 15);
+    c
+}
+
+fn jenkins(stripe: u64, block: u32, attempt: u32, seed: u32) -> u32 {
+    let h = jenkins_mix(stripe as u32, (stripe >> 32) as u32, 0x9e3779b9 ^ seed);
+    jenkins_mix(h, block, attempt)
+}
+
+pub struct HddPlacement {
+    code: CodeSpec,
+    cluster: ClusterSpec,
+    seed: u32,
+}
+
+impl HddPlacement {
+    pub fn new(code: CodeSpec, cluster: ClusterSpec, seed: u32) -> HddPlacement {
+        assert!(
+            cluster.racks * code.rack_limit() >= code.len(),
+            "cluster cannot host a stripe within the rack limit"
+        );
+        assert!(cluster.node_count() >= code.len() + 1, "need a spare node for recovery");
+        HddPlacement { code, cluster, seed }
+    }
+
+    /// Pick the node for `block`, skipping candidates that fail `ok`.
+    fn select(&self, sid: u64, block: usize, mut ok: impl FnMut(Location) -> bool) -> Location {
+        let count = self.cluster.node_count() as u32;
+        for attempt in 0..10_000u32 {
+            let h = jenkins(sid, block as u32, attempt, self.seed);
+            let loc = self.cluster.unflat((h % count) as usize);
+            if ok(loc) {
+                return loc;
+            }
+        }
+        unreachable!("reselection failed to converge (cluster too tight)");
+    }
+}
+
+impl Placement for HddPlacement {
+    fn name(&self) -> &'static str {
+        "hdd"
+    }
+
+    fn code(&self) -> CodeSpec {
+        self.code
+    }
+
+    fn cluster(&self) -> ClusterSpec {
+        self.cluster
+    }
+
+    fn stripe(&self, sid: u64) -> StripePlacement {
+        let limit = self.code.rack_limit();
+        let mut locs: Vec<Location> = Vec::with_capacity(self.code.len());
+        let mut rack_count = vec![0usize; self.cluster.racks];
+        for block in 0..self.code.len() {
+            let loc = self.select(sid, block, |cand| {
+                !locs.contains(&cand) && rack_count[cand.rack as usize] < limit
+            });
+            rack_count[loc.rack as usize] += 1;
+            locs.push(loc);
+        }
+        StripePlacement { locs }
+    }
+
+    fn recovery_target(&self, sid: u64, block: usize, failed: Location) -> Location {
+        let sp = self.stripe(sid);
+        debug_assert_eq!(sp.locs[block], failed);
+        let limit = self.code.rack_limit();
+        let mut rack_count = vec![0usize; self.cluster.racks];
+        for (bi, l) in sp.locs.iter().enumerate() {
+            if bi != block {
+                rack_count[l.rack as usize] += 1;
+            }
+        }
+        // continue the attempt sequence past the original selection with a
+        // "failure epoch" salt, mirroring CRUSH's modified-input reselection
+        self.select(sid, block + self.code.len(), |cand| {
+            cand != failed
+                && !sp.locs.iter().enumerate().any(|(bi, l)| bi != block && *l == cand)
+                && rack_count[cand.rack as usize] < limit
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constraints_hold() {
+        let p = HddPlacement::new(CodeSpec::Rs { k: 3, m: 2 }, ClusterSpec::new(8, 3), 0);
+        for sid in 0..1000u64 {
+            let sp = p.stripe(sid);
+            assert!(sp.nodes_distinct());
+            assert!(sp.rack_limit_ok(2));
+        }
+    }
+
+    #[test]
+    fn deterministic_but_pseudo_random() {
+        let p = HddPlacement::new(CodeSpec::Rs { k: 2, m: 1 }, ClusterSpec::new(8, 3), 0);
+        assert_eq!(p.stripe(99).locs, p.stripe(99).locs);
+        let distinct: std::collections::HashSet<Vec<Location>> =
+            (0..50u64).map(|sid| p.stripe(sid).locs).collect();
+        assert!(distinct.len() > 10);
+    }
+
+    #[test]
+    fn hash_distribution_roughly_uniform() {
+        // each node should receive a roughly equal share over many stripes
+        let cluster = ClusterSpec::new(8, 3);
+        let p = HddPlacement::new(CodeSpec::Rs { k: 2, m: 1 }, cluster, 0);
+        let mut counts = vec![0usize; cluster.node_count()];
+        let stripes = 4000u64;
+        for sid in 0..stripes {
+            for l in p.stripe(sid).locs {
+                counts[cluster.flat(l)] += 1;
+            }
+        }
+        let expect = (stripes as usize * 3) / cluster.node_count();
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) > 0.7 * expect as f64 && (c as f64) < 1.3 * expect as f64,
+                "node {i}: {c} vs expected {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn recovery_target_valid() {
+        let p = HddPlacement::new(CodeSpec::Rs { k: 3, m: 2 }, ClusterSpec::new(8, 3), 1);
+        for sid in 0..300u64 {
+            let sp = p.stripe(sid);
+            for (bi, &loc) in sp.locs.iter().enumerate() {
+                let tgt = p.recovery_target(sid, bi, loc);
+                assert_ne!(tgt, loc);
+                assert!(!sp.locs.iter().enumerate().any(|(o, l)| o != bi && *l == tgt));
+            }
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Block placement policies: D³ (the paper's contribution), RDD (random,
+//! the deployed default), and HDD (CRUSH-like pseudo-random hashing).
+//!
+//! A policy deterministically answers "where does block `b` of stripe `s`
+//! live?" and "where does its recovered replacement go after node `f`
+//! fails?". Both the discrete-event simulator and the mini-HDFS NameNode
+//! are driven purely through the [`Placement`] trait.
+
+pub mod d3;
+pub mod d3_lrc;
+pub mod hdd;
+pub mod rdd;
+
+pub use d3::{D3Placement, D3Variant};
+pub use d3_lrc::D3LrcPlacement;
+pub use hdd::HddPlacement;
+pub use rdd::RddPlacement;
+
+use crate::codes::CodeSpec;
+use crate::topology::{ClusterSpec, Location};
+
+/// Locations of all `len` blocks of one stripe (index = block index).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StripePlacement {
+    pub locs: Vec<Location>,
+}
+
+impl StripePlacement {
+    /// Blocks (indices) hosted on `loc`.
+    pub fn blocks_on(&self, loc: Location) -> Vec<usize> {
+        (0..self.locs.len()).filter(|&i| self.locs[i] == loc).collect()
+    }
+
+    /// Blocks hosted anywhere in rack `rack`.
+    pub fn blocks_in_rack(&self, rack: u32) -> Vec<usize> {
+        (0..self.locs.len()).filter(|&i| self.locs[i].rack == rack).collect()
+    }
+
+    /// True iff no rack holds more than `limit` blocks (fault-tolerance
+    /// invariant: `limit = m` for RS, 1 for LRC).
+    pub fn rack_limit_ok(&self, limit: usize) -> bool {
+        let mut counts = std::collections::HashMap::new();
+        for l in &self.locs {
+            *counts.entry(l.rack).or_insert(0usize) += 1;
+        }
+        counts.values().all(|&c| c <= limit)
+    }
+
+    /// True iff all blocks are on distinct nodes (m-node fault tolerance).
+    pub fn nodes_distinct(&self) -> bool {
+        let mut set = std::collections::HashSet::new();
+        self.locs.iter().all(|l| set.insert(*l))
+    }
+}
+
+/// A block placement policy.
+pub trait Placement: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn code(&self) -> CodeSpec;
+    fn cluster(&self) -> ClusterSpec;
+
+    /// Placement of stripe `sid` (deterministic per policy + seed).
+    fn stripe(&self, sid: u64) -> StripePlacement;
+
+    /// Where the recovered copy of block `block` of stripe `sid` goes when
+    /// node `failed` fails. Must not be `failed` itself, must not collide
+    /// with a surviving block of the stripe, and must preserve the rack
+    /// limit.
+    fn recovery_target(&self, sid: u64, block: usize, failed: Location) -> Location;
+}
+
+/// D³'s stripe grouping (paper §4.1): `len` blocks into N_g = ⌈len/m⌉
+/// groups; the first `t = len mod N_g` groups hold ⌈len/N_g⌉ blocks, the
+/// rest ⌊len/N_g⌋. Returns the half-open block-index range of each group.
+pub fn d3_groups(len: usize, m: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(m >= 1 && len > m, "grouping needs len > m >= 1");
+    let ng = len.div_ceil(m);
+    let size_max = len.div_ceil(ng);
+    let size_min = len / ng;
+    let t = len % ng;
+    let mut out = Vec::with_capacity(ng);
+    let mut start = 0;
+    for gidx in 0..ng {
+        let sz = if t > 0 && gidx < t { size_max } else { size_min };
+        out.push(start..start + sz);
+        start += sz;
+    }
+    assert_eq!(start, len);
+    out
+}
+
+/// Group index of `block` under [`d3_groups`].
+pub fn d3_group_of(groups: &[std::ops::Range<usize>], block: usize) -> usize {
+    groups
+        .iter()
+        .position(|g| g.contains(&block))
+        .expect("block out of stripe range")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouping_matches_paper_examples() {
+        // (3,2)-RS: len 5, m 2 -> groups 2,2,1 (§3.2.1)
+        assert_eq!(d3_groups(5, 2), vec![0..2, 2..4, 4..5]);
+        // (2,1)-RS: len 3, m 1 -> 1,1,1
+        assert_eq!(d3_groups(3, 1), vec![0..1, 1..2, 2..3]);
+        // (6,3)-RS: len 9, m 3 -> 3,3,3 (b = 0 case)
+        assert_eq!(d3_groups(9, 3), vec![0..3, 3..6, 6..9]);
+    }
+
+    #[test]
+    fn grouping_respects_lemma_1() {
+        // At most m blocks per group, for a sweep of shapes.
+        for k in 1..=16usize {
+            for m in 1..=6usize {
+                let len = k + m;
+                if len <= m {
+                    continue;
+                }
+                let groups = d3_groups(len, m);
+                assert_eq!(groups.len(), len.div_ceil(m));
+                for g in &groups {
+                    assert!(g.len() <= m, "k={k} m={m} group {g:?}");
+                    assert!(!g.is_empty());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grouping_respects_lemma_2() {
+        // If 0 < b < m-1 there are >= 2 groups with <= m-1 blocks.
+        for k in 1..=20usize {
+            for m in 2..=6usize {
+                let len = k + m;
+                let b = len % m;
+                if b == 0 || b == m - 1 {
+                    continue;
+                }
+                let groups = d3_groups(len, m);
+                let small = groups.iter().filter(|g| g.len() <= m - 1).count();
+                assert!(small >= 2, "k={k} m={m} groups={groups:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn group_of_lookup() {
+        let groups = d3_groups(5, 2);
+        assert_eq!(d3_group_of(&groups, 0), 0);
+        assert_eq!(d3_group_of(&groups, 3), 1);
+        assert_eq!(d3_group_of(&groups, 4), 2);
+    }
+
+    #[test]
+    fn stripe_placement_helpers() {
+        let sp = StripePlacement {
+            locs: vec![
+                Location::new(0, 0),
+                Location::new(0, 1),
+                Location::new(1, 2),
+            ],
+        };
+        assert_eq!(sp.blocks_in_rack(0), vec![0, 1]);
+        assert_eq!(sp.blocks_on(Location::new(1, 2)), vec![2]);
+        assert!(sp.rack_limit_ok(2));
+        assert!(!sp.rack_limit_ok(1));
+        assert!(sp.nodes_distinct());
+    }
+}

@@ -1,0 +1,192 @@
+//! §5.3 layout maintenance: after recovery completes, migrate the
+//! recovered blocks to the relived node (replacement in the failed rack)
+//! batch by batch, so the original D³ layout — and its recovery
+//! guarantees — are restored with bounded, balanced per-batch traffic.
+//!
+//! Batch rule (paper): each batch takes all recovered blocks of n−1
+//! region-groups *of the same type* (H = recovered blocks in a fresh rack,
+//! G* = recovered blocks appended to an existing region-group) from n−1
+//! distinct racks.
+
+use crate::topology::Location;
+
+use super::plan::RepairPlan;
+
+/// Type of a region-group holding recovered blocks (paper §3.2.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum RegionGroupKind {
+    /// H_i: recovered blocks formed a new region-group in a fresh rack.
+    FreshRack,
+    /// G*_i: recovered blocks appended to an existing region-group.
+    Appended,
+}
+
+/// One block move of the migration.
+#[derive(Clone, Debug)]
+pub struct Move {
+    pub from: Location,
+    pub stripe: u64,
+    pub block: usize,
+}
+
+/// A migration batch: all moves target the relived node.
+#[derive(Clone, Debug)]
+pub struct MigrationBatch {
+    pub kind: RegionGroupKind,
+    pub moves: Vec<Move>,
+    /// racks the moves originate from (distinct by construction)
+    pub racks: Vec<u32>,
+}
+
+/// Plan the §5.3 migration. `stripe_in_rack(plan)` tells whether the
+/// recovered block's rack already held other blocks of the stripe (G*) or
+/// not (H); we derive it from the plan + a placement callback.
+pub fn plan_migration(
+    plans: &[RepairPlan],
+    is_appended: impl Fn(&RepairPlan) -> bool,
+    region_size: usize,
+    nodes_per_rack: usize,
+) -> Vec<MigrationBatch> {
+    use std::collections::BTreeMap;
+    // (kind, region, rack) -> moves  — one region-group with recovered blocks
+    let mut groups: BTreeMap<(RegionGroupKind, u64, u32), Vec<Move>> = BTreeMap::new();
+    for plan in plans {
+        let kind = if is_appended(plan) {
+            RegionGroupKind::Appended
+        } else {
+            RegionGroupKind::FreshRack
+        };
+        let region = plan.stripe / region_size as u64;
+        groups
+            .entry((kind, region, plan.writer.rack))
+            .or_default()
+            .push(Move { from: plan.writer, stripe: plan.stripe, block: plan.failed_block });
+    }
+    // pack region-groups of the same kind into batches of n−1 distinct racks
+    let mut batches: Vec<MigrationBatch> = Vec::new();
+    for kind in [RegionGroupKind::FreshRack, RegionGroupKind::Appended] {
+        let mut pending: Vec<((RegionGroupKind, u64, u32), Vec<Move>)> = groups
+            .iter()
+            .filter(|((k, _, _), _)| *k == kind)
+            .map(|(k, v)| (*k, v.clone()))
+            .collect();
+        while !pending.is_empty() {
+            let mut batch = MigrationBatch { kind, moves: Vec::new(), racks: Vec::new() };
+            let mut used_racks = std::collections::HashSet::new();
+            let mut rest = Vec::new();
+            for (key, moves) in pending {
+                let rack = key.2;
+                if batch.racks.len() < nodes_per_rack.saturating_sub(1)
+                    && used_racks.insert(rack)
+                {
+                    batch.racks.push(rack);
+                    batch.moves.extend(moves);
+                } else {
+                    rest.push((key, moves));
+                }
+            }
+            pending = rest;
+            if batch.moves.is_empty() {
+                break;
+            }
+            batches.push(batch);
+        }
+    }
+    batches
+}
+
+/// Total bytes a batch moves cross-rack into the relived node's rack.
+pub fn batch_cross_rack_bytes(batch: &MigrationBatch, relived_rack: u32, block_size: u64) -> u64 {
+    batch
+        .moves
+        .iter()
+        .filter(|m| m.from.rack != relived_rack)
+        .count() as u64
+        * block_size
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::CodeSpec;
+    use crate::placement::{D3Placement, Placement};
+    use crate::recovery::node::node_recovery_plans;
+    use crate::topology::ClusterSpec;
+
+    fn setup() -> (D3Placement, Vec<RepairPlan>, Location) {
+        let cluster = ClusterSpec::new(5, 3);
+        let p = D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, cluster).unwrap();
+        let failed = Location::new(0, 0);
+        let stripes = (p.region_cycle() * p.region_size()) as u64;
+        let plans = node_recovery_plans(&p, stripes, failed, 0);
+        (p, plans, failed)
+    }
+
+    fn appended_fn(p: &D3Placement) -> impl Fn(&RepairPlan) -> bool + '_ {
+        move |plan: &RepairPlan| {
+            let sp = p.stripe(plan.stripe);
+            sp.locs
+                .iter()
+                .enumerate()
+                .any(|(bi, l)| bi != plan.failed_block && l.rack == plan.writer.rack)
+        }
+    }
+
+    #[test]
+    fn all_recovered_blocks_migrate_exactly_once() {
+        let (p, plans, _) = setup();
+        let batches = plan_migration(&plans, appended_fn(&p), p.region_size(), 3);
+        let total: usize = batches.iter().map(|b| b.moves.len()).sum();
+        assert_eq!(total, plans.len());
+        let mut seen = std::collections::HashSet::new();
+        for b in &batches {
+            for m in &b.moves {
+                assert!(seen.insert((m.stripe, m.block)), "double migration");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_racks_distinct_and_bounded() {
+        let (p, plans, _) = setup();
+        let n = 3;
+        let batches = plan_migration(&plans, appended_fn(&p), p.region_size(), n);
+        assert!(!batches.is_empty());
+        for b in &batches {
+            let set: std::collections::HashSet<u32> = b.racks.iter().copied().collect();
+            assert_eq!(set.len(), b.racks.len(), "duplicate rack in batch");
+            assert!(b.racks.len() <= n - 1);
+        }
+    }
+
+    #[test]
+    fn batches_are_type_homogeneous() {
+        let (p, plans, _) = setup();
+        let batches = plan_migration(&plans, appended_fn(&p), p.region_size(), 3);
+        // (3,2)-RS has both fresh-rack (B4 failures) and appended
+        // (B0..B3 failures) region-groups
+        let kinds: std::collections::HashSet<RegionGroupKind> =
+            batches.iter().map(|b| b.kind).collect();
+        assert_eq!(kinds.len(), 2, "expected both H and G* batches");
+    }
+
+    #[test]
+    fn per_batch_traffic_balanced_across_racks() {
+        let (p, plans, failed) = setup();
+        let batches = plan_migration(&plans, appended_fn(&p), p.region_size(), 3);
+        for b in &batches {
+            if b.racks.len() < 2 {
+                continue;
+            }
+            let mut per_rack: std::collections::HashMap<u32, usize> =
+                std::collections::HashMap::new();
+            for m in &b.moves {
+                *per_rack.entry(m.from.rack).or_default() += 1;
+            }
+            let max = *per_rack.values().max().unwrap();
+            let min = *per_rack.values().min().unwrap();
+            assert!(max - min <= max / 2 + 1, "batch rack skew: {per_rack:?}");
+        }
+        let _ = failed;
+    }
+}

@@ -1,0 +1,11 @@
+//! Failure recovery (paper §5): minimum-cross-rack repair plans for D³,
+//! the RDD/HDD baseline plans, degraded reads, full-node recovery and the
+//! §5.3 layout-maintenance migration.
+
+pub mod migration;
+pub mod mu;
+pub mod node;
+pub mod plan;
+
+pub use node::node_recovery_plans;
+pub use plan::{plan_repair, Aggregation, RepairPlan};

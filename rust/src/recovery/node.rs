@@ -1,0 +1,120 @@
+//! Full-node failure recovery: every stripe with a block on the failed
+//! node gets one repair plan (paper §5.1.2–§5.1.3 place the recovered
+//! blocks; the plans carry the traffic structure the simulator runs).
+
+use crate::placement::Placement;
+use crate::topology::Location;
+
+use super::plan::{plan_repair, RepairPlan};
+
+/// Repair plans for all of `failed`'s blocks among stripes `0..stripes`.
+/// Plans are ordered by stripe id — the order the NameNode queues them.
+pub fn node_recovery_plans(
+    policy: &dyn Placement,
+    stripes: u64,
+    failed: Location,
+    seed: u64,
+) -> Vec<RepairPlan> {
+    let mut plans = Vec::new();
+    for sid in 0..stripes {
+        let sp = policy.stripe(sid);
+        for (bi, &loc) in sp.locs.iter().enumerate() {
+            if loc == failed {
+                plans.push(plan_repair(policy, sid, bi, seed));
+            }
+        }
+    }
+    plans
+}
+
+/// Total bytes lost on `failed` (what recovery must rebuild).
+pub fn failed_bytes(policy: &dyn Placement, stripes: u64, failed: Location, block_size: u64) -> u64 {
+    let mut count = 0u64;
+    for sid in 0..stripes {
+        count += policy
+            .stripe(sid)
+            .locs
+            .iter()
+            .filter(|&&l| l == failed)
+            .count() as u64;
+    }
+    count * block_size
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::CodeSpec;
+    use crate::placement::{D3Placement, RddPlacement};
+    use crate::topology::ClusterSpec;
+    use std::collections::HashMap;
+
+    #[test]
+    fn every_failed_block_gets_a_plan() {
+        let cluster = ClusterSpec::new(8, 3);
+        let p = D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, cluster).unwrap();
+        let failed = Location::new(2, 1);
+        let stripes = 500u64;
+        let plans = node_recovery_plans(&p, stripes, failed, 0);
+        let mut expected = 0;
+        for sid in 0..stripes {
+            expected += p.stripe(sid).locs.iter().filter(|&&l| l == failed).count();
+        }
+        assert_eq!(plans.len(), expected);
+        assert!(expected > 0, "failed node held no blocks?");
+        for plan in &plans {
+            assert_ne!(plan.writer, failed);
+            assert!(plan
+                .aggregations
+                .iter()
+                .flat_map(|a| a.inputs.iter())
+                .chain(plan.direct.iter())
+                .all(|(_, l)| *l != failed));
+        }
+    }
+
+    #[test]
+    fn d3_write_load_balanced_over_full_cycle() {
+        // Theorem 6: recovered-block writes spread evenly across surviving
+        // nodes (within each region they go round-robin; across regions 𝓜
+        // balances racks). Check per-node write counts over a full cycle.
+        let cluster = ClusterSpec::new(5, 3);
+        let p = D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, cluster).unwrap();
+        let stripes = (p.region_cycle() * p.region_size()) as u64;
+        let failed = Location::new(0, 0);
+        let plans = node_recovery_plans(&p, stripes, failed, 0);
+        let mut writes: HashMap<Location, usize> = HashMap::new();
+        for plan in &plans {
+            *writes.entry(plan.writer).or_default() += 1;
+        }
+        assert!(writes.values().all(|&c| c > 0));
+        let max = *writes.values().max().unwrap();
+        let min = *writes.values().min().unwrap();
+        // exact balance not required across *types*, but spread must be tight
+        assert!(
+            max as f64 <= 2.0 * min as f64,
+            "write skew too high: min={min} max={max} ({writes:?})"
+        );
+        // no writes to the failed node's rack... except D³ writes into
+        // surviving racks only
+        assert!(writes.keys().all(|l| *l != failed));
+    }
+
+    #[test]
+    fn rdd_and_d3_rebuild_the_same_bytes() {
+        let cluster = ClusterSpec::new(8, 3);
+        let d3 = D3Placement::new(CodeSpec::Rs { k: 2, m: 1 }, cluster).unwrap();
+        // idealized-uniform RDD: the default (calibrated skew) deliberately
+        // loads nodes unevenly, so byte conservation is checked against the
+        // IID variant
+        let rdd = RddPlacement::uniform(CodeSpec::Rs { k: 2, m: 1 }, cluster, 1);
+        let failed = Location::new(3, 0);
+        let bs = 16 << 20;
+        // both policies place 3 blocks/stripe on 24 nodes; expected loss is
+        // similar though not identical (placement-dependent)
+        let a = failed_bytes(&d3, 1000, failed, bs);
+        let b = failed_bytes(&rdd, 1000, failed, bs);
+        let ratio = a as f64 / b as f64;
+        assert!(ratio > 0.7 && ratio < 1.4, "loss ratio {ratio}");
+    }
+}

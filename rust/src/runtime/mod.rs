@@ -1,0 +1,102 @@
+//! Runtime data path: execute the GF(2^8) coding hot-spot either natively
+//! (portable fallback, `gf::combine`) or through the AOT-compiled PJRT
+//! artifacts produced by `make artifacts` (`python/compile/aot.py`).
+//!
+//! Python never runs here — the artifacts are HLO *text* lowered once at
+//! build time; `PjRtClient::cpu()` compiles them at startup and the
+//! coordinator calls [`Coder::combine`] on the request path.
+//!
+//! Both backends implement the same primitive — one GF linear combination
+//! `out = ⊕ᵢ cᵢ·shardᵢ` — which by RS linearity (§2.2) covers encode,
+//! decode, and D³'s inner-rack aggregation.
+
+pub mod pjrt;
+
+use crate::gf;
+
+/// Chooses how the byte-crunching is executed.
+pub enum Coder {
+    /// Pure-Rust table-driven path (always available).
+    Native,
+    /// PJRT CPU client executing the AOT artifacts.
+    Pjrt(pjrt::PjrtCoder),
+}
+
+impl Coder {
+    pub fn native() -> Coder {
+        Coder::Native
+    }
+
+    /// Load the AOT artifacts from `dir` (default: `$D3EC_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn pjrt_from(dir: &std::path::Path) -> anyhow::Result<Coder> {
+        Ok(Coder::Pjrt(pjrt::PjrtCoder::load(dir)?))
+    }
+
+    pub fn pjrt() -> anyhow::Result<Coder> {
+        Ok(Coder::Pjrt(pjrt::PjrtCoder::load(&default_artifacts_dir())?))
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            Coder::Native => "native",
+            Coder::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// `out = ⊕ᵢ coeffs[i] · shards[i]` — the coding primitive.
+    pub fn combine(&self, coeffs: &[u8], shards: &[&[u8]]) -> anyhow::Result<Vec<u8>> {
+        assert_eq!(coeffs.len(), shards.len());
+        assert!(!shards.is_empty());
+        let len = shards[0].len();
+        assert!(shards.iter().all(|s| s.len() == len), "ragged shards");
+        match self {
+            Coder::Native => Ok(gf::combine(coeffs, shards)),
+            Coder::Pjrt(p) => p.combine(coeffs, shards),
+        }
+    }
+
+    /// Encode: `parity_rows (m×k) ⊗ data (k shards)` → m parity shards.
+    pub fn encode(
+        &self,
+        parity_rows: &crate::gf::Matrix,
+        data: &[&[u8]],
+    ) -> anyhow::Result<Vec<Vec<u8>>> {
+        (0..parity_rows.rows())
+            .map(|i| self.combine(parity_rows.row(i), data))
+            .collect()
+    }
+}
+
+/// `$D3EC_ARTIFACTS`, else `<manifest dir>/artifacts`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("D3EC_ARTIFACTS") {
+        return p.into();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_combine_matches_gf() {
+        let coder = Coder::native();
+        let a = vec![1u8, 2, 3, 4];
+        let b = vec![5u8, 6, 7, 8];
+        let got = coder.combine(&[3, 7], &[&a, &b]).unwrap();
+        assert_eq!(got, gf::combine(&[3, 7], &[&a, &b]));
+    }
+
+    #[test]
+    fn native_encode_roundtrip() {
+        use crate::codes::RsCode;
+        let code = RsCode::new(4, 2);
+        let data: Vec<Vec<u8>> = (0..4u8).map(|i| vec![i * 17 + 1; 64]).collect();
+        let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+        let coder = Coder::native();
+        let parity = coder.encode(&code.parity_rows(), &refs).unwrap();
+        assert_eq!(parity, code.encode(&refs));
+    }
+}

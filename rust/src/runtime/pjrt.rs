@@ -1,0 +1,151 @@
+//! PJRT execution of the AOT-compiled GF kernels.
+//!
+//! `make artifacts` lowers `gf_combine_k{k}` entry points to HLO text
+//! (1 MiB-wide uint8 panels, bit-linear kernel: inputs are btab (k, 8)
+//! bit tables + the data panel); this module loads `manifest.json`,
+//! compiles each needed variant once on the PJRT CPU client, and streams
+//! arbitrary block lengths through the fixed-width executables
+//! (zero-padding the tail panel — valid because GF combination is linear
+//! and 0 is absorbing).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::util::json::Json;
+
+pub struct PjrtCoder {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    /// panel width the artifacts were lowered at
+    width: usize,
+    /// combine_k executables, compiled lazily per fan-in k
+    combine: Mutex<HashMap<usize, xla::PjRtLoadedExecutable>>,
+    /// artifact file per k (from the manifest)
+    combine_files: HashMap<usize, String>,
+}
+
+impl PjrtCoder {
+    pub fn load(dir: &Path) -> anyhow::Result<PjrtCoder> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let width = manifest
+            .get("width")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing width"))?;
+        let mut combine_files = HashMap::new();
+        for entry in manifest
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let op = entry.get("op").and_then(Json::as_str).unwrap_or("");
+            if op == "combine" {
+                let k = entry
+                    .get("k")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("combine entry missing k"))?;
+                let file = entry
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("combine entry missing file"))?;
+                combine_files.insert(k, file.to_string());
+            }
+        }
+        if combine_files.is_empty() {
+            bail!("no combine artifacts in manifest");
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtCoder {
+            client,
+            dir: dir.to_path_buf(),
+            width,
+            combine: Mutex::new(HashMap::new()),
+            combine_files,
+        })
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn supported_fanins(&self) -> Vec<usize> {
+        let mut ks: Vec<usize> = self.combine_files.keys().copied().collect();
+        ks.sort_unstable();
+        ks
+    }
+
+    fn ensure_compiled(&self, k: usize) -> anyhow::Result<()> {
+        let mut map = self.combine.lock().unwrap();
+        if map.contains_key(&k) {
+            return Ok(());
+        }
+        let file = self
+            .combine_files
+            .get(&k)
+            .ok_or_else(|| anyhow!("no combine artifact for k={k} (have {:?})", {
+                let mut v: Vec<_> = self.combine_files.keys().collect();
+                v.sort();
+                v
+            }))?;
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        map.insert(k, exe);
+        Ok(())
+    }
+
+    /// One GF linear combination through the AOT executable, panel by panel.
+    pub fn combine(&self, coeffs: &[u8], shards: &[&[u8]]) -> anyhow::Result<Vec<u8>> {
+        let k = coeffs.len();
+        let len = shards[0].len();
+        self.ensure_compiled(k)?;
+        let map = self.combine.lock().unwrap();
+        let exe = map.get(&k).expect("just compiled");
+
+        // btab[i][b] = gfmul(c_i, 1 << b): the bit-linear kernel's tables
+        let mut btab = vec![0u8; k * 8];
+        for (i, &c) in coeffs.iter().enumerate() {
+            for b in 0..8 {
+                btab[i * 8 + b] = crate::gf::mul(c, 1 << b);
+            }
+        }
+        let w = self.width;
+        let mut out = vec![0u8; len];
+        let mut panel = vec![0u8; k * w];
+        let mut off = 0usize;
+        while off < len {
+            let take = (len - off).min(w);
+            for (i, shard) in shards.iter().enumerate() {
+                panel[i * w..i * w + take].copy_from_slice(&shard[off..off + take]);
+                if take < w {
+                    panel[i * w + take..(i + 1) * w].fill(0);
+                }
+            }
+            // device buffers + raw host copy-out: one copy each way
+            // (execute with Literals costs an extra literal round-trip —
+            // measured 119 ms vs 86 ms per 16 MB combine, §Perf)
+            let data_buf = self.client.buffer_from_host_buffer::<u8>(&panel, &[k, w], None)?;
+            let btab_buf = self.client.buffer_from_host_buffer::<u8>(&btab, &[k, 8], None)?;
+            let result = exe.execute_b(&[&btab_buf, &data_buf])?;
+            // CopyRawToHost is unimplemented on the TFRT CPU client, so the
+            // copy-out goes through one literal (the artifact's bare-array
+            // root avoids the old tuple unwrap + extra literal round-trip)
+            let bytes: Vec<u8> = result[0][0].to_literal_sync()?.to_vec::<u8>()?;
+            out[off..off + take].copy_from_slice(&bytes[..take]);
+            off += take;
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,455 @@
+//! Fluid (flow-level) discrete-event engine with max-min fair sharing.
+//!
+//! Jobs are small DAGs of activities; an activity is either a fixed
+//! [`Work::Delay`] (e.g. disk seek) or a [`Work::Flow`] of `bytes` across a
+//! set of resources (disk, NIC, router port, CPU). Active flows share every
+//! resource max-min fairly (progressive waterfilling — the standard fluid
+//! approximation of TCP fair sharing on a tree network); events are flow /
+//! timer completions, and rates are recomputed at each event.
+//!
+//! This is the testbed substitute (DESIGN.md §2): the paper's recovery
+//! results are bandwidth-dominated, and max-min fair port sharing
+//! reproduces the contention that produces them.
+
+use super::resources::ResourceId;
+
+/// What an activity does once its dependencies complete.
+#[derive(Clone, Debug)]
+pub enum Work {
+    /// Fixed latency in seconds.
+    Delay(f64),
+    /// Move/process `bytes` across all `resources` simultaneously
+    /// (a transfer holds NIC up + NIC down + router ports; a disk read
+    /// holds the disk; compute holds the CPU).
+    Flow { resources: Vec<ResourceId>, bytes: f64 },
+}
+
+/// One node of a job DAG. `deps` are indices of activities within the
+/// same job that must finish first.
+#[derive(Clone, Debug)]
+pub struct Activity {
+    pub work: Work,
+    pub deps: Vec<u32>,
+}
+
+/// A job: a DAG of activities. The job completes when all activities do.
+#[derive(Clone, Debug, Default)]
+pub struct JobSpec {
+    pub activities: Vec<Activity>,
+}
+
+impl JobSpec {
+    /// Append an activity, returning its index for later `deps` edges.
+    pub fn push(&mut self, work: Work, deps: Vec<u32>) -> u32 {
+        self.activities.push(Activity { work, deps });
+        (self.activities.len() - 1) as u32
+    }
+}
+
+pub type JobId = u32;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct ActKey {
+    job: JobId,
+    act: u32,
+}
+
+struct JobState {
+    spec: JobSpec,
+    /// unmet dependency count per activity
+    waiting: Vec<u32>,
+    /// dependents per activity
+    rdeps: Vec<Vec<u32>>,
+    remaining_activities: usize,
+    finish_time: f64,
+    /// accumulated bytes accounted per resource (for load metrics)
+    started: bool,
+}
+
+struct FlowState {
+    key: ActKey,
+    resources: Vec<ResourceId>,
+    remaining: f64,
+    rate: f64,
+}
+
+/// The engine. Drive it with [`Engine::add_job`] + [`Engine::run_until`]
+/// (or [`Engine::run_to_completion`]).
+pub struct Engine {
+    now: f64,
+    caps: Vec<f64>,
+    jobs: Vec<JobState>,
+    flows: Vec<FlowState>,
+    /// timers: (fire_time, key), min-heap
+    timers: std::collections::BinaryHeap<std::cmp::Reverse<(OrdF64, JobId, u32)>>,
+    completed_jobs: Vec<JobId>,
+    /// total bytes that have traversed each resource (metrics)
+    pub resource_bytes: Vec<f64>,
+    rates_dirty: bool,
+}
+
+/// Total-ordered f64 for the timer heap (times are always finite).
+#[derive(Clone, Copy, PartialEq, PartialOrd)]
+struct OrdF64(f64);
+impl Eq for OrdF64 {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).expect("finite times")
+    }
+}
+
+impl Engine {
+    pub fn new(caps: Vec<f64>) -> Engine {
+        let n = caps.len();
+        Engine {
+            now: 0.0,
+            caps,
+            jobs: Vec::new(),
+            flows: Vec::new(),
+            timers: std::collections::BinaryHeap::new(),
+            completed_jobs: Vec::new(),
+            resource_bytes: vec![0.0; n],
+            rates_dirty: false,
+        }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Register a job without starting it (admission controlled by caller).
+    pub fn add_job(&mut self, spec: JobSpec) -> JobId {
+        let n = spec.activities.len();
+        assert!(n > 0, "empty job");
+        let mut waiting = vec![0u32; n];
+        let mut rdeps = vec![Vec::new(); n];
+        for (i, a) in spec.activities.iter().enumerate() {
+            waiting[i] = a.deps.len() as u32;
+            for &d in &a.deps {
+                assert!((d as usize) < n && d as usize != i, "bad dep edge");
+                rdeps[d as usize].push(i as u32);
+            }
+        }
+        self.jobs.push(JobState {
+            spec,
+            waiting,
+            rdeps,
+            remaining_activities: n,
+            finish_time: f64::NAN,
+            started: false,
+        });
+        (self.jobs.len() - 1) as JobId
+    }
+
+    /// Start a previously added job: all zero-dep activities begin now.
+    pub fn start_job(&mut self, job: JobId) {
+        let state = &mut self.jobs[job as usize];
+        assert!(!state.started, "job started twice");
+        state.started = true;
+        let ready: Vec<u32> = (0..state.spec.activities.len() as u32)
+            .filter(|&i| state.waiting[i as usize] == 0)
+            .collect();
+        assert!(!ready.is_empty(), "job has no root activity (dependency cycle)");
+        for act in ready {
+            self.start_activity(ActKey { job, act });
+        }
+    }
+
+    /// Convenience: add + start.
+    pub fn spawn(&mut self, spec: JobSpec) -> JobId {
+        let id = self.add_job(spec);
+        self.start_job(id);
+        id
+    }
+
+    fn start_activity(&mut self, key: ActKey) {
+        let work = self.jobs[key.job as usize].spec.activities[key.act as usize].work.clone();
+        match work {
+            Work::Delay(secs) => {
+                assert!(secs >= 0.0);
+                self.timers.push(std::cmp::Reverse((OrdF64(self.now + secs), key.job, key.act)));
+            }
+            Work::Flow { resources, bytes } => {
+                if resources.is_empty() || bytes <= 0.0 {
+                    // local no-op (e.g. src == dst transfer): complete now
+                    self.timers.push(std::cmp::Reverse((OrdF64(self.now), key.job, key.act)));
+                    return;
+                }
+                for &r in &resources {
+                    self.resource_bytes[r as usize] += bytes;
+                }
+                self.flows.push(FlowState { key, resources, remaining: bytes, rate: 0.0 });
+                self.rates_dirty = true;
+            }
+        }
+    }
+
+    /// Progressive max-min waterfilling over all active flows.
+    fn recompute_rates(&mut self) {
+        self.rates_dirty = false;
+        let nf = self.flows.len();
+        if nf == 0 {
+            return;
+        }
+        let nr = self.caps.len();
+        let mut remaining_cap = self.caps.clone();
+        let mut active_count = vec![0u32; nr];
+        for f in &self.flows {
+            for &r in &f.resources {
+                active_count[r as usize] += 1;
+            }
+        }
+        let mut assigned = vec![false; nf];
+        let mut unassigned = nf;
+        while unassigned > 0 {
+            // bottleneck resource: min fair share among resources with flows
+            let mut best_share = f64::INFINITY;
+            let mut best_res = usize::MAX;
+            for r in 0..nr {
+                if active_count[r] > 0 {
+                    let share = remaining_cap[r] / active_count[r] as f64;
+                    if share < best_share {
+                        best_share = share;
+                        best_res = r;
+                    }
+                }
+            }
+            if best_res == usize::MAX {
+                break;
+            }
+            // freeze all unassigned flows crossing the bottleneck
+            let mut froze = false;
+            for i in 0..nf {
+                if assigned[i] || !self.flows[i].resources.contains(&(best_res as ResourceId)) {
+                    continue;
+                }
+                froze = true;
+                assigned[i] = true;
+                unassigned -= 1;
+                self.flows[i].rate = best_share;
+                for &r in &self.flows[i].resources {
+                    remaining_cap[r as usize] -= best_share;
+                    active_count[r as usize] -= 1;
+                }
+                remaining_cap[best_res] = remaining_cap[best_res].max(0.0);
+            }
+            if !froze {
+                active_count[best_res] = 0; // defensive: no flows on it
+            }
+        }
+    }
+
+    /// Advance until the next event; returns jobs completed at that event.
+    /// `None` when nothing is left to run.
+    pub fn run_until_event(&mut self) -> Option<Vec<JobId>> {
+        if self.rates_dirty {
+            self.recompute_rates();
+        }
+        // next flow completion
+        let mut t_flow = f64::INFINITY;
+        for f in &self.flows {
+            if f.rate > 0.0 {
+                t_flow = t_flow.min(self.now + f.remaining / f.rate);
+            }
+        }
+        let t_timer = self.timers.peek().map(|std::cmp::Reverse((t, _, _))| t.0);
+        let t_next = match t_timer {
+            Some(tt) => t_flow.min(tt),
+            None => t_flow,
+        };
+        if !t_next.is_finite() {
+            return None;
+        }
+        // advance flows
+        let dt = t_next - self.now;
+        self.now = t_next;
+        let mut finished_keys: Vec<ActKey> = Vec::new();
+        let eps = 1e-7;
+        self.flows.retain_mut(|f| {
+            f.remaining -= f.rate * dt;
+            if f.remaining <= eps * f.rate.max(1.0) {
+                finished_keys.push(f.key);
+                false
+            } else {
+                true
+            }
+        });
+        // fire due timers
+        while let Some(std::cmp::Reverse((t, job, act))) = self.timers.peek().copied() {
+            if t.0 <= self.now + 1e-12 {
+                self.timers.pop();
+                finished_keys.push(ActKey { job, act });
+            } else {
+                break;
+            }
+        }
+        if !finished_keys.is_empty() {
+            self.rates_dirty = true;
+        }
+        let mut completed = Vec::new();
+        for key in finished_keys {
+            self.finish_activity(key, &mut completed);
+        }
+        Some(completed)
+    }
+
+    fn finish_activity(&mut self, key: ActKey, completed: &mut Vec<JobId>) {
+        let js = &mut self.jobs[key.job as usize];
+        js.remaining_activities -= 1;
+        let ready: Vec<u32> = js.rdeps[key.act as usize]
+            .iter()
+            .copied()
+            .filter(|&d| {
+                let w = &mut js.waiting[d as usize];
+                *w -= 1;
+                *w == 0
+            })
+            .collect();
+        if js.remaining_activities == 0 {
+            js.finish_time = self.now;
+            completed.push(key.job);
+            self.completed_jobs.push(key.job);
+        }
+        for act in ready {
+            self.start_activity(ActKey { job: key.job, act });
+        }
+    }
+
+    /// Run everything currently started to completion (no admission).
+    pub fn run_to_completion(&mut self) {
+        while self.run_until_event().is_some() {}
+    }
+
+    pub fn finish_time(&self, job: JobId) -> f64 {
+        self.jobs[job as usize].finish_time
+    }
+
+    pub fn completed_count(&self) -> usize {
+        self.completed_jobs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flow(res: Vec<ResourceId>, bytes: f64, deps: Vec<u32>) -> Activity {
+        Activity { work: Work::Flow { resources: res, bytes }, deps }
+    }
+
+    #[test]
+    fn single_flow_takes_bytes_over_capacity() {
+        let mut e = Engine::new(vec![100.0]);
+        let mut j = JobSpec::default();
+        j.push(Work::Flow { resources: vec![0], bytes: 500.0 }, vec![]);
+        let id = e.spawn(j);
+        e.run_to_completion();
+        assert!((e.finish_time(id) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn two_flows_share_fairly() {
+        // two equal flows on one resource: both finish at 2 × solo time
+        let mut e = Engine::new(vec![100.0]);
+        let mk = || JobSpec { activities: vec![flow(vec![0], 100.0, vec![])] };
+        let a = e.spawn(mk());
+        let b = e.spawn(mk());
+        e.run_to_completion();
+        assert!((e.finish_time(a) - 2.0).abs() < 1e-6);
+        assert!((e.finish_time(b) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn max_min_gives_leftover_to_unbottlenecked_flow() {
+        // res0 cap 100 shared by f1 (res0) and f2 (res0+res1 cap 30).
+        // f2 is capped at 30 by res1; f1 gets 70.
+        let mut e = Engine::new(vec![100.0, 30.0]);
+        let f1 = e.spawn(JobSpec { activities: vec![flow(vec![0], 700.0, vec![])] });
+        let f2 = e.spawn(JobSpec { activities: vec![flow(vec![0, 1], 30.0, vec![])] });
+        e.run_to_completion();
+        assert!((e.finish_time(f2) - 1.0).abs() < 1e-6, "f2 at rate 30");
+        // f1: 70 B/s while f2 active (1s → 70 B), then 100 B/s for 630 B → 7.3s
+        assert!((e.finish_time(f1) - 7.3).abs() < 1e-6, "got {}", e.finish_time(f1));
+    }
+
+    #[test]
+    fn dependencies_serialize_activities() {
+        let mut e = Engine::new(vec![100.0]);
+        let mut j = JobSpec::default();
+        let a = j.push(Work::Flow { resources: vec![0], bytes: 100.0 }, vec![]);
+        let b = j.push(Work::Delay(0.5), vec![a]);
+        j.push(Work::Flow { resources: vec![0], bytes: 100.0 }, vec![b]);
+        let id = e.spawn(j);
+        e.run_to_completion();
+        assert!((e.finish_time(id) - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn diamond_dag_joins() {
+        // a -> (b, c) -> d ; b and c share the resource
+        let mut e = Engine::new(vec![100.0]);
+        let mut j = JobSpec::default();
+        let a = j.push(Work::Delay(1.0), vec![]);
+        let b = j.push(Work::Flow { resources: vec![0], bytes: 100.0 }, vec![a]);
+        let c = j.push(Work::Flow { resources: vec![0], bytes: 100.0 }, vec![a]);
+        j.push(Work::Delay(0.25), vec![b, c]);
+        let id = e.spawn(j);
+        e.run_to_completion();
+        // 1.0 + (two fair-shared 100B flows on 100B/s = 2.0) + 0.25
+        assert!((e.finish_time(id) - 3.25).abs() < 1e-6, "got {}", e.finish_time(id));
+    }
+
+    #[test]
+    fn empty_resource_flow_completes_instantly() {
+        let mut e = Engine::new(vec![100.0]);
+        let mut j = JobSpec::default();
+        j.push(Work::Flow { resources: vec![], bytes: 1e9 }, vec![]);
+        let id = e.spawn(j);
+        e.run_to_completion();
+        assert!(e.finish_time(id).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resource_bytes_accounting() {
+        let mut e = Engine::new(vec![50.0, 50.0]);
+        let mut j = JobSpec::default();
+        j.push(Work::Flow { resources: vec![0, 1], bytes: 123.0 }, vec![]);
+        e.spawn(j);
+        e.run_to_completion();
+        assert!((e.resource_bytes[0] - 123.0).abs() < 1e-9);
+        assert!((e.resource_bytes[1] - 123.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn staged_admission_runs_after_completion() {
+        let mut e = Engine::new(vec![100.0]);
+        let first = e.spawn(JobSpec { activities: vec![flow(vec![0], 100.0, vec![])] });
+        let second = e.add_job(JobSpec { activities: vec![flow(vec![0], 100.0, vec![])] });
+        loop {
+            match e.run_until_event() {
+                Some(done) => {
+                    if done.contains(&first) {
+                        e.start_job(second);
+                    }
+                }
+                None => break,
+            }
+        }
+        assert!((e.finish_time(first) - 1.0).abs() < 1e-6);
+        assert!((e.finish_time(second) - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn many_flows_complete_and_conserve_time() {
+        // 100 equal flows on one resource: makespan = total/cap regardless
+        // of sharing order (work conservation).
+        let mut e = Engine::new(vec![1000.0]);
+        for _ in 0..100 {
+            e.spawn(JobSpec { activities: vec![flow(vec![0], 10.0, vec![])] });
+        }
+        e.run_to_completion();
+        assert!((e.now() - 1.0).abs() < 1e-6);
+        assert_eq!(e.completed_count(), 100);
+    }
+}

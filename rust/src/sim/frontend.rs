@@ -1,0 +1,188 @@
+//! Front-end workload simulation (paper §6.2.4, Exp 10–11): MapReduce-shaped
+//! jobs (Pi, Terasort, Wordcount, Grep) translated into compute + shuffle
+//! traffic, optionally competing with an ongoing recovery.
+
+use crate::sim::engine::{Engine, JobSpec, Work};
+use crate::sim::resources::ResourceTable;
+use crate::topology::{Location, SystemSpec};
+use crate::util::Rng;
+use crate::workloads::WorkloadSpec;
+
+/// Where a workload's tasks run and where its HDFS output blocks land.
+///
+/// Task/shuffle placement is the *scheduler's* job and is slot-balanced in
+/// any real Hadoop deployment, so both policies share it (round-robin).
+/// What differs between D³ and RDD is where HDFS puts the *data* the
+/// workload writes (the paper: "D³ achieves a uniform data distribution
+/// for the intermediate temporary data... which benefits distribution of
+/// network traffic when accessing temporarily stored data across nodes").
+pub trait TaskPlacer {
+    /// Node executing the i-th map/reduce task (scheduler, slot-balanced).
+    fn task_node(&self, task: usize) -> Location;
+    /// Node receiving the i-th output/intermediate HDFS block (placement
+    /// policy — this is where D³ and RDD differ).
+    fn output_node(&self, block: usize) -> Location;
+}
+
+/// HDFS output blocks spread deterministically (D³-like).
+pub struct UniformPlacer {
+    nodes: Vec<Location>,
+}
+
+/// HDFS output blocks placed at random (RDD-like).
+pub struct RandomPlacer {
+    nodes: Vec<Location>,
+    seed: u64,
+}
+
+impl UniformPlacer {
+    pub fn new(spec: &SystemSpec) -> UniformPlacer {
+        UniformPlacer { nodes: spec.cluster.iter_nodes().collect() }
+    }
+}
+
+impl RandomPlacer {
+    pub fn new(spec: &SystemSpec, seed: u64) -> RandomPlacer {
+        RandomPlacer { nodes: spec.cluster.iter_nodes().collect(), seed }
+    }
+}
+
+impl TaskPlacer for UniformPlacer {
+    fn task_node(&self, task: usize) -> Location {
+        self.nodes[task % self.nodes.len()]
+    }
+    fn output_node(&self, block: usize) -> Location {
+        // deterministic rotation decorrelated from the task grid
+        self.nodes[(block * 7 + 3) % self.nodes.len()]
+    }
+}
+
+impl TaskPlacer for RandomPlacer {
+    fn task_node(&self, task: usize) -> Location {
+        self.nodes[task % self.nodes.len()]
+    }
+    fn output_node(&self, block: usize) -> Location {
+        *Rng::keyed(self.seed, block as u64, 2).choose(&self.nodes)
+    }
+}
+
+/// Build the job DAG for one MapReduce-shaped workload.
+///
+/// maps: local read + compute; shuffle: map→reduce flows (cross-node, the
+/// network-intensive phase); reduces: compute + local write.
+pub fn workload_job(
+    w: &WorkloadSpec,
+    placer: &dyn TaskPlacer,
+    rt: &ResourceTable,
+    _spec: &SystemSpec,
+) -> JobSpec {
+    let mut job = JobSpec::default();
+    let maps = w.maps;
+    let reduces = w.reduces.max(1);
+    let map_in = w.input_bytes as f64 / maps as f64;
+    let shuffle_each = w.shuffle_bytes as f64 / (maps * reduces) as f64;
+    let out_each = w.output_bytes as f64 / reduces as f64;
+    let mut map_done: Vec<(u32, Location)> = Vec::with_capacity(maps);
+    for t in 0..maps {
+        let node = placer.task_node(t);
+        let mut deps = vec![];
+        if map_in > 0.0 {
+            let read = job.push(
+                Work::Flow { resources: vec![rt.disk(node)], bytes: map_in },
+                vec![],
+            );
+            deps.push(read);
+        }
+        let cpu_bytes = w.cpu_bytes_equiv as f64 / maps as f64;
+        let compute = job.push(
+            Work::Flow { resources: vec![rt.cpu(node)], bytes: cpu_bytes },
+            deps,
+        );
+        map_done.push((compute, node));
+    }
+    for r in 0..reduces {
+        let dst = placer.task_node(maps + r); // reducer slot (scheduler)
+        let mut fetches = Vec::with_capacity(maps);
+        if shuffle_each > 0.0 {
+            for &(m_act, m_node) in &map_done {
+                let f = job.push(
+                    Work::Flow { resources: rt.transfer(m_node, dst), bytes: shuffle_each },
+                    vec![m_act],
+                );
+                fetches.push(f);
+            }
+        } else {
+            fetches.extend(map_done.iter().map(|&(a, _)| a));
+        }
+        let reduce_cpu = job.push(
+            Work::Flow {
+                resources: vec![rt.cpu(dst)],
+                bytes: (shuffle_each * maps as f64).max(1.0),
+            },
+            fetches,
+        );
+        if out_each > 0.0 {
+            // the reducer writes its output block into HDFS: the target
+            // node comes from the block-placement policy (D³ vs RDD)
+            let out_loc = placer.output_node(r);
+            let write_net = job.push(
+                Work::Flow { resources: rt.transfer(dst, out_loc), bytes: out_each },
+                vec![reduce_cpu],
+            );
+            job.push(
+                Work::Flow { resources: vec![rt.disk(out_loc)], bytes: out_each },
+                vec![write_net],
+            );
+        }
+    }
+    job
+}
+
+/// Run a workload alone; returns completion time (normal state, Exp 10).
+pub fn run_workload(spec: &SystemSpec, w: &WorkloadSpec, placer: &dyn TaskPlacer) -> f64 {
+    let rt = ResourceTable::new(spec);
+    let mut engine = Engine::new(rt.caps.clone());
+    engine.spawn(workload_job(w, placer, &rt, spec));
+    engine.run_to_completion();
+    engine.now()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn workloads_complete_with_positive_time() {
+        let spec = SystemSpec::paper_default();
+        let placer = UniformPlacer::new(&spec);
+        for w in workloads::specs() {
+            let t = run_workload(&spec, &w, &placer);
+            assert!(t > 0.0, "{}: t={t}", w.name);
+        }
+    }
+
+    #[test]
+    fn network_heavy_workloads_slower_than_cpu_only() {
+        let spec = SystemSpec::paper_default();
+        let placer = UniformPlacer::new(&spec);
+        let all = workloads::specs();
+        let pi = all.iter().find(|w| w.name == "pi").unwrap();
+        let terasort = all.iter().find(|w| w.name == "terasort").unwrap();
+        let t_pi = run_workload(&spec, pi, &placer);
+        let t_ts = run_workload(&spec, terasort, &placer);
+        assert!(t_ts > t_pi, "terasort {t_ts} should exceed pi {t_pi}");
+    }
+
+    #[test]
+    fn uniform_placement_no_slower_than_random() {
+        let spec = SystemSpec::paper_default();
+        let uni = UniformPlacer::new(&spec);
+        let rnd = RandomPlacer::new(&spec, 5);
+        let all = workloads::specs();
+        let grep = all.iter().find(|w| w.name == "grep").unwrap();
+        let t_u = run_workload(&spec, grep, &uni);
+        let t_r = run_workload(&spec, grep, &rnd);
+        assert!(t_u <= t_r * 1.05, "uniform {t_u} vs random {t_r}");
+    }
+}

@@ -1,0 +1,12 @@
+//! The testbed substitute: a flow-level discrete-event simulator
+//! (DESIGN.md §2). [`engine`] is the generic fluid DES; [`resources`]
+//! maps the topology onto shared capacities; [`recovery`] runs repair
+//! plans through it; [`frontend`] adds the MapReduce-shaped workloads.
+
+pub mod engine;
+pub mod frontend;
+pub mod recovery;
+pub mod resources;
+
+pub use engine::{Engine, JobSpec, Work};
+pub use resources::ResourceTable;

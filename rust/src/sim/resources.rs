@@ -1,0 +1,144 @@
+//! Resource table for the fluid simulator: every contended capacity in the
+//! testbed becomes one max-min-fair-shared resource.
+//!
+//! Per node: disk (shared actuator), NIC up, NIC down, CPU.
+//! Per rack: core-router port up / down (the scarce cross-rack capacity).
+
+use crate::topology::{Location, SystemSpec};
+
+pub type ResourceId = u32;
+
+const PER_NODE: usize = 4;
+const DISK: usize = 0;
+const NIC_UP: usize = 1;
+const NIC_DOWN: usize = 2;
+const CPU: usize = 3;
+
+/// Maps topology entities to resource ids and capacities (bytes/second).
+#[derive(Clone, Debug)]
+pub struct ResourceTable {
+    /// capacity in bytes/sec per resource
+    pub caps: Vec<f64>,
+    nodes: usize,
+    nodes_per_rack: usize,
+}
+
+fn mbps_to_bytes(mbps: f64) -> f64 {
+    mbps * 1e6 / 8.0
+}
+
+impl ResourceTable {
+    pub fn new(spec: &SystemSpec) -> ResourceTable {
+        let nodes = spec.cluster.node_count();
+        let racks = spec.cluster.racks;
+        let mut caps = Vec::with_capacity(nodes * PER_NODE + racks * 2);
+        for _ in 0..nodes {
+            // disk: use sequential read rate as the shared actuator capacity
+            caps.push(mbps_to_bytes(spec.disk.seq_read_mbps));
+            caps.push(mbps_to_bytes(spec.net.inner_mbps)); // NIC up
+            caps.push(mbps_to_bytes(spec.net.inner_mbps)); // NIC down
+            caps.push(mbps_to_bytes(spec.cpu.gf_mbps)); // CPU (per-stream GF rate)
+        }
+        for _ in 0..racks {
+            // one full-duplex core-router port per rack (paper Exp 1:
+            // "each port ... is full-duplex, with 100 Mb/s upstream and
+            // 100 Mb/s downstream available simultaneously")
+            caps.push(mbps_to_bytes(spec.net.cross_mbps));
+            caps.push(mbps_to_bytes(spec.net.cross_mbps));
+        }
+        ResourceTable { caps, nodes, nodes_per_rack: spec.cluster.nodes_per_rack }
+    }
+
+    fn node_base(&self, loc: Location) -> usize {
+        (loc.rack as usize * self.nodes_per_rack + loc.node as usize) * PER_NODE
+    }
+
+    pub fn disk(&self, loc: Location) -> ResourceId {
+        (self.node_base(loc) + DISK) as ResourceId
+    }
+
+    pub fn nic_up(&self, loc: Location) -> ResourceId {
+        (self.node_base(loc) + NIC_UP) as ResourceId
+    }
+
+    pub fn nic_down(&self, loc: Location) -> ResourceId {
+        (self.node_base(loc) + NIC_DOWN) as ResourceId
+    }
+
+    pub fn cpu(&self, loc: Location) -> ResourceId {
+        (self.node_base(loc) + CPU) as ResourceId
+    }
+
+    pub fn rack_up(&self, rack: u32) -> ResourceId {
+        (self.nodes * PER_NODE + rack as usize * 2) as ResourceId
+    }
+
+    pub fn rack_down(&self, rack: u32) -> ResourceId {
+        (self.nodes * PER_NODE + rack as usize * 2 + 1) as ResourceId
+    }
+
+    pub fn racks(&self) -> usize {
+        (self.caps.len() - self.nodes * PER_NODE) / 2
+    }
+
+    /// Resource set for a network transfer `src → dst`.
+    pub fn transfer(&self, src: Location, dst: Location) -> Vec<ResourceId> {
+        if src == dst {
+            return vec![];
+        }
+        let mut r = vec![self.nic_up(src), self.nic_down(dst)];
+        if src.rack != dst.rack {
+            r.push(self.rack_up(src.rack));
+            r.push(self.rack_down(dst.rack));
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::SystemSpec;
+
+    #[test]
+    fn ids_are_disjoint_and_in_range() {
+        let spec = SystemSpec::paper_default();
+        let rt = ResourceTable::new(&spec);
+        let mut seen = std::collections::HashSet::new();
+        for loc in spec.cluster.iter_nodes() {
+            for id in [rt.disk(loc), rt.nic_up(loc), rt.nic_down(loc), rt.cpu(loc)] {
+                assert!(seen.insert(id), "dup id {id}");
+                assert!((id as usize) < rt.caps.len());
+            }
+        }
+        for rack in 0..spec.cluster.racks as u32 {
+            for id in [rt.rack_up(rack), rt.rack_down(rack)] {
+                assert!(seen.insert(id), "dup id {id}");
+                assert!((id as usize) < rt.caps.len());
+            }
+        }
+        assert_eq!(seen.len(), rt.caps.len());
+    }
+
+    #[test]
+    fn transfer_resource_sets() {
+        let spec = SystemSpec::paper_default();
+        let rt = ResourceTable::new(&spec);
+        let a = Location::new(0, 0);
+        let b = Location::new(0, 1);
+        let c = Location::new(1, 0);
+        assert_eq!(rt.transfer(a, a), vec![]);
+        assert_eq!(rt.transfer(a, b).len(), 2, "inner-rack skips router ports");
+        assert_eq!(rt.transfer(a, c).len(), 4, "cross-rack adds both router ports");
+    }
+
+    #[test]
+    fn capacities_match_spec() {
+        let spec = SystemSpec::paper_default();
+        let rt = ResourceTable::new(&spec);
+        let loc = Location::new(2, 1);
+        assert!((rt.caps[rt.nic_up(loc) as usize] - 1000.0 * 1e6 / 8.0).abs() < 1.0);
+        // rack port: one full-duplex 100 Mb/s core-router port per rack
+        assert!((rt.caps[rt.rack_up(2) as usize] - 100.0 * 1e6 / 8.0).abs() < 1.0);
+    }
+}

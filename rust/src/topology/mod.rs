@@ -1,0 +1,156 @@
+//! Cluster topology and hardware specs (paper §2.1, §6.1).
+//!
+//! A DSS is `r` racks × `n` nodes; nodes within a rack share a ToR switch
+//! (inner-rack bandwidth), racks share an oversubscribed core router
+//! (cross-rack bandwidth, typically 1/20–1/5 of inner-rack per node).
+
+/// A storage node, addressed as (rack, node-within-rack) — paper's N_{i,j}.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Location {
+    pub rack: u32,
+    pub node: u32,
+}
+
+impl Location {
+    pub fn new(rack: usize, node: usize) -> Location {
+        Location { rack: rack as u32, node: node as u32 }
+    }
+}
+
+impl std::fmt::Display for Location {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "N{},{}", self.rack, self.node)
+    }
+}
+
+/// Rack/node counts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClusterSpec {
+    pub racks: usize,
+    pub nodes_per_rack: usize,
+}
+
+impl ClusterSpec {
+    pub fn new(racks: usize, nodes_per_rack: usize) -> ClusterSpec {
+        ClusterSpec { racks, nodes_per_rack }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.racks * self.nodes_per_rack
+    }
+
+    pub fn flat(&self, loc: Location) -> usize {
+        loc.rack as usize * self.nodes_per_rack + loc.node as usize
+    }
+
+    pub fn unflat(&self, idx: usize) -> Location {
+        Location::new(idx / self.nodes_per_rack, idx % self.nodes_per_rack)
+    }
+
+    pub fn contains(&self, loc: Location) -> bool {
+        (loc.rack as usize) < self.racks && (loc.node as usize) < self.nodes_per_rack
+    }
+
+    pub fn iter_nodes(&self) -> impl Iterator<Item = Location> + '_ {
+        let n = self.nodes_per_rack;
+        (0..self.racks).flat_map(move |r| (0..n).map(move |j| Location::new(r, j)))
+    }
+}
+
+/// Network rates in Mb/s per port, full duplex (paper §6.1: ToR ports at
+/// 1000 Mb/s, core router ports at 100 Mb/s by default).
+#[derive(Clone, Copy, Debug)]
+pub struct NetSpec {
+    /// Per-node ToR port rate (inner-rack), Mb/s.
+    pub inner_mbps: f64,
+    /// Per-rack core-router port rate (cross-rack), Mb/s.
+    pub cross_mbps: f64,
+}
+
+impl Default for NetSpec {
+    fn default() -> NetSpec {
+        NetSpec { inner_mbps: 1000.0, cross_mbps: 100.0 }
+    }
+}
+
+/// Disk model (paper testbed: 7200 RPM SATA HDD).
+#[derive(Clone, Copy, Debug)]
+pub struct DiskSpec {
+    pub seq_read_mbps: f64,
+    pub seq_write_mbps: f64,
+    /// Average seek+rotational latency charged per *random* block access.
+    pub seek_ms: f64,
+}
+
+impl Default for DiskSpec {
+    fn default() -> DiskSpec {
+        // ST1000DM010-class: ~160 MB/s sequential, ~12 ms random access.
+        DiskSpec { seq_read_mbps: 160.0 * 8.0, seq_write_mbps: 150.0 * 8.0, seek_ms: 12.0 }
+    }
+}
+
+/// CPU model: GF(2^8) coding throughput per node (measured from the PJRT
+/// hot path by `d3ctl calibrate`, defaulted from the i5-7500 testbed).
+#[derive(Clone, Copy, Debug)]
+pub struct CpuSpec {
+    /// XOR/GF combine throughput per source stream, Mb/s.
+    pub gf_mbps: f64,
+}
+
+impl Default for CpuSpec {
+    fn default() -> CpuSpec {
+        CpuSpec { gf_mbps: 2500.0 * 8.0 }
+    }
+}
+
+/// Everything the simulator and the mini-HDFS need to model the testbed.
+#[derive(Clone, Copy, Debug)]
+pub struct SystemSpec {
+    pub cluster: ClusterSpec,
+    pub net: NetSpec,
+    pub disk: DiskSpec,
+    pub cpu: CpuSpec,
+    /// Block size in bytes (paper default 16 MB).
+    pub block_size: u64,
+}
+
+impl SystemSpec {
+    /// The paper's default testbed: 8 racks × 3 DataNodes, 16 MB blocks,
+    /// 1000 Mb/s inner, 100 Mb/s cross.
+    pub fn paper_default() -> SystemSpec {
+        SystemSpec {
+            cluster: ClusterSpec::new(8, 3),
+            net: NetSpec::default(),
+            disk: DiskSpec::default(),
+            cpu: CpuSpec::default(),
+            block_size: 16 << 20,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_roundtrip() {
+        let c = ClusterSpec::new(8, 3);
+        assert_eq!(c.node_count(), 24);
+        for idx in 0..24 {
+            assert_eq!(c.flat(c.unflat(idx)), idx);
+        }
+        assert_eq!(c.iter_nodes().count(), 24);
+        assert!(c.contains(Location::new(7, 2)));
+        assert!(!c.contains(Location::new(8, 0)));
+    }
+
+    #[test]
+    fn paper_default_matches_evaluation_setup() {
+        let s = SystemSpec::paper_default();
+        assert_eq!(s.cluster.racks, 8);
+        assert_eq!(s.cluster.nodes_per_rack, 3);
+        assert_eq!(s.block_size, 16 << 20);
+        assert!((s.net.inner_mbps - 1000.0).abs() < 1e-9);
+        assert!((s.net.cross_mbps - 100.0).abs() < 1e-9);
+    }
+}

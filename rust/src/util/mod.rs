@@ -1,0 +1,7 @@
+//! Small self-contained utilities (the offline build has no crates.io
+//! access beyond the `xla` dependency tree, so PRNG/JSON/stats live here).
+
+pub mod json;
+pub mod rng;
+
+pub use rng::Rng;

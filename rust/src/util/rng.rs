@@ -1,0 +1,211 @@
+//! Deterministic PRNG: xoshiro256** seeded via splitmix64.
+//!
+//! Used wherever the paper's evaluation needs "random": RDD placement,
+//! failed-node choice, workload arrival jitter. Streams are keyed so the
+//! same (seed, key) always replays the same sequence — the reproducibility
+//! the paper gets by fixing an RDD distribution per experiment group.
+
+/// splitmix64 step — also used standalone for cheap hashing.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — fast, high-quality, 256-bit state.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        let mut sm = seed;
+        Rng { s: [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)] }
+    }
+
+    /// Independent stream keyed by (seed, key1, key2).
+    pub fn keyed(seed: u64, key1: u64, key2: u64) -> Rng {
+        let mut sm = seed ^ key1.rotate_left(21) ^ key2.rotate_left(43);
+        // extra whitening so nearby keys decorrelate
+        let a = splitmix64(&mut sm);
+        let b = splitmix64(&mut sm);
+        let mut sm2 = a ^ b.rotate_left(17);
+        Rng {
+            s: [
+                splitmix64(&mut sm2),
+                splitmix64(&mut sm2),
+                splitmix64(&mut sm2),
+                splitmix64(&mut sm2),
+            ],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, bound) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0);
+        let bound = bound as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(bound as u128);
+            let lo = m as u64;
+            if lo >= bound {
+                return (m >> 64) as usize;
+            }
+            // reject the biased low zone
+            let t = bound.wrapping_neg() % bound;
+            if lo >= t {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Exponential with mean `mean` (Poisson inter-arrival times).
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        let u = loop {
+            let u = self.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        -mean * u.ln()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, slice: &mut [T]) {
+        for i in (1..slice.len()).rev() {
+            let j = self.below(i + 1);
+            slice.swap(i, j);
+        }
+    }
+
+    /// Pick one element uniformly.
+    pub fn choose<'a, T>(&mut self, slice: &'a [T]) -> &'a T {
+        &slice[self.below(slice.len())]
+    }
+
+    /// Sample `count` distinct indices from 0..n (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, count: usize) -> Vec<usize> {
+        assert!(count <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..count {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(count);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn keyed_streams_decorrelate() {
+        let a: Vec<u64> = (0..8).map(|i| Rng::keyed(1, i, 0).next_u64()).collect();
+        let distinct: std::collections::HashSet<u64> = a.iter().copied().collect();
+        assert_eq!(distinct.len(), 8);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Rng::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.below(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn below_roughly_uniform() {
+        let mut rng = Rng::new(99);
+        let mut counts = [0usize; 8];
+        let n = 80_000;
+        for _ in 0..n {
+            counts[rng.below(8)] += 1;
+        }
+        for &c in &counts {
+            let expect = n / 8;
+            assert!((c as i64 - expect as i64).abs() < (expect / 10) as i64, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Rng::new(3);
+        let mut v: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>(), "astronomically unlikely");
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let s = rng.sample_indices(20, 7);
+            assert_eq!(s.len(), 7);
+            let set: std::collections::HashSet<usize> = s.iter().copied().collect();
+            assert_eq!(set.len(), 7);
+            assert!(s.iter().all(|&x| x < 20));
+        }
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut rng = Rng::new(11);
+        let n = 50_000;
+        let sum: f64 = (0..n).map(|_| rng.exp(4.0)).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 4.0).abs() < 0.15, "mean={mean}");
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Rng::new(13);
+        for _ in 0..1000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Front-end Hadoop benchmark models (paper Table 2).
+//!
+//! We reproduce the *traffic shape* of each benchmark, not MapReduce
+//! semantics (DESIGN.md §2): Pi is CPU-bound with negligible I/O;
+//! Terasort is CPU+network (full shuffle of the sampled table); Wordcount
+//! and Grep are network-intensive text scans with large shuffles.
+
+/// Resource demands of one benchmark run (bytes are totals across tasks).
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub name: &'static str,
+    pub maps: usize,
+    pub reduces: usize,
+    /// HDFS input read by the map phase.
+    pub input_bytes: u64,
+    /// Intermediate data shuffled map→reduce (cross-node traffic).
+    pub shuffle_bytes: u64,
+    /// Final output written by reducers.
+    pub output_bytes: u64,
+    /// CPU demand expressed as GF-equivalent bytes (calibrated against the
+    /// per-node coding throughput in `CpuSpec`).
+    pub cpu_bytes_equiv: u64,
+}
+
+impl WorkloadSpec {
+    /// Scale all demands by `f` (models multi-wave task execution /
+    /// framework overhead so simulated durations match real Hadoop jobs,
+    /// which run for minutes at Table 2's configurations).
+    pub fn scaled(&self, f: u64) -> WorkloadSpec {
+        WorkloadSpec {
+            name: self.name,
+            maps: self.maps,
+            reduces: self.reduces,
+            input_bytes: self.input_bytes * f,
+            shuffle_bytes: self.shuffle_bytes * f,
+            output_bytes: self.output_bytes * f,
+            cpu_bytes_equiv: self.cpu_bytes_equiv * f,
+        }
+    }
+}
+
+/// The four benchmarks of Table 2, scaled to the 24-node testbed.
+pub fn specs() -> Vec<WorkloadSpec> {
+    vec![
+        // Pi: 100 maps × 100m samples — pure compute, tiny I/O.
+        WorkloadSpec {
+            name: "pi",
+            maps: 100,
+            reduces: 1,
+            input_bytes: 0,
+            shuffle_bytes: 100 << 10, // per-map counts only
+            output_bytes: 1 << 10,
+            cpu_bytes_equiv: 192 << 30, // dominates: BBP iterations
+        },
+        // Terasort: 5m records × 100 B = 500 MB table, fully shuffled.
+        WorkloadSpec {
+            name: "terasort",
+            maps: 48,
+            reduces: 24,
+            input_bytes: 500 << 20,
+            shuffle_bytes: 500 << 20,
+            output_bytes: 500 << 20,
+            cpu_bytes_equiv: 24 << 30,
+        },
+        // Wordcount: 100m words ≈ 700 MB text, combiner shrinks shuffle.
+        WorkloadSpec {
+            name: "wordcount",
+            maps: 48,
+            reduces: 24,
+            input_bytes: 700 << 20,
+            shuffle_bytes: 350 << 20,
+            output_bytes: 80 << 20,
+            cpu_bytes_equiv: 16 << 30,
+        },
+        // Grep: scan + extract + sort-by-frequency: big scan, mid shuffle.
+        WorkloadSpec {
+            name: "grep",
+            maps: 48,
+            reduces: 24,
+            input_bytes: 700 << 20,
+            shuffle_bytes: 450 << 20,
+            output_bytes: 40 << 20,
+            cpu_bytes_equiv: 12 << 30,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_2_workloads_present() {
+        let names: Vec<&str> = specs().iter().map(|w| w.name).collect();
+        assert_eq!(names, vec!["pi", "terasort", "wordcount", "grep"]);
+    }
+
+    #[test]
+    fn pi_is_compute_dominated() {
+        let all = specs();
+        let pi = &all[0];
+        assert!(pi.cpu_bytes_equiv > 100 * (pi.input_bytes + pi.shuffle_bytes));
+    }
+
+    #[test]
+    fn network_workloads_shuffle_heavily() {
+        for w in specs().iter().filter(|w| w.name != "pi") {
+            assert!(w.shuffle_bytes > 100 << 20, "{} shuffle too small", w.name);
+        }
+    }
+}

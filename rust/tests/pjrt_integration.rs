@@ -1,0 +1,112 @@
+//! Integration: the PJRT data path (AOT artifacts) must be bit-identical
+//! to the native GF path, end to end through encode → erase → recover.
+//!
+//! Requires `make artifacts`; tests no-op with a loud warning otherwise
+//! (the Makefile's `test` target always builds artifacts first).
+
+use d3ec::codes::{CodeSpec, RsCode};
+use d3ec::gf;
+use d3ec::placement::{D3Placement, Placement};
+use d3ec::recovery::plan::{plan_coefficients, plan_repair};
+use d3ec::runtime::{default_artifacts_dir, Coder};
+use d3ec::topology::ClusterSpec;
+
+fn pjrt_or_skip() -> Option<Coder> {
+    if !default_artifacts_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return None;
+    }
+    Some(Coder::pjrt().expect("artifacts present but PJRT load failed"))
+}
+
+fn rand_shards(k: usize, len: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut s = seed | 1;
+    (0..k)
+        .map(|_| {
+            (0..len)
+                .map(|_| {
+                    s ^= s << 13;
+                    s ^= s >> 7;
+                    s ^= s << 17;
+                    (s >> 24) as u8
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[test]
+fn pjrt_combine_matches_native_across_k_and_lengths() {
+    let Some(coder) = pjrt_or_skip() else { return };
+    for k in [1usize, 2, 3, 6, 9, 12] {
+        // lengths: sub-panel, exact panel, multi-panel with ragged tail
+        for len in [100usize, 65536, 65536 * 2 + 1234] {
+            let shards = rand_shards(k, len, (k * 1000 + len) as u64);
+            let refs: Vec<&[u8]> = shards.iter().map(|v| v.as_slice()).collect();
+            let coeffs: Vec<u8> = (0..k).map(|i| (i * 37 + 5) as u8).collect();
+            let got = coder.combine(&coeffs, &refs).unwrap();
+            let want = gf::combine(&coeffs, &refs);
+            assert_eq!(got, want, "k={k} len={len}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_encode_erase_recover_roundtrip() {
+    let Some(coder) = pjrt_or_skip() else { return };
+    let code = RsCode::new(6, 3);
+    let data = rand_shards(6, 200_000, 99);
+    let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+    // encode through PJRT
+    let parity = coder.encode(&code.parity_rows(), &refs).unwrap();
+    let mut all: Vec<&[u8]> = refs.clone();
+    all.extend(parity.iter().map(|v| v.as_slice()));
+    // erase block 2, rebuild through PJRT with planner coefficients
+    let policy = D3Placement::new(CodeSpec::Rs { k: 6, m: 3 }, ClusterSpec::new(8, 3)).unwrap();
+    let plan = plan_repair(&policy, 7, 2, 0);
+    let coeffs = plan_coefficients(&CodeSpec::Rs { k: 6, m: 3 }, &plan);
+    let sources = plan.source_blocks();
+    let shards: Vec<&[u8]> = sources.iter().map(|&b| all[b]).collect();
+    let rebuilt = coder.combine(&coeffs, &shards).unwrap();
+    assert_eq!(rebuilt, data[2]);
+}
+
+#[test]
+fn pjrt_partial_aggregation_identity() {
+    // D³'s two-stage aggregation through PJRT equals the direct combine
+    // (the identity the recovery pipeline rests on).
+    let Some(coder) = pjrt_or_skip() else { return };
+    let code = RsCode::new(6, 3);
+    let data = rand_shards(6, 70_000, 3);
+    let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+    let parity = coder.encode(&code.parity_rows(), &refs).unwrap();
+    let mut all: Vec<&[u8]> = refs.clone();
+    all.extend(parity.iter().map(|v| v.as_slice()));
+    let avail = vec![1usize, 2, 3, 4, 5, 6];
+    let c = code.decode_coeffs(&avail, 0).unwrap();
+    let shards: Vec<&[u8]> = avail.iter().map(|&b| all[b]).collect();
+    let direct = coder.combine(&c, &shards).unwrap();
+    let agg_a = coder.combine(&c[..3], &shards[..3]).unwrap();
+    let agg_b = coder.combine(&c[3..], &shards[3..]).unwrap();
+    let via = coder.combine(&[1, 1], &[&agg_a, &agg_b]).unwrap();
+    assert_eq!(direct, via);
+    assert_eq!(direct, data[0]);
+}
+
+#[test]
+fn pjrt_xor_path_for_lrc() {
+    let Some(coder) = pjrt_or_skip() else { return };
+    use d3ec::codes::LrcCode;
+    let code = LrcCode::new(4, 2, 1);
+    let data = rand_shards(4, 100_000, 5);
+    let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+    let parity = coder.encode(&code.parity_rows(), &refs).unwrap();
+    // local parity 0 = d0 ^ d1 — verify through the unit-coefficient path
+    let via_combine = coder.combine(&[1, 1], &[refs[0], refs[1]]).unwrap();
+    assert_eq!(parity[0], via_combine);
+    // repair d1 from (d0, l0) with the LRC plan coefficients
+    let (src, coeffs) = code.repair_plan(1);
+    assert_eq!(src, vec![0, 4]);
+    let rebuilt = coder.combine(&coeffs, &[refs[0], &parity[0]]).unwrap();
+    assert_eq!(rebuilt, data[1]);
+}

@@ -1,0 +1,149 @@
+//! Randomized cross-configuration property suite (hand-rolled in lieu of
+//! proptest, which is unavailable offline): sweeps random valid
+//! (code, cluster) configurations and asserts the coordinator invariants
+//! the paper's theorems promise, for every policy.
+
+use d3ec::codes::CodeSpec;
+use d3ec::placement::{
+    D3LrcPlacement, D3Placement, HddPlacement, Placement, RddPlacement,
+};
+use d3ec::recovery::mu::mu_rs;
+use d3ec::recovery::plan::{plan_coefficients, plan_repair};
+use d3ec::topology::ClusterSpec;
+use d3ec::util::Rng;
+
+/// Random valid (k, m, racks, nodes) D³ configurations.
+fn random_rs_configs(count: usize, seed: u64) -> Vec<(usize, usize, usize, usize)> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    while out.len() < count {
+        let k = 2 + rng.below(9); // 2..=10
+        let m = 1 + rng.below(4); // 1..=4
+        let len = k + m;
+        let ng = len.div_ceil(m);
+        let size_max = len.div_ceil(ng);
+        // nodes per rack: >= group size, keep OA constructible (prime powers
+        // are guaranteed; composites may cap columns)
+        let n_candidates: Vec<usize> = (size_max.max(2)..=9)
+            .filter(|&n| d3ec::oa::max_columns(n) >= ng)
+            .collect();
+        if n_candidates.is_empty() {
+            continue;
+        }
+        let n = *rng.choose(&n_candidates);
+        let r_candidates: Vec<usize> = (ng + 1..=13)
+            .filter(|&r| d3ec::oa::max_columns(r) >= ng + 1 && r * m >= len)
+            .collect();
+        if r_candidates.is_empty() {
+            continue;
+        }
+        let r = *rng.choose(&r_candidates);
+        out.push((k, m, r, n));
+    }
+    out
+}
+
+#[test]
+fn d3_invariants_over_random_configs() {
+    for (k, m, r, n) in random_rs_configs(25, 0xd3) {
+        let code = CodeSpec::Rs { k, m };
+        let cluster = ClusterSpec::new(r, n);
+        let p = match D3Placement::new(code, cluster) {
+            Ok(p) => p,
+            Err(e) => panic!("({k},{m}) on {r}x{n} rejected: {e}"),
+        };
+        let mut mu_total = 0usize;
+        let stripes = (p.region_size() * 2) as u64;
+        for sid in 0..stripes {
+            let sp = p.stripe(sid);
+            assert!(sp.nodes_distinct(), "({k},{m}) {r}x{n} sid={sid}");
+            assert!(sp.rack_limit_ok(m), "({k},{m}) {r}x{n} sid={sid}");
+            for (bi, &loc) in sp.locs.iter().enumerate() {
+                let tgt = p.recovery_target(sid, bi, loc);
+                assert_ne!(tgt, loc);
+                assert!(
+                    !sp.locs.iter().enumerate().any(|(o, l)| o != bi && *l == tgt),
+                    "({k},{m}) {r}x{n} sid={sid} b={bi}: target collides"
+                );
+                let plan = plan_repair(&p, sid, bi, 0);
+                assert_eq!(plan.blocks_read(), k, "plan must read exactly k");
+                let coeffs = plan_coefficients(&code, &plan);
+                assert_eq!(coeffs.len(), k, "decodable source set");
+                mu_total += plan.cross_rack_blocks();
+            }
+        }
+        // Lemma 4: average cross-rack accessed blocks equals the closed form
+        let avg = mu_total as f64 / (stripes as usize * (k + m)) as f64;
+        assert!(
+            (avg - mu_rs(k, m)).abs() < 1e-9,
+            "({k},{m}) {r}x{n}: μ {avg} vs closed-form {}",
+            mu_rs(k, m)
+        );
+    }
+}
+
+#[test]
+fn baseline_invariants_over_random_configs() {
+    for (i, (k, m, r, n)) in random_rs_configs(12, 0xbade).into_iter().enumerate() {
+        let code = CodeSpec::Rs { k, m };
+        let cluster = ClusterSpec::new(r, n);
+        if cluster.node_count() < k + m + 1 {
+            continue;
+        }
+        let policies: Vec<Box<dyn Placement>> = vec![
+            Box::new(RddPlacement::new(code, cluster, i as u64)),
+            Box::new(RddPlacement::uniform(code, cluster, i as u64)),
+            Box::new(HddPlacement::new(code, cluster, i as u32)),
+        ];
+        for p in &policies {
+            for sid in 0..80u64 {
+                let sp = p.stripe(sid);
+                assert!(sp.nodes_distinct(), "{} ({k},{m}) {r}x{n}", p.name());
+                assert!(sp.rack_limit_ok(m), "{} ({k},{m}) {r}x{n}", p.name());
+                let bi = sid as usize % sp.locs.len();
+                let tgt = p.recovery_target(sid, bi, sp.locs[bi]);
+                assert_ne!(tgt, sp.locs[bi]);
+            }
+        }
+    }
+}
+
+#[test]
+fn d3_lrc_invariants_over_random_configs() {
+    let mut rng = Rng::new(0x17c);
+    let mut tested = 0;
+    while tested < 10 {
+        let l = 1 + rng.below(3); // 1..=3
+        let group = 2 + rng.below(3); // 2..=4 data per group
+        let k = l * group;
+        let g = 1 + rng.below(2); // 1..=2
+        let ng = k + l + g;
+        let ng_lrc = (group + 1).max(l + g);
+        let n_candidates: Vec<usize> =
+            (2..=9).filter(|&n| d3ec::oa::max_columns(n) >= ng_lrc).collect();
+        let r_candidates: Vec<usize> =
+            (ng + 1..=17).filter(|&r| d3ec::oa::max_columns(r) >= ng + 1).collect();
+        if n_candidates.is_empty() || r_candidates.is_empty() {
+            continue;
+        }
+        let n = *rng.choose(&n_candidates);
+        let r = *rng.choose(&r_candidates);
+        let code = CodeSpec::Lrc { k, l, g };
+        let p = D3LrcPlacement::new(code, ClusterSpec::new(r, n)).expect("valid config");
+        for sid in 0..(p.region_size() as u64) {
+            let sp = p.stripe(sid);
+            assert!(sp.rack_limit_ok(1), "({k},{l},{g}) {r}x{n}: >1 block/rack");
+            for (bi, &loc) in sp.locs.iter().enumerate() {
+                let tgt = p.recovery_target(sid, bi, loc);
+                // §5.2: recovered block goes to a rack the stripe does not occupy
+                assert!(sp.locs.iter().all(|ll| ll.rack != tgt.rack));
+            }
+            // typed repair plans read the minimal set
+            let plan = plan_repair(&p, sid, 0, 0);
+            assert_eq!(plan.blocks_read(), group, "data repair reads k/l");
+            let plan_g = plan_repair(&p, sid, k + l, 0);
+            assert_eq!(plan_g.blocks_read(), l + g - 1, "global repair reads l+g-1");
+        }
+        tested += 1;
+    }
+}
