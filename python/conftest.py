@@ -1,0 +1,8 @@
+"""Pytest path shim: the test modules import `compile.kernels ...`, which
+lives next to this file — make `python/` importable no matter which
+directory pytest is invoked from (repo root in CI)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

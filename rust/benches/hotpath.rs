@@ -1,12 +1,14 @@
 //! Hot-path microbenchmarks (§Perf): GF combine throughput native vs PJRT,
-//! matrix inversion, placement lookups, and simulator event rate.
+//! matrix inversion, placement lookups (raw OA arithmetic vs the
+//! table-backed cache), and simulator event rate.
 use d3ec::codes::CodeSpec;
 use d3ec::gf;
-use d3ec::placement::{D3Placement, Placement};
+use d3ec::placement::{D3Placement, Placement, PlacementTable};
 use d3ec::recovery::node_recovery_plans;
 use d3ec::runtime::Coder;
 use d3ec::sim::recovery::{run_recovery, RecoveryConfig};
 use d3ec::topology::{Location, SystemSpec};
+use std::sync::Arc;
 use std::time::Instant;
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
@@ -52,13 +54,30 @@ fn main() {
     println!("\n=== control path: placement + planning ===");
     let spec = SystemSpec::paper_default();
     let policy = D3Placement::new(CodeSpec::Rs { k: 6, m: 3 }, spec.cluster).unwrap();
-    bench("stripe() x 10k", 10, || {
+    let raw = bench("stripe() x 10k (raw OA arithmetic)", 10, || {
         for sid in 0..10_000u64 {
             let _ = std::hint::black_box(policy.stripe(sid));
         }
     });
-    bench("node_recovery_plans(1000 stripes)", 5, || {
+    let shared: Arc<dyn Placement> =
+        Arc::new(D3Placement::new(CodeSpec::Rs { k: 6, m: 3 }, spec.cluster).unwrap());
+    let table = PlacementTable::build(shared.clone(), 10_000);
+    let cached = bench("stripe() x 10k (PlacementTable)", 10, || {
+        for sid in 0..10_000u64 {
+            let _ = std::hint::black_box(table.stripe(sid));
+        }
+    });
+    println!(
+        "  table-backed lookup: {:.1}x faster ({} cached stripes, {} fallbacks)",
+        raw / cached,
+        table.cached_stripes(),
+        table.fallback_computes()
+    );
+    bench("node_recovery_plans(1000 stripes, raw)", 5, || {
         let _ = std::hint::black_box(node_recovery_plans(&policy, 1000, Location::new(0, 0), 0));
+    });
+    bench("node_recovery_plans(1000 stripes, table)", 5, || {
+        let _ = std::hint::black_box(node_recovery_plans(&table, 1000, Location::new(0, 0), 0));
     });
 
     println!("\n=== simulator: full recovery run (1000 stripes) ===");

@@ -1,7 +1,12 @@
 //! Experiment drivers — one per figure of the paper's evaluation (§6.2).
 //!
-//! Each `expNN_*` function runs the corresponding experiment on the fluid
-//! simulator at the paper's configuration, prints the figure's rows, and
+//! The RDD-vs-D³ sweeps (Exps 2, 4–9) are *declarative*: each driver
+//! builds a [`SweepSpec`] — rows of (label, system spec, code) plus the
+//! baseline's seed sampling — and one generic runner ([`run_sweep`])
+//! executes every row through the scenario primitives with a table-backed
+//! placement lookup (DESIGN.md §5/§7). Exps 1, 3, 10, 11 keep bespoke
+//! drivers (sorted-λ row sets, degraded-read sampling, front-end mixes)
+//! on the same primitives. Every driver prints its figure's rows and
 //! returns the series for programmatic checks (benches assert the paper's
 //! qualitative shape: who wins, monotonicity, rough factors).
 
@@ -11,7 +16,8 @@ use std::sync::Arc;
 
 use crate::codes::CodeSpec;
 use crate::placement::{
-    D3LrcPlacement, D3Placement, D3Variant, HddPlacement, Placement, RddPlacement,
+    D3LrcPlacement, D3Placement, D3Variant, HddPlacement, Placement, PlacementTable,
+    RddPlacement,
 };
 use crate::recovery::node::node_recovery_plans;
 use crate::recovery::plan::plan_degraded_read;
@@ -57,6 +63,8 @@ pub fn build_policy(
 }
 
 /// Average recovery over `runs` random failed nodes (the paper's protocol).
+/// The policy's stripe → locations map is precomputed once
+/// ([`PlacementTable`]), so the per-run planning loops do O(1) lookups.
 pub fn avg_recovery(
     policy: &Arc<dyn Placement>,
     spec: &SystemSpec,
@@ -64,6 +72,7 @@ pub fn avg_recovery(
     runs: usize,
     seed: u64,
 ) -> RecoveryOutcome {
+    let table = PlacementTable::build(policy.clone(), stripes);
     let mut rng = Rng::keyed(seed, 0xfa11ed, 0);
     let mut acc: Option<RecoveryOutcome> = None;
     for _ in 0..runs {
@@ -71,12 +80,12 @@ pub fn avg_recovery(
             let idx = rng.below(spec.cluster.node_count());
             let loc = spec.cluster.unflat(idx);
             // only meaningful if the node holds blocks
-            let plans = node_recovery_plans(policy.as_ref(), stripes.min(50), loc, seed);
+            let plans = node_recovery_plans(&table, stripes.min(50), loc, seed);
             if !plans.is_empty() {
                 break loc;
             }
         };
-        let plans = node_recovery_plans(policy.as_ref(), stripes, failed, seed);
+        let plans = node_recovery_plans(&table, stripes, failed, seed);
         let out = run_recovery(spec, &plans, failed, RecoveryConfig::default());
         acc = Some(match acc {
             None => out,
@@ -124,6 +133,83 @@ fn fmt_header(title: &str, cols: &[&str]) {
     println!("{}", cols.join("\t"));
 }
 
+// ------------------------------------------------- declarative sweeps
+
+/// One row of a declarative RDD-vs-D³ sweep: the printed first column,
+/// the suffix used in the returned [`Point`] labels, and the fully
+/// resolved system spec + code for this point.
+struct SweepRow {
+    print_label: String,
+    key: String,
+    spec: SystemSpec,
+    code: CodeSpec,
+}
+
+/// How the last printed column renders the D³/RDD ratio.
+enum GainColumn {
+    /// `1.25x`
+    Speedup,
+    /// `25.0%`
+    Percent,
+    /// no gain column (Exp 7)
+    None,
+}
+
+/// A declarative experiment: RDD baseline (averaged over `rdd_seeds`,
+/// `rdd_runs` failed nodes each) vs D³ (`d3_runs` failed nodes), swept
+/// over `rows`. [`run_sweep`] is the single generic runner behind
+/// Exps 2 and 4–9.
+struct SweepSpec {
+    title: &'static str,
+    columns: &'static [&'static str],
+    rows: Vec<SweepRow>,
+    rdd_seeds: Vec<u64>,
+    rdd_runs: usize,
+    d3_runs: usize,
+    gain: GainColumn,
+}
+
+fn run_sweep(sw: &SweepSpec, stripes: u64) -> Vec<Point> {
+    fmt_header(sw.title, sw.columns);
+    let mut out = Vec::new();
+    for row in &sw.rows {
+        let mut rdd_sum = 0.0;
+        for &seed in &sw.rdd_seeds {
+            rdd_sum += avg_recovery(
+                &build_policy("rdd", row.code, &row.spec, seed),
+                &row.spec,
+                stripes,
+                sw.rdd_runs,
+                seed,
+            )
+            .throughput_mb_s;
+        }
+        let rdd = rdd_sum / sw.rdd_seeds.len() as f64;
+        let d3 = avg_recovery(
+            &build_policy("d3", row.code, &row.spec, 0),
+            &row.spec,
+            stripes,
+            sw.d3_runs,
+            0,
+        )
+        .throughput_mb_s;
+        match sw.gain {
+            GainColumn::Speedup => {
+                println!("{}\t{rdd:.1}\t{d3:.1}\t{:.2}x", row.print_label, d3 / rdd)
+            }
+            GainColumn::Percent => println!(
+                "{}\t{rdd:.1}\t{d3:.1}\t{:.1}%",
+                row.print_label,
+                (d3 / rdd - 1.0) * 100.0
+            ),
+            GainColumn::None => println!("{}\t{rdd:.1}\t{d3:.1}", row.print_label),
+        }
+        out.push(Point { label: format!("rdd-{}", row.key), value: rdd, extra: 0.0 });
+        out.push(Point { label: format!("d3-{}", row.key), value: d3, extra: d3 / rdd });
+    }
+    out
+}
+
 // ---------------------------------------------------------------- Exp 1
 
 /// Fig 8: recovery throughput + λ for RDD₁..₅ (sorted by λ), HDD, D³
@@ -158,26 +244,27 @@ pub fn exp01_load_balance(spec: &SystemSpec, stripes: u64) -> Vec<Point> {
 
 /// Fig 9: recovery throughput for (2,1), (3,2), (6,3)-RS × {RDD, D³}.
 pub fn exp02_ec_config(spec: &SystemSpec, stripes: u64) -> Vec<Point> {
-    let mut rows = Vec::new();
-    fmt_header("Exp 2 (Fig 9): erasure-code configuration", &[
-        "code", "RDD(MB/s)", "D3(MB/s)", "speedup",
-    ]);
-    for (k, m) in [(2usize, 1usize), (3, 2), (6, 3)] {
-        let code = CodeSpec::Rs { k, m };
-        let mut rdd_sum = 0.0;
-        for seed in 1..=3u64 {
-            rdd_sum +=
-                avg_recovery(&build_policy("rdd", code, spec, seed), spec, stripes, 3, seed)
-                    .throughput_mb_s;
-        }
-        let rdd = rdd_sum / 3.0;
-        let d3 = avg_recovery(&build_policy("d3", code, spec, 0), spec, stripes, RUNS, 0)
-            .throughput_mb_s;
-        println!("({k},{m})-RS\t{rdd:.1}\t{d3:.1}\t{:.2}x", d3 / rdd);
-        rows.push(Point { label: format!("rdd-({k},{m})"), value: rdd, extra: 0.0 });
-        rows.push(Point { label: format!("d3-({k},{m})"), value: d3, extra: d3 / rdd });
-    }
-    rows
+    let rows = [(2usize, 1usize), (3, 2), (6, 3)]
+        .iter()
+        .map(|&(k, m)| SweepRow {
+            print_label: format!("({k},{m})-RS"),
+            key: format!("({k},{m})"),
+            spec: *spec,
+            code: CodeSpec::Rs { k, m },
+        })
+        .collect();
+    run_sweep(
+        &SweepSpec {
+            title: "Exp 2 (Fig 9): erasure-code configuration",
+            columns: &["code", "RDD(MB/s)", "D3(MB/s)", "speedup"],
+            rows,
+            rdd_seeds: vec![1, 2, 3],
+            rdd_runs: 3,
+            d3_runs: RUNS,
+            gain: GainColumn::Speedup,
+        },
+        stripes,
+    )
 }
 
 // ---------------------------------------------------------------- Exp 3
@@ -194,13 +281,14 @@ pub fn exp03_degraded_read(spec: &SystemSpec) -> Vec<Point> {
         let mut lat = std::collections::HashMap::new();
         for name in ["rdd", "d3"] {
             let policy = build_policy(name, code, spec, 1);
+            let table = PlacementTable::build(policy, 1000);
             let mut rng = Rng::keyed(42, k as u64, m as u64);
             let mut total = 0.0;
             for s in 0..samples {
                 let sid = rng.below(1000) as u64;
                 let block = rng.below(k); // data block, like the paper
                 let client = spec.cluster.unflat(rng.below(spec.cluster.node_count()));
-                let plan = plan_degraded_read(policy.as_ref(), sid, block, client, s as u64);
+                let plan = plan_degraded_read(&table, sid, block, client, s as u64);
                 total += run_degraded_read(spec, &plan);
             }
             lat.insert(name, total / samples as f64);
@@ -222,23 +310,31 @@ pub fn exp03_degraded_read(spec: &SystemSpec) -> Vec<Point> {
 pub fn exp04_block_size(spec: &SystemSpec, stripes: u64) -> Vec<Point> {
     let code = CodeSpec::Rs { k: 2, m: 1 };
     let rdd_seed = most_skewed_seed(spec, code, stripes);
-    let mut rows = Vec::new();
-    fmt_header("Exp 4 (Fig 12): block size sweep — (2,1)-RS", &[
-        "block(MB)", "RDD(MB/s)", "D3(MB/s)", "gain",
-    ]);
-    for mb in [2u64, 4, 8, 16, 32, 64] {
-        let mut s = *spec;
-        s.block_size = mb << 20;
-        let rdd =
-            avg_recovery(&build_policy("rdd", code, &s, rdd_seed), &s, stripes, 3, rdd_seed)
-                .throughput_mb_s;
-        let d3 =
-            avg_recovery(&build_policy("d3", code, &s, 0), &s, stripes, 3, 0).throughput_mb_s;
-        println!("{mb}\t{rdd:.1}\t{d3:.1}\t{:.1}%", (d3 / rdd - 1.0) * 100.0);
-        rows.push(Point { label: format!("rdd-{mb}MB"), value: rdd, extra: 0.0 });
-        rows.push(Point { label: format!("d3-{mb}MB"), value: d3, extra: d3 / rdd });
-    }
-    rows
+    let rows = [2u64, 4, 8, 16, 32, 64]
+        .iter()
+        .map(|&mb| {
+            let mut s = *spec;
+            s.block_size = mb << 20;
+            SweepRow {
+                print_label: format!("{mb}"),
+                key: format!("{mb}MB"),
+                spec: s,
+                code,
+            }
+        })
+        .collect();
+    run_sweep(
+        &SweepSpec {
+            title: "Exp 4 (Fig 12): block size sweep — (2,1)-RS",
+            columns: &["block(MB)", "RDD(MB/s)", "D3(MB/s)", "gain"],
+            rows,
+            rdd_seeds: vec![rdd_seed],
+            rdd_runs: 3,
+            d3_runs: 3,
+            gain: GainColumn::Percent,
+        },
+        stripes,
+    )
 }
 
 /// Pick the most λ-skewed RDD seed among 20 candidates (cheap probe).
@@ -264,27 +360,31 @@ pub fn most_skewed_seed(spec: &SystemSpec, code: CodeSpec, stripes: u64) -> u64 
 /// Fig 13: cross-rack bandwidth 100 vs 1000 Mb/s, (2,1)-RS.
 pub fn exp05_bandwidth(spec: &SystemSpec, stripes: u64) -> Vec<Point> {
     let code = CodeSpec::Rs { k: 2, m: 1 };
-    let mut rows = Vec::new();
-    fmt_header("Exp 5 (Fig 13): cross-rack bandwidth", &[
-        "cross(Mb/s)", "RDD(MB/s)", "D3(MB/s)", "gain",
-    ]);
-    for cross in [100.0f64, 1000.0] {
-        let mut s = *spec;
-        s.net.cross_mbps = cross;
-        let mut rdd_sum = 0.0;
-        for seed in [3u64, 11] {
-            rdd_sum +=
-                avg_recovery(&build_policy("rdd", code, &s, seed), &s, stripes, 3, seed)
-                    .throughput_mb_s;
-        }
-        let rdd = rdd_sum / 2.0;
-        let d3 =
-            avg_recovery(&build_policy("d3", code, &s, 0), &s, stripes, 3, 0).throughput_mb_s;
-        println!("{cross:.0}\t{rdd:.1}\t{d3:.1}\t{:.1}%", (d3 / rdd - 1.0) * 100.0);
-        rows.push(Point { label: format!("rdd-{cross:.0}"), value: rdd, extra: 0.0 });
-        rows.push(Point { label: format!("d3-{cross:.0}"), value: d3, extra: d3 / rdd });
-    }
-    rows
+    let rows = [100.0f64, 1000.0]
+        .iter()
+        .map(|&cross| {
+            let mut s = *spec;
+            s.net.cross_mbps = cross;
+            SweepRow {
+                print_label: format!("{cross:.0}"),
+                key: format!("{cross:.0}"),
+                spec: s,
+                code,
+            }
+        })
+        .collect();
+    run_sweep(
+        &SweepSpec {
+            title: "Exp 5 (Fig 13): cross-rack bandwidth",
+            columns: &["cross(Mb/s)", "RDD(MB/s)", "D3(MB/s)", "gain"],
+            rows,
+            rdd_seeds: vec![3, 11],
+            rdd_runs: 3,
+            d3_runs: 3,
+            gain: GainColumn::Percent,
+        },
+        stripes,
+    )
 }
 
 // ---------------------------------------------------------------- Exp 6
@@ -292,27 +392,31 @@ pub fn exp05_bandwidth(spec: &SystemSpec, stripes: u64) -> Vec<Point> {
 /// Fig 14: 5 / 7 / 9 racks (3 nodes each), (2,1)-RS.
 pub fn exp06_racks(spec: &SystemSpec, stripes: u64) -> Vec<Point> {
     let code = CodeSpec::Rs { k: 2, m: 1 };
-    let mut rows = Vec::new();
-    fmt_header("Exp 6 (Fig 14): number of racks", &[
-        "racks", "RDD(MB/s)", "D3(MB/s)", "speedup",
-    ]);
-    for racks in [5usize, 7, 9] {
-        let mut s = *spec;
-        s.cluster.racks = racks;
-        let mut rdd_sum = 0.0;
-        for seed in 1..=3u64 {
-            rdd_sum +=
-                avg_recovery(&build_policy("rdd", code, &s, seed), &s, stripes, 3, seed)
-                    .throughput_mb_s;
-        }
-        let rdd = rdd_sum / 3.0;
-        let d3 =
-            avg_recovery(&build_policy("d3", code, &s, 0), &s, stripes, 3, 0).throughput_mb_s;
-        println!("{racks}\t{rdd:.1}\t{d3:.1}\t{:.2}x", d3 / rdd);
-        rows.push(Point { label: format!("rdd-r{racks}"), value: rdd, extra: 0.0 });
-        rows.push(Point { label: format!("d3-r{racks}"), value: d3, extra: d3 / rdd });
-    }
-    rows
+    let rows = [5usize, 7, 9]
+        .iter()
+        .map(|&racks| {
+            let mut s = *spec;
+            s.cluster.racks = racks;
+            SweepRow {
+                print_label: format!("{racks}"),
+                key: format!("r{racks}"),
+                spec: s,
+                code,
+            }
+        })
+        .collect();
+    run_sweep(
+        &SweepSpec {
+            title: "Exp 6 (Fig 14): number of racks",
+            columns: &["racks", "RDD(MB/s)", "D3(MB/s)", "speedup"],
+            rows,
+            rdd_seeds: vec![1, 2, 3],
+            rdd_runs: 3,
+            d3_runs: 3,
+            gain: GainColumn::Speedup,
+        },
+        stripes,
+    )
 }
 
 // ---------------------------------------------------------------- Exp 7
@@ -320,28 +424,32 @@ pub fn exp06_racks(spec: &SystemSpec, stripes: u64) -> Vec<Point> {
 /// Fig 15: 3 / 4 / 5 nodes per rack (5 racks), (2,1)-RS.
 pub fn exp07_nodes_per_rack(spec: &SystemSpec, stripes: u64) -> Vec<Point> {
     let code = CodeSpec::Rs { k: 2, m: 1 };
-    let mut rows = Vec::new();
-    fmt_header("Exp 7 (Fig 15): nodes per rack", &[
-        "nodes/rack", "RDD(MB/s)", "D3(MB/s)",
-    ]);
-    for n in [3usize, 4, 5] {
-        let mut s = *spec;
-        s.cluster.racks = 5;
-        s.cluster.nodes_per_rack = n;
-        let mut rdd_sum = 0.0;
-        for seed in 1..=3u64 {
-            rdd_sum +=
-                avg_recovery(&build_policy("rdd", code, &s, seed), &s, stripes, 3, seed)
-                    .throughput_mb_s;
-        }
-        let rdd = rdd_sum / 3.0;
-        let d3 =
-            avg_recovery(&build_policy("d3", code, &s, 0), &s, stripes, 3, 0).throughput_mb_s;
-        println!("{n}\t{rdd:.1}\t{d3:.1}");
-        rows.push(Point { label: format!("rdd-n{n}"), value: rdd, extra: 0.0 });
-        rows.push(Point { label: format!("d3-n{n}"), value: d3, extra: d3 / rdd });
-    }
-    rows
+    let rows = [3usize, 4, 5]
+        .iter()
+        .map(|&n| {
+            let mut s = *spec;
+            s.cluster.racks = 5;
+            s.cluster.nodes_per_rack = n;
+            SweepRow {
+                print_label: format!("{n}"),
+                key: format!("n{n}"),
+                spec: s,
+                code,
+            }
+        })
+        .collect();
+    run_sweep(
+        &SweepSpec {
+            title: "Exp 7 (Fig 15): nodes per rack",
+            columns: &["nodes/rack", "RDD(MB/s)", "D3(MB/s)"],
+            rows,
+            rdd_seeds: vec![1, 2, 3],
+            rdd_runs: 3,
+            d3_runs: 3,
+            gain: GainColumn::None,
+        },
+        stripes,
+    )
 }
 
 // ---------------------------------------------------------------- Exp 8 / 9
@@ -349,50 +457,62 @@ pub fn exp07_nodes_per_rack(spec: &SystemSpec, stripes: u64) -> Vec<Point> {
 /// Fig 16: (4,2,1)-LRC recovery at 100 / 1000 Mb/s cross-rack.
 pub fn exp08_lrc_recovery(spec: &SystemSpec, stripes: u64) -> Vec<Point> {
     let code = CodeSpec::Lrc { k: 4, l: 2, g: 1 };
-    let mut rows = Vec::new();
-    fmt_header("Exp 8 (Fig 16): (4,2,1)-LRC recovery", &[
-        "cross(Mb/s)", "RDD(MB/s)", "D3(MB/s)", "gain",
-    ]);
-    for cross in [100.0f64, 1000.0] {
-        let mut s = *spec;
-        s.net.cross_mbps = cross;
-        let mut rdd_sum = 0.0;
-        for seed in 1..=3u64 {
-            rdd_sum +=
-                avg_recovery(&build_policy("rdd", code, &s, seed), &s, stripes, 3, seed)
-                    .throughput_mb_s;
-        }
-        let rdd = rdd_sum / 3.0;
-        let d3 =
-            avg_recovery(&build_policy("d3", code, &s, 0), &s, stripes, 3, 0).throughput_mb_s;
-        println!("{cross:.0}\t{rdd:.1}\t{d3:.1}\t{:.1}%", (d3 / rdd - 1.0) * 100.0);
-        rows.push(Point { label: format!("rdd-{cross:.0}"), value: rdd, extra: 0.0 });
-        rows.push(Point { label: format!("d3-{cross:.0}"), value: d3, extra: d3 / rdd });
-    }
-    rows
+    let rows = [100.0f64, 1000.0]
+        .iter()
+        .map(|&cross| {
+            let mut s = *spec;
+            s.net.cross_mbps = cross;
+            SweepRow {
+                print_label: format!("{cross:.0}"),
+                key: format!("{cross:.0}"),
+                spec: s,
+                code,
+            }
+        })
+        .collect();
+    run_sweep(
+        &SweepSpec {
+            title: "Exp 8 (Fig 16): (4,2,1)-LRC recovery",
+            columns: &["cross(Mb/s)", "RDD(MB/s)", "D3(MB/s)", "gain"],
+            rows,
+            rdd_seeds: vec![1, 2, 3],
+            rdd_runs: 3,
+            d3_runs: 3,
+            gain: GainColumn::Percent,
+        },
+        stripes,
+    )
 }
 
 /// Fig 17: (4,2,1)-LRC block-size sweep.
 pub fn exp09_lrc_block_size(spec: &SystemSpec, stripes: u64) -> Vec<Point> {
     let code = CodeSpec::Lrc { k: 4, l: 2, g: 1 };
     let rdd_seed = most_skewed_seed(spec, code, stripes);
-    let mut rows = Vec::new();
-    fmt_header("Exp 9 (Fig 17): (4,2,1)-LRC block size sweep", &[
-        "block(MB)", "RDD(MB/s)", "D3(MB/s)", "gain",
-    ]);
-    for mb in [2u64, 4, 8, 16, 32, 64] {
-        let mut s = *spec;
-        s.block_size = mb << 20;
-        let rdd =
-            avg_recovery(&build_policy("rdd", code, &s, rdd_seed), &s, stripes, 3, rdd_seed)
-                .throughput_mb_s;
-        let d3 =
-            avg_recovery(&build_policy("d3", code, &s, 0), &s, stripes, 3, 0).throughput_mb_s;
-        println!("{mb}\t{rdd:.1}\t{d3:.1}\t{:.1}%", (d3 / rdd - 1.0) * 100.0);
-        rows.push(Point { label: format!("rdd-{mb}MB"), value: rdd, extra: 0.0 });
-        rows.push(Point { label: format!("d3-{mb}MB"), value: d3, extra: d3 / rdd });
-    }
-    rows
+    let rows = [2u64, 4, 8, 16, 32, 64]
+        .iter()
+        .map(|&mb| {
+            let mut s = *spec;
+            s.block_size = mb << 20;
+            SweepRow {
+                print_label: format!("{mb}"),
+                key: format!("{mb}MB"),
+                spec: s,
+                code,
+            }
+        })
+        .collect();
+    run_sweep(
+        &SweepSpec {
+            title: "Exp 9 (Fig 17): (4,2,1)-LRC block size sweep",
+            columns: &["block(MB)", "RDD(MB/s)", "D3(MB/s)", "gain"],
+            rows,
+            rdd_seeds: vec![rdd_seed],
+            rdd_runs: 3,
+            d3_runs: 3,
+            gain: GainColumn::Percent,
+        },
+        stripes,
+    )
 }
 
 #[cfg(test)]

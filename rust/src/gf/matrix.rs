@@ -176,6 +176,79 @@ impl std::ops::IndexMut<(usize, usize)> for Matrix {
     }
 }
 
+/// Coefficients `c` with `Σᵢ cᵢ·rows[i] == target` over GF(2^8), if
+/// `target` lies in the row span; `None` otherwise. This is the generic
+/// multi-erasure decode primitive (DESIGN.md §4): rows are the generator
+/// rows of the surviving blocks, target the generator row of a lost block.
+///
+/// Gauss-Jordan elimination on a copy of `rows` with an identity
+/// bookkeeping matrix carried along; the candidate combination is verified
+/// against the original rows before returning, so the answer is sound even
+/// for rank-deficient inputs.
+pub fn express_in_rows(rows: &[&[u8]], target: &[u8]) -> Option<Vec<u8>> {
+    let n = rows.len();
+    if n == 0 {
+        return None;
+    }
+    let k = target.len();
+    let mut a = Matrix::from_rows(rows);
+    assert_eq!(a.cols(), k, "row/target width mismatch");
+    let mut book = Matrix::identity(n);
+    let mut pivot_of_col = vec![usize::MAX; k];
+    let mut rank = 0usize;
+    for col in 0..k {
+        let Some(piv) = (rank..n).find(|&r| a[(r, col)] != 0) else {
+            continue;
+        };
+        if piv != rank {
+            a.swap_rows(piv, rank);
+            book.swap_rows(piv, rank);
+        }
+        let s = inv(a[(rank, col)]);
+        a.scale_row(rank, s);
+        book.scale_row(rank, s);
+        for r in 0..n {
+            if r != rank && a[(r, col)] != 0 {
+                let f = a[(r, col)];
+                a.axpy_row(r, rank, f);
+                book.axpy_row(r, rank, f);
+            }
+        }
+        pivot_of_col[col] = rank;
+        rank += 1;
+    }
+    let mut coeffs = vec![0u8; n];
+    for (col, &tv) in target.iter().enumerate() {
+        if tv == 0 {
+            continue;
+        }
+        let piv = pivot_of_col[col];
+        if piv == usize::MAX {
+            // Non-pivot column: for rank-deficient inputs the target can
+            // still be in the span (a pivot row may carry this coordinate
+            // as "junk"); the final verification decides.
+            continue;
+        }
+        for (i, c) in coeffs.iter_mut().enumerate() {
+            *c ^= mul(tv, book[(piv, i)]);
+        }
+    }
+    // verify against the original rows (sound for rank < k inputs)
+    let mut acc = vec![0u8; k];
+    for (i, row) in rows.iter().enumerate() {
+        if coeffs[i] != 0 {
+            for (j, &v) in row.iter().enumerate() {
+                acc[j] ^= mul(coeffs[i], v);
+            }
+        }
+    }
+    if acc.as_slice() == target {
+        Some(coeffs)
+    } else {
+        None
+    }
+}
+
 /// Cauchy matrix entry (i + k) vs j: every square submatrix is invertible.
 pub fn cauchy(rows: usize, cols: usize, row_offset: usize) -> Matrix {
     let mut m = Matrix::zero(rows, cols);
@@ -258,6 +331,39 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn express_in_rows_finds_combinations() {
+        // rows of a Cauchy-extended RS generator span GF(256)^k; any unit
+        // vector must be expressible from k independent rows
+        let c = cauchy(3, 4, 4);
+        let id = Matrix::identity(4);
+        let rows: Vec<&[u8]> = vec![id.row(0), id.row(1), c.row(0), c.row(1)];
+        for target_col in 0..4 {
+            let mut target = vec![0u8; 4];
+            target[target_col] = 1;
+            let coeffs = express_in_rows(&rows, &target).expect("in span");
+            let mut acc = vec![0u8; 4];
+            for (i, row) in rows.iter().enumerate() {
+                for (j, &v) in row.iter().enumerate() {
+                    acc[j] ^= mul(coeffs[i], v);
+                }
+            }
+            assert_eq!(acc, target);
+        }
+        // a target outside the span is rejected
+        let short: Vec<&[u8]> = vec![id.row(0), id.row(1)];
+        assert!(express_in_rows(&short, &[0, 0, 1, 0]).is_none());
+        // rank-deficient but in span: non-pivot coordinates may be carried
+        // by a pivot row's "junk" — must still succeed
+        let dep: Vec<&[u8]> = vec![&[1, 1]];
+        assert_eq!(express_in_rows(&dep, &[1, 1]), Some(vec![1]));
+        assert!(express_in_rows(&dep, &[1, 0]).is_none());
+        // zero-coefficient pruning sanity: expressing row 0 by itself
+        let coeffs = express_in_rows(&rows, id.row(0)).unwrap();
+        assert_eq!(coeffs[0], 1);
+        assert!(coeffs[1..].iter().all(|&c| c == 0));
     }
 
     #[test]

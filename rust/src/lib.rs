@@ -7,7 +7,10 @@
 //! * [`gf`], [`codes`] — GF(2⁸) arithmetic and RS/LRC erasure codes;
 //! * [`oa`] — orthogonal arrays (the combinatorial core of D³);
 //! * [`placement`] — D³ (paper §4), RDD and HDD baselines;
-//! * [`recovery`] — minimum-cross-rack repair planning (§5) + migration;
+//! * [`recovery`] — minimum-cross-rack repair planning (§5), multi-erasure
+//!   planning, and migration;
+//! * [`scenario`] — first-class failure scenarios executed on either
+//!   backend through one `RecoveryBackend` pipeline (DESIGN.md §5);
 //! * [`sim`] — flow-level discrete-event cluster simulator (the testbed
 //!   substitute; see DESIGN.md §2);
 //! * [`runtime`] — PJRT execution of the AOT-lowered GF kernels;
@@ -23,6 +26,7 @@ pub mod oa;
 pub mod placement;
 pub mod recovery;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod topology;
 pub mod util;

@@ -2,6 +2,9 @@
 //!
 //! ```text
 //! d3ctl exp <1..11|all> [--stripes N] [--racks R] [--nodes N] [--block MB]
+//! d3ctl scenario --kind single-node|multi-node|rack-failure|frontend-mix|degraded-burst
+//!                [--policy d3|rdd|hdd] [--code rs-6-3] [--failures K] [--rack R]
+//!                [--backend sim|cluster|both] [--stripes N]
 //! d3ctl layout --policy d3|rdd|hdd --code rs-3-2 [--stripes N] [--racks R] [--nodes N]
 //! d3ctl mu --code rs-6-3               # Lemma 4 closed form vs planner
 //! d3ctl oa --n 5 [--cols 4]            # print + verify an orthogonal array
@@ -11,12 +14,14 @@
 
 use std::collections::HashMap;
 
-use d3ec::cluster::MiniCluster;
+use d3ec::cluster::{ClusterBackend, MiniCluster};
 use d3ec::codes::CodeSpec;
 use d3ec::experiments as exp;
 use d3ec::oa::{max_columns, OrthogonalArray};
 use d3ec::recovery::mu::mu_rs;
 use d3ec::runtime::Coder;
+use d3ec::scenario::{run_cross_backend, FailureScenario, RecoveryBackend};
+use d3ec::sim::SimBackend;
 use d3ec::topology::{Location, SystemSpec};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -55,6 +60,7 @@ fn main() {
     let flags = parse_flags(&args);
     match cmd {
         "exp" => cmd_exp(&args, &flags),
+        "scenario" => cmd_scenario(&flags),
         "layout" => cmd_layout(&flags),
         "mu" => cmd_mu(&flags),
         "oa" => cmd_oa(&flags),
@@ -62,9 +68,90 @@ fn main() {
         "calibrate" => cmd_calibrate(&flags),
         _ => {
             println!("d3ctl — Deterministic Data Distribution (D³) reproduction");
-            println!("{}", include_str!("main.rs").lines().skip(2).take(9)
+            println!("{}", include_str!("main.rs").lines().skip(2).take(12)
                 .map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
         }
+    }
+}
+
+/// `d3ctl scenario`: run one failure scenario on the fluid simulator and
+/// the MiniCluster through the same `FailureScenario → RecoveryBackend`
+/// pipeline and report both outcomes side by side.
+fn cmd_scenario(flags: &HashMap<String, String>) {
+    let spec = spec_from(flags);
+    let code = CodeSpec::parse(&flag::<String>(flags, "code", "rs-6-3".into()))
+        .expect("bad --code (rs-K-M or lrc-K-L-G)");
+    let policy_name: String = flag(flags, "policy", "d3".into());
+    let seed: u64 = flag(flags, "seed", 1u64);
+    let stripes: u64 = flag(flags, "stripes", 200u64);
+    let kind: String = flag(flags, "kind", "single-node".into());
+    let scenario = match kind.as_str() {
+        "single-node" => FailureScenario::single_node(stripes, seed),
+        "multi-node" => {
+            FailureScenario::multi_node(flag(flags, "failures", 2usize), stripes, seed)
+        }
+        "rack-failure" => {
+            FailureScenario::rack_failure(flag(flags, "rack", 0u32), stripes, seed)
+        }
+        "frontend-mix" => FailureScenario::frontend_mix(
+            &flag::<String>(flags, "workload", "terasort".into()),
+            stripes,
+            seed,
+        ),
+        "degraded-burst" => {
+            FailureScenario::degraded_burst(flag(flags, "reads", 32usize), stripes, seed)
+        }
+        other => {
+            eprintln!(
+                "unknown --kind {other} (single-node, multi-node, rack-failure, \
+                 frontend-mix, degraded-burst)"
+            );
+            return;
+        }
+    };
+    let policy = exp::build_policy(&policy_name, code, &spec, seed);
+    println!(
+        "# scenario {} · {} · {} on {} racks × {} nodes · {} stripes",
+        scenario.name(),
+        policy.name(),
+        code.name(),
+        spec.cluster.racks,
+        spec.cluster.nodes_per_rack,
+        stripes
+    );
+    let sim = SimBackend::default();
+    let mut cluster = ClusterBackend::default();
+    cluster.block_size = flag::<u64>(flags, "cluster-block-kb", 64) << 10;
+    cluster.data_backend = flag::<String>(flags, "data-backend", "native".into());
+    let backend_sel: String = flag(flags, "backend", "both".into());
+    let mut backends: Vec<&dyn RecoveryBackend> = Vec::new();
+    if backend_sel == "sim" || backend_sel == "both" {
+        backends.push(&sim);
+    }
+    if backend_sel == "cluster" || backend_sel == "both" {
+        backends.push(&cluster);
+    }
+    if backends.is_empty() {
+        eprintln!("unknown --backend {backend_sel} (sim, cluster, both)");
+        return;
+    }
+    match run_cross_backend(&scenario, &policy, &spec, &backends) {
+        Ok(outs) => {
+            if outs.len() == 2 {
+                let ok = outs[0].planned_cross_rack_blocks == outs[1].planned_cross_rack_blocks
+                    && outs[0].blocks == outs[1].blocks;
+                println!(
+                    "\ncross-check: {} blocks / {} planned cross-rack transfers (sim) vs \
+                     {} / {} (cluster) → {}",
+                    outs[0].blocks,
+                    outs[0].planned_cross_rack_blocks,
+                    outs[1].blocks,
+                    outs[1].planned_cross_rack_blocks,
+                    if ok { "consistent" } else { "MISMATCH" }
+                );
+            }
+        }
+        Err(e) => eprintln!("scenario failed: {e}"),
     }
 }
 

@@ -266,6 +266,15 @@ impl Placement for D3Placement {
         let jj = placement.locs[largest].node as usize;
         Location::new(rack as usize, (jj + 1) % n)
     }
+
+    /// The layout repeats every r(r−1) regions × n² stripes. The
+    /// `NoRotation` ablation hashes the raw stripe id, so it is aperiodic.
+    fn period(&self) -> Option<u64> {
+        match self.variant {
+            D3Variant::NoRotation => None,
+            _ => Some((self.region_cycle() * self.region_size()) as u64),
+        }
+    }
 }
 
 #[cfg(test)]

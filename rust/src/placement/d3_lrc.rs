@@ -152,6 +152,11 @@ impl Placement for D3LrcPlacement {
         let pos = list.iter().position(|&x| x as usize == i).expect("row in rank list");
         Location::new(rack, pos % self.cluster.nodes_per_rack)
     }
+
+    /// The layout repeats every r(r−1) regions × n² stripes.
+    fn period(&self) -> Option<u64> {
+        Some((self.region_cycle() * self.region_size()) as u64)
+    }
 }
 
 #[cfg(test)]

@@ -1,11 +1,14 @@
 //! Failure recovery (paper §5): minimum-cross-rack repair plans for D³,
-//! the RDD/HDD baseline plans, degraded reads, full-node recovery and the
-//! §5.3 layout-maintenance migration.
+//! the RDD/HDD baseline plans, degraded reads, full-node recovery, the
+//! §5.3 layout-maintenance migration, and the multi-erasure planner
+//! ([`multi`]) behind the scenario engine (DESIGN.md §4–§5).
 
 pub mod migration;
 pub mod mu;
+pub mod multi;
 pub mod node;
 pub mod plan;
 
+pub use multi::{scenario_recovery_plans, stripe_repair_plans};
 pub use node::node_recovery_plans;
 pub use plan::{plan_repair, Aggregation, RepairPlan};

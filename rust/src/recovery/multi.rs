@@ -1,0 +1,436 @@
+//! Multi-erasure repair planning (DESIGN.md §4): per-stripe plans when a
+//! scenario loses *several* blocks of the same stripe — concurrent node
+//! failures, whole-rack failures (paper §6 only evaluates single-node
+//! failures; the Facebook warehouse study, arXiv:1309.0186, shows
+//! correlated multi-failures dominate real repair traffic).
+//!
+//! Strategy per stripe:
+//! * exactly one lost block → the policy's native single-erasure plan
+//!   ([`plan_repair`]), which preserves D³'s cross-rack-minimal inner-rack
+//!   aggregation (§5.1);
+//! * ≥ 2 lost blocks, RS → full decode: the k smallest surviving blocks
+//!   ship whole to a per-block recovery target (RS decode with multiple
+//!   erasures is just decode over a survivor set excluding every erasure);
+//! * ≥ 2 lost blocks, LRC → local-then-global escalation: a block whose
+//!   typed minimal repair set (§5.2) is fully alive keeps the local plan;
+//!   otherwise its generator row is expressed in the span of the surviving
+//!   rows ([`express_in_rows`]) and the nonzero-coefficient survivors
+//!   become the sources.
+//!
+//! Recovery targets come from the policy where its single-failure case
+//! analysis is valid; when the designated target is itself failed, or two
+//! lost blocks of one stripe would collide, a deterministic fallback scan
+//! reassigns targets while keeping the placement invariants (no failed
+//! node, no node reuse within the stripe, rack limit).
+
+use std::collections::HashSet;
+
+use anyhow::{bail, Result};
+
+use crate::codes::{CodeSpec, LrcCode, RsCode};
+use crate::gf::matrix::express_in_rows;
+use crate::placement::{Placement, StripePlacement};
+use crate::topology::{ClusterSpec, Location};
+use crate::util::rng::splitmix64;
+
+use super::plan::{plan_repair, RepairPlan};
+
+/// Repair plans for every block lost to `failed` among stripes
+/// `0..stripes`, ordered by stripe id. Generalizes
+/// [`super::node_recovery_plans`] to arbitrary failure sets (K concurrent
+/// nodes, a whole rack); bails if some stripe is unrecoverable.
+pub fn scenario_recovery_plans(
+    policy: &dyn Placement,
+    stripes: u64,
+    failed: &[Location],
+    seed: u64,
+) -> Result<Vec<RepairPlan>> {
+    let failed_set: HashSet<Location> = failed.iter().copied().collect();
+    let mut plans = Vec::new();
+    for sid in 0..stripes {
+        let sp = policy.stripe(sid);
+        let lost: Vec<usize> = (0..sp.locs.len())
+            .filter(|&b| failed_set.contains(&sp.locs[b]))
+            .collect();
+        if lost.is_empty() {
+            continue;
+        }
+        plans.extend(stripe_repair_plans(policy, sid, &lost, &failed_set, seed)?);
+    }
+    Ok(plans)
+}
+
+/// Plans for one stripe with `lost` erased blocks (ascending indices).
+pub fn stripe_repair_plans(
+    policy: &dyn Placement,
+    sid: u64,
+    lost: &[usize],
+    failed_set: &HashSet<Location>,
+    seed: u64,
+) -> Result<Vec<RepairPlan>> {
+    assert!(!lost.is_empty(), "stripe_repair_plans with no losses");
+    let sp = policy.stripe(sid);
+    let code = policy.code();
+    let cluster = policy.cluster();
+    let lost_set: HashSet<usize> = lost.iter().copied().collect();
+
+    if lost.len() == 1 {
+        // Single erasure: the policy's native plan keeps D³'s minimal
+        // cross-rack aggregation. Only the target may need rerouting (it
+        // can land on another failed node in multi-node scenarios).
+        let mut plan = plan_repair(policy, sid, lost[0], seed);
+        if failed_set.contains(&plan.writer) {
+            let tgt = pick_target(
+                &cluster, &sp, &lost_set, &[], failed_set, code.rack_limit(), seed, sid, lost[0],
+            );
+            let Some(tgt) = tgt else {
+                bail!("stripe {sid}: no valid recovery target for block {}", lost[0]);
+            };
+            plan.compute_at = tgt;
+            plan.writer = tgt;
+        }
+        return Ok(vec![plan]);
+    }
+
+    // Multi-erasure: full decode (RS) or local-then-global escalation (LRC).
+    let survivors: Vec<usize> =
+        (0..sp.locs.len()).filter(|b| !lost_set.contains(b)).collect();
+    let mut taken: Vec<Location> = Vec::new();
+    let mut out = Vec::with_capacity(lost.len());
+    for &block in lost {
+        let (sources, coeffs): (Vec<usize>, Vec<u8>) = match code {
+            CodeSpec::Rs { k, m } => {
+                if survivors.len() < k {
+                    bail!(
+                        "stripe {sid}: {} survivors < k = {k} — unrecoverable",
+                        survivors.len()
+                    );
+                }
+                let srcs: Vec<usize> = survivors.iter().copied().take(k).collect();
+                let rs = RsCode::new(k, m);
+                let cs = rs
+                    .decode_coeffs(&srcs, block)
+                    .expect("k distinct survivors excluding the target");
+                (srcs, cs)
+            }
+            CodeSpec::Lrc { k, l, g } => {
+                let lrc = LrcCode::new(k, l, g);
+                let (min_src, min_coeffs) = lrc.repair_plan(block);
+                if min_src.iter().all(|s| !lost_set.contains(s)) {
+                    // local repair still possible despite the other losses
+                    (min_src, min_coeffs)
+                } else {
+                    // global escalation over the surviving generator rows
+                    let rows: Vec<&[u8]> =
+                        survivors.iter().map(|&s| lrc.generator_row(s)).collect();
+                    let Some(all) = express_in_rows(&rows, lrc.generator_row(block)) else {
+                        bail!(
+                            "stripe {sid}: block {block} undecodable under {} erasures",
+                            lost.len()
+                        );
+                    };
+                    let mut srcs = Vec::new();
+                    let mut cs = Vec::new();
+                    for (i, &s) in survivors.iter().enumerate() {
+                        if all[i] != 0 {
+                            srcs.push(s);
+                            cs.push(all[i]);
+                        }
+                    }
+                    (srcs, cs)
+                }
+            }
+        };
+        let target = pick_target(
+            &cluster, &sp, &lost_set, &taken, failed_set, code.rack_limit(), seed, sid, block,
+        );
+        let Some(target) = target else {
+            bail!("stripe {sid}: no valid recovery target for block {block}");
+        };
+        taken.push(target);
+        let direct: Vec<(usize, Location)> =
+            sources.iter().map(|&b| (b, sp.locs[b])).collect();
+        out.push(RepairPlan {
+            stripe: sid,
+            failed_block: block,
+            compute_at: target,
+            writer: target,
+            persist: true,
+            aggregations: Vec::new(),
+            direct,
+            coeffs: Some(coeffs),
+        });
+    }
+    Ok(out)
+}
+
+/// Deterministic fallback target: scan the cluster from a (sid, block)-keyed
+/// start offset for a node that is alive, unused by the stripe's surviving
+/// blocks, not already assigned to another recovered block of this stripe,
+/// and whose rack stays within the code's rack limit. The limit is relaxed
+/// (never the node constraints) if the cluster is too tight to honor it.
+#[allow(clippy::too_many_arguments)]
+fn pick_target(
+    cluster: &ClusterSpec,
+    sp: &StripePlacement,
+    lost_set: &HashSet<usize>,
+    taken: &[Location],
+    failed_set: &HashSet<Location>,
+    rack_limit: usize,
+    seed: u64,
+    sid: u64,
+    block: usize,
+) -> Option<Location> {
+    let mut rack_count = vec![0usize; cluster.racks];
+    for (bi, l) in sp.locs.iter().enumerate() {
+        if !lost_set.contains(&bi) {
+            rack_count[l.rack as usize] += 1;
+        }
+    }
+    for t in taken {
+        rack_count[t.rack as usize] += 1;
+    }
+    let n = cluster.node_count();
+    let mut h = seed ^ sid.wrapping_mul(0x9e3779b97f4a7c15) ^ (block as u64).rotate_left(17);
+    let start = (splitmix64(&mut h) as usize) % n;
+    let node_ok = |loc: Location| {
+        !failed_set.contains(&loc)
+            && !taken.contains(&loc)
+            && !sp
+                .locs
+                .iter()
+                .enumerate()
+                .any(|(bi, l)| !lost_set.contains(&bi) && *l == loc)
+    };
+    for off in 0..n {
+        let loc = cluster.unflat((start + off) % n);
+        if node_ok(loc) && rack_count[loc.rack as usize] < rack_limit {
+            return Some(loc);
+        }
+    }
+    for off in 0..n {
+        let loc = cluster.unflat((start + off) % n);
+        if node_ok(loc) {
+            return Some(loc);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf;
+    use crate::placement::{D3LrcPlacement, D3Placement, RddPlacement};
+    use crate::recovery::plan::plan_coefficients;
+    use crate::topology::ClusterSpec;
+
+    fn rand_shards(k: usize, len: usize, seed: u64) -> Vec<Vec<u8>> {
+        let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15) | 1;
+        (0..k)
+            .map(|_| {
+                (0..len)
+                    .map(|_| {
+                        s ^= s << 13;
+                        s ^= s >> 7;
+                        s ^= s << 17;
+                        (s >> 24) as u8
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Encode a full stripe (data + parity) for `code`.
+    fn stripe_bytes(code: &CodeSpec, seed: u64, len: usize) -> Vec<Vec<u8>> {
+        let data = rand_shards(code.k(), len, seed);
+        let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+        let parity = match *code {
+            CodeSpec::Rs { k, m } => RsCode::new(k, m).encode(&refs),
+            CodeSpec::Lrc { k, l, g } => LrcCode::new(k, l, g).encode(&refs),
+        };
+        let mut all = data;
+        all.extend(parity);
+        all
+    }
+
+    /// Execute a plan numerically: combine the source shards with the
+    /// plan's coefficients (aggregation splits are linear, so the flat
+    /// combine equals the staged one).
+    fn execute(plan: &RepairPlan, code: &CodeSpec, all: &[Vec<u8>]) -> Vec<u8> {
+        let sources = plan.source_blocks();
+        let coeffs = plan_coefficients(code, plan);
+        assert_eq!(sources.len(), coeffs.len());
+        let shards: Vec<&[u8]> = sources.iter().map(|&b| all[b].as_slice()).collect();
+        gf::combine(&coeffs, &shards)
+    }
+
+    #[test]
+    fn rs_two_node_failures_round_trip() {
+        let code = CodeSpec::Rs { k: 6, m: 3 };
+        let cluster = ClusterSpec::new(8, 3);
+        let p = D3Placement::new(code, cluster).unwrap();
+        let failed = vec![Location::new(0, 0), Location::new(1, 1)];
+        let stripes = 120u64;
+        let plans = scenario_recovery_plans(&p, stripes, &failed, 7).unwrap();
+        assert!(!plans.is_empty());
+        let failed_set: HashSet<Location> = failed.iter().copied().collect();
+        let mut covered = 0usize;
+        for sid in 0..stripes {
+            let sp = p.stripe(sid);
+            let lost: Vec<usize> = (0..9)
+                .filter(|&b| failed_set.contains(&sp.locs[b]))
+                .collect();
+            let here: Vec<&RepairPlan> =
+                plans.iter().filter(|pl| pl.stripe == sid).collect();
+            assert_eq!(here.len(), lost.len(), "sid={sid}");
+            covered += here.len();
+            let all = stripe_bytes(&code, sid, 64);
+            for plan in here {
+                // sources avoid every lost block and every failed node
+                for &(b, loc) in &plan.direct {
+                    assert!(!lost.contains(&b), "sid={sid}: reads a lost block");
+                    assert!(!failed_set.contains(&loc));
+                }
+                assert!(!failed_set.contains(&plan.writer));
+                let rebuilt = execute(plan, &code, &all);
+                assert_eq!(rebuilt, all[plan.failed_block], "sid={sid}");
+            }
+        }
+        assert_eq!(covered, plans.len());
+    }
+
+    #[test]
+    fn rs_full_rack_failure_round_trip_and_invariants() {
+        let code = CodeSpec::Rs { k: 6, m: 3 };
+        let cluster = ClusterSpec::new(8, 3);
+        let p = D3Placement::new(code, cluster).unwrap();
+        let rack = 2u32;
+        let failed: Vec<Location> =
+            (0..3).map(|j| Location::new(rack as usize, j)).collect();
+        let failed_set: HashSet<Location> = failed.iter().copied().collect();
+        let stripes = 90u64;
+        let plans = scenario_recovery_plans(&p, stripes, &failed, 3).unwrap();
+        for sid in 0..stripes {
+            let sp = p.stripe(sid);
+            let lost: Vec<usize> =
+                (0..9).filter(|&b| sp.locs[b].rack == rack).collect();
+            let here: Vec<&RepairPlan> =
+                plans.iter().filter(|pl| pl.stripe == sid).collect();
+            assert_eq!(here.len(), lost.len(), "sid={sid}");
+            if here.is_empty() {
+                continue;
+            }
+            let all = stripe_bytes(&code, sid, 48);
+            // post-recovery layout keeps the invariants: writers distinct,
+            // alive, and the rack limit m holds over survivors + recovered
+            let mut rack_count = std::collections::HashMap::new();
+            for (bi, l) in sp.locs.iter().enumerate() {
+                if !lost.contains(&bi) {
+                    *rack_count.entry(l.rack).or_insert(0usize) += 1;
+                }
+            }
+            let mut writers = HashSet::new();
+            for plan in &here {
+                assert!(!failed_set.contains(&plan.writer));
+                assert!(writers.insert(plan.writer), "sid={sid}: writer collision");
+                *rack_count.entry(plan.writer.rack).or_insert(0) += 1;
+                assert_eq!(execute(plan, &code, &all), all[plan.failed_block]);
+                if here.len() > 1 {
+                    assert!(plan.aggregations.is_empty(), "multi-loss is full decode");
+                    assert!(plan.coeffs.is_some());
+                }
+            }
+            assert!(
+                rack_count.values().all(|&c| c <= 3),
+                "sid={sid}: rack limit violated: {rack_count:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn lrc_local_then_global_escalation() {
+        // (6,2,2): losing two data blocks of one local group breaks the
+        // local plans; the globals must step in.
+        let code = CodeSpec::Lrc { k: 6, l: 2, g: 2 };
+        let cluster = ClusterSpec::new(11, 4);
+        let p = D3LrcPlacement::new(code, cluster).unwrap();
+        let sid = 5u64;
+        let sp = p.stripe(sid);
+        let lost = vec![0usize, 1];
+        let failed_set: HashSet<Location> =
+            lost.iter().map(|&b| sp.locs[b]).collect();
+        let plans = stripe_repair_plans(&p, sid, &lost, &failed_set, 0).unwrap();
+        assert_eq!(plans.len(), 2);
+        let all = stripe_bytes(&code, 42, 96);
+        for plan in &plans {
+            // both lost blocks sit in group 0, so neither minimal set
+            // survives — both plans must be escalated (explicit coeffs)
+            assert!(plan.coeffs.is_some(), "expected escalated plan");
+            assert!(plan
+                .source_blocks()
+                .iter()
+                .all(|s| !lost.contains(s)));
+            assert_eq!(execute(plan, &code, &all), all[plan.failed_block]);
+        }
+    }
+
+    #[test]
+    fn lrc_keeps_local_plan_when_groups_unharmed() {
+        // losing one block of each local group keeps both typed plans local
+        let code = CodeSpec::Lrc { k: 6, l: 2, g: 2 };
+        let cluster = ClusterSpec::new(11, 4);
+        let p = D3LrcPlacement::new(code, cluster).unwrap();
+        let sid = 9u64;
+        let sp = p.stripe(sid);
+        let lost = vec![0usize, 3]; // one per group (group size 3)
+        let failed_set: HashSet<Location> =
+            lost.iter().map(|&b| sp.locs[b]).collect();
+        let plans = stripe_repair_plans(&p, sid, &lost, &failed_set, 0).unwrap();
+        let all = stripe_bytes(&code, 17, 64);
+        for plan in &plans {
+            assert_eq!(plan.blocks_read(), 3, "local repair reads k/l = 3");
+            assert_eq!(execute(plan, &code, &all), all[plan.failed_block]);
+        }
+    }
+
+    #[test]
+    fn unrecoverable_stripe_is_an_error_not_a_panic() {
+        // (2,1)-RS: losing 2 blocks of a 3-block stripe leaves 1 < k
+        let code = CodeSpec::Rs { k: 2, m: 1 };
+        let cluster = ClusterSpec::new(8, 3);
+        let p = D3Placement::new(code, cluster).unwrap();
+        let sid = 0u64;
+        let sp = p.stripe(sid);
+        let lost = vec![0usize, 1];
+        let failed_set: HashSet<Location> =
+            lost.iter().map(|&b| sp.locs[b]).collect();
+        assert!(stripe_repair_plans(&p, sid, &lost, &failed_set, 0).is_err());
+    }
+
+    #[test]
+    fn single_loss_reroutes_target_off_failed_nodes() {
+        // RDD recovery targets only exclude the stripe's nodes; when that
+        // target is itself in the failure set the planner must reroute.
+        let code = CodeSpec::Rs { k: 3, m: 2 };
+        let cluster = ClusterSpec::new(8, 3);
+        let p = RddPlacement::new(code, cluster, 5);
+        let stripes = 400u64;
+        // two concurrent failures: any stripe loses at most 2 of 5 blocks,
+        // so 3 = k survivors always remain, and RDD's random target lands
+        // on the other dead node often enough to exercise the reroute
+        let failed = vec![Location::new(0, 0), Location::new(4, 1)];
+        let plans = scenario_recovery_plans(&p, stripes, &failed, 5).unwrap();
+        let failed_set: HashSet<Location> = failed.iter().copied().collect();
+        assert!(!plans.is_empty());
+        for plan in &plans {
+            assert!(!failed_set.contains(&plan.writer), "writer on a dead node");
+            for &(_, loc) in &plan.direct {
+                assert!(!failed_set.contains(&loc), "source on a dead node");
+            }
+            for agg in &plan.aggregations {
+                assert!(agg.inputs.iter().all(|(_, l)| !failed_set.contains(l)));
+            }
+        }
+    }
+}

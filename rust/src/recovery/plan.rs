@@ -45,6 +45,11 @@ pub struct RepairPlan {
     pub aggregations: Vec<Aggregation>,
     /// Blocks shipped whole to `compute_at` (block index, location).
     pub direct: Vec<(usize, Location)>,
+    /// Explicit decode coefficients aligned with [`RepairPlan::source_blocks`]
+    /// order. `None` = derive from the code's single-failure machinery
+    /// (the default for single-erasure plans); multi-erasure plans carry
+    /// their solver-produced coefficients here (DESIGN.md §4).
+    pub coeffs: Option<Vec<u8>>,
 }
 
 impl RepairPlan {
@@ -200,6 +205,7 @@ fn plan_d3_rs_at(
         persist: true,
         aggregations,
         direct,
+        coeffs: None,
     }
 }
 
@@ -227,6 +233,7 @@ fn plan_random_rs(
         persist: true,
         aggregations: Vec::new(),
         direct,
+        coeffs: None,
     }
 }
 
@@ -252,12 +259,17 @@ fn plan_lrc(
         persist: true,
         aggregations: Vec::new(),
         direct,
+        coeffs: None,
     }
 }
 
 /// Decode coefficients for a plan's sources (native or PJRT data path),
 /// aligned with `plan.source_blocks()` order.
 pub fn plan_coefficients(code: &CodeSpec, plan: &RepairPlan) -> Vec<u8> {
+    if let Some(c) = &plan.coeffs {
+        debug_assert_eq!(c.len(), plan.source_blocks().len());
+        return c.clone();
+    }
     match *code {
         CodeSpec::Rs { k, m } => {
             let rs = RsCode::new(k, m);

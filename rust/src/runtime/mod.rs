@@ -10,6 +10,7 @@
 //! `out = ⊕ᵢ cᵢ·shardᵢ` — which by RS linearity (§2.2) covers encode,
 //! decode, and D³'s inner-rack aggregation.
 
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 use crate::gf;
@@ -19,6 +20,7 @@ pub enum Coder {
     /// Pure-Rust table-driven path (always available).
     Native,
     /// PJRT CPU client executing the AOT artifacts.
+    #[cfg(feature = "pjrt")]
     Pjrt(pjrt::PjrtCoder),
 }
 
@@ -29,17 +31,30 @@ impl Coder {
 
     /// Load the AOT artifacts from `dir` (default: `$D3EC_ARTIFACTS` or
     /// `./artifacts`).
+    #[cfg(feature = "pjrt")]
     pub fn pjrt_from(dir: &std::path::Path) -> anyhow::Result<Coder> {
         Ok(Coder::Pjrt(pjrt::PjrtCoder::load(dir)?))
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn pjrt_from(_dir: &std::path::Path) -> anyhow::Result<Coder> {
+        anyhow::bail!("built without the `pjrt` feature — rebuild with `--features pjrt`")
+    }
+
+    #[cfg(feature = "pjrt")]
     pub fn pjrt() -> anyhow::Result<Coder> {
         Ok(Coder::Pjrt(pjrt::PjrtCoder::load(&default_artifacts_dir())?))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn pjrt() -> anyhow::Result<Coder> {
+        anyhow::bail!("built without the `pjrt` feature — rebuild with `--features pjrt`")
     }
 
     pub fn backend_name(&self) -> &'static str {
         match self {
             Coder::Native => "native",
+            #[cfg(feature = "pjrt")]
             Coder::Pjrt(_) => "pjrt",
         }
     }
@@ -52,6 +67,7 @@ impl Coder {
         assert!(shards.iter().all(|s| s.len() == len), "ragged shards");
         match self {
             Coder::Native => Ok(gf::combine(coeffs, shards)),
+            #[cfg(feature = "pjrt")]
             Coder::Pjrt(p) => p.combine(coeffs, shards),
         }
     }

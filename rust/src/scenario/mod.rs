@@ -1,0 +1,392 @@
+//! The failure-scenario engine (DESIGN.md §5): first-class, backend-
+//! agnostic failure scenarios.
+//!
+//! A [`FailureScenario`] describes *what goes wrong* — which nodes die,
+//! what load competes with recovery — independently of *how the outcome is
+//! measured*. A [`RecoveryBackend`] executes a scenario and reports a
+//! [`ScenarioOutcome`]; the two implementations are
+//!
+//! * [`crate::sim::recovery::SimBackend`] — the fluid discrete-event
+//!   simulator (simulated seconds, analytic port loads), and
+//! * [`crate::cluster::ClusterBackend`] — the in-process MiniCluster
+//!   (real bytes through throttled links, wall-clock seconds),
+//!
+//! so every scenario is cross-checkable: the same failure set and the same
+//! repair plans drive both, and backend-independent quantities (blocks
+//! rebuilt, planned cross-rack block transfers, relative cross-rack bytes
+//! between policies) must agree.
+//!
+//! The paper evaluates single-node failures only; the scenario kinds add
+//! the correlated failures that dominate production repair traffic
+//! (multi-node, whole-rack — see Rashmi et al., arXiv:1309.0186) plus the
+//! front-end-load and degraded-read-burst mixes of §6.2.3–§6.2.4.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::placement::{Placement, PlacementTable};
+use crate::recovery::multi::scenario_recovery_plans;
+use crate::recovery::plan::{plan_degraded_read, RepairPlan};
+use crate::topology::{Location, SystemSpec};
+use crate::util::Rng;
+
+/// What goes wrong.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// One node fails (the paper's §6 setting).
+    SingleNode,
+    /// `failures` nodes fail concurrently (correlated failure).
+    MultiNode { failures: usize },
+    /// Every node of one rack fails (switch/power-domain failure).
+    RackFailure { rack: u32 },
+    /// One node fails while a front-end workload runs (paper Exp 11).
+    FrontendMix { workload: String },
+    /// One node fails and `reads` clients immediately degraded-read lost
+    /// blocks (paper Exp 3, but as a concurrent burst).
+    DegradedBurst { reads: usize },
+}
+
+/// A failure scenario: the kind, the stored-stripe population it hits, and
+/// the seed that makes every derived choice (failed nodes, read samples)
+/// deterministic and identical across backends.
+#[derive(Clone, Debug)]
+pub struct FailureScenario {
+    pub kind: ScenarioKind,
+    pub stripes: u64,
+    pub seed: u64,
+}
+
+impl FailureScenario {
+    pub fn single_node(stripes: u64, seed: u64) -> FailureScenario {
+        FailureScenario { kind: ScenarioKind::SingleNode, stripes, seed }
+    }
+
+    pub fn multi_node(failures: usize, stripes: u64, seed: u64) -> FailureScenario {
+        FailureScenario { kind: ScenarioKind::MultiNode { failures }, stripes, seed }
+    }
+
+    pub fn rack_failure(rack: u32, stripes: u64, seed: u64) -> FailureScenario {
+        FailureScenario { kind: ScenarioKind::RackFailure { rack }, stripes, seed }
+    }
+
+    pub fn frontend_mix(workload: &str, stripes: u64, seed: u64) -> FailureScenario {
+        FailureScenario {
+            kind: ScenarioKind::FrontendMix { workload: workload.to_string() },
+            stripes,
+            seed,
+        }
+    }
+
+    pub fn degraded_burst(reads: usize, stripes: u64, seed: u64) -> FailureScenario {
+        FailureScenario { kind: ScenarioKind::DegradedBurst { reads }, stripes, seed }
+    }
+
+    /// Short label, e.g. `single-node`, `multi-node-2`, `rack-failure-0`.
+    pub fn name(&self) -> String {
+        match &self.kind {
+            ScenarioKind::SingleNode => "single-node".into(),
+            ScenarioKind::MultiNode { failures } => format!("multi-node-{failures}"),
+            ScenarioKind::RackFailure { rack } => format!("rack-failure-{rack}"),
+            ScenarioKind::FrontendMix { workload } => format!("frontend-mix-{workload}"),
+            ScenarioKind::DegradedBurst { reads } => format!("degraded-burst-{reads}"),
+        }
+    }
+
+    /// The deterministic failure set under `policy`'s topology. Single-node
+    /// kinds pick a seed-keyed node that actually stores blocks (so the
+    /// scenario is never vacuous); multi-node samples distinct nodes;
+    /// rack failure takes the whole rack.
+    pub fn failed_nodes(&self, policy: &dyn Placement) -> Vec<Location> {
+        let cluster = policy.cluster();
+        let count = cluster.node_count();
+        match &self.kind {
+            ScenarioKind::SingleNode
+            | ScenarioKind::FrontendMix { .. }
+            | ScenarioKind::DegradedBurst { .. } => {
+                let mut rng = Rng::keyed(self.seed, 0x0fa1_1ed, 0);
+                let start = rng.below(count);
+                let probe = self.stripes.min(200);
+                for off in 0..count {
+                    let loc = cluster.unflat((start + off) % count);
+                    let holds = (0..probe)
+                        .any(|sid| policy.stripe(sid).locs.contains(&loc));
+                    if holds {
+                        return vec![loc];
+                    }
+                }
+                vec![cluster.unflat(start)]
+            }
+            ScenarioKind::MultiNode { failures } => {
+                let mut rng = Rng::keyed(self.seed, 0x0fa1_1ed, 1);
+                let want = (*failures).clamp(1, count.saturating_sub(1));
+                rng.sample_indices(count, want)
+                    .into_iter()
+                    .map(|i| cluster.unflat(i))
+                    .collect()
+            }
+            ScenarioKind::RackFailure { rack } => {
+                let rack = (*rack as usize).min(cluster.racks - 1);
+                (0..cluster.nodes_per_rack)
+                    .map(|j| Location::new(rack, j))
+                    .collect()
+            }
+        }
+    }
+
+    /// Repair plans for this scenario's failure set, built through a
+    /// table-backed placement lookup (DESIGN.md §7). Returns
+    /// `(failed nodes, plans)`; both backends call this, so they always
+    /// execute the *same* plans.
+    pub fn recovery_plans(
+        &self,
+        policy: &Arc<dyn Placement>,
+    ) -> Result<(Vec<Location>, Vec<RepairPlan>)> {
+        let failed = self.failed_nodes(policy.as_ref());
+        let table = PlacementTable::build(policy.clone(), self.stripes);
+        let plans = scenario_recovery_plans(&table, self.stripes, &failed, self.seed)?;
+        Ok((failed, plans))
+    }
+
+    /// For [`ScenarioKind::DegradedBurst`]: the failed node and the
+    /// seed-keyed `(stripe, block, client)` read samples, identical across
+    /// backends.
+    pub fn burst_samples(
+        &self,
+        policy: &Arc<dyn Placement>,
+    ) -> Result<(Location, Vec<(u64, usize, Location)>)> {
+        let ScenarioKind::DegradedBurst { reads } = &self.kind else {
+            bail!("burst_samples on a non-burst scenario");
+        };
+        let reads = *reads;
+        let cluster = policy.cluster();
+        let failed = self.failed_nodes(policy.as_ref())[0];
+        let table = PlacementTable::build(policy.clone(), self.stripes);
+        let mut lost: Vec<(u64, usize)> = Vec::new();
+        for sid in 0..self.stripes {
+            let sp = table.stripe(sid);
+            for (bi, &loc) in sp.locs.iter().enumerate() {
+                if loc == failed {
+                    lost.push((sid, bi));
+                }
+            }
+        }
+        if lost.is_empty() {
+            bail!("degraded burst: failed node {failed} holds no blocks");
+        }
+        let mut rng = Rng::keyed(self.seed, 0xb125_7, 2);
+        let mut samples = Vec::with_capacity(reads);
+        for _ in 0..reads {
+            let (sid, block) = lost[rng.below(lost.len())];
+            let client = loop {
+                let c = cluster.unflat(rng.below(cluster.node_count()));
+                if c != failed {
+                    break c;
+                }
+            };
+            samples.push((sid, block, client));
+        }
+        Ok((failed, samples))
+    }
+
+    /// Degraded-read plans for the burst samples (fluid backend).
+    pub fn burst_read_plans(
+        &self,
+        policy: &Arc<dyn Placement>,
+    ) -> Result<(Location, Vec<RepairPlan>)> {
+        let (failed, samples) = self.burst_samples(policy)?;
+        let table = PlacementTable::build(policy.clone(), self.stripes);
+        let plans = samples
+            .into_iter()
+            .map(|(sid, block, client)| {
+                plan_degraded_read(&table, sid, block, client, self.seed)
+            })
+            .collect();
+        Ok((failed, plans))
+    }
+}
+
+/// What a backend measured for one scenario run.
+#[derive(Clone, Debug)]
+pub struct ScenarioOutcome {
+    /// Backend that produced this outcome (`sim` or `cluster`).
+    pub backend: &'static str,
+    /// Scenario label ([`FailureScenario::name`]).
+    pub scenario: String,
+    /// Placement policy name.
+    pub policy: String,
+    /// Blocks rebuilt (node/rack kinds) or degraded reads served (burst).
+    pub blocks: usize,
+    /// Bytes rebuilt/served at the backend's block size.
+    pub bytes: u64,
+    /// Recovery time: simulated seconds (sim) or wall-clock (cluster).
+    pub seconds: f64,
+    /// bytes / seconds, MB/s.
+    pub throughput_mb_s: f64,
+    /// Load-imbalance λ over surviving racks' cross-rack port loads.
+    pub lambda: f64,
+    /// Per-rack cross-rack bytes (up, down) during the scenario.
+    pub rack_cross_bytes: Vec<(u64, u64)>,
+    /// Whole-block cross-rack transfers the plans prescribe —
+    /// backend-independent (the paper's "cross-rack accessed blocks").
+    pub planned_cross_rack_blocks: usize,
+    /// Mean degraded-read latency (burst kind only).
+    pub degraded_read_mean_s: Option<f64>,
+    /// Front-end workload completion time (frontend-mix kind only).
+    pub frontend_seconds: Option<f64>,
+}
+
+impl ScenarioOutcome {
+    /// Total cross-rack bytes (sum of every rack's upstream port).
+    pub fn total_cross_rack_bytes(&self) -> u64 {
+        self.rack_cross_bytes.iter().map(|&(up, _)| up).sum()
+    }
+
+    /// Human-readable report (the `d3ctl scenario` output).
+    pub fn print(&self) {
+        println!(
+            "[{}] {} · {}: {} blocks ({:.1} MB) in {:.2} s → {:.1} MB/s, λ={:.3}",
+            self.backend,
+            self.scenario,
+            self.policy,
+            self.blocks,
+            self.bytes as f64 / 1e6,
+            self.seconds,
+            self.throughput_mb_s,
+            self.lambda
+        );
+        println!(
+            "  planned cross-rack block transfers: {} · total cross-rack bytes: {:.1} MB",
+            self.planned_cross_rack_blocks,
+            self.total_cross_rack_bytes() as f64 / 1e6
+        );
+        let per_rack: Vec<String> = self
+            .rack_cross_bytes
+            .iter()
+            .enumerate()
+            .map(|(r, &(up, down))| {
+                format!("r{r} {:.1}/{:.1}", up as f64 / 1e6, down as f64 / 1e6)
+            })
+            .collect();
+        println!("  per-rack cross bytes up/down (MB): {}", per_rack.join("  "));
+        if let Some(d) = self.degraded_read_mean_s {
+            println!("  mean degraded-read latency: {d:.2} s");
+        }
+        if let Some(f) = self.frontend_seconds {
+            println!("  front-end workload completion: {f:.1} s");
+        }
+    }
+}
+
+/// Executes a [`FailureScenario`] and measures a [`ScenarioOutcome`].
+pub trait RecoveryBackend {
+    fn name(&self) -> &'static str;
+
+    fn run(
+        &self,
+        scenario: &FailureScenario,
+        policy: &Arc<dyn Placement>,
+        spec: &SystemSpec,
+    ) -> Result<ScenarioOutcome>;
+}
+
+/// Cross-rack block transfers prescribed by a plan set (backend-free).
+pub fn planned_cross_rack_blocks(plans: &[RepairPlan]) -> usize {
+    plans.iter().map(|p| p.cross_rack_blocks()).sum()
+}
+
+/// The distinct racks of a failure set, in first-seen order — the racks
+/// both backends exclude from λ.
+pub fn distinct_racks(failed: &[Location]) -> Vec<u32> {
+    let mut racks = Vec::new();
+    for f in failed {
+        if !racks.contains(&f.rack) {
+            racks.push(f.rack);
+        }
+    }
+    racks
+}
+
+/// Run one scenario on every backend in `backends`, printing each report.
+pub fn run_cross_backend(
+    scenario: &FailureScenario,
+    policy: &Arc<dyn Placement>,
+    spec: &SystemSpec,
+    backends: &[&dyn RecoveryBackend],
+) -> Result<Vec<ScenarioOutcome>> {
+    let mut outcomes = Vec::with_capacity(backends.len());
+    for backend in backends {
+        let out = backend.run(scenario, policy, spec)?;
+        out.print();
+        outcomes.push(out);
+    }
+    Ok(outcomes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::CodeSpec;
+    use crate::placement::D3Placement;
+    use crate::topology::ClusterSpec;
+
+    fn policy() -> Arc<dyn Placement> {
+        Arc::new(
+            D3Placement::new(CodeSpec::Rs { k: 6, m: 3 }, ClusterSpec::new(8, 3)).unwrap(),
+        )
+    }
+
+    #[test]
+    fn failure_sets_are_deterministic_and_well_formed() {
+        let p = policy();
+        let single = FailureScenario::single_node(120, 7);
+        assert_eq!(
+            single.failed_nodes(p.as_ref()),
+            single.failed_nodes(p.as_ref())
+        );
+        assert_eq!(single.failed_nodes(p.as_ref()).len(), 1);
+
+        let multi = FailureScenario::multi_node(3, 120, 7);
+        let nodes = multi.failed_nodes(p.as_ref());
+        assert_eq!(nodes.len(), 3);
+        let set: std::collections::HashSet<Location> = nodes.iter().copied().collect();
+        assert_eq!(set.len(), 3, "failures must be distinct");
+
+        let rack = FailureScenario::rack_failure(2, 120, 7);
+        let nodes = rack.failed_nodes(p.as_ref());
+        assert_eq!(nodes.len(), 3);
+        assert!(nodes.iter().all(|l| l.rack == 2));
+    }
+
+    #[test]
+    fn recovery_plans_cover_every_lost_block() {
+        let p = policy();
+        let scenario = FailureScenario::multi_node(2, 100, 11);
+        let (failed, plans) = scenario.recovery_plans(&p).unwrap();
+        let failed_set: std::collections::HashSet<Location> =
+            failed.iter().copied().collect();
+        let mut expected = 0usize;
+        for sid in 0..100u64 {
+            expected += p
+                .stripe(sid)
+                .locs
+                .iter()
+                .filter(|l| failed_set.contains(l))
+                .count();
+        }
+        assert_eq!(plans.len(), expected);
+        assert!(expected > 0);
+    }
+
+    #[test]
+    fn burst_samples_target_lost_blocks_only() {
+        let p = policy();
+        let scenario = FailureScenario::degraded_burst(16, 100, 3);
+        let (failed, samples) = scenario.burst_samples(&p).unwrap();
+        assert_eq!(samples.len(), 16);
+        for (sid, block, client) in samples {
+            assert_eq!(p.stripe(sid).locs[block], failed);
+            assert_ne!(client, failed);
+        }
+    }
+}

@@ -9,4 +9,5 @@ pub mod recovery;
 pub mod resources;
 
 pub use engine::{Engine, JobSpec, Work};
+pub use recovery::SimBackend;
 pub use resources::ResourceTable;

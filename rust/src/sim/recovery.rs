@@ -154,6 +154,20 @@ pub fn run_recovery_with_background(
     cfg: RecoveryConfig,
     extra: Vec<crate::sim::engine::JobSpec>,
 ) -> (RecoveryOutcome, Vec<f64>) {
+    run_recovery_multi(spec, plans, &[failed.rack], cfg, extra)
+}
+
+/// The general engine driver behind every recovery scenario: arbitrary
+/// plan sets (single node, K nodes, a whole rack — DESIGN.md §5), λ
+/// computed over the racks *not* in `failed_racks`, optional foreground
+/// jobs sharing the ports.
+pub fn run_recovery_multi(
+    spec: &SystemSpec,
+    plans: &[RepairPlan],
+    failed_racks: &[u32],
+    cfg: RecoveryConfig,
+    extra: Vec<crate::sim::engine::JobSpec>,
+) -> (RecoveryOutcome, Vec<f64>) {
     let rt = ResourceTable::new(spec);
     let mut engine = Engine::new(rt.caps.clone());
     let extra_ids: Vec<u32> = extra.into_iter().map(|j| engine.spawn(j)).collect();
@@ -233,6 +247,9 @@ pub fn run_recovery_with_background(
         }
         assert!(queue.is_empty(), "jobs left unadmitted");
     }
+    // flush any foreground jobs still in flight (also covers empty plan
+    // sets, where the wave loop never runs)
+    engine.run_to_completion();
     assert_eq!(
         engine.completed_count(),
         plans.len() + extra_ids.len(),
@@ -249,12 +266,12 @@ pub fn run_recovery_with_background(
             engine.resource_bytes[rt.rack_down(rack) as usize],
         ));
     }
-    let lambda = lambda_metric(&rack_loads, failed.rack);
+    let lambda = lambda_metric_excluding(&rack_loads, failed_racks);
     let extra_times: Vec<f64> = extra_ids.iter().map(|&id| engine.finish_time(id)).collect();
     (
         RecoveryOutcome {
             makespan,
-            throughput_mb_s: rebuilt / makespan / 1e6,
+            throughput_mb_s: if makespan > 0.0 { rebuilt / makespan / 1e6 } else { 0.0 },
             lambda,
             rack_loads,
             blocks: plans.len(),
@@ -266,12 +283,21 @@ pub fn run_recovery_with_background(
 /// λ = (Lmax − Lavg)/Lavg over surviving racks' port loads, both
 /// directions (paper Exp 1).
 pub fn lambda_metric(rack_loads: &[(f64, f64)], failed_rack: u32) -> f64 {
+    lambda_metric_excluding(rack_loads, &[failed_rack])
+}
+
+/// λ over the racks not in `excluded` (multi-node and rack-failure
+/// scenarios exclude every rack that lost nodes).
+pub fn lambda_metric_excluding(rack_loads: &[(f64, f64)], excluded: &[u32]) -> f64 {
     let mut loads = Vec::new();
     for (rack, &(up, down)) in rack_loads.iter().enumerate() {
-        if rack as u32 != failed_rack {
+        if !excluded.contains(&(rack as u32)) {
             loads.push(up);
             loads.push(down);
         }
+    }
+    if loads.is_empty() {
+        return 0.0;
     }
     let avg = loads.iter().sum::<f64>() / loads.len() as f64;
     if avg <= 0.0 {
@@ -279,6 +305,147 @@ pub fn lambda_metric(rack_loads: &[(f64, f64)], failed_rack: u32) -> f64 {
     }
     let max = loads.iter().cloned().fold(0.0f64, f64::max);
     (max - avg) / avg
+}
+
+/// Simulate a concurrent degraded-read burst: all plans start at t = 0 and
+/// contend for the same ports. Returns `(makespan, mean latency, per-rack
+/// (up, down) port bytes)`.
+pub fn run_degraded_burst(
+    spec: &SystemSpec,
+    plans: &[RepairPlan],
+) -> (f64, f64, Vec<(f64, f64)>) {
+    let rt = ResourceTable::new(spec);
+    let mut engine = Engine::new(rt.caps.clone());
+    let ids: Vec<u32> = plans
+        .iter()
+        .map(|p| engine.spawn(plan_to_job(p, &rt, spec)))
+        .collect();
+    engine.run_to_completion();
+    let mean = if ids.is_empty() {
+        0.0
+    } else {
+        ids.iter().map(|&id| engine.finish_time(id)).sum::<f64>() / ids.len() as f64
+    };
+    let mut rack_loads = Vec::with_capacity(spec.cluster.racks);
+    for rack in 0..spec.cluster.racks as u32 {
+        rack_loads.push((
+            engine.resource_bytes[rt.rack_up(rack) as usize],
+            engine.resource_bytes[rt.rack_down(rack) as usize],
+        ));
+    }
+    (engine.now(), mean, rack_loads)
+}
+
+/// The fluid-simulator implementation of the scenario engine
+/// ([`crate::scenario::RecoveryBackend`], DESIGN.md §5): simulated
+/// seconds, analytic max-min-fair port loads.
+pub struct SimBackend {
+    pub cfg: RecoveryConfig,
+}
+
+impl Default for SimBackend {
+    fn default() -> SimBackend {
+        SimBackend { cfg: RecoveryConfig::default() }
+    }
+}
+
+use crate::scenario::distinct_racks;
+
+fn loads_to_bytes(rack_loads: &[(f64, f64)]) -> Vec<(u64, u64)> {
+    rack_loads.iter().map(|&(u, d)| (u as u64, d as u64)).collect()
+}
+
+impl crate::scenario::RecoveryBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn run(
+        &self,
+        scenario: &crate::scenario::FailureScenario,
+        policy: &std::sync::Arc<dyn crate::placement::Placement>,
+        spec: &SystemSpec,
+    ) -> anyhow::Result<crate::scenario::ScenarioOutcome> {
+        use crate::scenario::{planned_cross_rack_blocks, ScenarioKind, ScenarioOutcome};
+        match &scenario.kind {
+            ScenarioKind::DegradedBurst { .. } => {
+                let (failed, plans) = scenario.burst_read_plans(policy)?;
+                let (makespan, mean, rack_loads) = run_degraded_burst(spec, &plans);
+                let bytes = plans.len() as u64 * spec.block_size;
+                Ok(ScenarioOutcome {
+                    backend: "sim",
+                    scenario: scenario.name(),
+                    policy: policy.name().to_string(),
+                    blocks: plans.len(),
+                    bytes,
+                    seconds: makespan,
+                    throughput_mb_s: if makespan > 0.0 {
+                        bytes as f64 / makespan / 1e6
+                    } else {
+                        0.0
+                    },
+                    lambda: lambda_metric_excluding(&rack_loads, &[failed.rack]),
+                    rack_cross_bytes: loads_to_bytes(&rack_loads),
+                    planned_cross_rack_blocks: planned_cross_rack_blocks(&plans),
+                    degraded_read_mean_s: Some(mean),
+                    frontend_seconds: None,
+                })
+            }
+            ScenarioKind::FrontendMix { workload } => {
+                let (failed, plans) = scenario.recovery_plans(policy)?;
+                let w0 = crate::workloads::specs()
+                    .into_iter()
+                    .find(|w| w.name == workload.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("unknown workload {workload}"))?;
+                let w = w0.scaled(20);
+                let rt = ResourceTable::new(spec);
+                let job = if policy.name().starts_with("d3") {
+                    let placer = crate::sim::frontend::UniformPlacer::new(spec);
+                    crate::sim::frontend::workload_job(&w, &placer, &rt, spec)
+                } else {
+                    let placer = crate::sim::frontend::RandomPlacer::new(spec, scenario.seed);
+                    crate::sim::frontend::workload_job(&w, &placer, &rt, spec)
+                };
+                // HDFS throttles reconstruction under foreground load
+                // (dfs.namenode.replication.max-streams)
+                let cfg = RecoveryConfig { streams_per_node: 2, ..self.cfg };
+                let racks = distinct_racks(&failed);
+                let (out, extra) = run_recovery_multi(spec, &plans, &racks, cfg, vec![job]);
+                Ok(sim_outcome(scenario, policy.name(), &out, &plans, spec, Some(extra[0])))
+            }
+            _ => {
+                let (failed, plans) = scenario.recovery_plans(policy)?;
+                let racks = distinct_racks(&failed);
+                let (out, _) =
+                    run_recovery_multi(spec, &plans, &racks, self.cfg, Vec::new());
+                Ok(sim_outcome(scenario, policy.name(), &out, &plans, spec, None))
+            }
+        }
+    }
+}
+
+fn sim_outcome(
+    scenario: &crate::scenario::FailureScenario,
+    policy_name: &str,
+    out: &RecoveryOutcome,
+    plans: &[RepairPlan],
+    spec: &SystemSpec,
+    frontend_seconds: Option<f64>,
+) -> crate::scenario::ScenarioOutcome {
+    crate::scenario::ScenarioOutcome {
+        backend: "sim",
+        scenario: scenario.name(),
+        policy: policy_name.to_string(),
+        blocks: out.blocks,
+        bytes: out.blocks as u64 * spec.block_size,
+        seconds: out.makespan,
+        throughput_mb_s: out.throughput_mb_s,
+        lambda: out.lambda,
+        rack_cross_bytes: loads_to_bytes(&out.rack_loads),
+        planned_cross_rack_blocks: crate::scenario::planned_cross_rack_blocks(plans),
+        degraded_read_mean_s: None,
+        frontend_seconds,
+    }
 }
 
 /// Simulate one degraded read and return its latency (paper Exp 3).

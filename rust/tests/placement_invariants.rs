@@ -1,0 +1,129 @@
+//! Placement-invariant suite (ISSUE 1 satellite): `rack_limit_ok` and
+//! `nodes_distinct` must hold for every policy — D³, D³-LRC, RDD, HDD —
+//! across several (k, m) configurations and cluster shapes, including
+//! after recovery-target placement.
+
+use d3ec::codes::CodeSpec;
+use d3ec::placement::{
+    D3LrcPlacement, D3Placement, HddPlacement, Placement, RddPlacement,
+};
+use d3ec::topology::ClusterSpec;
+
+/// Valid D³/RS combinations: (k, m, racks, nodes_per_rack).
+const RS_CONFIGS: &[(usize, usize, usize, usize)] = &[
+    (2, 1, 8, 3),
+    (2, 1, 5, 3),
+    (3, 2, 8, 3),
+    (3, 2, 5, 3),
+    (3, 2, 11, 4),
+    (4, 2, 8, 3),
+    (6, 3, 8, 3),
+    (6, 3, 11, 4),
+];
+
+/// Valid D³-LRC combinations: (k, l, g, racks, nodes_per_rack).
+const LRC_CONFIGS: &[(usize, usize, usize, usize, usize)] = &[
+    (4, 2, 1, 8, 3),
+    (4, 2, 1, 9, 3),
+    (6, 2, 2, 11, 4),
+];
+
+/// `target_keeps_rack_limit`: D³, D³-LRC, and HDD re-establish the rack
+/// limit when placing the recovered copy; RDD deliberately does not
+/// (paper §6.1 — node-level exclusion only), so only the node invariant is
+/// asserted for it.
+fn check_policy(
+    policy: &dyn Placement,
+    stripes: u64,
+    label: &str,
+    target_keeps_rack_limit: bool,
+) {
+    let limit = policy.code().rack_limit();
+    for sid in 0..stripes {
+        let sp = policy.stripe(sid);
+        assert_eq!(sp.locs.len(), policy.code().len(), "{label} sid={sid}");
+        assert!(sp.nodes_distinct(), "{label} sid={sid}: node collision");
+        assert!(
+            sp.rack_limit_ok(limit),
+            "{label} sid={sid}: more than {limit} blocks in one rack"
+        );
+        // the recovered copy of any block keeps the node invariant
+        let bi = sid as usize % sp.locs.len();
+        let tgt = policy.recovery_target(sid, bi, sp.locs[bi]);
+        let mut locs = sp.locs.clone();
+        locs[bi] = tgt;
+        let moved = d3ec::placement::StripePlacement { locs };
+        assert!(moved.nodes_distinct(), "{label} sid={sid}: target collides");
+        if target_keeps_rack_limit {
+            assert!(
+                moved.rack_limit_ok(limit),
+                "{label} sid={sid}: target breaks the rack limit"
+            );
+        }
+    }
+}
+
+#[test]
+fn d3_rs_invariants_across_configs() {
+    for &(k, m, r, n) in RS_CONFIGS {
+        let code = CodeSpec::Rs { k, m };
+        let cluster = ClusterSpec::new(r, n);
+        let p = D3Placement::new(code, cluster)
+            .unwrap_or_else(|e| panic!("({k},{m}) on {r}x{n}: {e}"));
+        // at least one full placement cycle when affordable
+        let cycle = p.period().unwrap_or(500).min(1200);
+        check_policy(&p, cycle, &format!("d3 ({k},{m}) {r}x{n}"), true);
+    }
+}
+
+#[test]
+fn d3_lrc_invariants_across_configs() {
+    for &(k, l, g, r, n) in LRC_CONFIGS {
+        let code = CodeSpec::Lrc { k, l, g };
+        let cluster = ClusterSpec::new(r, n);
+        let p = D3LrcPlacement::new(code, cluster)
+            .unwrap_or_else(|e| panic!("({k},{l},{g}) on {r}x{n}: {e}"));
+        check_policy(&p, 500, &format!("d3-lrc ({k},{l},{g}) {r}x{n}"), true);
+    }
+}
+
+#[test]
+fn rdd_invariants_across_configs() {
+    for &(k, m, r, n) in RS_CONFIGS {
+        let code = CodeSpec::Rs { k, m };
+        let cluster = ClusterSpec::new(r, n);
+        if cluster.node_count() < code.len() + 1 {
+            continue;
+        }
+        for seed in [1u64, 9] {
+            let p = RddPlacement::new(code, cluster, seed);
+            check_policy(&p, 300, &format!("rdd ({k},{m}) {r}x{n} seed={seed}"), false);
+        }
+    }
+    // LRC under RDD (rack limit 1)
+    let p = RddPlacement::new(
+        CodeSpec::Lrc { k: 4, l: 2, g: 1 },
+        ClusterSpec::new(8, 3),
+        3,
+    );
+    check_policy(&p, 300, "rdd (4,2,1)-lrc 8x3", false);
+}
+
+#[test]
+fn hdd_invariants_across_configs() {
+    for &(k, m, r, n) in RS_CONFIGS {
+        let code = CodeSpec::Rs { k, m };
+        let cluster = ClusterSpec::new(r, n);
+        if cluster.node_count() < code.len() + 1 {
+            continue;
+        }
+        let p = HddPlacement::new(code, cluster, 2);
+        check_policy(&p, 300, &format!("hdd ({k},{m}) {r}x{n}"), true);
+    }
+    let p = HddPlacement::new(
+        CodeSpec::Lrc { k: 4, l: 2, g: 1 },
+        ClusterSpec::new(8, 3),
+        2,
+    );
+    check_policy(&p, 300, "hdd (4,2,1)-lrc 8x3", true);
+}

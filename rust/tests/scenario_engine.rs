@@ -1,0 +1,183 @@
+//! Scenario-engine integration: the same `FailureScenario` runs on both
+//! the fluid-simulator and MiniCluster backends, outcomes are
+//! cross-checkable, and D³'s headline property — fewer cross-rack repair
+//! bytes than RDD — holds on *both* backends.
+
+use std::sync::Arc;
+
+use d3ec::cluster::{ClusterBackend, MiniCluster};
+use d3ec::codes::CodeSpec;
+use d3ec::placement::{D3Placement, Placement, PlacementTable, RddPlacement};
+use d3ec::recovery::multi::scenario_recovery_plans;
+use d3ec::recovery::node_recovery_plans;
+use d3ec::scenario::{FailureScenario, RecoveryBackend};
+use d3ec::sim::SimBackend;
+use d3ec::topology::{Location, SystemSpec};
+
+fn policy(name: &str, spec: &SystemSpec) -> Arc<dyn Placement> {
+    let code = CodeSpec::Rs { k: 6, m: 3 };
+    match name {
+        "d3" => Arc::new(D3Placement::new(code, spec.cluster).unwrap()),
+        _ => Arc::new(RddPlacement::new(code, spec.cluster, 5)),
+    }
+}
+
+fn fast_cluster_backend() -> ClusterBackend {
+    ClusterBackend { block_size: 16 << 10, ..ClusterBackend::default() }
+}
+
+#[test]
+fn d3_beats_rdd_on_cross_rack_bytes_on_both_backends() {
+    let spec = SystemSpec::paper_default();
+    let scenario = FailureScenario::single_node(60, 2);
+    let sim = SimBackend::default();
+    let cluster = fast_cluster_backend();
+    let backends: [(&str, &dyn RecoveryBackend); 2] = [("sim", &sim), ("cluster", &cluster)];
+    for (bname, backend) in backends {
+        let d3 = backend.run(&scenario, &policy("d3", &spec), &spec).unwrap();
+        let rdd = backend.run(&scenario, &policy("rdd", &spec), &spec).unwrap();
+        assert!(d3.blocks > 0, "{bname}: empty scenario");
+        assert!(rdd.blocks > 0, "{bname}: empty scenario");
+        // the headline claim, per backend: D³ moves fewer cross-rack bytes
+        // per rebuilt block than RDD
+        let d3_per_block = d3.total_cross_rack_bytes() as f64 / d3.blocks as f64;
+        let rdd_per_block = rdd.total_cross_rack_bytes() as f64 / rdd.blocks as f64;
+        assert!(
+            d3_per_block < rdd_per_block,
+            "{bname}: D³ {d3_per_block:.0} B/block !< RDD {rdd_per_block:.0} B/block"
+        );
+        // and the plans say the same thing in block units
+        assert!(
+            (d3.planned_cross_rack_blocks as f64 / d3.blocks as f64)
+                < (rdd.planned_cross_rack_blocks as f64 / rdd.blocks as f64),
+            "{bname}: planner disagrees with the byte accounting"
+        );
+    }
+}
+
+#[test]
+fn backends_execute_identical_plans() {
+    let spec = SystemSpec::paper_default();
+    let scenario = FailureScenario::multi_node(2, 50, 9);
+    let p = policy("d3", &spec);
+    let sim_out = SimBackend::default().run(&scenario, &p, &spec).unwrap();
+    let cl_out = fast_cluster_backend().run(&scenario, &p, &spec).unwrap();
+    assert_eq!(sim_out.blocks, cl_out.blocks, "different plan sets");
+    assert_eq!(
+        sim_out.planned_cross_rack_blocks, cl_out.planned_cross_rack_blocks,
+        "different plan structure"
+    );
+    assert!(sim_out.seconds > 0.0);
+    assert!(cl_out.seconds > 0.0);
+}
+
+#[test]
+fn rack_failure_scenario_completes_on_both_backends() {
+    let spec = SystemSpec::paper_default();
+    let scenario = FailureScenario::rack_failure(0, 45, 3);
+    let p = policy("d3", &spec);
+    let sim_out = SimBackend::default().run(&scenario, &p, &spec).unwrap();
+    let cl_out = fast_cluster_backend().run(&scenario, &p, &spec).unwrap();
+    assert!(sim_out.blocks > 0, "rack held no blocks?");
+    assert_eq!(sim_out.blocks, cl_out.blocks);
+    // the dead rack's ports carry no recovery traffic: every source and
+    // every recovery target avoids its nodes
+    let (up, down) = sim_out.rack_cross_bytes[0];
+    assert_eq!(up + down, 0, "traffic through the failed rack's ports");
+    let others: u64 = sim_out
+        .rack_cross_bytes
+        .iter()
+        .skip(1)
+        .map(|&(u, d)| u + d)
+        .sum();
+    assert!(others > 0, "no cross-rack recovery traffic at all?");
+}
+
+#[test]
+fn rack_failure_recovers_real_bytes_in_the_minicluster() {
+    // end-to-end multi-erasure proof: write real stripes, kill a whole
+    // rack, run the scenario planner's plans, read every data block back.
+    let mut spec = SystemSpec::paper_default();
+    spec.block_size = 16 << 10;
+    spec.net.inner_mbps = 8000.0;
+    spec.net.cross_mbps = 1600.0;
+    let code = CodeSpec::Rs { k: 6, m: 3 };
+    let policy: Arc<dyn Placement> =
+        Arc::new(D3Placement::new(code, spec.cluster).unwrap());
+    let cluster = MiniCluster::new(spec, policy.clone(), "native", 4).unwrap();
+    let stripes = 36u64;
+    let originals = cluster
+        .write_stripes_parallel(stripes, 4, |sid| {
+            (0..6)
+                .map(|b| {
+                    let mut v = vec![0u8; 16 << 10];
+                    let mut s = sid.wrapping_mul(77).wrapping_add(b as u64) | 1;
+                    for byte in v.iter_mut() {
+                        s ^= s << 13;
+                        s ^= s >> 7;
+                        s ^= s << 17;
+                        *byte = (s >> 24) as u8;
+                    }
+                    v
+                })
+                .collect()
+        })
+        .unwrap();
+    let failed: Vec<Location> = (0..3).map(|j| Location::new(1, j)).collect();
+    for &f in &failed {
+        cluster.fail_node(f);
+    }
+    let table = PlacementTable::build(policy.clone(), stripes);
+    let plans = scenario_recovery_plans(&table, stripes, &failed, 4).unwrap();
+    assert!(!plans.is_empty());
+    let stats = cluster.recover_with_plans(plans, 6, &[1]).unwrap();
+    assert!(stats.blocks > 0);
+    // every data block of every stripe reads back bit-identical
+    let client = Location::new(7, 2);
+    for sid in 0..stripes {
+        for b in 0..6 {
+            let got = cluster.read_block(sid, b, client).unwrap();
+            assert_eq!(got, originals[sid as usize][b], "stripe {sid} block {b}");
+        }
+    }
+}
+
+#[test]
+fn degraded_burst_scenario_reports_latencies() {
+    let spec = SystemSpec::paper_default();
+    let scenario = FailureScenario::degraded_burst(12, 60, 5);
+    let p = policy("d3", &spec);
+    let out = SimBackend::default().run(&scenario, &p, &spec).unwrap();
+    assert_eq!(out.blocks, 12);
+    let mean = out.degraded_read_mean_s.expect("burst reports latency");
+    assert!(mean > 0.0 && mean <= out.seconds + 1e-9);
+}
+
+#[test]
+fn frontend_mix_scenario_reports_workload_time() {
+    let spec = SystemSpec::paper_default();
+    let scenario = FailureScenario::frontend_mix("grep", 40, 5);
+    let p = policy("d3", &spec);
+    let out = SimBackend::default().run(&scenario, &p, &spec).unwrap();
+    assert!(out.blocks > 0);
+    let t = out.frontend_seconds.expect("mix reports workload time");
+    assert!(t > 0.0);
+}
+
+#[test]
+fn table_backed_planning_matches_raw_policy() {
+    let spec = SystemSpec::paper_default();
+    let p = policy("d3", &spec);
+    let table = PlacementTable::build(p.clone(), 1000);
+    let failed = Location::new(0, 0);
+    let raw = node_recovery_plans(p.as_ref(), 1000, failed, 0);
+    let cached = node_recovery_plans(&table, 1000, failed, 0);
+    assert_eq!(raw.len(), cached.len());
+    for (a, b) in raw.iter().zip(&cached) {
+        assert_eq!(a.stripe, b.stripe);
+        assert_eq!(a.failed_block, b.failed_block);
+        assert_eq!(a.writer, b.writer);
+        assert_eq!(a.cross_rack_blocks(), b.cross_rack_blocks());
+        assert_eq!(a.source_blocks(), b.source_blocks());
+    }
+}
