@@ -3,8 +3,70 @@
 //! in-process transfers, so wall-clock recovery times are network-shaped
 //! exactly like the testbed's.
 
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// Counting in-flight gate: at most `cap` concurrent holders, 0 = no limit.
+/// The recovery executor (DESIGN.md §8) sets per-node and per-rack-link
+/// caps so chunk tasks queue at busy endpoints (the HDFS xmits analogue)
+/// instead of oversubscribing them.
+pub struct Gate {
+    cap: AtomicUsize,
+    holders: Mutex<usize>,
+    cv: Condvar,
+}
+
+/// RAII hold on a [`Gate`]; dropping releases the slot.
+pub struct GateGuard<'a>(Option<&'a Gate>);
+
+impl Drop for GateGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(g) = self.0 {
+            let mut n = g.holders.lock().unwrap();
+            *n -= 1;
+            g.cv.notify_one();
+        }
+    }
+}
+
+impl Gate {
+    pub fn new() -> Gate {
+        Gate { cap: AtomicUsize::new(0), holders: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    /// Change the cap; 0 disables the gate (guards already held stay valid).
+    pub fn set_cap(&self, cap: usize) {
+        // store + notify under the holders lock: a waiter between its cap
+        // re-check and cv.wait() would otherwise miss the wakeup
+        let _holders = self.holders.lock().unwrap();
+        self.cap.store(cap, Ordering::Relaxed);
+        self.cv.notify_all();
+    }
+
+    /// Block until a slot is free (immediately when uncapped).
+    pub fn enter(&self) -> GateGuard<'_> {
+        if self.cap.load(Ordering::Relaxed) == 0 {
+            return GateGuard(None);
+        }
+        let mut n = self.holders.lock().unwrap();
+        loop {
+            let cap = self.cap.load(Ordering::Relaxed);
+            if cap == 0 || *n < cap {
+                break;
+            }
+            n = self.cv.wait(n).unwrap();
+        }
+        *n += 1;
+        GateGuard(Some(self))
+    }
+}
+
+impl Default for Gate {
+    fn default() -> Gate {
+        Gate::new()
+    }
+}
 
 /// A token bucket: `rate` bytes/second, capped burst.
 pub struct TokenBucket {
@@ -64,6 +126,10 @@ pub struct LinkSet {
     nics: Vec<(TokenBucket, TokenBucket)>,
     /// per-rack core-router port (up, down)
     racks: Vec<(TokenBucket, TokenBucket)>,
+    /// per-node in-flight transfer gate (counts both directions)
+    node_gates: Vec<Gate>,
+    /// per-rack-link in-flight gate for cross-rack transfers
+    rack_gates: Vec<Gate>,
     nodes_per_rack: usize,
 }
 
@@ -78,12 +144,27 @@ impl LinkSet {
             racks: (0..spec.cluster.racks)
                 .map(|_| (TokenBucket::new(cross), TokenBucket::new(cross)))
                 .collect(),
+            node_gates: (0..spec.cluster.node_count()).map(|_| Gate::new()).collect(),
+            rack_gates: (0..spec.cluster.racks).map(|_| Gate::new()).collect(),
             nodes_per_rack: spec.cluster.nodes_per_rack,
         }
     }
 
+    /// Set the in-flight caps the recovery executor runs under (0 = off).
+    pub fn set_inflight_caps(&self, per_node: usize, per_rack_link: usize) {
+        for g in &self.node_gates {
+            g.set_cap(per_node);
+        }
+        for g in &self.rack_gates {
+            g.set_cap(per_rack_link);
+        }
+    }
+
     /// Throttle a `src → dst` transfer of `bytes` (blocking). Transfers are
-    /// chunked so concurrent flows interleave fairly.
+    /// chunked so concurrent flows interleave fairly. In-flight gates are
+    /// held for the whole transfer and acquired in a single global order
+    /// (node gates by flat index, then rack gates by rack index) so
+    /// concurrent transfers can never deadlock on them.
     pub fn transfer(&self, src: crate::topology::Location, dst: crate::topology::Location, bytes: u64) {
         if src == dst || bytes == 0 {
             return;
@@ -91,6 +172,19 @@ impl LinkSet {
         let chunk = 256 * 1024;
         let src_i = src.rack as usize * self.nodes_per_rack + src.node as usize;
         let dst_i = dst.rack as usize * self.nodes_per_rack + dst.node as usize;
+        let mut guards: Vec<GateGuard<'_>> = Vec::with_capacity(4);
+        let (lo, hi) = if src_i < dst_i { (src_i, dst_i) } else { (dst_i, src_i) };
+        guards.push(self.node_gates[lo].enter());
+        guards.push(self.node_gates[hi].enter());
+        if src.rack != dst.rack {
+            let (rlo, rhi) = if src.rack < dst.rack {
+                (src.rack, dst.rack)
+            } else {
+                (dst.rack, src.rack)
+            };
+            guards.push(self.rack_gates[rlo as usize].enter());
+            guards.push(self.rack_gates[rhi as usize].enter());
+        }
         let mut left = bytes;
         while left > 0 {
             let take = left.min(chunk);
@@ -138,6 +232,59 @@ mod tests {
         links.transfer(a, c, n);
         let cross = t1.elapsed().as_secs_f64();
         assert!(cross > inner * 3.0, "cross {cross} vs inner {inner}");
+    }
+
+    #[test]
+    fn gate_caps_concurrency_and_uncapped_is_free() {
+        let g = std::sync::Arc::new(Gate::new());
+        // uncapped: many concurrent holders
+        let a = g.enter();
+        let b = g.enter();
+        drop((a, b));
+        g.set_cap(2);
+        let active = std::sync::Arc::new(AtomicUsize::new(0));
+        let peak = std::sync::Arc::new(AtomicUsize::new(0));
+        let hs: Vec<_> = (0..6)
+            .map(|_| {
+                let (g, active, peak) = (g.clone(), active.clone(), peak.clone());
+                std::thread::spawn(move || {
+                    let _hold = g.enter();
+                    let now = active.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(20));
+                    active.fetch_sub(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 2, "cap 2 exceeded");
+    }
+
+    #[test]
+    fn gated_transfers_complete_without_deadlock() {
+        let mut spec = SystemSpec::paper_default();
+        spec.net.inner_mbps = 8000.0;
+        spec.net.cross_mbps = 1600.0;
+        let links = std::sync::Arc::new(LinkSet::new(&spec));
+        links.set_inflight_caps(2, 3);
+        // a mesh of opposing transfers that would deadlock under unordered
+        // two-gate acquisition
+        let hs: Vec<_> = (0..12u64)
+            .map(|i| {
+                let l = links.clone();
+                std::thread::spawn(move || {
+                    let a = Location::new((i % 4) as usize, (i % 3) as usize);
+                    let b = Location::new(((i + 1) % 4) as usize, ((i + 2) % 3) as usize);
+                    l.transfer(a, b, 64 * 1024);
+                    l.transfer(b, a, 64 * 1024);
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
     }
 
     #[test]

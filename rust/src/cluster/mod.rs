@@ -14,13 +14,15 @@ pub mod service;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context};
 
 use crate::codes::CodeSpec;
+use crate::gf;
 use crate::placement::Placement;
+use crate::recovery::executor::{execute_plans, ChunkRunner, ExecutorConfig};
 use crate::recovery::plan::{plan_coefficients, plan_degraded_read, plan_repair, RepairPlan};
 use crate::topology::{Location, SystemSpec};
 use crate::util::Rng;
@@ -40,6 +42,10 @@ pub struct ClusterRecoveryStats {
     /// cross-rack bytes per rack (up, down)
     pub rack_bytes: Vec<(u64, u64)>,
     pub lambda: f64,
+    /// Chunk tasks executed by the pipelined executor.
+    pub chunks: usize,
+    /// Per-worker busy fraction of the recovery wall clock.
+    pub worker_utilization: Vec<f64>,
 }
 
 /// The in-process cluster.
@@ -56,6 +62,11 @@ pub struct MiniCluster {
     /// cross-rack traffic accounting (up, down) per rack
     rack_up: Vec<AtomicU64>,
     rack_down: Vec<AtomicU64>,
+    /// Transfers hold this as readers while bumping their (up, down) pair;
+    /// [`MiniCluster::rack_byte_snapshot`] takes it as writer, so a
+    /// snapshot can never observe a transfer's up-count without its
+    /// down-count under the multi-threaded executor.
+    accounting: RwLock<()>,
     seed: u64,
 }
 
@@ -78,6 +89,7 @@ impl MiniCluster {
             failed: Mutex::new(Vec::new()),
             rack_up: (0..spec.cluster.racks).map(|_| AtomicU64::new(0)).collect(),
             rack_down: (0..spec.cluster.racks).map(|_| AtomicU64::new(0)).collect(),
+            accounting: RwLock::new(()),
             spec,
             policy,
             coder,
@@ -107,6 +119,7 @@ impl MiniCluster {
 
     fn transfer(&self, src: Location, dst: Location, bytes: u64) {
         if src.rack != dst.rack {
+            let _pairwise = self.accounting.read().unwrap();
             self.rack_up[src.rack as usize].fetch_add(bytes, Ordering::Relaxed);
             self.rack_down[dst.rack as usize].fetch_add(bytes, Ordering::Relaxed);
         }
@@ -209,6 +222,36 @@ impl MiniCluster {
             .cloned()
             .ok_or_else(|| anyhow!("source block ({sid},{block}) missing at {loc}"))?;
         self.transfer(loc, to, data.len() as u64);
+        Ok(data)
+    }
+
+    /// Fetch bytes `[off, off + len)` of a source block to `to` — the
+    /// executor's chunk-granular read + throttled transfer.
+    fn fetch_chunk(
+        &self,
+        sid: u64,
+        block: usize,
+        off: u64,
+        len: usize,
+        to: Location,
+    ) -> anyhow::Result<Vec<u8>> {
+        let loc = self.locate(sid, block);
+        let data = {
+            let store = self.store_of(loc).lock().unwrap();
+            let blk = store
+                .get(&(sid, block))
+                .ok_or_else(|| anyhow!("source block ({sid},{block}) missing at {loc}"))?;
+            let off = off as usize;
+            if off + len > blk.len() {
+                bail!(
+                    "chunk [{off}, {}) out of range for block ({sid},{block}) of {} bytes",
+                    off + len,
+                    blk.len()
+                );
+            }
+            blk[off..off + len].to_vec()
+        };
+        self.transfer(loc, to, len as u64);
         Ok(data)
     }
 
@@ -326,62 +369,61 @@ impl MiniCluster {
 
     /// Execute an arbitrary plan set (the scenario engine's entry point —
     /// single node, K nodes, a whole rack) with `workers` concurrent
-    /// reconstruction tasks. λ is computed over the racks not in
-    /// `failed_racks`; traffic accounting covers exactly this recovery.
+    /// reconstruction tasks at the default chunking/caps. λ is computed
+    /// over the racks not in `failed_racks`; traffic accounting covers
+    /// exactly this recovery.
     pub fn recover_with_plans(
         &self,
         plans: Vec<RepairPlan>,
         workers: usize,
         failed_racks: &[u32],
     ) -> anyhow::Result<ClusterRecoveryStats> {
-        let up0: Vec<u64> = self.rack_up.iter().map(|a| a.load(Ordering::Relaxed)).collect();
-        let dn0: Vec<u64> = self.rack_down.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        self.recover_with_plans_cfg(
+            plans,
+            ExecutorConfig { workers, ..ExecutorConfig::default() },
+            failed_racks,
+        )
+    }
+
+    /// [`MiniCluster::recover_with_plans`] with full control of the
+    /// pipelined executor (DESIGN.md §8): plans are split into
+    /// `cfg.chunk_size` tasks, scheduled over `cfg.workers` threads, and
+    /// every transfer runs under the per-node / per-rack-link in-flight
+    /// caps.
+    pub fn recover_with_plans_cfg(
+        &self,
+        plans: Vec<RepairPlan>,
+        cfg: ExecutorConfig,
+        failed_racks: &[u32],
+    ) -> anyhow::Result<ClusterRecoveryStats> {
+        let before = self.rack_byte_snapshot();
         let blocks = plans.len();
         let bytes: u64 = blocks as u64 * self.spec.block_size;
-        let queue = Arc::new(Mutex::new(std::collections::VecDeque::from(plans)));
-        let t0 = Instant::now();
-        let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
-        std::thread::scope(|scope| {
-            for _ in 0..workers.max(1) {
-                let queue = queue.clone();
-                let errors = errors.clone();
-                scope.spawn(move || loop {
-                    let plan = queue.lock().unwrap().pop_front();
-                    match plan {
-                        Some(p) => {
-                            if let Err(e) = self.execute_plan(&p) {
-                                errors.lock().unwrap().push(e.to_string());
-                            }
-                        }
-                        None => break,
-                    }
-                });
-            }
-        });
-        let errs = errors.lock().unwrap();
-        if !errs.is_empty() {
-            bail!("recovery errors: {:?}", errs.join("; "));
-        }
-        let wall = t0.elapsed();
-        let rack_bytes: Vec<(u64, u64)> = (0..self.spec.cluster.racks)
-            .map(|r| {
-                (
-                    self.rack_up[r].load(Ordering::Relaxed) - up0[r],
-                    self.rack_down[r].load(Ordering::Relaxed) - dn0[r],
-                )
-            })
+        self.links.set_inflight_caps(cfg.node_inflight, cfg.link_inflight);
+        let io = ChunkIo::new(self, &plans);
+        let run = execute_plans(&io, &plans, self.spec.block_size, &cfg);
+        // lift the caps so post-recovery traffic (reads, writes) is ungated
+        self.links.set_inflight_caps(0, 0);
+        let stats = run?;
+        let after = self.rack_byte_snapshot();
+        let rack_bytes: Vec<(u64, u64)> = before
+            .iter()
+            .zip(&after)
+            .map(|(&(u0, d0), &(u1, d1))| (u1 - u0, d1 - d0))
             .collect();
         let loads: Vec<(f64, f64)> =
             rack_bytes.iter().map(|&(u, d)| (u as f64, d as f64)).collect();
         let lambda = crate::sim::recovery::lambda_metric_excluding(&loads, failed_racks);
-        let secs = wall.as_secs_f64();
+        let secs = stats.wall_s;
         Ok(ClusterRecoveryStats {
             blocks,
             bytes,
-            wall,
+            wall: Duration::from_secs_f64(secs),
             throughput_mb_s: if secs > 0.0 { bytes as f64 / secs / 1e6 } else { 0.0 },
             rack_bytes,
             lambda,
+            chunks: stats.chunks,
+            worker_utilization: stats.utilization(),
         })
     }
 
@@ -391,8 +433,11 @@ impl MiniCluster {
     }
 
     /// Snapshot of the per-rack cross-rack byte counters (up, down) —
-    /// callers diff two snapshots to attribute traffic to a phase.
+    /// callers diff two snapshots to attribute traffic to a phase. Takes
+    /// the accounting lock as writer so no in-flight transfer's (up, down)
+    /// pair is observed half-applied.
     pub fn rack_byte_snapshot(&self) -> Vec<(u64, u64)> {
+        let _barrier = self.accounting.write().unwrap();
         (0..self.spec.cluster.racks)
             .map(|r| {
                 (
@@ -401,6 +446,84 @@ impl MiniCluster {
                 )
             })
             .collect()
+    }
+}
+
+/// Chunk-level IO behind the pipelined executor: fetches source-chunk
+/// bytes through the gated, token-bucket-throttled links, runs the GF
+/// multiply-accumulate through the shared slice kernel
+/// ([`crate::gf::SliceTable`] via [`gf::combine_into`]), and persists
+/// finished blocks into the NameNode metadata. Decode coefficients are
+/// computed once per plan, not once per chunk.
+struct ChunkIo<'a> {
+    cluster: &'a MiniCluster,
+    /// Per-plan sorted source block indices (`RepairPlan::source_blocks`).
+    sources: Vec<Vec<usize>>,
+    /// Per-plan decode coefficients aligned with `sources`.
+    coeffs: Vec<Vec<u8>>,
+}
+
+impl<'a> ChunkIo<'a> {
+    fn new(cluster: &'a MiniCluster, plans: &[RepairPlan]) -> ChunkIo<'a> {
+        let code = cluster.policy.code();
+        let sources: Vec<Vec<usize>> = plans.iter().map(|p| p.source_blocks()).collect();
+        let coeffs: Vec<Vec<u8>> =
+            plans.iter().map(|p| plan_coefficients(&code, p)).collect();
+        ChunkIo { cluster, sources, coeffs }
+    }
+}
+
+impl ChunkRunner for ChunkIo<'_> {
+    fn run_chunk(
+        &self,
+        plan_idx: usize,
+        plan: &RepairPlan,
+        off: u64,
+        len: usize,
+    ) -> anyhow::Result<Vec<u8>> {
+        let sources = &self.sources[plan_idx];
+        let coeffs = &self.coeffs[plan_idx];
+        let coeff_of =
+            |b: usize| coeffs[sources.binary_search(&b).expect("source present")];
+        let mut acc = vec![0u8; len];
+        for agg in &plan.aggregations {
+            // inner-rack aggregation at `agg.at`, then ship ONE aggregated
+            // chunk to the compute node
+            let mut partial = vec![0u8; len];
+            for &(b, _) in &agg.inputs {
+                let chunk = self.cluster.fetch_chunk(plan.stripe, b, off, len, agg.at)?;
+                gf::combine_into(&mut partial, coeff_of(b), &chunk);
+            }
+            self.cluster.transfer(agg.at, plan.compute_at, len as u64);
+            gf::combine_into(&mut acc, 1, &partial);
+        }
+        for &(b, _) in &plan.direct {
+            let chunk =
+                self.cluster.fetch_chunk(plan.stripe, b, off, len, plan.compute_at)?;
+            gf::combine_into(&mut acc, coeff_of(b), &chunk);
+        }
+        Ok(acc)
+    }
+
+    fn finish_plan(
+        &self,
+        _plan_idx: usize,
+        plan: &RepairPlan,
+        block: Vec<u8>,
+    ) -> anyhow::Result<()> {
+        if plan.persist {
+            self.cluster
+                .store_of(plan.writer)
+                .lock()
+                .unwrap()
+                .insert((plan.stripe, plan.failed_block), block);
+            self.cluster
+                .relocated
+                .lock()
+                .unwrap()
+                .insert((plan.stripe, plan.failed_block), plan.writer);
+        }
+        Ok(())
     }
 }
 
@@ -424,6 +547,9 @@ pub struct ClusterBackend {
     pub cross_mbps: f64,
     /// Concurrent reconstruction workers (HDFS xmits analogue).
     pub workers: usize,
+    /// Executor chunk size (bytes); blocks split into chunk tasks so
+    /// fetch/decode/write of different chunks pipeline (DESIGN.md §8).
+    pub chunk_size: u64,
 }
 
 impl Default for ClusterBackend {
@@ -434,6 +560,17 @@ impl Default for ClusterBackend {
             inner_mbps: 8000.0,
             cross_mbps: 1600.0,
             workers: 8,
+            chunk_size: 16 << 10,
+        }
+    }
+}
+
+impl ClusterBackend {
+    fn exec_cfg(&self) -> ExecutorConfig {
+        ExecutorConfig {
+            workers: self.workers,
+            chunk_size: self.chunk_size,
+            ..ExecutorConfig::default()
         }
     }
 }
@@ -556,6 +693,7 @@ impl crate::scenario::RecoveryBackend for ClusterBackend {
                     planned_cross_rack_blocks: planned_cross_rack_blocks(&plans),
                     degraded_read_mean_s: Some(mean),
                     frontend_seconds: None,
+                    worker_utilization: None,
                 })
             }
             ScenarioKind::FrontendMix { .. } => {
@@ -594,7 +732,7 @@ impl crate::scenario::RecoveryBackend for ClusterBackend {
                             })
                         })
                         .collect();
-                    let stats = cl.recover_with_plans(plans, self.workers, &racks);
+                    let stats = cl.recover_with_plans_cfg(plans, self.exec_cfg(), &racks);
                     let frontend = readers
                         .into_iter()
                         .map(|h| h.join().expect("reader thread"))
@@ -611,7 +749,7 @@ impl crate::scenario::RecoveryBackend for ClusterBackend {
                 }
                 let planned = planned_cross_rack_blocks(&plans);
                 let racks = distinct_racks(&failed);
-                let stats = cluster.recover_with_plans(plans, self.workers, &racks)?;
+                let stats = cluster.recover_with_plans_cfg(plans, self.exec_cfg(), &racks)?;
                 Ok(cluster_outcome(scenario, policy.name(), &stats, planned, None))
             }
         }
@@ -638,6 +776,7 @@ fn cluster_outcome(
         planned_cross_rack_blocks,
         degraded_read_mean_s: None,
         frontend_seconds,
+        worker_utilization: Some(stats.worker_utilization.clone()),
     }
 }
 
@@ -747,6 +886,49 @@ mod tests {
             }
             let newloc = cluster.locate(sid, b);
             assert_ne!(newloc, failed);
+        }
+    }
+
+    #[test]
+    fn chunked_recovery_rebuilds_identical_bytes() {
+        // chunk < block exercises the multi-task assembly path end to end
+        let spec = small_spec();
+        let policy =
+            Arc::new(D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, spec.cluster).unwrap());
+        let cluster = MiniCluster::new(spec, policy.clone(), "native", 9).unwrap();
+        let stripes = 12u64;
+        let mut originals = Vec::new();
+        for sid in 0..stripes {
+            let data = data_for(sid, 3, 64 * 1024);
+            cluster.write_stripe(sid, &data).unwrap();
+            originals.push(data);
+        }
+        let failed = Location::new(3, 0);
+        cluster.fail_node(failed);
+        let plans = crate::recovery::node_recovery_plans(
+            policy.as_ref(),
+            stripes,
+            failed,
+            9,
+        );
+        let lost: Vec<(u64, usize)> =
+            plans.iter().map(|p| (p.stripe, p.failed_block)).collect();
+        let cfg = ExecutorConfig {
+            workers: 4,
+            chunk_size: 4096, // 16 chunks per 64 KiB block
+            ..ExecutorConfig::default()
+        };
+        let stats = cluster.recover_with_plans_cfg(plans, cfg, &[failed.rack]).unwrap();
+        assert_eq!(stats.blocks, lost.len());
+        assert_eq!(stats.chunks, lost.len() * 16);
+        assert_eq!(stats.worker_utilization.len(), 4);
+        for (sid, b) in lost {
+            let loc = cluster.locate(sid, b);
+            assert_ne!(loc, failed);
+            let got = cluster.read_block(sid, b, loc).unwrap();
+            if b < 3 {
+                assert_eq!(got, originals[sid as usize][b], "sid={sid} b={b}");
+            }
         }
     }
 

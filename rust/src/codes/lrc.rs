@@ -231,9 +231,7 @@ fn scale_panel(panel: &mut [u8], s: u8) {
     if s == 1 {
         return;
     }
-    for b in panel.iter_mut() {
-        *b = gf::mul(*b, s);
-    }
+    gf::SliceTable::new(s).scale(panel);
 }
 
 #[cfg(test)]

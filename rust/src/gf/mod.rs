@@ -98,9 +98,64 @@ pub fn pow(mut a: u8, mut e: u32) -> u8 {
     acc
 }
 
+/// Two-nibble slice tables for a fixed coefficient `c`: GF multiply is
+/// linear over the bits of the source byte, so `c·s = c·(s & 0x0f) ⊕
+/// c·(s & 0xf0)` and the 256-entry row table splits into two 16-entry
+/// nibble tables that together fit in a single cache line. This is the
+/// multiply-accumulate kernel shared by the RS/LRC coders
+/// ([`crate::codes`]), the multi-erasure planner's numeric execution
+/// ([`crate::recovery::multi`]), and the chunked recovery executor's data
+/// path (DESIGN.md §8); `benches/hotpath.rs` tracks its throughput.
+#[derive(Clone, Copy)]
+pub struct SliceTable {
+    lo: [u8; 16],
+    hi: [u8; 16],
+}
+
+impl SliceTable {
+    pub fn new(c: u8) -> SliceTable {
+        let mut lo = [0u8; 16];
+        let mut hi = [0u8; 16];
+        for x in 0..16u8 {
+            lo[x as usize] = mul(c, x);
+            hi[x as usize] = mul(c, x << 4);
+        }
+        SliceTable { lo, hi }
+    }
+
+    /// `c · s` via the two nibble lookups.
+    #[inline]
+    pub fn mul(&self, s: u8) -> u8 {
+        self.lo[(s & 0x0f) as usize] ^ self.hi[(s >> 4) as usize]
+    }
+
+    /// `acc[i] ^= c · src[i]` — the multiply-accumulate hot loop, unrolled
+    /// eight bytes per step so both nibble tables stay register/L1-resident.
+    pub fn mac(&self, acc: &mut [u8], src: &[u8]) {
+        assert_eq!(acc.len(), src.len());
+        let mut a = acc.chunks_exact_mut(8);
+        let mut s = src.chunks_exact(8);
+        for (ac, sc) in a.by_ref().zip(s.by_ref()) {
+            for i in 0..8 {
+                ac[i] ^= self.mul(sc[i]);
+            }
+        }
+        for (ac, &sc) in a.into_remainder().iter_mut().zip(s.remainder()) {
+            *ac ^= self.mul(sc);
+        }
+    }
+
+    /// `buf[i] = c · buf[i]` — in-place scale (Gaussian-elimination rows).
+    pub fn scale(&self, buf: &mut [u8]) {
+        for b in buf.iter_mut() {
+            *b = self.mul(*b);
+        }
+    }
+}
+
 /// `acc[i] ^= c * src[i]` — the byte-crunching inner loop of the native
 /// coder. Specializes c == 0 (no-op) and c == 1 (pure XOR, the LRC/replica
-/// path) before falling back to the 64 KiB row table.
+/// path) before falling back to the two-nibble [`SliceTable`] kernel.
 pub fn combine_into(acc: &mut [u8], c: u8, src: &[u8]) {
     assert_eq!(acc.len(), src.len());
     match c {
@@ -110,12 +165,7 @@ pub fn combine_into(acc: &mut [u8], c: u8, src: &[u8]) {
                 *a ^= s;
             }
         }
-        _ => {
-            let row = &tables().mul[(c as usize) << 8..((c as usize) << 8) + 256];
-            for (a, s) in acc.iter_mut().zip(src) {
-                *a ^= row[*s as usize];
-            }
-        }
+        _ => SliceTable::new(c).mac(acc, src),
     }
 }
 
@@ -188,6 +238,44 @@ mod tests {
                 assert_eq!(pow(a, e), acc, "a={a} e={e}");
                 acc = mul(acc, a);
             }
+        }
+    }
+
+    #[test]
+    fn slice_table_matches_mul_exhaustively() {
+        for c in 0..=255u8 {
+            let t = SliceTable::new(c);
+            for s in 0..=255u8 {
+                assert_eq!(t.mul(s), mul(c, s), "c={c} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn slice_mac_matches_reference_all_lengths() {
+        // cover the unrolled body and every remainder length
+        let src: Vec<u8> = (0..41u8).map(|i| i.wrapping_mul(37).wrapping_add(3)).collect();
+        for c in [2u8, 29, 147, 255] {
+            let t = SliceTable::new(c);
+            for len in 0..src.len() {
+                let mut acc = vec![0xa5u8; len];
+                let mut want = acc.clone();
+                for (w, &s) in want.iter_mut().zip(&src[..len]) {
+                    *w ^= mul(c, s);
+                }
+                t.mac(&mut acc, &src[..len]);
+                assert_eq!(acc, want, "c={c} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn slice_scale_matches_mul() {
+        let t = SliceTable::new(113);
+        let mut buf: Vec<u8> = (0..=255u8).collect();
+        t.scale(&mut buf);
+        for (i, &b) in buf.iter().enumerate() {
+            assert_eq!(b, mul(113, i as u8));
         }
     }
 

@@ -5,6 +5,7 @@
 //! d3ctl scenario --kind single-node|multi-node|rack-failure|frontend-mix|degraded-burst
 //!                [--policy d3|rdd|hdd] [--code rs-6-3] [--failures K] [--rack R]
 //!                [--backend sim|cluster|both] [--stripes N]
+//!                [--workers N] [--chunk-size KB]   # pipelined recovery executor
 //! d3ctl layout --policy d3|rdd|hdd --code rs-3-2 [--stripes N] [--racks R] [--nodes N]
 //! d3ctl mu --code rs-6-3               # Lemma 4 closed form vs planner
 //! d3ctl oa --n 5 [--cols 4]            # print + verify an orthogonal array
@@ -119,10 +120,17 @@ fn cmd_scenario(flags: &HashMap<String, String>) {
         spec.cluster.nodes_per_rack,
         stripes
     );
-    let sim = SimBackend::default();
+    // pipelined executor knobs: same worker count on both backends so the
+    // recovery-time comparison runs at matched concurrency
+    let workers: usize = flag(flags, "workers", 8usize);
+    let chunk_kb: u64 = flag(flags, "chunk-size", 16u64);
+    let mut sim = SimBackend::default();
+    sim.cfg.workers = workers;
     let mut cluster = ClusterBackend::default();
     cluster.block_size = flag::<u64>(flags, "cluster-block-kb", 64) << 10;
     cluster.data_backend = flag::<String>(flags, "data-backend", "native".into());
+    cluster.workers = workers;
+    cluster.chunk_size = chunk_kb.max(1) << 10;
     let backend_sel: String = flag(flags, "backend", "both".into());
     let mut backends: Vec<&dyn RecoveryBackend> = Vec::new();
     if backend_sel == "sim" || backend_sel == "both" {

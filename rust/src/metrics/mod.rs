@@ -61,6 +61,16 @@ pub fn throughput_mb_s(bytes: u64, secs: f64) -> f64 {
     bytes as f64 / secs / 1e6
 }
 
+/// Per-worker utilization: each worker's busy seconds as a fraction of the
+/// wall clock, clamped to [0, 1] (timer jitter can push busy ≳ wall).
+/// Used by the recovery executor's `ExecStats` and `d3ctl scenario`.
+pub fn utilization(busy_s: &[f64], wall_s: f64) -> Vec<f64> {
+    if wall_s <= 0.0 {
+        return vec![0.0; busy_s.len()];
+    }
+    busy_s.iter().map(|b| (b / wall_s).clamp(0.0, 1.0)).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,5 +110,14 @@ mod tests {
     fn throughput() {
         assert!((throughput_mb_s(32_000_000, 2.0) - 16.0).abs() < 1e-9);
         assert_eq!(throughput_mb_s(1, 0.0), 0.0);
+    }
+
+    #[test]
+    fn utilization_fractions() {
+        let u = utilization(&[1.0, 0.5, 2.5], 2.0);
+        assert!((u[0] - 0.5).abs() < 1e-12);
+        assert!((u[1] - 0.25).abs() < 1e-12);
+        assert_eq!(u[2], 1.0, "clamped");
+        assert_eq!(utilization(&[1.0, 1.0], 0.0), vec![0.0, 0.0]);
     }
 }

@@ -1,14 +1,17 @@
 //! Failure recovery (paper §5): minimum-cross-rack repair plans for D³,
 //! the RDD/HDD baseline plans, degraded reads, full-node recovery, the
-//! §5.3 layout-maintenance migration, and the multi-erasure planner
-//! ([`multi`]) behind the scenario engine (DESIGN.md §4–§5).
+//! §5.3 layout-maintenance migration, the multi-erasure planner
+//! ([`multi`]) behind the scenario engine (DESIGN.md §4–§5), and the
+//! pipelined chunk-parallel plan executor ([`executor`], DESIGN.md §8).
 
+pub mod executor;
 pub mod migration;
 pub mod mu;
 pub mod multi;
 pub mod node;
 pub mod plan;
 
-pub use multi::{scenario_recovery_plans, stripe_repair_plans};
+pub use executor::{execute_plans, ChunkRunner, ExecStats, ExecutorConfig};
+pub use multi::{execute_plan_bytes, scenario_recovery_plans, stripe_repair_plans};
 pub use node::node_recovery_plans;
 pub use plan::{plan_repair, Aggregation, RepairPlan};

@@ -28,12 +28,13 @@ use std::collections::HashSet;
 use anyhow::{bail, Result};
 
 use crate::codes::{CodeSpec, LrcCode, RsCode};
+use crate::gf;
 use crate::gf::matrix::express_in_rows;
 use crate::placement::{Placement, StripePlacement};
 use crate::topology::{ClusterSpec, Location};
 use crate::util::rng::splitmix64;
 
-use super::plan::{plan_repair, RepairPlan};
+use super::plan::{plan_coefficients, plan_repair, RepairPlan};
 
 /// Repair plans for every block lost to `failed` among stripes
 /// `0..stripes`, ordered by stripe id. Generalizes
@@ -164,6 +165,38 @@ pub fn stripe_repair_plans(
     Ok(out)
 }
 
+/// Numerically execute a plan over in-memory stripe shards (`shards[b]` =
+/// bytes of block `b`): stage the inner-rack aggregations exactly as the
+/// chunked executor does — per-group partial multiply-accumulates, then a
+/// unit-coefficient final combine — through the shared slice kernel
+/// ([`gf::SliceTable`] via [`gf::combine_into`]). This is the
+/// network-free twin of the cluster data path, used by the property suite
+/// and the round-trip tests below.
+pub fn execute_plan_bytes(
+    code: &CodeSpec,
+    plan: &RepairPlan,
+    shards: &[Vec<u8>],
+) -> Vec<u8> {
+    let sources = plan.source_blocks();
+    let coeffs = plan_coefficients(code, plan);
+    debug_assert_eq!(sources.len(), coeffs.len());
+    let coeff_of =
+        |b: usize| coeffs[sources.binary_search(&b).expect("source present")];
+    let width = sources.first().map_or(0, |&b| shards[b].len());
+    let mut acc = vec![0u8; width];
+    for agg in &plan.aggregations {
+        let mut partial = vec![0u8; width];
+        for &(b, _) in &agg.inputs {
+            gf::combine_into(&mut partial, coeff_of(b), &shards[b]);
+        }
+        gf::combine_into(&mut acc, 1, &partial);
+    }
+    for &(b, _) in &plan.direct {
+        gf::combine_into(&mut acc, coeff_of(b), &shards[b]);
+    }
+    acc
+}
+
 /// Deterministic fallback target: scan the cluster from a (sid, block)-keyed
 /// start offset for a node that is alive, unused by the stripe's surviving
 /// blocks, not already assigned to another recovered block of this stripe,
@@ -254,15 +287,17 @@ mod tests {
         all
     }
 
-    /// Execute a plan numerically: combine the source shards with the
-    /// plan's coefficients (aggregation splits are linear, so the flat
-    /// combine equals the staged one).
+    /// Execute a plan numerically through the staged
+    /// [`execute_plan_bytes`] path, and cross-check it against the flat
+    /// combine (aggregation splits are linear, so they must agree).
     fn execute(plan: &RepairPlan, code: &CodeSpec, all: &[Vec<u8>]) -> Vec<u8> {
+        let staged = execute_plan_bytes(code, plan, all);
         let sources = plan.source_blocks();
         let coeffs = plan_coefficients(code, plan);
         assert_eq!(sources.len(), coeffs.len());
         let shards: Vec<&[u8]> = sources.iter().map(|&b| all[b].as_slice()).collect();
-        gf::combine(&coeffs, &shards)
+        assert_eq!(staged, gf::combine(&coeffs, &shards), "staged != flat combine");
+        staged
     }
 
     #[test]

@@ -234,6 +234,9 @@ pub struct ScenarioOutcome {
     pub degraded_read_mean_s: Option<f64>,
     /// Front-end workload completion time (frontend-mix kind only).
     pub frontend_seconds: Option<f64>,
+    /// Per-worker busy fraction of the recovery executor (cluster backend
+    /// recovery kinds only; the fluid backend has no discrete workers).
+    pub worker_utilization: Option<Vec<f64>>,
 }
 
 impl ScenarioOutcome {
@@ -274,6 +277,11 @@ impl ScenarioOutcome {
         }
         if let Some(f) = self.frontend_seconds {
             println!("  front-end workload completion: {f:.1} s");
+        }
+        if let Some(u) = &self.worker_utilization {
+            let cells: Vec<String> =
+                u.iter().map(|x| format!("{:.0}%", x * 100.0)).collect();
+            println!("  per-worker utilization: {}", cells.join(" "));
         }
     }
 }

@@ -30,11 +30,21 @@ pub struct RecoveryConfig {
     /// if false, a completed job is immediately replaced (continuous
     /// admission — ablation knob).
     pub batch_sync: bool,
+    /// Global cap on concurrently admitted repair jobs, 0 = unbounded —
+    /// the fluid analogue of the cluster executor's bounded worker pool
+    /// (DESIGN.md §8), so cross-backend recovery-time comparisons run both
+    /// backends at the same concurrency.
+    pub workers: usize,
 }
 
 impl Default for RecoveryConfig {
     fn default() -> RecoveryConfig {
-        RecoveryConfig { streams_per_node: 8, batch_sync: true, task_overhead_s: 0.45 }
+        RecoveryConfig {
+            streams_per_node: 8,
+            batch_sync: true,
+            task_overhead_s: 0.45,
+            workers: 0,
+        }
     }
 }
 
@@ -175,7 +185,11 @@ pub fn run_recovery_multi(
         .iter()
         .map(|p| (engine.add_job(plan_to_job_with(p, &rt, spec, cfg.task_overhead_s)), p.writer))
         .collect();
-    let wave_budget = cfg.streams_per_node * spec.cluster.node_count();
+    let mut wave_budget = cfg.streams_per_node * spec.cluster.node_count();
+    if cfg.workers > 0 {
+        // bounded worker pool: a wave can't run more jobs than workers
+        wave_budget = wave_budget.min(cfg.workers);
+    }
 
     if cfg.batch_sync {
         // barrier-synchronized waves in stripe order (batch by batch);
@@ -210,9 +224,11 @@ pub fn run_recovery_multi(
             engine.run_to_completion();
         }
     } else {
-        // continuous admission with per-writer stream limits
+        // continuous admission with per-writer stream limits and the
+        // global worker-pool cap
         let mut inflight: std::collections::HashMap<Location, usize> =
             std::collections::HashMap::new();
+        let mut inflight_total = 0usize;
         let mut queue: std::collections::VecDeque<(u32, Location)> =
             jobs.iter().copied().collect();
         let writer_of: std::collections::HashMap<u32, Location> =
@@ -221,14 +237,17 @@ pub fn run_recovery_multi(
             std::collections::VecDeque::new();
         let mut admit = |engine: &mut Engine,
                          queue: &mut std::collections::VecDeque<(u32, Location)>,
-                         inflight: &mut std::collections::HashMap<Location, usize>| {
+                         inflight: &mut std::collections::HashMap<Location, usize>,
+                         inflight_total: &mut usize| {
             let mut n = queue.len();
             while n > 0 {
                 n -= 1;
                 let (job, writer) = queue.pop_front().unwrap();
                 let count = inflight.entry(writer).or_insert(0);
-                if *count < cfg.streams_per_node {
+                let pool_free = cfg.workers == 0 || *inflight_total < cfg.workers;
+                if pool_free && *count < cfg.streams_per_node {
                     *count += 1;
+                    *inflight_total += 1;
                     engine.start_job(job);
                 } else {
                     deferred.push_back((job, writer));
@@ -236,14 +255,15 @@ pub fn run_recovery_multi(
             }
             std::mem::swap(queue, &mut deferred);
         };
-        admit(&mut engine, &mut queue, &mut inflight);
+        admit(&mut engine, &mut queue, &mut inflight, &mut inflight_total);
         while let Some(done) = engine.run_until_event() {
             for job in done {
                 if let Some(writer) = writer_of.get(&job) {
                     *inflight.get_mut(writer).unwrap() -= 1;
+                    inflight_total -= 1;
                 }
             }
-            admit(&mut engine, &mut queue, &mut inflight);
+            admit(&mut engine, &mut queue, &mut inflight, &mut inflight_total);
         }
         assert!(queue.is_empty(), "jobs left unadmitted");
     }
@@ -389,6 +409,7 @@ impl crate::scenario::RecoveryBackend for SimBackend {
                     planned_cross_rack_blocks: planned_cross_rack_blocks(&plans),
                     degraded_read_mean_s: Some(mean),
                     frontend_seconds: None,
+                    worker_utilization: None,
                 })
             }
             ScenarioKind::FrontendMix { workload } => {
@@ -445,6 +466,7 @@ fn sim_outcome(
         planned_cross_rack_blocks: crate::scenario::planned_cross_rack_blocks(plans),
         degraded_read_mean_s: None,
         frontend_seconds,
+        worker_utilization: None,
     }
 }
 
@@ -593,8 +615,45 @@ mod tests {
         let p = D3Placement::new(CodeSpec::Rs { k: 2, m: 1 }, s.cluster).unwrap();
         let failed = Location::new(0, 0);
         let plans = node_recovery_plans(&p, 50, failed, 0);
-        let fast = run_recovery(&s, &plans, failed, RecoveryConfig { streams_per_node: 8, batch_sync: true, task_overhead_s: 0.45 });
-        let slow = run_recovery(&s, &plans, failed, RecoveryConfig { streams_per_node: 1, batch_sync: true, task_overhead_s: 0.45 });
+        let fast = run_recovery(
+            &s,
+            &plans,
+            failed,
+            RecoveryConfig { streams_per_node: 8, ..RecoveryConfig::default() },
+        );
+        let slow = run_recovery(
+            &s,
+            &plans,
+            failed,
+            RecoveryConfig { streams_per_node: 1, ..RecoveryConfig::default() },
+        );
         assert!(slow.makespan >= fast.makespan, "more streams can't be slower");
+    }
+
+    #[test]
+    fn worker_pool_cap_slows_or_matches_unbounded() {
+        let s = spec();
+        let p = D3Placement::new(CodeSpec::Rs { k: 2, m: 1 }, s.cluster).unwrap();
+        let failed = Location::new(0, 0);
+        let plans = node_recovery_plans(&p, 60, failed, 0);
+        let unbounded = run_recovery(&s, &plans, failed, RecoveryConfig::default());
+        let pooled = run_recovery(
+            &s,
+            &plans,
+            failed,
+            RecoveryConfig { workers: 2, ..RecoveryConfig::default() },
+        );
+        assert!(
+            pooled.makespan >= unbounded.makespan,
+            "2-worker pool {} s beat unbounded {} s",
+            pooled.makespan,
+            unbounded.makespan
+        );
+        // both rebuild everything and move identical cross-rack bytes
+        assert_eq!(pooled.blocks, unbounded.blocks);
+        let total = |o: &RecoveryOutcome| -> f64 {
+            o.rack_loads.iter().map(|&(u, d)| u + d).sum()
+        };
+        assert!((total(&pooled) - total(&unbounded)).abs() < 1.0);
     }
 }

@@ -1,0 +1,127 @@
+//! Concurrency soundness of the pipelined recovery executor (DESIGN.md
+//! §8): scheduling may reorder chunk tasks freely, but for a fixed seed
+//! the recovered bytes must be byte-identical and the cross-rack traffic
+//! accounting must not drift, for *any* worker count or chunk size.
+
+use std::sync::Arc;
+
+use d3ec::cluster::MiniCluster;
+use d3ec::codes::CodeSpec;
+use d3ec::placement::{D3Placement, Placement};
+use d3ec::recovery::{node_recovery_plans, ExecutorConfig};
+use d3ec::topology::{Location, SystemSpec};
+
+const SEED: u64 = 11;
+const STRIPES: u64 = 24;
+const BLOCK: usize = 64 * 1024;
+
+fn spec() -> SystemSpec {
+    let mut s = SystemSpec::paper_default();
+    s.block_size = BLOCK as u64;
+    s.net.inner_mbps = 8000.0; // keep the test fast
+    s.net.cross_mbps = 1600.0;
+    s
+}
+
+fn data_for(sid: u64, k: usize) -> Vec<Vec<u8>> {
+    (0..k)
+        .map(|b| {
+            let mut v = vec![0u8; BLOCK];
+            let mut s = sid.wrapping_mul(0x51ed).wrapping_add(b as u64) | 1;
+            for byte in v.iter_mut() {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                *byte = (s >> 24) as u8;
+            }
+            v
+        })
+        .collect()
+}
+
+/// Run one full node recovery with the given executor config and return
+/// `(recovered (sid, block, writer, bytes) sorted, rack byte snapshot,
+/// per-worker utilization)`.
+fn recover_fixture(
+    cfg: ExecutorConfig,
+) -> (Vec<(u64, usize, Location, Vec<u8>)>, Vec<(u64, u64)>, Vec<f64>) {
+    let spec = spec();
+    let policy: Arc<dyn Placement> =
+        Arc::new(D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, spec.cluster).unwrap());
+    let cluster = MiniCluster::new(spec, policy.clone(), "native", SEED).unwrap();
+    for sid in 0..STRIPES {
+        cluster.write_stripe(sid, &data_for(sid, 3)).unwrap();
+    }
+    let failed = Location::new(2, 1);
+    cluster.fail_node(failed);
+    let plans = node_recovery_plans(policy.as_ref(), STRIPES, failed, SEED);
+    assert!(!plans.is_empty(), "failed node holds no blocks");
+    let lost: Vec<(u64, usize)> =
+        plans.iter().map(|p| (p.stripe, p.failed_block)).collect();
+    let stats = cluster.recover_with_plans_cfg(plans, cfg, &[failed.rack]).unwrap();
+    assert_eq!(stats.blocks, lost.len());
+    let mut recovered = Vec::with_capacity(lost.len());
+    for (sid, b) in lost {
+        let loc = cluster.locate(sid, b);
+        assert_ne!(loc, failed, "metadata still points at the dead node");
+        // reading at the block's own location moves no bytes, so the
+        // snapshot below still covers exactly writes + recovery
+        let bytes = cluster.read_block(sid, b, loc).unwrap();
+        recovered.push((sid, b, loc, bytes));
+    }
+    recovered.sort_by_key(|&(sid, b, _, _)| (sid, b));
+    (recovered, cluster.rack_byte_snapshot(), stats.worker_utilization)
+}
+
+#[test]
+fn worker_counts_1_2_8_recover_identical_bytes_and_metrics() {
+    let base = ExecutorConfig { chunk_size: 16 << 10, ..ExecutorConfig::default() };
+    let (blocks1, snap1, util1) = recover_fixture(ExecutorConfig { workers: 1, ..base });
+    assert_eq!(util1.len(), 1);
+    for workers in [2usize, 8] {
+        let (blocks, snap, util) = recover_fixture(ExecutorConfig { workers, ..base });
+        assert_eq!(util.len(), workers);
+        assert!(util.iter().all(|&u| (0.0..=1.0).contains(&u)));
+        assert_eq!(
+            blocks, blocks1,
+            "{workers} workers recovered different bytes/targets than 1 worker"
+        );
+        assert_eq!(
+            snap, snap1,
+            "{workers} workers drifted the rack byte accounting"
+        );
+    }
+}
+
+#[test]
+fn chunk_sizes_recover_identical_bytes_and_metrics() {
+    // whole-block, aligned sub-chunks, and a deliberately odd chunk size
+    let base = ExecutorConfig { workers: 4, ..ExecutorConfig::default() };
+    let (blocks_whole, snap_whole, _) =
+        recover_fixture(ExecutorConfig { chunk_size: BLOCK as u64, ..base });
+    for chunk in [16u64 << 10, 7 * 1024 + 13] {
+        let (blocks, snap, _) =
+            recover_fixture(ExecutorConfig { chunk_size: chunk, ..base });
+        assert_eq!(blocks, blocks_whole, "chunk={chunk} changed recovered bytes");
+        assert_eq!(snap, snap_whole, "chunk={chunk} changed byte accounting");
+    }
+}
+
+#[test]
+fn recovered_bytes_match_the_originals() {
+    // determinism alone could hide a consistently-wrong decode; pin the
+    // content against the written data (data blocks) too
+    let (blocks, _, _) = recover_fixture(ExecutorConfig {
+        workers: 8,
+        chunk_size: 8 << 10,
+        ..ExecutorConfig::default()
+    });
+    let mut data_checked = 0usize;
+    for (sid, b, _, bytes) in blocks {
+        if b < 3 {
+            assert_eq!(bytes, data_for(sid, 3)[b], "sid={sid} b={b}");
+            data_checked += 1;
+        }
+    }
+    assert!(data_checked > 0, "fixture never lost a data block");
+}

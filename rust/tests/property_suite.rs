@@ -1,12 +1,17 @@
 //! Randomized cross-configuration property suite (hand-rolled in lieu of
 //! proptest, which is unavailable offline): sweeps random valid
 //! (code, cluster) configurations and asserts the coordinator invariants
-//! the paper's theorems promise, for every policy.
+//! the paper's theorems promise, for every policy. The seed-driven
+//! generator below samples full (racks, nodes/rack, k, m, block size,
+//! policy) tuples — ≥ 200 of them — and checks placement uniformity,
+//! round-trip decode through the shared slice kernel, and plan validity.
 
-use d3ec::codes::CodeSpec;
+use d3ec::codes::{CodeSpec, RsCode};
+use d3ec::metrics;
 use d3ec::placement::{
     D3LrcPlacement, D3Placement, HddPlacement, Placement, RddPlacement,
 };
+use d3ec::recovery::execute_plan_bytes;
 use d3ec::recovery::mu::mu_rs;
 use d3ec::recovery::plan::{plan_coefficients, plan_repair};
 use d3ec::topology::ClusterSpec;
@@ -41,6 +46,138 @@ fn random_rs_configs(count: usize, seed: u64) -> Vec<(usize, usize, usize, usize
         out.push((k, m, r, n));
     }
     out
+}
+
+/// Encode one full stripe (k data + m parity shards of `len` bytes).
+fn encode_stripe(k: usize, m: usize, len: usize, seed: u64) -> Vec<Vec<u8>> {
+    let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15) | 1;
+    let data: Vec<Vec<u8>> = (0..k)
+        .map(|_| {
+            (0..len)
+                .map(|_| {
+                    s ^= s << 13;
+                    s ^= s >> 7;
+                    s ^= s << 17;
+                    (s >> 24) as u8
+                })
+                .collect()
+        })
+        .collect();
+    let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+    let parity = RsCode::new(k, m).encode(&refs);
+    let mut all = data;
+    all.extend(parity);
+    all
+}
+
+/// Deterministic property harness over ≥ 200 sampled configurations of
+/// (racks, nodes/rack, k, m, block size, policy). For every sample:
+///
+/// * **placement uniformity** — per-node block counts over a policy-
+///   appropriate stripe window (one full period for D³, a 600-stripe
+///   window for the randomized baselines) stay within a λ bound: D³'s
+///   deterministic balance must beat the random policies' tail by a wide
+///   margin;
+/// * **round-trip decode** — a seeded failed block is rebuilt from real
+///   encoded bytes at the sampled block size via `execute_plan_bytes`
+///   (the slice-kernel twin of the cluster data path) and must match;
+/// * **plan validity** — exactly k distinct sources, failed block never
+///   read, decode coefficients exist.
+#[test]
+fn seeded_sweep_200_configs_uniformity_decode_validity() {
+    let mut rng = Rng::new(0xd3c0de);
+    let mut sampled = 0usize;
+    let mut attempts = 0usize;
+    while sampled < 200 {
+        attempts += 1;
+        assert!(attempts < 100_000, "generator starved after {sampled} configs");
+        let k = 2 + rng.below(7); // 2..=8
+        let m = 1 + rng.below(3); // 1..=3
+        let len_blocks = k + m;
+        let ng = len_blocks.div_ceil(m);
+        let size_max = len_blocks.div_ceil(ng);
+        let n_candidates: Vec<usize> = (size_max.max(2)..=9)
+            .filter(|&n| d3ec::oa::max_columns(n) >= ng)
+            .collect();
+        if n_candidates.is_empty() {
+            continue;
+        }
+        let n = *rng.choose(&n_candidates);
+        let r_candidates: Vec<usize> = (ng + 1..=13)
+            .filter(|&r| d3ec::oa::max_columns(r) >= ng + 1 && r * m >= len_blocks)
+            .collect();
+        if r_candidates.is_empty() {
+            continue;
+        }
+        let r = *rng.choose(&r_candidates);
+        let block_len = *rng.choose(&[64usize, 128, 512, 2048]);
+        let code = CodeSpec::Rs { k, m };
+        let cluster = ClusterSpec::new(r, n);
+        if cluster.node_count() < len_blocks + 1 {
+            continue; // recovery targets need a spare node
+        }
+        // (policy, uniformity window, per-node λ bound)
+        let (policy, window, lambda_bound): (Box<dyn Placement>, u64, f64) =
+            match rng.below(3) {
+                0 => {
+                    let p = D3Placement::new(code, cluster)
+                        .unwrap_or_else(|e| panic!("({k},{m}) on {r}x{n}: {e}"));
+                    // one full period: the rack rotation must have cycled
+                    // for the paper's uniformity theorem to apply
+                    let w = (p.region_cycle() * p.region_size()) as u64;
+                    (Box::new(p), w, 0.5)
+                }
+                // idealized IID RDD: the calibrated-skew default is
+                // *designed* to exceed any uniformity bound (Fig 8)
+                1 => (
+                    Box::new(RddPlacement::uniform(code, cluster, sampled as u64)),
+                    600,
+                    1.6,
+                ),
+                _ => (
+                    Box::new(HddPlacement::new(code, cluster, sampled as u32)),
+                    600,
+                    1.6,
+                ),
+            };
+        // --- placement uniformity
+        let mut per_node = vec![0f64; cluster.node_count()];
+        for sid in 0..window {
+            for &loc in &policy.stripe(sid).locs {
+                per_node[cluster.flat(loc)] += 1.0;
+            }
+        }
+        let lam = metrics::lambda(&per_node);
+        assert!(
+            lam <= lambda_bound,
+            "{} ({k},{m}) on {r}x{n}: per-node λ {lam:.3} > {lambda_bound}",
+            policy.name()
+        );
+        // --- structural invariants + plan validity on a seeded stripe
+        let sid = rng.below(window as usize) as u64;
+        let sp = policy.stripe(sid);
+        assert!(sp.nodes_distinct(), "{} sid={sid}", policy.name());
+        assert!(sp.rack_limit_ok(m), "{} sid={sid}", policy.name());
+        let failed_block = rng.below(len_blocks);
+        let plan = plan_repair(policy.as_ref(), sid, failed_block, sampled as u64);
+        assert_eq!(plan.blocks_read(), k, "{} sid={sid}", policy.name());
+        let srcs = plan.source_blocks();
+        assert!(!srcs.contains(&failed_block), "plan reads the failed block");
+        let distinct: std::collections::HashSet<usize> = srcs.iter().copied().collect();
+        assert_eq!(distinct.len(), k, "duplicate sources");
+        let coeffs = plan_coefficients(&code, &plan);
+        assert_eq!(coeffs.len(), k, "undecodable source set");
+        // --- round-trip decode at the sampled block size
+        let all = encode_stripe(k, m, block_len, 0x5eed ^ sampled as u64);
+        let rebuilt = execute_plan_bytes(&code, &plan, &all);
+        assert_eq!(
+            rebuilt, all[failed_block],
+            "{} ({k},{m}) {r}x{n} sid={sid} b={failed_block} len={block_len}",
+            policy.name()
+        );
+        sampled += 1;
+    }
+    assert!(sampled >= 200);
 }
 
 #[test]
