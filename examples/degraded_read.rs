@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
         for sid in 0..samples {
             let data: Vec<Vec<u8>> =
                 (0..6).map(|b| vec![(sid as u8) ^ (b as u8 * 7); spec.block_size as usize]).collect();
-            cluster.write_stripe(sid, &data)?;
+            cluster.write_stripe(sid, data.clone())?;
             let victim = cluster.locate(sid, 0);
             cluster.fail_node(victim);
             let (got, lat) = cluster.degraded_read(sid, 0, Location::new(7, 1))?;

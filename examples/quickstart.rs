@@ -50,8 +50,9 @@ fn main() -> anyhow::Result<()> {
         };
         let cluster = MiniCluster::new(spec, policy, backend, 42)?;
 
-        // write real data (32 concurrent clients)
-        let originals = cluster.write_stripes_parallel(stripes, 32, |sid| {
+        // write real data (32 concurrent clients); stripes move straight
+        // into the cluster, the verification pass regenerates them
+        let gen = |sid: u64| -> Vec<Vec<u8>> {
             (0..3u64)
                 .map(|b| {
                     let mut v = vec![0u8; spec.block_size as usize];
@@ -65,7 +66,9 @@ fn main() -> anyhow::Result<()> {
                     v
                 })
                 .collect()
-        })?;
+        };
+        cluster.write_stripes_parallel(stripes, 32, &gen)?;
+        let originals: Vec<Vec<Vec<u8>>> = (0..stripes).map(|sid| gen(sid)).collect();
 
         // kill a node with a typical block load (fair comparison: RDD's
         // weighted placement loads nodes unevenly), recover

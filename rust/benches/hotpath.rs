@@ -1,13 +1,19 @@
-//! Hot-path microbenchmarks (§Perf): GF combine throughput native vs PJRT,
-//! the two-nibble slice MAC kernel vs a naive per-byte reference, the
-//! pipelined cluster recovery executor at 1 vs 8 workers, matrix
-//! inversion, placement lookups (raw OA arithmetic vs the table-backed
-//! cache), and simulator event rate.
-use d3ec::cluster::MiniCluster;
+//! Hot-path microbenchmarks (§Perf, DESIGN.md §9): the fused GF combine
+//! engine vs its scalar/sequential baselines, the zero-allocation
+//! pipelined cluster recovery executor at 1 vs 8 workers (both via
+//! [`d3ec::perf`], shared with `d3ctl bench`), plus GF combine native vs
+//! PJRT, matrix/placement control-path lookups, and simulator event rate.
+//!
+//! `cargo bench --bench hotpath -- [--quick] [--json <path>]`
+//!
+//! `--json` writes the machine-readable `{bench_name: ns_per_byte}`
+//! report (the perf-trajectory `BENCH_*.json` format); `--quick` is the
+//! reduced-iteration CI mode.
 use d3ec::codes::CodeSpec;
 use d3ec::gf;
+use d3ec::perf::{run_hotpath, BenchOpts};
 use d3ec::placement::{D3Placement, Placement, PlacementTable};
-use d3ec::recovery::{node_recovery_plans, ExecutorConfig};
+use d3ec::recovery::node_recovery_plans;
 use d3ec::runtime::Coder;
 use d3ec::sim::recovery::{run_recovery, RecoveryConfig};
 use d3ec::topology::{Location, SystemSpec};
@@ -26,7 +32,30 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
 }
 
 fn main() {
-    println!("=== hot path: GF combine (k=6, 16 MB blocks) ===");
+    // args after `cargo bench --bench hotpath --`
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .map(std::path::PathBuf::from);
+
+    // the fused-kernel + cluster-executor suite (shared with `d3ctl bench`)
+    let report = run_hotpath(&BenchOpts { quick });
+    if let Some(r) = report.ratio("combine_k6_sequential", "combine_k6_fused") {
+        println!("headline: fused k=6 combine is {r:.2}x the sequential path");
+    }
+    if let Some(path) = &json_path {
+        report.write_json(path).expect("write bench json");
+        println!("wrote {} bench rows to {}", report.ns_per_byte.len(), path.display());
+    }
+    if quick {
+        // CI quick mode stops at the machine-readable suite
+        return;
+    }
+
+    println!("\n=== hot path: GF combine native vs PJRT (k=6, 16 MB blocks) ===");
     let len = 16 << 20;
     let shards: Vec<Vec<u8>> = (0..6).map(|i| vec![i as u8 + 1; len]).collect();
     let refs: Vec<&[u8]> = shards.iter().map(|v| v.as_slice()).collect();
@@ -36,29 +65,30 @@ fn main() {
     let per = bench("native combine", 5, || {
         let _ = native.combine(&coeffs, &refs).unwrap();
     });
-    println!("  native: {:.0} MB/s output, {:.0} MB/s streamed", len as f64 / per / 1e6, (len * 6) as f64 / per / 1e6);
+    println!(
+        "  native: {:.0} MB/s output, {:.0} MB/s streamed",
+        len as f64 / per / 1e6,
+        (len * 6) as f64 / per / 1e6
+    );
 
     match Coder::pjrt() {
         Ok(pjrt) => {
             let per = bench("pjrt combine", 5, || {
                 let _ = pjrt.combine(&coeffs, &refs).unwrap();
             });
-            println!("  pjrt: {:.0} MB/s output, {:.0} MB/s streamed", len as f64 / per / 1e6, (len * 6) as f64 / per / 1e6);
+            println!(
+                "  pjrt: {:.0} MB/s output, {:.0} MB/s streamed",
+                len as f64 / per / 1e6,
+                (len * 6) as f64 / per / 1e6
+            );
         }
         Err(e) => eprintln!("pjrt skipped: {e}"),
     }
 
-    println!("\n=== hot path: xor fast path (c=1) ===");
-    let per = bench("xor combine (k=2)", 10, || {
-        let _ = gf::combine(&[1, 1], &[&refs[0], &refs[1]]);
-    });
-    println!("  {:.0} MB/s output", len as f64 / per / 1e6);
-
     println!("\n=== hot path: slice-table MAC kernel vs per-byte reference ===");
     let mut acc = vec![0u8; len];
-    let table = gf::SliceTable::new(0x8e);
-    let per_slice = bench("slice mac (c=0x8e, 16 MB)", 10, || {
-        table.mac(&mut acc, &refs[0]);
+    let per_slice = bench("slice mac (c=0x8e, 16 MB, cached table)", 10, || {
+        gf::kernel::table(0x8e).mac(&mut acc, &refs[0]);
     });
     println!("  slice kernel: {:.0} MB/s streamed", len as f64 / per_slice / 1e6);
     let per_ref = bench("per-byte gf::mul reference", 5, || {
@@ -100,63 +130,6 @@ fn main() {
     bench("node_recovery_plans(1000 stripes, table)", 5, || {
         let _ = std::hint::black_box(node_recovery_plans(&table, 1000, Location::new(0, 0), 0));
     });
-
-    println!("\n=== cluster: pipelined recovery executor (1 vs 8 workers) ===");
-    // Acceptance check for the executor: same seed and plan set, only the
-    // worker count changes; 8 workers must be measurably faster and the
-    // recovered bytes identical (the byte identity is pinned by
-    // tests/executor_concurrency.rs).
-    // 1 MB blocks over a 20 MB/s cross-rack port (1 MB token burst): every
-    // cross-rack block drains its port's bucket, so a serial executor
-    // sleeps on each transfer while 8 workers overlap the sleeps across
-    // ports — the speedup measures transfer pipelining, not core count.
-    let recover_wall = |workers: usize| -> f64 {
-        let mut cspec = SystemSpec::paper_default();
-        cspec.block_size = 1 << 20;
-        cspec.net.inner_mbps = 1600.0;
-        cspec.net.cross_mbps = 160.0;
-        let policy: Arc<dyn Placement> =
-            Arc::new(D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, cspec.cluster).unwrap());
-        let cluster = MiniCluster::new(cspec, policy.clone(), "native", 5).unwrap();
-        let stripes = 40u64;
-        cluster
-            .write_stripes_parallel(stripes, 8, |sid| {
-                (0..3)
-                    .map(|b| {
-                        let mut v = vec![0u8; 1 << 20];
-                        let mut s = sid.wrapping_mul(0x9e37).wrapping_add(b as u64) | 1;
-                        for byte in v.iter_mut() {
-                            s ^= s << 13;
-                            s ^= s >> 7;
-                            s ^= s << 17;
-                            *byte = (s >> 24) as u8;
-                        }
-                        v
-                    })
-                    .collect()
-            })
-            .unwrap();
-        let failed = Location::new(1, 0);
-        cluster.fail_node(failed);
-        let plans = node_recovery_plans(policy.as_ref(), stripes, failed, 5);
-        let cfg = ExecutorConfig { workers, chunk_size: 256 << 10, ..Default::default() };
-        let stats = cluster.recover_with_plans_cfg(plans, cfg, &[failed.rack]).unwrap();
-        println!(
-            "  {} worker(s): {} blocks / {} chunks in {:.0} ms → {:.1} MB/s, mean util {:.0}%",
-            workers,
-            stats.blocks,
-            stats.chunks,
-            stats.wall.as_secs_f64() * 1e3,
-            stats.throughput_mb_s,
-            stats.worker_utilization.iter().sum::<f64>()
-                / stats.worker_utilization.len().max(1) as f64
-                * 100.0
-        );
-        stats.wall.as_secs_f64()
-    };
-    let w1 = recover_wall(1);
-    let w8 = recover_wall(8);
-    println!("  8-worker speedup over 1 worker: {:.2}x", w1 / w8);
 
     println!("\n=== simulator: full recovery run (1000 stripes) ===");
     let plans = node_recovery_plans(&policy, 1000, Location::new(0, 0), 0);

@@ -21,8 +21,9 @@ use anyhow::{anyhow, bail, Context};
 
 use crate::codes::CodeSpec;
 use crate::gf;
+use crate::metrics::PoolStats;
 use crate::placement::Placement;
-use crate::recovery::executor::{execute_plans, ChunkRunner, ExecutorConfig};
+use crate::recovery::executor::{execute_plans, ChunkRunner, ExecutorConfig, Scratch};
 use crate::recovery::plan::{plan_coefficients, plan_degraded_read, plan_repair, RepairPlan};
 use crate::topology::{Location, SystemSpec};
 use crate::util::Rng;
@@ -46,6 +47,8 @@ pub struct ClusterRecoveryStats {
     pub chunks: usize,
     /// Per-worker busy fraction of the recovery wall clock.
     pub worker_utilization: Vec<f64>,
+    /// Scratch-pool hit/miss totals of the executor's worker pools.
+    pub scratch: PoolStats,
 }
 
 /// The in-process cluster.
@@ -129,24 +132,22 @@ impl MiniCluster {
     /// Client write path: encode `data` (k shards) and distribute the
     /// stripe per the placement policy. The client is modeled at the
     /// location of block 0 (HDFS writes the first replica locally).
-    pub fn write_stripe(&self, sid: u64, data: &[Vec<u8>]) -> anyhow::Result<()> {
+    ///
+    /// Takes the data shards by value: they are moved through the coder
+    /// service (one `Encode` round trip computes every parity row) and
+    /// then moved into the node stores — ingest copies **zero** blocks.
+    /// Callers that need the bytes afterwards clone at the call site or
+    /// regenerate from their deterministic generator.
+    pub fn write_stripe(&self, sid: u64, data: Vec<Vec<u8>>) -> anyhow::Result<()> {
         let code = self.policy.code();
         if data.len() != code.k() {
             bail!("expected {} data shards, got {}", code.k(), data.len());
         }
-        let refs: Vec<Vec<u8>> = data.to_vec();
-        let parity_rows = parity_matrix(&code);
-        let mut blocks = refs;
-        for i in 0..parity_rows.rows() {
-            let p = self
-                .coder
-                .combine(parity_rows.row(i).to_vec(), blocks[..code.k()].to_vec())
-                .context("encode")?;
-            blocks.push(p);
-        }
+        let (data, parity) =
+            self.coder.encode(parity_matrix(&code), data).context("encode")?;
         let sp = self.policy.stripe(sid);
         let client = sp.locs[0];
-        for (bi, bytes) in blocks.into_iter().enumerate() {
+        for (bi, bytes) in data.into_iter().chain(parity).enumerate() {
             let dst = sp.locs[bi];
             self.transfer(client, dst, bytes.len() as u64);
             self.store_of(dst).lock().unwrap().insert((sid, bi), bytes);
@@ -155,16 +156,16 @@ impl MiniCluster {
     }
 
     /// Write many stripes concurrently (`workers` client threads) using a
-    /// data generator. Returns the generated stripes for verification.
+    /// data generator. Each generated stripe is moved straight into the
+    /// cluster; callers that verify afterwards re-invoke their (by
+    /// contract deterministic) generator instead of keeping a copy here.
     pub fn write_stripes_parallel(
         &self,
         stripes: u64,
         workers: usize,
         gen: impl Fn(u64) -> Vec<Vec<u8>> + Sync,
-    ) -> anyhow::Result<Vec<Vec<Vec<u8>>>> {
+    ) -> anyhow::Result<()> {
         let next = std::sync::atomic::AtomicU64::new(0);
-        let out: Vec<Mutex<Option<Vec<Vec<u8>>>>> =
-            (0..stripes).map(|_| Mutex::new(None)).collect();
         let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
         std::thread::scope(|scope| {
             for _ in 0..workers.max(1) {
@@ -173,20 +174,18 @@ impl MiniCluster {
                     if sid >= stripes {
                         break;
                     }
-                    let data = gen(sid);
-                    if let Err(e) = self.write_stripe(sid, &data) {
+                    if let Err(e) = self.write_stripe(sid, gen(sid)) {
                         errors.lock().unwrap().push(e.to_string());
                         break;
                     }
-                    *out[sid as usize].lock().unwrap() = Some(data);
                 });
             }
         });
-        let errs = errors.lock().unwrap();
+        let errs = errors.into_inner().unwrap();
         if !errs.is_empty() {
             bail!("write errors: {}", errs.join("; "));
         }
-        Ok(out.into_iter().map(|m| m.into_inner().unwrap().unwrap()).collect())
+        Ok(())
     }
 
     /// Plain read of a healthy block at `client`.
@@ -226,17 +225,20 @@ impl MiniCluster {
     }
 
     /// Fetch bytes `[off, off + len)` of a source block to `to` — the
-    /// executor's chunk-granular read + throttled transfer.
-    fn fetch_chunk(
+    /// executor's chunk-granular read + throttled transfer. The bytes
+    /// land in `buf` (cleared first), so a pooled scratch buffer can be
+    /// reused across fetches instead of allocating per chunk.
+    fn fetch_chunk_into(
         &self,
         sid: u64,
         block: usize,
         off: u64,
         len: usize,
         to: Location,
-    ) -> anyhow::Result<Vec<u8>> {
+        buf: &mut Vec<u8>,
+    ) -> anyhow::Result<()> {
         let loc = self.locate(sid, block);
-        let data = {
+        {
             let store = self.store_of(loc).lock().unwrap();
             let blk = store
                 .get(&(sid, block))
@@ -249,10 +251,11 @@ impl MiniCluster {
                     blk.len()
                 );
             }
-            blk[off..off + len].to_vec()
-        };
+            buf.clear();
+            buf.extend_from_slice(&blk[off..off + len]);
+        }
         self.transfer(loc, to, len as u64);
-        Ok(data)
+        Ok(())
     }
 
     /// Execute one repair plan: inner-rack aggregation (D³) or direct
@@ -424,6 +427,7 @@ impl MiniCluster {
             lambda,
             chunks: stats.chunks,
             worker_utilization: stats.utilization(),
+            scratch: stats.scratch,
         })
     }
 
@@ -450,11 +454,14 @@ impl MiniCluster {
 }
 
 /// Chunk-level IO behind the pipelined executor: fetches source-chunk
-/// bytes through the gated, token-bucket-throttled links, runs the GF
-/// multiply-accumulate through the shared slice kernel
-/// ([`crate::gf::SliceTable`] via [`gf::combine_into`]), and persists
-/// finished blocks into the NameNode metadata. Decode coefficients are
-/// computed once per plan, not once per chunk.
+/// bytes through the gated, token-bucket-throttled links into pooled
+/// scratch buffers, runs ONE fused cache-blocked multiply-accumulate per
+/// aggregation group and per direct-source set
+/// ([`gf::combine_many_into`], DESIGN.md §9), and persists finished
+/// blocks into the NameNode metadata. Decode coefficients are computed
+/// once per plan, not once per chunk, and the steady-state chunk loop
+/// allocates nothing — every buffer cycles through the worker's
+/// [`Scratch`] pool.
 struct ChunkIo<'a> {
     cluster: &'a MiniCluster,
     /// Per-plan sorted source block indices (`RepairPlan::source_blocks`).
@@ -480,28 +487,40 @@ impl ChunkRunner for ChunkIo<'_> {
         plan: &RepairPlan,
         off: u64,
         len: usize,
+        scratch: &mut Scratch,
     ) -> anyhow::Result<Vec<u8>> {
         let sources = &self.sources[plan_idx];
         let coeffs = &self.coeffs[plan_idx];
         let coeff_of =
             |b: usize| coeffs[sources.binary_search(&b).expect("source present")];
-        let mut acc = vec![0u8; len];
+        let mut acc = scratch.take_zeroed(len);
+        let mut fetched = scratch.take_staging();
         for agg in &plan.aggregations {
             // inner-rack aggregation at `agg.at`, then ship ONE aggregated
             // chunk to the compute node
-            let mut partial = vec![0u8; len];
+            let mut partial = scratch.take_zeroed(len);
             for &(b, _) in &agg.inputs {
-                let chunk = self.cluster.fetch_chunk(plan.stripe, b, off, len, agg.at)?;
-                gf::combine_into(&mut partial, coeff_of(b), &chunk);
+                let mut buf = scratch.take();
+                self.cluster
+                    .fetch_chunk_into(plan.stripe, b, off, len, agg.at, &mut buf)?;
+                fetched.push((coeff_of(b), buf));
+            }
+            gf::combine_many_into(&mut partial, &fetched);
+            for (_, buf) in fetched.drain(..) {
+                scratch.put(buf);
             }
             self.cluster.transfer(agg.at, plan.compute_at, len as u64);
-            gf::combine_into(&mut acc, 1, &partial);
+            gf::xor_into(&mut acc, &partial);
+            scratch.put(partial);
         }
         for &(b, _) in &plan.direct {
-            let chunk =
-                self.cluster.fetch_chunk(plan.stripe, b, off, len, plan.compute_at)?;
-            gf::combine_into(&mut acc, coeff_of(b), &chunk);
+            let mut buf = scratch.take();
+            self.cluster
+                .fetch_chunk_into(plan.stripe, b, off, len, plan.compute_at, &mut buf)?;
+            fetched.push((coeff_of(b), buf));
         }
+        gf::combine_many_into(&mut acc, &fetched);
+        scratch.put_staging(fetched);
         Ok(acc)
     }
 
@@ -694,6 +713,7 @@ impl crate::scenario::RecoveryBackend for ClusterBackend {
                     degraded_read_mean_s: Some(mean),
                     frontend_seconds: None,
                     worker_utilization: None,
+                    scratch_pool: None,
                 })
             }
             ScenarioKind::FrontendMix { .. } => {
@@ -777,6 +797,7 @@ fn cluster_outcome(
         degraded_read_mean_s: None,
         frontend_seconds,
         worker_utilization: Some(stats.worker_utilization.clone()),
+        scratch_pool: Some(stats.scratch),
     }
 }
 
@@ -824,7 +845,7 @@ mod tests {
             Arc::new(D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, spec.cluster).unwrap());
         let cluster = MiniCluster::new(spec, policy, "native", 7).unwrap();
         let data = data_for(0, 3, 64 * 1024);
-        cluster.write_stripe(0, &data).unwrap();
+        cluster.write_stripe(0, data.clone()).unwrap();
         for (b, want) in data.iter().enumerate() {
             let got = cluster.read_block(0, b, Location::new(7, 0)).unwrap();
             assert_eq!(&got, want);
@@ -838,7 +859,7 @@ mod tests {
             Arc::new(D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, spec.cluster).unwrap());
         let cluster = MiniCluster::new(spec, policy, "native", 7).unwrap();
         let data = data_for(5, 3, 64 * 1024);
-        cluster.write_stripe(5, &data).unwrap();
+        cluster.write_stripe(5, data.clone()).unwrap();
         let victim = cluster.locate(5, 1);
         cluster.fail_node(victim);
         let (got, latency) = cluster.degraded_read(5, 1, Location::new(6, 2)).unwrap();
@@ -856,7 +877,7 @@ mod tests {
         let mut originals = Vec::new();
         for sid in 0..stripes {
             let data = data_for(sid, 2, 64 * 1024);
-            cluster.write_stripe(sid, &data).unwrap();
+            cluster.write_stripe(sid, data.clone()).unwrap();
             originals.push(data);
         }
         let failed = Location::new(1, 1);
@@ -900,7 +921,7 @@ mod tests {
         let mut originals = Vec::new();
         for sid in 0..stripes {
             let data = data_for(sid, 3, 64 * 1024);
-            cluster.write_stripe(sid, &data).unwrap();
+            cluster.write_stripe(sid, data.clone()).unwrap();
             originals.push(data);
         }
         let failed = Location::new(3, 0);
@@ -940,7 +961,7 @@ mod tests {
         let cluster = MiniCluster::new(spec, policy, "native", 1).unwrap();
         let stripes = 18u64;
         for sid in 0..stripes {
-            cluster.write_stripe(sid, &data_for(sid, 3, 64 * 1024)).unwrap();
+            cluster.write_stripe(sid, data_for(sid, 3, 64 * 1024)).unwrap();
         }
         let failed = Location::new(0, 0);
         cluster.fail_node(failed);

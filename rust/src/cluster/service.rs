@@ -5,12 +5,25 @@
 
 use std::sync::mpsc;
 
+use crate::gf::Matrix;
 use crate::runtime::Coder;
 
-pub struct CodeRequest {
-    pub coeffs: Vec<u8>,
-    pub shards: Vec<Vec<u8>>,
-    pub reply: mpsc::Sender<anyhow::Result<Vec<u8>>>,
+pub enum CodeRequest {
+    /// One GF linear combination (the decode/aggregation primitive).
+    Combine {
+        coeffs: Vec<u8>,
+        shards: Vec<Vec<u8>>,
+        reply: mpsc::Sender<anyhow::Result<Vec<u8>>>,
+    },
+    /// Full-stripe encode: all parity rows in one round trip. The data
+    /// shards are *moved* through the service and handed back with the
+    /// parity, so the write path never copies a block (DESIGN.md §9).
+    Encode {
+        rows: Matrix,
+        data: Vec<Vec<u8>>,
+        #[allow(clippy::type_complexity)]
+        reply: mpsc::Sender<anyhow::Result<(Vec<Vec<u8>>, Vec<Vec<u8>>)>>,
+    },
 }
 
 /// Handle to the coding thread. Cheap to clone; dropping all handles shuts
@@ -46,9 +59,20 @@ impl CoderService {
                     }
                 };
                 while let Ok(req) = rx.recv() {
-                    let refs: Vec<&[u8]> = req.shards.iter().map(|s| s.as_slice()).collect();
-                    let out = coder.combine(&req.coeffs, &refs);
-                    let _ = req.reply.send(out);
+                    match req {
+                        CodeRequest::Combine { coeffs, shards, reply } => {
+                            let refs: Vec<&[u8]> =
+                                shards.iter().map(|s| s.as_slice()).collect();
+                            let out = coder.combine(&coeffs, &refs);
+                            let _ = reply.send(out);
+                        }
+                        CodeRequest::Encode { rows, data, reply } => {
+                            let refs: Vec<&[u8]> =
+                                data.iter().map(|s| s.as_slice()).collect();
+                            let parity = coder.encode(&rows, &refs);
+                            let _ = reply.send(parity.map(|p| (data, p)));
+                        }
+                    }
                 }
             })
             .expect("spawn coder service");
@@ -60,7 +84,22 @@ impl CoderService {
     pub fn combine(&self, coeffs: Vec<u8>, shards: Vec<Vec<u8>>) -> anyhow::Result<Vec<u8>> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(CodeRequest { coeffs, shards, reply })
+            .send(CodeRequest::Combine { coeffs, shards, reply })
+            .map_err(|_| anyhow::anyhow!("coder service stopped"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("coder service dropped request"))?
+    }
+
+    /// Encode every parity row of `rows` over `data` in one service round
+    /// trip; the data shards come back untouched alongside the parity.
+    #[allow(clippy::type_complexity)]
+    pub fn encode(
+        &self,
+        rows: Matrix,
+        data: Vec<Vec<u8>>,
+    ) -> anyhow::Result<(Vec<Vec<u8>>, Vec<Vec<u8>>)> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(CodeRequest::Encode { rows, data, reply })
             .map_err(|_| anyhow::anyhow!("coder service stopped"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("coder service dropped request"))?
     }
@@ -78,6 +117,18 @@ mod tests {
         let b = vec![4u8, 5, 6];
         let got = svc.combine(vec![1, 1], vec![a.clone(), b.clone()]).unwrap();
         assert_eq!(got, gf::combine(&[1, 1], &[&a, &b]));
+    }
+
+    #[test]
+    fn encode_round_trip_returns_data_and_parity() {
+        let svc = CoderService::spawn("native").unwrap();
+        let code = crate::codes::RsCode::new(3, 2);
+        let data: Vec<Vec<u8>> = (0..3u8).map(|i| vec![i * 11 + 1; 96]).collect();
+        let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+        let want = code.encode(&refs);
+        let (back, parity) = svc.encode(code.parity_rows(), data.clone()).unwrap();
+        assert_eq!(back, data, "data shards must come back unmodified");
+        assert_eq!(parity, want);
     }
 
     #[test]

@@ -127,12 +127,20 @@ impl LrcCode {
         }
     }
 
-    /// Encode: data shards (k) -> l + g parity shards.
+    /// Encode: data shards (k) -> l + g parity shards, through the fused
+    /// cache-blocked engine ([`gf::combine_many_into`]).
     pub fn encode(&self, data: &[&[u8]]) -> Vec<Vec<u8>> {
         assert_eq!(data.len(), self.k);
+        let len = data.first().map_or(0, |s| s.len());
         let parity = self.parity_rows();
         (0..self.l + self.g)
-            .map(|i| gf::combine(parity.row(i), data))
+            .map(|i| {
+                let mut out = vec![0u8; len];
+                let pairs: Vec<(u8, &[u8])> =
+                    parity.row(i).iter().zip(data).map(|(&c, &s)| (c, s)).collect();
+                gf::combine_many_into(&mut out, &pairs);
+                out
+            })
             .collect()
     }
 
@@ -206,11 +214,12 @@ impl LrcCode {
             rank += 1;
         }
         // Recover each target: its generator row must lie in the span of
-        // the pivoted columns.
+        // the pivoted columns. The panel accumulation is one fused combine
+        // per target instead of a per-column accumulator sweep.
         let mut out = Vec::with_capacity(targets.len());
         for &t in targets {
             let trow = self.full.row(t);
-            let mut acc = vec![0u8; width];
+            let mut sources: Vec<(u8, &[u8])> = Vec::new();
             for (col, &tv) in trow.iter().enumerate() {
                 if tv == 0 {
                     continue;
@@ -219,8 +228,10 @@ impl LrcCode {
                 if piv == usize::MAX {
                     return None; // needed data dimension unseen: undecodable
                 }
-                gf::combine_into(&mut acc, tv, &panels[piv]);
+                sources.push((tv, panels[piv].as_slice()));
             }
+            let mut acc = vec![0u8; width];
+            gf::combine_many_into(&mut acc, &sources);
             out.push(acc);
         }
         Some(out)
@@ -231,7 +242,7 @@ fn scale_panel(panel: &mut [u8], s: u8) {
     if s == 1 {
         return;
     }
-    gf::SliceTable::new(s).scale(panel);
+    gf::kernel::table(s).scale(panel);
 }
 
 #[cfg(test)]

@@ -76,17 +76,25 @@ impl RsCode {
     }
 
     /// Encode: data shards (k × len) -> m parity shards. The byte
-    /// crunching runs through the shared two-nibble slice kernel
-    /// ([`gf::SliceTable`] via [`gf::combine`]).
+    /// crunching runs through the fused cache-blocked engine
+    /// ([`gf::combine_many_into`]): each parity row streams the
+    /// accumulator once per L1 window, not once per data shard.
     pub fn encode(&self, data: &[&[u8]]) -> Vec<Vec<u8>> {
         assert_eq!(data.len(), self.k);
+        let len = data.first().map_or(0, |s| s.len());
         let parity = self.parity_rows();
         (0..self.m)
-            .map(|i| gf::combine(parity.row(i), data))
+            .map(|i| {
+                let mut out = vec![0u8; len];
+                let pairs: Vec<(u8, &[u8])> =
+                    parity.row(i).iter().zip(data).map(|(&c, &s)| (c, s)).collect();
+                gf::combine_many_into(&mut out, &pairs);
+                out
+            })
             .collect()
     }
 
-    /// Reconstruct one block from exactly k survivors.
+    /// Reconstruct one block from exactly k survivors (fused combine).
     pub fn reconstruct(
         &self,
         available: &[usize],

@@ -1,0 +1,162 @@
+//! Fused, table-cached, word-parallel GF(2^8) combine engine — the
+//! byte-crunching core of the recovery data path (DESIGN.md §9).
+//!
+//! Three ideas, each attacking a distinct per-byte cost that profiling the
+//! chunked executor (PR 2) exposed:
+//!
+//! 1. **Process-wide table cache.** [`SliceTable`] construction costs 32
+//!    GF multiplies; `combine_into` used to pay it on *every* call, which
+//!    at the executor's 16 KiB chunk granularity is once per source per
+//!    chunk. All 256 tables together are only 8 KiB, so [`table`] builds
+//!    them exactly once per process and every caller shares them.
+//! 2. **SWAR XOR lane.** Coefficient 1 (the LRC/replica/aggregation-merge
+//!    lane) is a pure XOR, which is linear over machine words: the u64
+//!    fast path in [`xor_into`] moves 8 bytes per op instead of 1.
+//! 3. **Cache-blocked fusion.** `XOR_j c_j·src_j` evaluated one source at
+//!    a time streams the accumulator through the cache hierarchy once per
+//!    source. [`combine_many_into`] instead walks the accumulator in
+//!    L1-sized blocks and applies *all* sources to each block before
+//!    moving on, so every accumulator byte is read and written once per
+//!    block no matter how many sources feed it.
+//!
+//! Every path here is differentially tested against the scalar
+//! [`super::mul`] reference (`tests/kernel_equivalence.rs`) — the fused
+//! engine must be byte-identical to the per-byte loop for every
+//! coefficient class (0, 1, arbitrary), every length, and any source mix.
+
+use std::sync::OnceLock;
+
+use super::SliceTable;
+
+/// Accumulator block size for the fused combine: big enough to amortize
+/// the per-source loop overhead, small enough that the block plus both
+/// nibble tables stay L1-resident while the sources stream through.
+pub const FUSE_BLOCK: usize = 16 << 10;
+
+static TABLES: OnceLock<Box<[SliceTable; 256]>> = OnceLock::new();
+
+/// The shared slice table for coefficient `c` — all 256 tables (8 KiB)
+/// are built once per process on first use.
+#[inline]
+pub fn table(c: u8) -> &'static SliceTable {
+    let tables = TABLES.get_or_init(|| {
+        let mut t = [SliceTable::new(0); 256];
+        for (c, slot) in t.iter_mut().enumerate() {
+            *slot = SliceTable::new(c as u8);
+        }
+        Box::new(t)
+    });
+    &tables[c as usize]
+}
+
+/// `acc[i] ^= src[i]` — the c == 1 lane, 8 bytes per op (u64 SWAR).
+pub fn xor_into(acc: &mut [u8], src: &[u8]) {
+    assert_eq!(acc.len(), src.len());
+    let mut a = acc.chunks_exact_mut(8);
+    let mut s = src.chunks_exact(8);
+    for (ac, sc) in a.by_ref().zip(s.by_ref()) {
+        let x = u64::from_ne_bytes((&*ac).try_into().unwrap())
+            ^ u64::from_ne_bytes(sc.try_into().unwrap());
+        ac.copy_from_slice(&x.to_ne_bytes());
+    }
+    for (ac, &sc) in a.into_remainder().iter_mut().zip(s.remainder()) {
+        *ac ^= sc;
+    }
+}
+
+/// Fused k-way multiply-accumulate:
+/// `acc[i] ^= XOR_j sources[j].0 · sources[j].1[i]`.
+///
+/// Cache-blocked: the accumulator is processed in [`FUSE_BLOCK`]-sized
+/// windows, and within a window every source is applied before the window
+/// advances — the accumulator is read/written once per window instead of
+/// once per source. Coefficient 0 sources are skipped, coefficient 1
+/// sources take the SWAR XOR lane, the rest run the cached two-nibble
+/// slice kernel.
+///
+/// Generic over the shard representation (`&[u8]`, `Vec<u8>`, …) so the
+/// executor's pooled `(coeff, buffer)` staging vector feeds the kernel
+/// directly — no per-chunk borrow-slice vector needs to be built.
+pub fn combine_many_into<S: AsRef<[u8]>>(acc: &mut [u8], sources: &[(u8, S)]) {
+    for (_, src) in sources {
+        assert_eq!(src.as_ref().len(), acc.len(), "ragged source shard");
+    }
+    let len = acc.len();
+    let mut off = 0usize;
+    while off < len {
+        let end = (off + FUSE_BLOCK).min(len);
+        let window = &mut acc[off..end];
+        for (c, src) in sources {
+            match *c {
+                0 => {}
+                1 => xor_into(window, &src.as_ref()[off..end]),
+                _ => table(*c).mac(window, &src.as_ref()[off..end]),
+            }
+        }
+        off = end;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::mul;
+    use crate::util::rng::xorshift_bytes as pattern;
+
+    #[test]
+    fn cached_tables_match_fresh_tables_for_every_coefficient() {
+        for c in 0..=255u8 {
+            let cached = table(c);
+            for s in 0..=255u8 {
+                assert_eq!(cached.mul(s), mul(c, s), "c={c} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn xor_into_matches_scalar_for_all_alignments() {
+        let src = pattern(67, 1);
+        for len in 0..src.len() {
+            let mut acc = pattern(len, 2);
+            let mut want = acc.clone();
+            for (w, &s) in want.iter_mut().zip(&src[..len]) {
+                *w ^= s;
+            }
+            xor_into(&mut acc, &src[..len]);
+            assert_eq!(acc, want, "len={len}");
+        }
+    }
+
+    #[test]
+    fn fused_combine_crosses_block_boundaries_correctly() {
+        // length straddles two FUSE_BLOCK windows plus a ragged tail
+        let len = FUSE_BLOCK + FUSE_BLOCK / 2 + 7;
+        let srcs: Vec<Vec<u8>> = (0..3).map(|i| pattern(len, 10 + i)).collect();
+        let coeffs = [0u8, 1, 0x8e];
+        let mut acc = pattern(len, 99);
+        let mut want = acc.clone();
+        for (&c, src) in coeffs.iter().zip(&srcs) {
+            for (w, &s) in want.iter_mut().zip(src) {
+                *w ^= mul(c, s);
+            }
+        }
+        let pairs: Vec<(u8, &[u8])> =
+            coeffs.iter().zip(&srcs).map(|(&c, s)| (c, s.as_slice())).collect();
+        combine_many_into(&mut acc, &pairs);
+        assert_eq!(acc, want);
+    }
+
+    #[test]
+    fn empty_inputs_are_noops() {
+        let no_sources: [(u8, &[u8]); 0] = [];
+        let empty_source: [(u8, &[u8]); 1] = [(7, &[])];
+        let mut acc: Vec<u8> = Vec::new();
+        combine_many_into(&mut acc, &no_sources);
+        combine_many_into(&mut acc, &empty_source);
+        assert!(acc.is_empty());
+        let mut acc = pattern(33, 4);
+        let before = acc.clone();
+        combine_many_into(&mut acc, &no_sources);
+        assert_eq!(acc, before);
+    }
+}

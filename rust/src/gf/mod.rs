@@ -5,11 +5,14 @@
 //! coefficients computed here feed the AOT artifacts directly, and the
 //! native coder (`runtime::native`) is bit-identical to the PJRT path.
 //!
-//! The hot combine loop is in [`combine_into`]; everything else (inverse,
+//! The hot combine loop is the fused engine in [`kernel`]
+//! ([`combine_into`] / [`combine_many_into`]); everything else (inverse,
 //! matrix inversion) runs on the control path only.
 
+pub mod kernel;
 pub mod matrix;
 
+pub use kernel::{combine_many_into, xor_into};
 pub use matrix::Matrix;
 
 /// The field modulus (must match `python/compile/kernels/gf.py::GF_POLY`).
@@ -154,31 +157,30 @@ impl SliceTable {
 }
 
 /// `acc[i] ^= c * src[i]` — the byte-crunching inner loop of the native
-/// coder. Specializes c == 0 (no-op) and c == 1 (pure XOR, the LRC/replica
-/// path) before falling back to the two-nibble [`SliceTable`] kernel.
+/// coder. Specializes c == 0 (no-op) and c == 1 (the u64 SWAR XOR lane,
+/// the LRC/replica path) before falling back to the *cached* two-nibble
+/// [`SliceTable`] kernel ([`kernel::table`] — no per-call table build).
 pub fn combine_into(acc: &mut [u8], c: u8, src: &[u8]) {
     assert_eq!(acc.len(), src.len());
     match c {
         0 => {}
-        1 => {
-            for (a, s) in acc.iter_mut().zip(src) {
-                *a ^= s;
-            }
-        }
-        _ => SliceTable::new(c).mac(acc, src),
+        1 => kernel::xor_into(acc, src),
+        _ => kernel::table(c).mac(acc, src),
     }
 }
 
-/// `out = XOR_i coeffs[i] * shards[i]` — one GF linear combination.
-/// This is the native twin of the `gf_combine` AOT artifact.
+/// `out = XOR_i coeffs[i] * shards[i]` — one GF linear combination,
+/// evaluated through the fused cache-blocked engine
+/// ([`kernel::combine_many_into`]). This is the native twin of the
+/// `gf_combine` AOT artifact.
 pub fn combine(coeffs: &[u8], shards: &[&[u8]]) -> Vec<u8> {
     assert_eq!(coeffs.len(), shards.len());
     assert!(!shards.is_empty(), "gf::combine with no shards");
     let len = shards[0].len();
     let mut out = vec![0u8; len];
-    for (&c, shard) in coeffs.iter().zip(shards) {
-        combine_into(&mut out, c, shard);
-    }
+    let pairs: Vec<(u8, &[u8])> =
+        coeffs.iter().zip(shards).map(|(&c, &s)| (c, s)).collect();
+    kernel::combine_many_into(&mut out, &pairs);
     out
 }
 

@@ -23,6 +23,7 @@ pub mod experiments;
 pub mod gf;
 pub mod metrics;
 pub mod oa;
+pub mod perf;
 pub mod placement;
 pub mod recovery;
 pub mod runtime;

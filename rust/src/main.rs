@@ -11,6 +11,7 @@
 //! d3ctl oa --n 5 [--cols 4]            # print + verify an orthogonal array
 //! d3ctl cluster-demo [--backend pjrt|native] [--stripes N]
 //! d3ctl calibrate                      # coding throughput, native vs PJRT
+//! d3ctl bench [--quick] [--json PATH]  # hot-path suite → BENCH_PR3.json
 //! ```
 
 use std::collections::HashMap;
@@ -67,11 +68,36 @@ fn main() {
         "oa" => cmd_oa(&flags),
         "cluster-demo" => cmd_cluster_demo(&flags),
         "calibrate" => cmd_calibrate(&flags),
+        "bench" => cmd_bench(&args),
         _ => {
             println!("d3ctl — Deterministic Data Distribution (D³) reproduction");
-            println!("{}", include_str!("main.rs").lines().skip(2).take(12)
+            println!("{}", include_str!("main.rs").lines().skip(2).take(13)
                 .map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
         }
+    }
+}
+
+/// `d3ctl bench`: the machine-readable hot-path suite (same harness as
+/// `cargo bench --bench hotpath`, DESIGN.md §9). Writes the
+/// `{bench_name: ns_per_byte}` perf-trajectory file — `BENCH_PR3.json`
+/// by default, `--json PATH` to override; `--quick` for CI-sized runs.
+/// Boolean flags are parsed from the raw args (the generic flag parser
+/// treats every `--key` as taking a value).
+fn cmd_bench(args: &[String]) {
+    let quick = args.iter().any(|a| a == "--quick");
+    let path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_PR3.json".to_string());
+    let report = d3ec::perf::run_hotpath(&d3ec::perf::BenchOpts { quick });
+    if let Some(r) = report.ratio("combine_k6_sequential", "combine_k6_fused") {
+        println!("headline: fused k=6 combine is {r:.2}x the sequential path");
+    }
+    match report.write_json(std::path::Path::new(&path)) {
+        Ok(()) => println!("wrote {} bench rows to {path}", report.ns_per_byte.len()),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
     }
 }
 
@@ -270,7 +296,7 @@ fn cmd_cluster_demo(flags: &HashMap<String, String>) {
         let data: Vec<Vec<u8>> = (0..code.k())
             .map(|b| vec![(sid as u8).wrapping_mul(31).wrapping_add(b as u8); spec.block_size as usize])
             .collect();
-        cluster.write_stripe(sid, &data).expect("write");
+        cluster.write_stripe(sid, data).expect("write");
     }
     println!("wrote {stripes} stripes in {:.2?}", t0.elapsed());
     let failed = Location::new(0, 0);

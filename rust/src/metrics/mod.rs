@@ -61,6 +61,35 @@ pub fn throughput_mb_s(bytes: u64, secs: f64) -> f64 {
     bytes as f64 / secs / 1e6
 }
 
+/// Hit/miss counters of a buffer pool (the recovery executor's per-worker
+/// scratch pools, DESIGN.md §9). A *hit* reuses a pooled buffer; a *miss*
+/// allocates. Steady-state recovery should be almost all hits — the
+/// executor surfaces these through `ExecStats` and `ScenarioOutcome` so a
+/// regression back to per-chunk allocation is visible in the metrics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PoolStats {
+    /// Fold another pool's counters into this one (per-worker → total).
+    pub fn merge(&mut self, other: PoolStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+    }
+
+    /// Hits as a fraction of all takes (0 when the pool was never used).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
 /// Per-worker utilization: each worker's busy seconds as a fraction of the
 /// wall clock, clamped to [0, 1] (timer jitter can push busy ≳ wall).
 /// Used by the recovery executor's `ExecStats` and `d3ctl scenario`.
@@ -110,6 +139,16 @@ mod tests {
     fn throughput() {
         assert!((throughput_mb_s(32_000_000, 2.0) - 16.0).abs() < 1e-9);
         assert_eq!(throughput_mb_s(1, 0.0), 0.0);
+    }
+
+    #[test]
+    fn pool_stats_merge_and_rate() {
+        let mut p = PoolStats::default();
+        assert_eq!(p.hit_rate(), 0.0);
+        p.merge(PoolStats { hits: 3, misses: 1 });
+        p.merge(PoolStats { hits: 1, misses: 1 });
+        assert_eq!(p, PoolStats { hits: 4, misses: 2 });
+        assert!((p.hit_rate() - 4.0 / 6.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,224 @@
+//! Machine-readable hot-path benchmarks (DESIGN.md §9): the before/after
+//! measurements for the fused GF combine engine and the zero-allocation
+//! recovery data path, shared by `cargo bench --bench hotpath` and
+//! `d3ctl bench` so CI and the CLI emit the same `BENCH_*.json` schema.
+//!
+//! Every entry reports **nanoseconds per byte of accumulator output**
+//! (lower is better): `{bench_name: ns_per_byte}`. Two rows pin
+//! pre-fusion mechanics as fixed baselines — `mac_16kb_chunks_rebuild`
+//! (a `SliceTable::new` per 16 KiB chunk, the old `combine_into` tax at
+//! executor chunk granularity) and `xor_16mb_scalar` (byte-at-a-time
+//! XOR). `combine_k6_sequential` deliberately uses *today's*
+//! `gf::combine_into` (table-cached, SWAR) as its baseline, so the
+//! fused-vs-sequential ratio isolates the cache-blocking win alone and
+//! keeps measuring it even as `combine_into` itself improves.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cluster::MiniCluster;
+use crate::codes::CodeSpec;
+use crate::gf;
+use crate::placement::{D3Placement, Placement};
+use crate::recovery::{node_recovery_plans, ExecutorConfig};
+use crate::topology::{Location, SystemSpec};
+use crate::util::json::Json;
+use crate::util::rng::xorshift_bytes as deterministic_bytes;
+
+/// Bench harness knobs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BenchOpts {
+    /// CI quick mode: fewer iterations and a smaller cluster population;
+    /// bench names and buffer sizes stay identical so JSON rows compare.
+    pub quick: bool,
+}
+
+/// `bench name → ns per output byte`, ready for `BENCH_*.json`.
+#[derive(Clone, Debug, Default)]
+pub struct BenchReport {
+    pub ns_per_byte: BTreeMap<String, f64>,
+}
+
+impl BenchReport {
+    fn record(&mut self, name: &str, ns_per_byte: f64) {
+        self.ns_per_byte.insert(name.to_string(), ns_per_byte);
+    }
+
+    /// Ratio `ns_per_byte[a] / ns_per_byte[b]` (how many times slower a
+    /// is than b), if both entries exist.
+    pub fn ratio(&self, a: &str, b: &str) -> Option<f64> {
+        Some(self.ns_per_byte.get(a)? / self.ns_per_byte.get(b)?)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.ns_per_byte
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v)))
+                .collect(),
+        )
+    }
+
+    /// Write the `{bench_name: ns_per_byte}` document to `path`.
+    pub fn write_json(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string() + "\n")?;
+        Ok(())
+    }
+}
+
+/// Time `f` over `iters` runs (after one warmup) and return ns per byte,
+/// where each run processes `bytes` accumulator bytes.
+fn bench_ns_per_byte<F: FnMut()>(iters: usize, bytes: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e9 / (iters as f64) / bytes as f64
+}
+
+/// GF kernel micro-benches: the 16 MB MAC (cached vs per-chunk table
+/// rebuild), the SWAR vs scalar XOR lane, and the fused vs sequential
+/// k = 6 combine over 16 MB shards.
+pub fn run_kernel_benches(opts: &BenchOpts, report: &mut BenchReport) {
+    let len = 16 << 20;
+    let iters = if opts.quick { 2 } else { 8 };
+    let c = 0x8eu8;
+    let src = deterministic_bytes(len, 1);
+    let mut acc = deterministic_bytes(len, 2);
+
+    println!("=== gf kernel: 16 MB multiply-accumulate ===");
+    let mac = bench_ns_per_byte(iters, len, || gf::kernel::table(c).mac(&mut acc, &src));
+    report.record("mac_16mb", mac);
+    println!("  mac_16mb (cached table): {mac:.3} ns/B ({:.0} MB/s)", 1e3 / mac);
+
+    // the executor touches sources one 16 KiB chunk at a time — measure
+    // the per-chunk table-rebuild tax the kernel cache removes
+    let chunk = 16 << 10;
+    let cached = bench_ns_per_byte(iters, len, || {
+        for off in (0..len).step_by(chunk) {
+            gf::kernel::table(c).mac(&mut acc[off..off + chunk], &src[off..off + chunk]);
+        }
+    });
+    let rebuilt = bench_ns_per_byte(iters, len, || {
+        for off in (0..len).step_by(chunk) {
+            gf::SliceTable::new(c).mac(&mut acc[off..off + chunk], &src[off..off + chunk]);
+        }
+    });
+    report.record("mac_16kb_chunks_cached", cached);
+    report.record("mac_16kb_chunks_rebuild", rebuilt);
+    println!(
+        "  16 KiB-chunked mac: cached {cached:.3} vs rebuild {rebuilt:.3} ns/B → {:.2}x",
+        rebuilt / cached
+    );
+
+    println!("=== gf kernel: c == 1 XOR lane ===");
+    let swar = bench_ns_per_byte(iters, len, || gf::xor_into(&mut acc, &src));
+    let scalar = bench_ns_per_byte(iters, len, || {
+        for (a, s) in acc.iter_mut().zip(&src) {
+            *a ^= s;
+        }
+    });
+    report.record("xor_16mb_swar", swar);
+    report.record("xor_16mb_scalar", scalar);
+    println!("  swar {swar:.3} vs scalar {scalar:.3} ns/B → {:.2}x", scalar / swar);
+
+    println!("=== gf kernel: k = 6 combine over 16 MB shards ===");
+    let shards: Vec<Vec<u8>> = (0..6).map(|i| deterministic_bytes(len, 10 + i)).collect();
+    let coeffs: Vec<u8> = (1..=6u8).collect();
+    // one accumulator sweep per source, through today's combine_into —
+    // the delta against the fused row is pure cache blocking
+    let seq = bench_ns_per_byte(iters, len, || {
+        acc.iter_mut().for_each(|b| *b = 0);
+        for (&cf, shard) in coeffs.iter().zip(&shards) {
+            gf::combine_into(&mut acc, cf, shard);
+        }
+    });
+    let fused = bench_ns_per_byte(iters, len, || {
+        acc.iter_mut().for_each(|b| *b = 0);
+        let pairs: Vec<(u8, &[u8])> =
+            coeffs.iter().zip(&shards).map(|(&cf, s)| (cf, s.as_slice())).collect();
+        gf::combine_many_into(&mut acc, &pairs);
+    });
+    report.record("combine_k6_sequential", seq);
+    report.record("combine_k6_fused", fused);
+    println!(
+        "  sequential {seq:.3} vs fused {fused:.3} ns/B → fused {:.2}x faster",
+        seq / fused
+    );
+}
+
+/// End-to-end cluster recovery at 1 vs 8 workers (the executor
+/// acceptance bench): 1 MB blocks over a deliberately slow cross-rack
+/// port so the speedup measures transfer pipelining. Also prints the
+/// scratch-pool reuse rate — the zero-allocation data path's witness.
+pub fn run_cluster_benches(opts: &BenchOpts, report: &mut BenchReport) {
+    let stripes: u64 = if opts.quick { 12 } else { 40 };
+    println!("=== cluster: pipelined recovery (1 vs 8 workers, {stripes} stripes) ===");
+    let mut recover = |workers: usize, name: &str| {
+        let mut cspec = SystemSpec::paper_default();
+        cspec.block_size = 1 << 20;
+        cspec.net.inner_mbps = 1600.0;
+        cspec.net.cross_mbps = 160.0;
+        let policy: Arc<dyn Placement> =
+            Arc::new(D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, cspec.cluster).unwrap());
+        let cluster = MiniCluster::new(cspec, policy.clone(), "native", 5).unwrap();
+        cluster
+            .write_stripes_parallel(stripes, 8, |sid| {
+                (0..3).map(|b| deterministic_bytes(1 << 20, sid * 3 + b)).collect()
+            })
+            .unwrap();
+        let failed = Location::new(1, 0);
+        cluster.fail_node(failed);
+        let plans = node_recovery_plans(policy.as_ref(), stripes, failed, 5);
+        let cfg = ExecutorConfig { workers, chunk_size: 256 << 10, ..Default::default() };
+        let stats = cluster.recover_with_plans_cfg(plans, cfg, &[failed.rack]).unwrap();
+        let ns_per_byte = stats.wall.as_secs_f64() * 1e9 / stats.bytes.max(1) as f64;
+        report.record(name, ns_per_byte);
+        println!(
+            "  {} worker(s): {} blocks / {} chunks in {:.0} ms → {:.1} MB/s, \
+             scratch reuse {:.0}%",
+            workers,
+            stats.blocks,
+            stats.chunks,
+            stats.wall.as_secs_f64() * 1e3,
+            stats.throughput_mb_s,
+            stats.scratch.hit_rate() * 100.0
+        );
+        stats.wall.as_secs_f64()
+    };
+    let w1 = recover(1, "cluster_recover_1w");
+    let w8 = recover(8, "cluster_recover_8w");
+    println!("  8-worker speedup over 1 worker: {:.2}x", w1 / w8);
+}
+
+/// The full hot-path suite (`d3ctl bench`, `cargo bench --bench hotpath`).
+pub fn run_hotpath(opts: &BenchOpts) -> BenchReport {
+    let mut report = BenchReport::default();
+    run_kernel_benches(opts, &mut report);
+    run_cluster_benches(opts, &mut report);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_is_flat_name_to_number() {
+        let mut r = BenchReport::default();
+        r.record("combine_k6_fused", 0.25);
+        r.record("combine_k6_sequential", 0.75);
+        let json = r.to_json().to_string();
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(
+            parsed.get("combine_k6_fused").and_then(Json::as_f64),
+            Some(0.25)
+        );
+        assert!((r.ratio("combine_k6_sequential", "combine_k6_fused").unwrap() - 3.0).abs()
+            < 1e-12);
+        assert_eq!(r.ratio("missing", "combine_k6_fused"), None);
+    }
+}

@@ -28,7 +28,78 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::metrics::PoolStats;
+
 use super::plan::RepairPlan;
+
+/// Per-worker scratch-buffer pool (DESIGN.md §9): chunk fetch, partial-
+/// aggregation, and accumulator buffers — and the `(coeff, buffer)`
+/// staging vector that feeds the fused combine — are taken from here and
+/// returned after use, so the steady-state recovery data path performs
+/// **zero allocations per chunk**: every vector cycles between the worker
+/// and its pool with capacity retained. Each worker owns one `Scratch`
+/// (no sharing, no locks); hit/miss counts are aggregated into
+/// [`ExecStats::scratch`].
+#[derive(Default)]
+pub struct Scratch {
+    free: Vec<Vec<u8>>,
+    staging: Vec<(u8, Vec<u8>)>,
+    stats: PoolStats,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// An empty buffer (length 0) with whatever capacity the pool has on
+    /// hand — for fill-by-extend users (chunk fetches).
+    pub fn take(&mut self) -> Vec<u8> {
+        match self.free.pop() {
+            Some(mut buf) => {
+                self.stats.hits += 1;
+                buf.clear();
+                buf
+            }
+            None => {
+                self.stats.misses += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// A zero-filled buffer of exactly `len` bytes — for accumulators.
+    pub fn take_zeroed(&mut self, len: usize) -> Vec<u8> {
+        let mut buf = self.take();
+        buf.resize(len, 0);
+        buf
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn put(&mut self, buf: Vec<u8>) {
+        self.free.push(buf);
+    }
+
+    /// The reusable `(coefficient, buffer)` staging vector for fused
+    /// combines — always empty, capacity retained across chunks.
+    pub fn take_staging(&mut self) -> Vec<(u8, Vec<u8>)> {
+        std::mem::take(&mut self.staging)
+    }
+
+    /// Return the staging vector: any buffers still inside go back to the
+    /// byte-buffer pool and the emptied vector keeps its capacity for the
+    /// next chunk.
+    pub fn put_staging(&mut self, mut staging: Vec<(u8, Vec<u8>)>) {
+        for (_, buf) in staging.drain(..) {
+            self.free.push(buf);
+        }
+        self.staging = staging;
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+}
 
 /// Knobs of the pipelined executor.
 #[derive(Clone, Copy, Debug)]
@@ -63,6 +134,8 @@ pub struct ExecStats {
     pub wall_s: f64,
     /// Seconds each worker spent executing chunk tasks.
     pub worker_busy_s: Vec<f64>,
+    /// Scratch-pool hit/miss totals across all workers.
+    pub scratch: PoolStats,
 }
 
 impl ExecStats {
@@ -77,8 +150,17 @@ pub trait ChunkRunner: Sync {
     /// Rebuild bytes `[off, off + len)` of plan `plan_idx`'s failed block:
     /// fetch each source's chunk (through whatever links/throttles the
     /// backend models), multiply-accumulate, and return the rebuilt chunk.
-    fn run_chunk(&self, plan_idx: usize, plan: &RepairPlan, off: u64, len: usize)
-        -> Result<Vec<u8>>;
+    /// All working buffers — including the returned chunk — should come
+    /// from `scratch`; the executor returns the chunk buffer to the same
+    /// pool once it has landed in the plan's assembly buffer.
+    fn run_chunk(
+        &self,
+        plan_idx: usize,
+        plan: &RepairPlan,
+        off: u64,
+        len: usize,
+        scratch: &mut Scratch,
+    ) -> Result<Vec<u8>>;
 
     /// Every chunk of `plan` has landed; persist the assembled block.
     fn finish_plan(&self, plan_idx: usize, plan: &RepairPlan, block: Vec<u8>) -> Result<()>;
@@ -129,11 +211,12 @@ pub fn execute_plans<R: ChunkRunner>(
     let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
     let workers = cfg.workers.max(1);
     let t0 = Instant::now();
-    let worker_busy_s: Vec<f64> = std::thread::scope(|scope| {
+    let per_worker: Vec<(f64, PoolStats)> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 scope.spawn(|| {
                     let mut busy = 0.0f64;
+                    let mut scratch = Scratch::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= tasks.len() {
@@ -141,7 +224,7 @@ pub fn execute_plans<R: ChunkRunner>(
                         }
                         let (pi, off, len) = tasks[i];
                         let t = Instant::now();
-                        match runner.run_chunk(pi, &plans[pi], off, len) {
+                        match runner.run_chunk(pi, &plans[pi], off, len, &mut scratch) {
                             Ok(chunk) if chunk.len() != len => {
                                 errors.lock().unwrap().push(format!(
                                     "plan {pi}: chunk at {off} returned {} bytes, want {len}",
@@ -159,6 +242,7 @@ pub fn execute_plans<R: ChunkRunner>(
                                     pb.remaining -= 1;
                                     (pb.remaining == 0).then(|| std::mem::take(&mut pb.buf))
                                 };
+                                scratch.put(chunk);
                                 if let Some(block) = done {
                                     if let Err(e) = runner.finish_plan(pi, &plans[pi], block) {
                                         errors.lock().unwrap().push(e.to_string());
@@ -169,7 +253,7 @@ pub fn execute_plans<R: ChunkRunner>(
                         }
                         busy += t.elapsed().as_secs_f64();
                     }
-                    busy
+                    (busy, scratch.stats())
                 })
             })
             .collect();
@@ -179,11 +263,16 @@ pub fn execute_plans<R: ChunkRunner>(
     if !errs.is_empty() {
         bail!("recovery executor errors: {}", errs.join("; "));
     }
+    let mut scratch = PoolStats::default();
+    for &(_, s) in &per_worker {
+        scratch.merge(s);
+    }
     Ok(ExecStats {
         plans: plans.len(),
         chunks: tasks.len(),
         wall_s: t0.elapsed().as_secs_f64(),
-        worker_busy_s,
+        worker_busy_s: per_worker.into_iter().map(|(b, _)| b).collect(),
+        scratch,
     })
 }
 
@@ -223,13 +312,17 @@ mod tests {
             plan: &RepairPlan,
             off: u64,
             len: usize,
+            scratch: &mut Scratch,
         ) -> Result<Vec<u8>> {
             if Some(plan.stripe) == self.fail_chunk_of {
                 bail!("injected failure for stripe {}", plan.stripe);
             }
-            Ok((0..len as u64)
-                .map(|j| (plan.stripe as u8).wrapping_mul(31) ^ ((off + j) as u8))
-                .collect())
+            let mut chunk = scratch.take();
+            chunk.extend(
+                (0..len as u64)
+                    .map(|j| (plan.stripe as u8).wrapping_mul(31) ^ ((off + j) as u8)),
+            );
+            Ok(chunk)
         }
 
         fn finish_plan(&self, _pi: usize, plan: &RepairPlan, block: Vec<u8>) -> Result<()> {
@@ -277,6 +370,45 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn scratch_pool_reuses_buffers_after_warmup() {
+        // single worker: the first chunk misses (pool empty), every later
+        // chunk reuses the buffer the executor returned after assembly
+        let plans: Vec<RepairPlan> = (0..3u64).map(plan).collect();
+        let runner = MockRunner { finished: Mutex::new(HashMap::new()), fail_chunk_of: None };
+        let cfg = ExecutorConfig { workers: 1, chunk_size: 64, ..Default::default() };
+        let stats = execute_plans(&runner, &plans, 512, &cfg).unwrap();
+        let chunks = stats.chunks as u64;
+        assert_eq!(stats.scratch.hits + stats.scratch.misses, chunks);
+        assert_eq!(stats.scratch.misses, 1, "{:?}", stats.scratch);
+        assert!(stats.scratch.hit_rate() > 0.9);
+    }
+
+    #[test]
+    fn scratch_take_zeroed_clears_reused_capacity() {
+        let mut s = Scratch::new();
+        s.put(vec![0xffu8; 32]);
+        let buf = s.take_zeroed(16);
+        assert_eq!(buf, vec![0u8; 16]);
+        assert_eq!(s.stats(), crate::metrics::PoolStats { hits: 1, misses: 0 });
+    }
+
+    #[test]
+    fn staging_round_trip_recycles_buffers_into_the_pool() {
+        let mut s = Scratch::new();
+        let mut staging = s.take_staging();
+        assert!(staging.is_empty());
+        staging.push((3, vec![1u8, 2, 3]));
+        staging.push((1, vec![4u8]));
+        s.put_staging(staging);
+        // both leftover buffers are back in the byte pool...
+        let a = s.take();
+        let b = s.take();
+        assert!(a.capacity() >= 1 && b.capacity() >= 1);
+        // ...and the next staging vector is the same (emptied) allocation
+        assert!(s.take_staging().capacity() >= 2);
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub mod multi;
 pub mod node;
 pub mod plan;
 
-pub use executor::{execute_plans, ChunkRunner, ExecStats, ExecutorConfig};
+pub use executor::{execute_plans, ChunkRunner, ExecStats, ExecutorConfig, Scratch};
 pub use multi::{execute_plan_bytes, scenario_recovery_plans, stripe_repair_plans};
 pub use node::node_recovery_plans;
 pub use plan::{plan_repair, Aggregation, RepairPlan};

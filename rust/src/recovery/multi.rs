@@ -167,11 +167,11 @@ pub fn stripe_repair_plans(
 
 /// Numerically execute a plan over in-memory stripe shards (`shards[b]` =
 /// bytes of block `b`): stage the inner-rack aggregations exactly as the
-/// chunked executor does — per-group partial multiply-accumulates, then a
-/// unit-coefficient final combine — through the shared slice kernel
-/// ([`gf::SliceTable`] via [`gf::combine_into`]). This is the
-/// network-free twin of the cluster data path, used by the property suite
-/// and the round-trip tests below.
+/// chunked executor does — one fused cache-blocked multiply-accumulate
+/// per aggregation group ([`gf::combine_many_into`]), a SWAR XOR merge of
+/// each partial, and one fused combine over the direct sources. This is
+/// the network-free twin of the cluster data path, used by the property
+/// suite and the round-trip tests below.
 pub fn execute_plan_bytes(
     code: &CodeSpec,
     plan: &RepairPlan,
@@ -186,14 +186,20 @@ pub fn execute_plan_bytes(
     let mut acc = vec![0u8; width];
     for agg in &plan.aggregations {
         let mut partial = vec![0u8; width];
-        for &(b, _) in &agg.inputs {
-            gf::combine_into(&mut partial, coeff_of(b), &shards[b]);
-        }
-        gf::combine_into(&mut acc, 1, &partial);
+        let pairs: Vec<(u8, &[u8])> = agg
+            .inputs
+            .iter()
+            .map(|&(b, _)| (coeff_of(b), shards[b].as_slice()))
+            .collect();
+        gf::combine_many_into(&mut partial, &pairs);
+        gf::xor_into(&mut acc, &partial);
     }
-    for &(b, _) in &plan.direct {
-        gf::combine_into(&mut acc, coeff_of(b), &shards[b]);
-    }
+    let pairs: Vec<(u8, &[u8])> = plan
+        .direct
+        .iter()
+        .map(|&(b, _)| (coeff_of(b), shards[b].as_slice()))
+        .collect();
+    gf::combine_many_into(&mut acc, &pairs);
     acc
 }
 

@@ -237,6 +237,10 @@ pub struct ScenarioOutcome {
     /// Per-worker busy fraction of the recovery executor (cluster backend
     /// recovery kinds only; the fluid backend has no discrete workers).
     pub worker_utilization: Option<Vec<f64>>,
+    /// Scratch-buffer-pool hit/miss totals of the recovery executor's
+    /// worker pools (cluster backend recovery kinds only) — near-1.0 hit
+    /// rates mean the data path ran allocation-free (DESIGN.md §9).
+    pub scratch_pool: Option<crate::metrics::PoolStats>,
 }
 
 impl ScenarioOutcome {
@@ -282,6 +286,14 @@ impl ScenarioOutcome {
             let cells: Vec<String> =
                 u.iter().map(|x| format!("{:.0}%", x * 100.0)).collect();
             println!("  per-worker utilization: {}", cells.join(" "));
+        }
+        if let Some(p) = &self.scratch_pool {
+            println!(
+                "  scratch pool: {} hits / {} misses ({:.0}% reuse)",
+                p.hits,
+                p.misses,
+                p.hit_rate() * 100.0
+            );
         }
     }
 }

@@ -410,6 +410,7 @@ impl crate::scenario::RecoveryBackend for SimBackend {
                     degraded_read_mean_s: Some(mean),
                     frontend_seconds: None,
                     worker_utilization: None,
+                    scratch_pool: None,
                 })
             }
             ScenarioKind::FrontendMix { workload } => {
@@ -467,6 +468,7 @@ fn sim_outcome(
         degraded_read_mean_s: None,
         frontend_seconds,
         worker_utilization: None,
+        scratch_pool: None,
     }
 }
 

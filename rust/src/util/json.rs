@@ -61,6 +61,7 @@ impl Json {
     }
 
     /// Serialize (compact).
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);

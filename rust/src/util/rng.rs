@@ -15,6 +15,22 @@ pub fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Deterministic xorshift64 byte fill — the shared data generator for
+/// benches and differential tests (`perf`, the GF kernel suites). Same
+/// recurrence the per-file copies in the older test suites use, so
+/// seeded streams stay reproducible and cheap.
+pub fn xorshift_bytes(len: usize, seed: u64) -> Vec<u8> {
+    let mut s = seed.wrapping_mul(0x9e3779b97f4a7c15) | 1;
+    (0..len)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s >> 24) as u8
+        })
+        .collect()
+}
+
 /// xoshiro256** — fast, high-quality, 256-bit state.
 #[derive(Clone, Debug)]
 pub struct Rng {

@@ -50,7 +50,7 @@ fn recover_fixture(
         Arc::new(D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, spec.cluster).unwrap());
     let cluster = MiniCluster::new(spec, policy.clone(), "native", SEED).unwrap();
     for sid in 0..STRIPES {
-        cluster.write_stripe(sid, &data_for(sid, 3)).unwrap();
+        cluster.write_stripe(sid, data_for(sid, 3)).unwrap();
     }
     let failed = Location::new(2, 1);
     cluster.fail_node(failed);

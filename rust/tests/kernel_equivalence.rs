@@ -1,0 +1,135 @@
+//! Differential tests for the fused GF combine engine (DESIGN.md §9): the
+//! wide-word, table-cached, cache-blocked kernels must be byte-identical
+//! to a naive per-byte `gf::mul` accumulation for every coefficient class
+//! (0, 1, arbitrary), every small length, large unaligned lengths that
+//! straddle the fusion block, and mixed-coefficient source sets.
+
+use d3ec::gf;
+use d3ec::util::rng::xorshift_bytes as bytes;
+
+/// The scalar reference: per-byte multiply-accumulate over `gf::mul`
+/// (itself exhaustively pinned against the polynomial basis in gf::tests).
+fn mac_ref(acc: &mut [u8], c: u8, src: &[u8]) {
+    for (a, &s) in acc.iter_mut().zip(src) {
+        *a ^= gf::mul(c, s);
+    }
+}
+
+/// Every coefficient class: the no-op lane, the XOR lane, a generator
+/// power, a high-bit value, and the all-ones byte.
+const COEFF_CLASSES: [u8; 6] = [0, 1, 2, 0x8e, 0x80, 0xff];
+
+#[test]
+fn swar_xor_lane_matches_scalar_for_every_length_0_to_64() {
+    let src = bytes(64, 7);
+    for len in 0..=64 {
+        let mut acc = bytes(len, 8);
+        let mut want = acc.clone();
+        mac_ref(&mut want, 1, &src[..len]);
+        gf::xor_into(&mut acc, &src[..len]);
+        assert_eq!(acc, want, "len={len}");
+    }
+}
+
+#[test]
+fn swar_xor_lane_matches_scalar_for_large_unaligned_lengths() {
+    // prime-ish lengths around and beyond the 16 KiB fusion block, never
+    // a multiple of the 8-byte SWAR word
+    for len in [4093usize, (16 << 10) - 1, (16 << 10) + 9, 100_003] {
+        let src = bytes(len, len as u64);
+        let mut acc = bytes(len, 13);
+        let mut want = acc.clone();
+        mac_ref(&mut want, 1, &src);
+        gf::xor_into(&mut acc, &src);
+        assert_eq!(acc, want, "len={len}");
+    }
+}
+
+#[test]
+fn combine_into_matches_reference_for_all_coefficient_classes() {
+    let src = bytes(611, 5);
+    for &c in &COEFF_CLASSES {
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65, 611] {
+            let mut acc = bytes(len, 77);
+            let mut want = acc.clone();
+            mac_ref(&mut want, c, &src[..len]);
+            gf::combine_into(&mut acc, c, &src[..len]);
+            assert_eq!(acc, want, "c={c} len={len}");
+        }
+    }
+}
+
+#[test]
+fn fused_combine_matches_reference_for_every_length_0_to_64() {
+    // k = 3 with one coefficient from each class per position
+    let srcs: Vec<Vec<u8>> = (0..3).map(|i| bytes(64, 100 + i)).collect();
+    for &c0 in &[0u8, 1, 0x8e] {
+        for &c1 in &[1u8, 0x53] {
+            let coeffs = [c0, c1, 0xff];
+            for len in 0..=64usize {
+                let mut acc = bytes(len, 9);
+                let mut want = acc.clone();
+                for (&c, src) in coeffs.iter().zip(&srcs) {
+                    mac_ref(&mut want, c, &src[..len]);
+                }
+                let pairs: Vec<(u8, &[u8])> =
+                    coeffs.iter().zip(&srcs).map(|(&c, s)| (c, &s[..len])).collect();
+                gf::combine_many_into(&mut acc, &pairs);
+                assert_eq!(acc, want, "coeffs={coeffs:?} len={len}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_combine_matches_reference_across_fusion_block_boundaries() {
+    // lengths that exercise: exactly one block, one block ± 1, several
+    // blocks plus an unaligned tail
+    let block = 16 << 10;
+    for len in [block - 1, block, block + 1, 3 * block + 4093] {
+        let k = 6;
+        let srcs: Vec<Vec<u8>> = (0..k).map(|i| bytes(len, 1000 + i as u64)).collect();
+        let coeffs: Vec<u8> = (0..k).map(|i| COEFF_CLASSES[i % COEFF_CLASSES.len()]).collect();
+        let mut acc = bytes(len, 31);
+        let mut want = acc.clone();
+        for (&c, src) in coeffs.iter().zip(&srcs) {
+            mac_ref(&mut want, c, src);
+        }
+        let pairs: Vec<(u8, &[u8])> =
+            coeffs.iter().zip(&srcs).map(|(&c, s)| (c, s.as_slice())).collect();
+        gf::combine_many_into(&mut acc, &pairs);
+        assert_eq!(acc, want, "len={len}");
+    }
+}
+
+#[test]
+fn fused_combine_equals_sequential_combine_into() {
+    // the fused engine must agree with the sequential per-source path it
+    // replaced, for a randomized mixed-coefficient source set
+    let len = 40_961; // 2.5 fusion blocks + 1
+    let k = 8;
+    let srcs: Vec<Vec<u8>> = (0..k).map(|i| bytes(len, 2000 + i as u64)).collect();
+    let coeffs = bytes(k, 0xc0ffee);
+    let mut fused = vec![0u8; len];
+    let pairs: Vec<(u8, &[u8])> =
+        coeffs.iter().zip(&srcs).map(|(&c, s)| (c, s.as_slice())).collect();
+    gf::combine_many_into(&mut fused, &pairs);
+    let mut seq = vec![0u8; len];
+    for (&c, src) in coeffs.iter().zip(&srcs) {
+        gf::combine_into(&mut seq, c, src);
+    }
+    assert_eq!(fused, seq);
+}
+
+#[test]
+fn gf_combine_wrapper_runs_through_the_fused_engine_correctly() {
+    let len = 1025;
+    let a = bytes(len, 1);
+    let b = bytes(len, 2);
+    let c = bytes(len, 3);
+    let got = gf::combine(&[0x1d, 1, 0], &[&a, &b, &c]);
+    let mut want = vec![0u8; len];
+    mac_ref(&mut want, 0x1d, &a);
+    mac_ref(&mut want, 1, &b);
+    assert_eq!(got, want);
+}

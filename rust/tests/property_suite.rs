@@ -70,6 +70,26 @@ fn encode_stripe(k: usize, m: usize, len: usize, seed: u64) -> Vec<Vec<u8>> {
     all
 }
 
+/// Scalar reference for the fused data path: per-byte `gf::mul`
+/// accumulation of a plan's sources (aggregation staging collapses under
+/// GF linearity, so the flat sum is the ground truth for any staging).
+fn naive_plan_bytes(
+    code: &CodeSpec,
+    plan: &d3ec::recovery::RepairPlan,
+    shards: &[Vec<u8>],
+) -> Vec<u8> {
+    let sources = plan.source_blocks();
+    let coeffs = plan_coefficients(code, plan);
+    let width = sources.first().map_or(0, |&b| shards[b].len());
+    let mut acc = vec![0u8; width];
+    for (&b, &c) in sources.iter().zip(&coeffs) {
+        for (a, &s) in acc.iter_mut().zip(&shards[b]) {
+            *a ^= d3ec::gf::mul(c, s);
+        }
+    }
+    acc
+}
+
 /// Deterministic property harness over ≥ 200 sampled configurations of
 /// (racks, nodes/rack, k, m, block size, policy). For every sample:
 ///
@@ -80,7 +100,11 @@ fn encode_stripe(k: usize, m: usize, len: usize, seed: u64) -> Vec<Vec<u8>> {
 ///   margin;
 /// * **round-trip decode** — a seeded failed block is rebuilt from real
 ///   encoded bytes at the sampled block size via `execute_plan_bytes`
-///   (the slice-kernel twin of the cluster data path) and must match;
+///   (the *fused* cache-blocked kernel twin of the cluster data path,
+///   DESIGN.md §9) and must match; every tenth sample additionally
+///   cross-checks the fused result against a naive per-byte `gf::mul`
+///   accumulation, so the wide-word engine stays pinned to the scalar
+///   field arithmetic across the whole configuration space;
 /// * **plan validity** — exactly k distinct sources, failed block never
 ///   read, decode coefficients exist.
 #[test]
@@ -167,7 +191,7 @@ fn seeded_sweep_200_configs_uniformity_decode_validity() {
         assert_eq!(distinct.len(), k, "duplicate sources");
         let coeffs = plan_coefficients(&code, &plan);
         assert_eq!(coeffs.len(), k, "undecodable source set");
-        // --- round-trip decode at the sampled block size
+        // --- round-trip decode at the sampled block size (fused kernel)
         let all = encode_stripe(k, m, block_len, 0x5eed ^ sampled as u64);
         let rebuilt = execute_plan_bytes(&code, &plan, &all);
         assert_eq!(
@@ -175,6 +199,14 @@ fn seeded_sweep_200_configs_uniformity_decode_validity() {
             "{} ({k},{m}) {r}x{n} sid={sid} b={failed_block} len={block_len}",
             policy.name()
         );
+        if sampled % 10 == 0 {
+            // differential check: fused engine vs per-byte scalar reference
+            assert_eq!(
+                rebuilt,
+                naive_plan_bytes(&code, &plan, &all),
+                "fused path diverged from scalar gf::mul at sample {sampled}"
+            );
+        }
         sampled += 1;
     }
     assert!(sampled >= 200);

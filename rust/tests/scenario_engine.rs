@@ -106,23 +106,25 @@ fn rack_failure_recovers_real_bytes_in_the_minicluster() {
         Arc::new(D3Placement::new(code, spec.cluster).unwrap());
     let cluster = MiniCluster::new(spec, policy.clone(), "native", 4).unwrap();
     let stripes = 36u64;
-    let originals = cluster
-        .write_stripes_parallel(stripes, 4, |sid| {
-            (0..6)
-                .map(|b| {
-                    let mut v = vec![0u8; 16 << 10];
-                    let mut s = sid.wrapping_mul(77).wrapping_add(b as u64) | 1;
-                    for byte in v.iter_mut() {
-                        s ^= s << 13;
-                        s ^= s >> 7;
-                        s ^= s << 17;
-                        *byte = (s >> 24) as u8;
-                    }
-                    v
-                })
-                .collect()
-        })
-        .unwrap();
+    let gen = |sid: u64| -> Vec<Vec<u8>> {
+        (0..6)
+            .map(|b| {
+                let mut v = vec![0u8; 16 << 10];
+                let mut s = sid.wrapping_mul(77).wrapping_add(b as u64) | 1;
+                for byte in v.iter_mut() {
+                    s ^= s << 13;
+                    s ^= s >> 7;
+                    s ^= s << 17;
+                    *byte = (s >> 24) as u8;
+                }
+                v
+            })
+            .collect()
+    };
+    // stripes move into the cluster (zero-copy ingest); regenerate the
+    // deterministic data for the verification pass below
+    cluster.write_stripes_parallel(stripes, 4, gen).unwrap();
+    let originals: Vec<Vec<Vec<u8>>> = (0..stripes).map(gen).collect();
     let failed: Vec<Location> = (0..3).map(|j| Location::new(1, j)).collect();
     for &f in &failed {
         cluster.fail_node(f);

@@ -53,7 +53,7 @@ fn d3_rs_full_lifecycle_through_pjrt() {
     let mut originals = Vec::new();
     for sid in 0..stripes {
         let d = stripe_data(sid, 3, 64 * 1024);
-        cluster.write_stripe(sid, &d).unwrap();
+        cluster.write_stripe(sid, d.clone()).unwrap();
         originals.push(d);
     }
     let failed = Location::new(0, 1);
@@ -80,7 +80,7 @@ fn d3_lrc_full_lifecycle_through_pjrt() {
     let mut originals = Vec::new();
     for sid in 0..stripes {
         let d = stripe_data(sid, 4, 32 * 1024);
-        cluster.write_stripe(sid, &d).unwrap();
+        cluster.write_stripe(sid, d.clone()).unwrap();
         originals.push(d);
     }
     let failed = Location::new(3, 0);
@@ -102,7 +102,7 @@ fn degraded_read_under_pjrt_matches_original() {
     let policy = Arc::new(D3Placement::new(CodeSpec::Rs { k: 6, m: 3 }, spec.cluster).unwrap());
     let cluster = MiniCluster::new(spec, policy, backend(), 2).unwrap();
     let d = stripe_data(3, 6, 128 * 1024);
-    cluster.write_stripe(3, &d).unwrap();
+    cluster.write_stripe(3, d.clone()).unwrap();
     let victim = cluster.locate(3, 4);
     cluster.fail_node(victim);
     let (got, latency) = cluster.degraded_read(3, 4, Location::new(5, 2)).unwrap();
@@ -120,7 +120,7 @@ fn rdd_baseline_recovers_correctly_too() {
     let mut originals = Vec::new();
     for sid in 0..stripes {
         let d = stripe_data(sid, 3, 32 * 1024);
-        cluster.write_stripe(sid, &d).unwrap();
+        cluster.write_stripe(sid, d.clone()).unwrap();
         originals.push(d);
     }
     let failed = Location::new(4, 2);
