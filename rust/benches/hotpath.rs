@@ -46,6 +46,9 @@ fn main() {
     if let Some(r) = report.ratio("combine_k6_sequential", "combine_k6_fused") {
         println!("headline: fused k=6 combine is {r:.2}x the sequential path");
     }
+    if let Some(r) = report.ratio("sched_fifo_8w", "sched_balanced_8w") {
+        println!("headline: balanced schedule is {r:.2}x FIFO on contended links");
+    }
     if let Some(path) = &json_path {
         report.write_json(path).expect("write bench json");
         println!("wrote {} bench rows to {}", report.ns_per_byte.len(), path.display());

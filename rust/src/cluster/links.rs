@@ -3,9 +3,11 @@
 //! in-process transfers, so wall-clock recovery times are network-shaped
 //! exactly like the testbed's.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::topology::Location;
 
 /// Counting in-flight gate: at most `cap` concurrent holders, 0 = no limit.
 /// The recovery executor (DESIGN.md §8) sets per-node and per-rack-link
@@ -120,6 +122,25 @@ impl TokenBucket {
     }
 }
 
+/// Per-rack-link busy/stall meter (nanosecond counters): *busy* is wall
+/// time a transfer spent moving bytes through the rack's router port
+/// (token-bucket pacing included), *stall* is wall time spent queued on
+/// in-flight gates before the first byte moved. The recovery path diffs
+/// snapshots around a run, so a schedule that piles onto one link shows
+/// up as stall on that link rather than vanishing into the wall clock.
+#[derive(Default)]
+struct LinkMeter {
+    busy_ns: AtomicU64,
+    stall_ns: AtomicU64,
+}
+
+impl LinkMeter {
+    fn add(&self, busy: Duration, stall: Duration) {
+        self.busy_ns.fetch_add(busy.as_nanos() as u64, Ordering::Relaxed);
+        self.stall_ns.fetch_add(stall.as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
 /// All throttled links of the cluster.
 pub struct LinkSet {
     /// per-node NIC (up, down)
@@ -130,6 +151,8 @@ pub struct LinkSet {
     node_gates: Vec<Gate>,
     /// per-rack-link in-flight gate for cross-rack transfers
     rack_gates: Vec<Gate>,
+    /// per-rack-link busy/stall accounting for cross-rack transfers
+    meters: Vec<LinkMeter>,
     nodes_per_rack: usize,
 }
 
@@ -146,8 +169,24 @@ impl LinkSet {
                 .collect(),
             node_gates: (0..spec.cluster.node_count()).map(|_| Gate::new()).collect(),
             rack_gates: (0..spec.cluster.racks).map(|_| Gate::new()).collect(),
+            meters: (0..spec.cluster.racks).map(|_| LinkMeter::default()).collect(),
             nodes_per_rack: spec.cluster.nodes_per_rack,
         }
+    }
+
+    /// Per-rack-link (busy seconds, stall seconds) accumulated by
+    /// cross-rack transfers so far; callers diff two snapshots to
+    /// attribute time to a phase (mirrors [`LinkSet`] byte accounting).
+    pub fn link_busy_stall(&self) -> Vec<(f64, f64)> {
+        self.meters
+            .iter()
+            .map(|m| {
+                (
+                    m.busy_ns.load(Ordering::Relaxed) as f64 / 1e9,
+                    m.stall_ns.load(Ordering::Relaxed) as f64 / 1e9,
+                )
+            })
+            .collect()
     }
 
     /// Set the in-flight caps the recovery executor runs under (0 = off).
@@ -165,13 +204,13 @@ impl LinkSet {
     /// held for the whole transfer and acquired in a single global order
     /// (node gates by flat index, then rack gates by rack index) so
     /// concurrent transfers can never deadlock on them.
-    pub fn transfer(&self, src: crate::topology::Location, dst: crate::topology::Location, bytes: u64) {
+    pub fn transfer(&self, src: Location, dst: Location, bytes: u64) {
         if src == dst || bytes == 0 {
             return;
         }
-        let chunk = 256 * 1024;
         let src_i = src.rack as usize * self.nodes_per_rack + src.node as usize;
         let dst_i = dst.rack as usize * self.nodes_per_rack + dst.node as usize;
+        let t0 = Instant::now();
         let mut guards: Vec<GateGuard<'_>> = Vec::with_capacity(4);
         let (lo, hi) = if src_i < dst_i { (src_i, dst_i) } else { (dst_i, src_i) };
         guards.push(self.node_gates[lo].enter());
@@ -185,6 +224,82 @@ impl LinkSet {
             guards.push(self.rack_gates[rlo as usize].enter());
             guards.push(self.rack_gates[rhi as usize].enter());
         }
+        let stall = t0.elapsed();
+        let t1 = Instant::now();
+        self.pace(src, dst, src_i, dst_i, bytes);
+        if src.rack != dst.rack {
+            let busy = t1.elapsed();
+            self.meters[src.rack as usize].add(busy, stall);
+            self.meters[dst.rack as usize].add(busy, stall);
+        }
+    }
+
+    /// Batched inbound transfer: move every `(source, bytes)` flow to
+    /// `dst` under **one** gate acquisition covering all endpoints — the
+    /// per-source fetch-coalescing path of the balanced scheduler
+    /// (DESIGN.md §10). Gates are acquired in the same global order as
+    /// [`LinkSet::transfer`] (node gates by flat index, then rack gates
+    /// by rack index), so singles and batches can never deadlock; token
+    /// buckets still charge per flow, so byte pacing and accounting are
+    /// identical to issuing the transfers one by one.
+    pub fn transfer_batch(&self, dst: Location, flows: &[(Location, u64)]) {
+        let dst_i = dst.rack as usize * self.nodes_per_rack + dst.node as usize;
+        let mut nodes: Vec<usize> = Vec::with_capacity(flows.len() + 1);
+        let mut rack_ids: Vec<usize> = Vec::new();
+        for &(src, bytes) in flows {
+            if src == dst || bytes == 0 {
+                continue;
+            }
+            nodes.push(src.rack as usize * self.nodes_per_rack + src.node as usize);
+            if src.rack != dst.rack {
+                rack_ids.push(src.rack as usize);
+                rack_ids.push(dst.rack as usize);
+            }
+        }
+        if nodes.is_empty() {
+            return;
+        }
+        nodes.push(dst_i);
+        nodes.sort_unstable();
+        nodes.dedup();
+        rack_ids.sort_unstable();
+        rack_ids.dedup();
+        let t0 = Instant::now();
+        let mut guards: Vec<GateGuard<'_>> =
+            Vec::with_capacity(nodes.len() + rack_ids.len());
+        for &i in &nodes {
+            guards.push(self.node_gates[i].enter());
+        }
+        for &r in &rack_ids {
+            guards.push(self.rack_gates[r].enter());
+        }
+        let stall = t0.elapsed();
+        for &(src, bytes) in flows {
+            if src == dst || bytes == 0 {
+                continue;
+            }
+            let src_i = src.rack as usize * self.nodes_per_rack + src.node as usize;
+            let t1 = Instant::now();
+            self.pace(src, dst, src_i, dst_i, bytes);
+            if src.rack != dst.rack {
+                // busy is metered per flow, so inner-rack flows in the
+                // batch never inflate a rack link's busy time
+                let busy = t1.elapsed();
+                self.meters[src.rack as usize].add(busy, Duration::ZERO);
+                self.meters[dst.rack as usize].add(busy, Duration::ZERO);
+            }
+        }
+        // the single gate acquisition stalls the whole batch; charge it
+        // to every cross-rack link the batch touches
+        for &r in &rack_ids {
+            self.meters[r].add(Duration::ZERO, stall);
+        }
+    }
+
+    /// Token-bucket pacing of one flow (chunked so concurrent flows
+    /// interleave fairly); gates must already be held.
+    fn pace(&self, src: Location, dst: Location, src_i: usize, dst_i: usize, bytes: u64) {
+        let chunk = 256 * 1024;
         let mut left = bytes;
         while left > 0 {
             let take = left.min(chunk);
@@ -279,6 +394,62 @@ mod tests {
                     let b = Location::new(((i + 1) % 4) as usize, ((i + 2) % 3) as usize);
                     l.transfer(a, b, 64 * 1024);
                     l.transfer(b, a, 64 * 1024);
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn batched_transfers_complete_and_meter_the_links() {
+        let mut spec = SystemSpec::paper_default();
+        spec.net.inner_mbps = 8000.0;
+        spec.net.cross_mbps = 160.0; // 20 MB/s rack port: the batch must pace
+        let links = LinkSet::new(&spec);
+        let dst = Location::new(0, 0);
+        let flows: Vec<(Location, u64)> = vec![
+            (Location::new(1, 0), 2_000_000),
+            (Location::new(2, 1), 2_000_000),
+            (Location::new(0, 1), 64 * 1024), // inner-rack: unmetered
+            (dst, 999),                       // self-flow: skipped
+            (Location::new(3, 2), 0),         // empty: skipped
+        ];
+        let t0 = Instant::now();
+        links.transfer_batch(dst, &flows);
+        let secs = t0.elapsed().as_secs_f64();
+        // 4 MB into one 20 MB/s rack downlink ⇒ well above 0.1 s
+        assert!(secs > 0.1, "batch finished implausibly fast: {secs}");
+        let stats = links.link_busy_stall();
+        assert_eq!(stats.len(), spec.cluster.racks);
+        assert!(stats[0].0 > 0.0, "dst rack link never went busy");
+        assert!(stats[1].0 > 0.0 && stats[2].0 > 0.0, "src rack links unmetered");
+        assert_eq!(stats[3], (0.0, 0.0), "untouched rack picked up time");
+    }
+
+    #[test]
+    fn batched_and_single_transfers_interleave_without_deadlock() {
+        let mut spec = SystemSpec::paper_default();
+        spec.net.inner_mbps = 8000.0;
+        spec.net.cross_mbps = 1600.0;
+        let links = std::sync::Arc::new(LinkSet::new(&spec));
+        links.set_inflight_caps(2, 2);
+        let hs: Vec<_> = (0..8u64)
+            .map(|i| {
+                let l = links.clone();
+                std::thread::spawn(move || {
+                    let dst = Location::new((i % 4) as usize, (i % 3) as usize);
+                    let srcs: Vec<(Location, u64)> = (0..3)
+                        .map(|j| {
+                            (
+                                Location::new(((i + j + 1) % 4) as usize, (j % 3) as usize),
+                                32 * 1024,
+                            )
+                        })
+                        .collect();
+                    l.transfer_batch(dst, &srcs);
+                    l.transfer(dst, srcs[0].0, 32 * 1024);
                 })
             })
             .collect();

@@ -25,6 +25,7 @@ use crate::metrics::PoolStats;
 use crate::placement::Placement;
 use crate::recovery::executor::{execute_plans, ChunkRunner, ExecutorConfig, Scratch};
 use crate::recovery::plan::{plan_coefficients, plan_degraded_read, plan_repair, RepairPlan};
+use crate::recovery::schedule::SchedulePolicy;
 use crate::topology::{Location, SystemSpec};
 use crate::util::Rng;
 
@@ -45,10 +46,15 @@ pub struct ClusterRecoveryStats {
     pub lambda: f64,
     /// Chunk tasks executed by the pipelined executor.
     pub chunks: usize,
+    /// Admission rounds of the schedule (1 for FIFO).
+    pub rounds: usize,
     /// Per-worker busy fraction of the recovery wall clock.
     pub worker_utilization: Vec<f64>,
     /// Scratch-pool hit/miss totals of the executor's worker pools.
     pub scratch: PoolStats,
+    /// Per-rack-link (busy, stall) seconds during this recovery
+    /// ([`links::LinkSet::link_busy_stall`]).
+    pub link_busy_stall: Vec<(f64, f64)>,
 }
 
 /// The in-process cluster.
@@ -127,6 +133,23 @@ impl MiniCluster {
             self.rack_down[dst.rack as usize].fetch_add(bytes, Ordering::Relaxed);
         }
         self.links.transfer(src, dst, bytes);
+    }
+
+    /// Batched inbound transfer: account every flow's cross-rack bytes
+    /// under one pairwise-consistency hold, then move the whole group
+    /// through the links under a single ordered gate acquisition
+    /// ([`links::LinkSet::transfer_batch`]) — the fetch-coalescing path.
+    fn transfer_group(&self, to: Location, flows: &[(Location, u64)]) {
+        {
+            let _pairwise = self.accounting.read().unwrap();
+            for &(src, bytes) in flows {
+                if src.rack != to.rack && bytes > 0 {
+                    self.rack_up[src.rack as usize].fetch_add(bytes, Ordering::Relaxed);
+                    self.rack_down[to.rack as usize].fetch_add(bytes, Ordering::Relaxed);
+                }
+            }
+        }
+        self.links.transfer_batch(to, flows);
     }
 
     /// Client write path: encode `data` (k shards) and distribute the
@@ -237,25 +260,40 @@ impl MiniCluster {
         to: Location,
         buf: &mut Vec<u8>,
     ) -> anyhow::Result<()> {
-        let loc = self.locate(sid, block);
-        {
-            let store = self.store_of(loc).lock().unwrap();
-            let blk = store
-                .get(&(sid, block))
-                .ok_or_else(|| anyhow!("source block ({sid},{block}) missing at {loc}"))?;
-            let off = off as usize;
-            if off + len > blk.len() {
-                bail!(
-                    "chunk [{off}, {}) out of range for block ({sid},{block}) of {} bytes",
-                    off + len,
-                    blk.len()
-                );
-            }
-            buf.clear();
-            buf.extend_from_slice(&blk[off..off + len]);
-        }
+        let loc = self.read_chunk_into(sid, block, off, len, buf)?;
         self.transfer(loc, to, len as u64);
         Ok(())
+    }
+
+    /// Disk half of a chunk fetch: copy bytes `[off, off + len)` of a
+    /// source block into `buf` (cleared first) and return where the
+    /// block lives. The caller owes the network a matching transfer —
+    /// either per chunk ([`MiniCluster::fetch_chunk_into`]) or batched
+    /// per window ([`MiniCluster::transfer_group`]).
+    fn read_chunk_into(
+        &self,
+        sid: u64,
+        block: usize,
+        off: u64,
+        len: usize,
+        buf: &mut Vec<u8>,
+    ) -> anyhow::Result<Location> {
+        let loc = self.locate(sid, block);
+        let store = self.store_of(loc).lock().unwrap();
+        let blk = store
+            .get(&(sid, block))
+            .ok_or_else(|| anyhow!("source block ({sid},{block}) missing at {loc}"))?;
+        let off = off as usize;
+        if off + len > blk.len() {
+            bail!(
+                "chunk [{off}, {}) out of range for block ({sid},{block}) of {} bytes",
+                off + len,
+                blk.len()
+            );
+        }
+        buf.clear();
+        buf.extend_from_slice(&blk[off..off + len]);
+        Ok(loc)
     }
 
     /// Execute one repair plan: inner-rack aggregation (D³) or direct
@@ -399,11 +437,18 @@ impl MiniCluster {
         cfg: ExecutorConfig,
         failed_racks: &[u32],
     ) -> anyhow::Result<ClusterRecoveryStats> {
+        let mut cfg = cfg;
+        // the balanced scheduler tiles its coloring across the placement
+        // period when the policy is periodic (DESIGN.md §10)
+        if cfg.period.is_none() {
+            cfg.period = self.policy.period();
+        }
         let before = self.rack_byte_snapshot();
+        let links_before = self.links.link_busy_stall();
         let blocks = plans.len();
         let bytes: u64 = blocks as u64 * self.spec.block_size;
         self.links.set_inflight_caps(cfg.node_inflight, cfg.link_inflight);
-        let io = ChunkIo::new(self, &plans);
+        let io = ChunkIo::new(self, &plans, cfg.batched_fetch);
         let run = execute_plans(&io, &plans, self.spec.block_size, &cfg);
         // lift the caps so post-recovery traffic (reads, writes) is ungated
         self.links.set_inflight_caps(0, 0);
@@ -414,6 +459,7 @@ impl MiniCluster {
             .zip(&after)
             .map(|(&(u0, d0), &(u1, d1))| (u1 - u0, d1 - d0))
             .collect();
+        let link_busy_stall = self.link_busy_stall_since(&links_before);
         let loads: Vec<(f64, f64)> =
             rack_bytes.iter().map(|&(u, d)| (u as f64, d as f64)).collect();
         let lambda = crate::sim::recovery::lambda_metric_excluding(&loads, failed_racks);
@@ -426,14 +472,27 @@ impl MiniCluster {
             rack_bytes,
             lambda,
             chunks: stats.chunks,
+            rounds: stats.rounds,
             worker_utilization: stats.utilization(),
             scratch: stats.scratch,
+            link_busy_stall,
         })
     }
 
     /// Blocks currently stored on `loc`.
     pub fn block_count(&self, loc: Location) -> usize {
         self.store_of(loc).lock().unwrap().len()
+    }
+
+    /// Per-rack-link (busy, stall) seconds accumulated since `before`, a
+    /// snapshot taken with [`links::LinkSet::link_busy_stall`] — the time
+    /// analogue of diffing two [`MiniCluster::rack_byte_snapshot`]s.
+    fn link_busy_stall_since(&self, before: &[(f64, f64)]) -> Vec<(f64, f64)> {
+        before
+            .iter()
+            .zip(self.links.link_busy_stall())
+            .map(|(&(b0, s0), (b1, s1))| (b1 - b0, s1 - s0))
+            .collect()
     }
 
     /// Snapshot of the per-rack cross-rack byte counters (up, down) —
@@ -453,30 +512,110 @@ impl MiniCluster {
     }
 }
 
+/// One plan's fetch structure with decode coefficients resolved at build
+/// time (once per plan, not once per chunk): inner-rack aggregation
+/// groups and the direct source set, each as `(block, coeff)` lists.
+struct PlanFetch {
+    /// (aggregator location, that rack's inputs).
+    aggs: Vec<(Location, Vec<(usize, u8)>)>,
+    /// Sources shipped straight to the compute node.
+    direct: Vec<(usize, u8)>,
+}
+
 /// Chunk-level IO behind the pipelined executor: fetches source-chunk
 /// bytes through the gated, token-bucket-throttled links into pooled
-/// scratch buffers, runs ONE fused cache-blocked multiply-accumulate per
-/// aggregation group and per direct-source set
-/// ([`gf::combine_many_into`], DESIGN.md §9), and persists finished
-/// blocks into the NameNode metadata. Decode coefficients are computed
-/// once per plan, not once per chunk, and the steady-state chunk loop
-/// allocates nothing — every buffer cycles through the worker's
-/// [`Scratch`] pool.
+/// scratch buffers — per source, or per window through the batched
+/// single-gate-acquisition path (DESIGN.md §10) — runs ONE fused
+/// cache-blocked multiply-accumulate per aggregation group and per
+/// direct-source set ([`gf::combine_many_into`], DESIGN.md §9), and
+/// persists finished blocks into the NameNode metadata. Decode
+/// coefficients are resolved once per plan, not once per chunk, and the
+/// steady-state chunk loop allocates nothing — every buffer (including
+/// the batched-fetch flow list) cycles through the worker's [`Scratch`]
+/// pool.
 struct ChunkIo<'a> {
     cluster: &'a MiniCluster,
-    /// Per-plan sorted source block indices (`RepairPlan::source_blocks`).
-    sources: Vec<Vec<usize>>,
-    /// Per-plan decode coefficients aligned with `sources`.
-    coeffs: Vec<Vec<u8>>,
+    /// Per-plan resolved fetch groups.
+    fetch: Vec<PlanFetch>,
+    /// Coalesce each task's same-destination fetches into one batched
+    /// gated round trip (DESIGN.md §10) instead of one per source.
+    batched: bool,
 }
 
 impl<'a> ChunkIo<'a> {
-    fn new(cluster: &'a MiniCluster, plans: &[RepairPlan]) -> ChunkIo<'a> {
+    fn new(cluster: &'a MiniCluster, plans: &[RepairPlan], batched: bool) -> ChunkIo<'a> {
         let code = cluster.policy.code();
-        let sources: Vec<Vec<usize>> = plans.iter().map(|p| p.source_blocks()).collect();
-        let coeffs: Vec<Vec<u8>> =
-            plans.iter().map(|p| plan_coefficients(&code, p)).collect();
-        ChunkIo { cluster, sources, coeffs }
+        let fetch = plans
+            .iter()
+            .map(|p| {
+                let sources = p.source_blocks();
+                let coeffs = plan_coefficients(&code, p);
+                let coeff_of = |b: usize| -> u8 {
+                    coeffs[sources.binary_search(&b).expect("source present")]
+                };
+                PlanFetch {
+                    aggs: p
+                        .aggregations
+                        .iter()
+                        .map(|agg| {
+                            (
+                                agg.at,
+                                agg.inputs
+                                    .iter()
+                                    .map(|&(b, _)| (b, coeff_of(b)))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                    direct: p.direct.iter().map(|&(b, _)| (b, coeff_of(b))).collect(),
+                }
+            })
+            .collect();
+        ChunkIo { cluster, fetch, batched }
+    }
+
+    /// Fetch every `(block, coeff)` source's `[off, off + len)` window to
+    /// `to`, pushing `(coeff, bytes)` pairs onto `fetched`. Batched mode
+    /// reads all windows from disk first and then moves the whole group
+    /// through the links in one gated round trip; per-chunk mode issues
+    /// one gated transfer per source (the pre-§10 baseline).
+    #[allow(clippy::too_many_arguments)]
+    fn fetch_sources(
+        &self,
+        stripe: u64,
+        blocks: &[(usize, u8)],
+        off: u64,
+        len: usize,
+        to: Location,
+        scratch: &mut Scratch,
+        fetched: &mut Vec<(u8, Vec<u8>)>,
+    ) -> anyhow::Result<()> {
+        if self.batched {
+            let mut flows = scratch.take_flows();
+            for &(b, c) in blocks {
+                let mut buf = scratch.take();
+                match self.cluster.read_chunk_into(stripe, b, off, len, &mut buf) {
+                    Ok(src) => {
+                        flows.push((src, len as u64));
+                        fetched.push((c, buf));
+                    }
+                    Err(e) => {
+                        scratch.put(buf);
+                        scratch.put_flows(flows);
+                        return Err(e);
+                    }
+                }
+            }
+            self.cluster.transfer_group(to, &flows);
+            scratch.put_flows(flows);
+        } else {
+            for &(b, c) in blocks {
+                let mut buf = scratch.take();
+                self.cluster.fetch_chunk_into(stripe, b, off, len, to, &mut buf)?;
+                fetched.push((c, buf));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -489,36 +628,31 @@ impl ChunkRunner for ChunkIo<'_> {
         len: usize,
         scratch: &mut Scratch,
     ) -> anyhow::Result<Vec<u8>> {
-        let sources = &self.sources[plan_idx];
-        let coeffs = &self.coeffs[plan_idx];
-        let coeff_of =
-            |b: usize| coeffs[sources.binary_search(&b).expect("source present")];
+        let fetch = &self.fetch[plan_idx];
         let mut acc = scratch.take_zeroed(len);
         let mut fetched = scratch.take_staging();
-        for agg in &plan.aggregations {
-            // inner-rack aggregation at `agg.at`, then ship ONE aggregated
+        for (at, inputs) in &fetch.aggs {
+            // inner-rack aggregation at `at`, then ship ONE aggregated
             // chunk to the compute node
             let mut partial = scratch.take_zeroed(len);
-            for &(b, _) in &agg.inputs {
-                let mut buf = scratch.take();
-                self.cluster
-                    .fetch_chunk_into(plan.stripe, b, off, len, agg.at, &mut buf)?;
-                fetched.push((coeff_of(b), buf));
-            }
+            self.fetch_sources(plan.stripe, inputs, off, len, *at, scratch, &mut fetched)?;
             gf::combine_many_into(&mut partial, &fetched);
             for (_, buf) in fetched.drain(..) {
                 scratch.put(buf);
             }
-            self.cluster.transfer(agg.at, plan.compute_at, len as u64);
+            self.cluster.transfer(*at, plan.compute_at, len as u64);
             gf::xor_into(&mut acc, &partial);
             scratch.put(partial);
         }
-        for &(b, _) in &plan.direct {
-            let mut buf = scratch.take();
-            self.cluster
-                .fetch_chunk_into(plan.stripe, b, off, len, plan.compute_at, &mut buf)?;
-            fetched.push((coeff_of(b), buf));
-        }
+        self.fetch_sources(
+            plan.stripe,
+            &fetch.direct,
+            off,
+            len,
+            plan.compute_at,
+            scratch,
+            &mut fetched,
+        )?;
         gf::combine_many_into(&mut acc, &fetched);
         scratch.put_staging(fetched);
         Ok(acc)
@@ -569,6 +703,14 @@ pub struct ClusterBackend {
     /// Executor chunk size (bytes); blocks split into chunk tasks so
     /// fetch/decode/write of different chunks pipeline (DESIGN.md §8).
     pub chunk_size: u64,
+    /// Task-admission order: FIFO or the link-balanced wavefront
+    /// schedule (DESIGN.md §10, `d3ctl scenario --schedule`).
+    pub schedule: SchedulePolicy,
+    /// Fetch-coalescing window in chunks (`--coalesce`, DESIGN.md §10).
+    pub coalesce: usize,
+    /// Move each task's same-destination fetches in one batched gated
+    /// round trip (`--batched-fetch`, DESIGN.md §10).
+    pub batched_fetch: bool,
 }
 
 impl Default for ClusterBackend {
@@ -580,6 +722,9 @@ impl Default for ClusterBackend {
             cross_mbps: 1600.0,
             workers: 8,
             chunk_size: 16 << 10,
+            schedule: SchedulePolicy::Fifo,
+            coalesce: 1,
+            batched_fetch: false,
         }
     }
 }
@@ -589,6 +734,9 @@ impl ClusterBackend {
         ExecutorConfig {
             workers: self.workers,
             chunk_size: self.chunk_size,
+            schedule: self.schedule,
+            coalesce: self.coalesce,
+            batched_fetch: self.batched_fetch,
             ..ExecutorConfig::default()
         }
     }
@@ -648,6 +796,7 @@ impl crate::scenario::RecoveryBackend for ClusterBackend {
                     .collect();
                 cluster.fail_node(failed);
                 let before = cluster.rack_byte_snapshot();
+                let links_before = cluster.links.link_busy_stall();
                 let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::new());
                 let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
                 let t0 = Instant::now();
@@ -685,6 +834,7 @@ impl crate::scenario::RecoveryBackend for ClusterBackend {
                     .zip(&after)
                     .map(|(&(u0, d0), &(u1, d1))| (u1 - u0, d1 - d0))
                     .collect();
+                let link_busy_stall = cluster.link_busy_stall_since(&links_before);
                 let lats = latencies.into_inner().unwrap();
                 let mean = if lats.is_empty() {
                     0.0
@@ -714,6 +864,7 @@ impl crate::scenario::RecoveryBackend for ClusterBackend {
                     frontend_seconds: None,
                     worker_utilization: None,
                     scratch_pool: None,
+                    link_busy_stall: Some(link_busy_stall),
                 })
             }
             ScenarioKind::FrontendMix { .. } => {
@@ -798,6 +949,7 @@ fn cluster_outcome(
         frontend_seconds,
         worker_utilization: Some(stats.worker_utilization.clone()),
         scratch_pool: Some(stats.scratch),
+        link_busy_stall: Some(stats.link_busy_stall.clone()),
     }
 }
 

@@ -6,12 +6,14 @@
 //!                [--policy d3|rdd|hdd] [--code rs-6-3] [--failures K] [--rack R]
 //!                [--backend sim|cluster|both] [--stripes N]
 //!                [--workers N] [--chunk-size KB]   # pipelined recovery executor
+//!                [--schedule fifo|balanced] [--coalesce N] [--batched-fetch true|false]
 //! d3ctl layout --policy d3|rdd|hdd --code rs-3-2 [--stripes N] [--racks R] [--nodes N]
 //! d3ctl mu --code rs-6-3               # Lemma 4 closed form vs planner
 //! d3ctl oa --n 5 [--cols 4]            # print + verify an orthogonal array
 //! d3ctl cluster-demo [--backend pjrt|native] [--stripes N]
 //! d3ctl calibrate                      # coding throughput, native vs PJRT
-//! d3ctl bench [--quick] [--json PATH]  # hot-path suite → BENCH_PR3.json
+//! d3ctl bench [--quick] [--json PATH]  # hot-path suite → BENCH_PR4.json
+//! d3ctl bench-compare --old A.json --new B.json [--tolerance 0.15]
 //! ```
 
 use std::collections::HashMap;
@@ -21,6 +23,7 @@ use d3ec::codes::CodeSpec;
 use d3ec::experiments as exp;
 use d3ec::oa::{max_columns, OrthogonalArray};
 use d3ec::recovery::mu::mu_rs;
+use d3ec::recovery::SchedulePolicy;
 use d3ec::runtime::Coder;
 use d3ec::scenario::{run_cross_backend, FailureScenario, RecoveryBackend};
 use d3ec::sim::SimBackend;
@@ -69,9 +72,10 @@ fn main() {
         "cluster-demo" => cmd_cluster_demo(&flags),
         "calibrate" => cmd_calibrate(&flags),
         "bench" => cmd_bench(&args),
+        "bench-compare" => cmd_bench_compare(&flags),
         _ => {
             println!("d3ctl — Deterministic Data Distribution (D³) reproduction");
-            println!("{}", include_str!("main.rs").lines().skip(2).take(13)
+            println!("{}", include_str!("main.rs").lines().skip(2).take(15)
                 .map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
         }
     }
@@ -79,7 +83,7 @@ fn main() {
 
 /// `d3ctl bench`: the machine-readable hot-path suite (same harness as
 /// `cargo bench --bench hotpath`, DESIGN.md §9). Writes the
-/// `{bench_name: ns_per_byte}` perf-trajectory file — `BENCH_PR3.json`
+/// `{bench_name: ns_per_byte}` perf-trajectory file — `BENCH_PR4.json`
 /// by default, `--json PATH` to override; `--quick` for CI-sized runs.
 /// Boolean flags are parsed from the raw args (the generic flag parser
 /// treats every `--key` as taking a value).
@@ -90,14 +94,56 @@ fn cmd_bench(args: &[String]) {
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1))
         .cloned()
-        .unwrap_or_else(|| "BENCH_PR3.json".to_string());
+        .unwrap_or_else(|| "BENCH_PR4.json".to_string());
     let report = d3ec::perf::run_hotpath(&d3ec::perf::BenchOpts { quick });
-    if let Some(r) = report.ratio("combine_k6_sequential", "combine_k6_fused") {
-        println!("headline: fused k=6 combine is {r:.2}x the sequential path");
+    if let Some(r) = report.ratio("sched_fifo_8w", "sched_balanced_8w") {
+        println!("headline: balanced schedule is {r:.2}x FIFO on contended links");
     }
     match report.write_json(std::path::Path::new(&path)) {
         Ok(()) => println!("wrote {} bench rows to {path}", report.ns_per_byte.len()),
         Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
+/// `d3ctl bench-compare`: diff two `{bench_name: ns_per_byte}` reports
+/// and fail (exit 1) when any tracked kernel regressed beyond the
+/// tolerance — the CI perf gate between `BENCH_PR3.json` and
+/// `BENCH_PR4.json` (lower ns/B is better; ratio rows are skipped by
+/// default via the key list).
+fn cmd_bench_compare(flags: &HashMap<String, String>) {
+    let old: String = flag(flags, "old", "BENCH_PR3.json".into());
+    let new: String = flag(flags, "new", "BENCH_PR4.json".into());
+    let tolerance: f64 = flag(flags, "tolerance", 0.15);
+    let keys: String = flag(
+        flags,
+        "keys",
+        "mac_16mb,mac_16kb_chunks_cached,xor_16mb_swar,combine_k6_fused".into(),
+    );
+    let keys: Vec<&str> = keys.split(',').filter(|k| !k.is_empty()).collect();
+    match d3ec::perf::compare_bench_json(
+        std::path::Path::new(&old),
+        std::path::Path::new(&new),
+        &keys,
+        tolerance,
+    ) {
+        Ok(cmp) => {
+            for row in &cmp.rows {
+                println!("{row}");
+            }
+            if cmp.regressions.is_empty() {
+                println!(
+                    "bench-compare OK: no tracked kernel regressed more than {:.0}%",
+                    tolerance * 100.0
+                );
+            } else {
+                eprintln!("bench-compare FAILED: {}", cmp.regressions.join("; "));
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("bench-compare error: {e}");
+            std::process::exit(1);
+        }
     }
 }
 
@@ -146,17 +192,26 @@ fn cmd_scenario(flags: &HashMap<String, String>) {
         spec.cluster.nodes_per_rack,
         stripes
     );
-    // pipelined executor knobs: same worker count on both backends so the
-    // recovery-time comparison runs at matched concurrency
+    // pipelined executor knobs: same worker count and admission schedule
+    // on both backends so the recovery-time comparison runs at matched
+    // concurrency and in the same order (DESIGN.md §10)
     let workers: usize = flag(flags, "workers", 8usize);
     let chunk_kb: u64 = flag(flags, "chunk-size", 16u64);
+    let schedule: SchedulePolicy = flag(flags, "schedule", SchedulePolicy::Fifo);
+    let coalesce: usize = flag::<usize>(flags, "coalesce", 1).max(1);
+    // batched fetches default on exactly when a window is coalesced
+    let batched: bool = flag(flags, "batched-fetch", coalesce > 1);
     let mut sim = SimBackend::default();
     sim.cfg.workers = workers;
+    sim.cfg.schedule = schedule;
     let mut cluster = ClusterBackend::default();
     cluster.block_size = flag::<u64>(flags, "cluster-block-kb", 64) << 10;
     cluster.data_backend = flag::<String>(flags, "data-backend", "native".into());
     cluster.workers = workers;
     cluster.chunk_size = chunk_kb.max(1) << 10;
+    cluster.schedule = schedule;
+    cluster.coalesce = coalesce;
+    cluster.batched_fetch = batched;
     let backend_sel: String = flag(flags, "backend", "both".into());
     let mut backends: Vec<&dyn RecoveryBackend> = Vec::new();
     if backend_sel == "sim" || backend_sel == "both" {

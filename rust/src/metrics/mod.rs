@@ -15,6 +15,28 @@ pub fn lambda(loads: &[f64]) -> f64 {
     (max - avg) / avg
 }
 
+/// Max/min ratio over the strictly-positive load samples — the
+/// per-rack-link balance witness of the balanced recovery scheduler
+/// (DESIGN.md §10): 1.0 is perfectly even; large values mean one link
+/// carried far more repair traffic than another. Returns 1.0 when fewer
+/// than two samples are positive (nothing to compare).
+pub fn max_min_ratio(loads: &[f64]) -> f64 {
+    let mut min = f64::INFINITY;
+    let mut max = 0.0f64;
+    let mut positive = 0usize;
+    for &x in loads {
+        if x > 0.0 {
+            positive += 1;
+            min = min.min(x);
+            max = max.max(x);
+        }
+    }
+    if positive < 2 {
+        return 1.0;
+    }
+    max / min
+}
+
 /// Coefficient of variation (σ/μ) — secondary balance metric.
 pub fn cv(loads: &[f64]) -> f64 {
     if loads.is_empty() {
@@ -116,6 +138,15 @@ mod tests {
         // Lmax = 9, Lavg = 6 → λ = 0.5
         let l = lambda(&[3.0, 6.0, 9.0]);
         assert!((l - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_min_ratio_over_positive_samples() {
+        assert_eq!(max_min_ratio(&[4.0, 4.0, 4.0]), 1.0);
+        assert!((max_min_ratio(&[2.0, 8.0, 0.0]) - 4.0).abs() < 1e-12);
+        assert_eq!(max_min_ratio(&[0.0, 0.0]), 1.0, "degenerate sets compare even");
+        assert_eq!(max_min_ratio(&[5.0]), 1.0);
+        assert_eq!(max_min_ratio(&[]), 1.0);
     }
 
     #[test]

@@ -22,8 +22,8 @@ use crate::cluster::MiniCluster;
 use crate::codes::CodeSpec;
 use crate::gf;
 use crate::placement::{D3Placement, Placement};
-use crate::recovery::{node_recovery_plans, ExecutorConfig};
-use crate::topology::{Location, SystemSpec};
+use crate::recovery::{node_recovery_plans, ExecutorConfig, SchedulePolicy};
+use crate::topology::{ClusterSpec, Location, SystemSpec};
 use crate::util::json::Json;
 use crate::util::rng::xorshift_bytes as deterministic_bytes;
 
@@ -194,17 +194,252 @@ pub fn run_cluster_benches(opts: &BenchOpts, report: &mut BenchReport) {
     println!("  8-worker speedup over 1 worker: {:.2}x", w1 / w8);
 }
 
+/// One whole-node recovery on a 4-rack topology with contended cross-rack
+/// links, returning wall seconds and recording ns per rebuilt byte.
+#[allow(clippy::too_many_arguments)]
+fn recover_contended(
+    report: &mut BenchReport,
+    name: &str,
+    stripes: u64,
+    block: u64,
+    chunk: u64,
+    schedule: SchedulePolicy,
+    coalesce: usize,
+    batched_fetch: bool,
+) -> f64 {
+    let mut cspec = SystemSpec::paper_default();
+    cspec.cluster = ClusterSpec::new(4, 4);
+    cspec.block_size = block;
+    cspec.net.inner_mbps = 1600.0;
+    cspec.net.cross_mbps = 160.0; // scarce core-router ports: the contended case
+    let policy: Arc<dyn Placement> =
+        Arc::new(D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, cspec.cluster).unwrap());
+    let cluster = MiniCluster::new(cspec, policy.clone(), "native", 7).unwrap();
+    cluster
+        .write_stripes_parallel(stripes, 8, |sid| {
+            (0..3).map(|b| deterministic_bytes(block as usize, sid * 3 + b)).collect()
+        })
+        .unwrap();
+    // pick a failed node that actually stores blocks
+    let failed = (0..cspec.cluster.node_count())
+        .map(|i| cspec.cluster.unflat(i))
+        .find(|&l| (0..stripes).any(|sid| policy.stripe(sid).locs.contains(&l)))
+        .expect("no node holds blocks");
+    cluster.fail_node(failed);
+    let plans = node_recovery_plans(policy.as_ref(), stripes, failed, 7);
+    let cfg = ExecutorConfig {
+        workers: 8,
+        chunk_size: chunk,
+        schedule,
+        coalesce,
+        batched_fetch,
+        ..Default::default()
+    };
+    let stats = cluster.recover_with_plans_cfg(plans, cfg, &[failed.rack]).unwrap();
+    let ns_per_byte = stats.wall.as_secs_f64() * 1e9 / stats.bytes.max(1) as f64;
+    report.record(name, ns_per_byte);
+    let stall: f64 = stats.link_busy_stall.iter().map(|&(_, s)| s).sum();
+    println!(
+        "  {name}: {} blocks / {} chunks / {} rounds in {:.0} ms → {:.1} MB/s \
+         (link stall {:.2} s)",
+        stats.blocks,
+        stats.chunks,
+        stats.rounds,
+        stats.wall.as_secs_f64() * 1e3,
+        stats.throughput_mb_s,
+        stall,
+    );
+    stats.wall.as_secs_f64()
+}
+
+/// The PR 4 acceptance benches (DESIGN.md §10): 8-worker whole-node
+/// recovery on a 4-rack topology with contended cross-rack links, FIFO vs
+/// the balanced wavefront schedule, and per-chunk vs batched coalesced
+/// fetches. The `*_vs_*` rows are **ratios** (first ÷ second, > 1 means
+/// the second is faster), recorded alongside the raw ns/B rows so the
+/// trajectory file carries both.
+pub fn run_sched_benches(opts: &BenchOpts, report: &mut BenchReport) {
+    let stripes: u64 = if opts.quick { 16 } else { 32 };
+    let block: u64 = if opts.quick { 512 << 10 } else { 1 << 20 };
+    println!(
+        "=== scheduler: 8-worker node recovery, 4 racks, contended links \
+         ({stripes} stripes) ==="
+    );
+    // 8 chunks per block, so FIFO's plan-major drain keeps the whole pool
+    // on one plan's sources while balanced spreads across classes; both
+    // runs use the default per-source fetch path so the ratio isolates
+    // the admission schedule alone
+    let chunk = block / 8;
+    let fifo = recover_contended(
+        report,
+        "sched_fifo_8w",
+        stripes,
+        block,
+        chunk,
+        SchedulePolicy::Fifo,
+        1,
+        false,
+    );
+    let balanced = recover_contended(
+        report,
+        "sched_balanced_8w",
+        stripes,
+        block,
+        chunk,
+        SchedulePolicy::Balanced,
+        1,
+        false,
+    );
+    report.record("sched_fifo_vs_balanced", fifo / balanced);
+    println!("  balanced schedule speedup over FIFO: {:.2}x", fifo / balanced);
+
+    println!("=== scheduler: per-source vs batched gated fetches ===");
+    // identical coalescing window on both sides so the ratio isolates the
+    // single-gate-acquisition batch alone; finer chunks magnify the
+    // per-fetch gate round trips it amortizes
+    let chunk = block / 16;
+    let per_chunk = recover_contended(
+        report,
+        "fetch_per_chunk_8w",
+        stripes,
+        block,
+        chunk,
+        SchedulePolicy::Balanced,
+        4,
+        false,
+    );
+    let batched = recover_contended(
+        report,
+        "fetch_batched_8w",
+        stripes,
+        block,
+        chunk,
+        SchedulePolicy::Balanced,
+        4,
+        true,
+    );
+    report.record("batched_vs_per_chunk_fetch", per_chunk / batched);
+    println!("  batched-fetch speedup over per-chunk: {:.2}x", per_chunk / batched);
+}
+
 /// The full hot-path suite (`d3ctl bench`, `cargo bench --bench hotpath`).
 pub fn run_hotpath(opts: &BenchOpts) -> BenchReport {
     let mut report = BenchReport::default();
     run_kernel_benches(opts, &mut report);
     run_cluster_benches(opts, &mut report);
+    run_sched_benches(opts, &mut report);
     report
+}
+
+/// One row of a [`compare_bench_json`] result.
+pub struct CompareRow {
+    pub name: String,
+    pub old: f64,
+    pub new: f64,
+    /// Relative change, `new / old - 1` (positive = slower).
+    pub delta: f64,
+}
+
+impl std::fmt::Display for CompareRow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: {:.4} → {:.4} ns/B ({:+.1}%)",
+            self.name,
+            self.old,
+            self.new,
+            self.delta * 100.0
+        )
+    }
+}
+
+/// Outcome of diffing two bench JSON files over the tracked keys.
+pub struct BenchComparison {
+    pub rows: Vec<CompareRow>,
+    /// Human-readable description of every key that regressed beyond the
+    /// tolerance; empty = gate passes.
+    pub regressions: Vec<String>,
+}
+
+/// Diff two `{bench_name: ns_per_byte}` files over `keys`, flagging every
+/// key whose ns/B grew by more than `tolerance` (0.15 = 15%) — the CI
+/// perf gate between the PR 3 and PR 4 trajectory files. Keys missing
+/// from the *old* file are skipped (new benches have no baseline); keys
+/// missing from the *new* file are regressions (a tracked bench
+/// disappeared).
+pub fn compare_bench_json(
+    old_path: &Path,
+    new_path: &Path,
+    keys: &[&str],
+    tolerance: f64,
+) -> anyhow::Result<BenchComparison> {
+    let read = |p: &Path| -> anyhow::Result<Json> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", p.display()))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("parse {}: {e}", p.display()))
+    };
+    let old = read(old_path)?;
+    let new = read(new_path)?;
+    let mut rows = Vec::new();
+    let mut regressions = Vec::new();
+    for &key in keys {
+        let Some(o) = old.get(key).and_then(Json::as_f64) else {
+            println!("{key}: no baseline in {} — skipped", old_path.display());
+            continue;
+        };
+        match new.get(key).and_then(Json::as_f64) {
+            Some(n) => {
+                let delta = if o > 0.0 { n / o - 1.0 } else { 0.0 };
+                if delta > tolerance {
+                    regressions.push(format!(
+                        "{key} regressed {:.1}% ({o:.4} → {n:.4} ns/B)",
+                        delta * 100.0
+                    ));
+                }
+                rows.push(CompareRow { name: key.to_string(), old: o, new: n, delta });
+            }
+            None => regressions.push(format!(
+                "{key} missing from {} (tracked bench disappeared)",
+                new_path.display()
+            )),
+        }
+    }
+    Ok(BenchComparison { rows, regressions })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn compare_flags_only_regressions_beyond_tolerance() {
+        let dir = std::env::temp_dir();
+        let old_p = dir.join("d3ec_bench_old_test.json");
+        let new_p = dir.join("d3ec_bench_new_test.json");
+        let mut old = BenchReport::default();
+        old.record("mac_16mb", 1.0);
+        old.record("combine_k6_fused", 2.0);
+        old.record("xor_16mb_swar", 0.5);
+        old.write_json(&old_p).unwrap();
+        let mut new = BenchReport::default();
+        new.record("mac_16mb", 1.10); // +10%: within the 15% gate
+        new.record("combine_k6_fused", 2.5); // +25%: regression
+        // xor_16mb_swar missing from new: regression
+        new.record("sched_fifo_vs_balanced", 1.4); // untracked: ignored
+        new.write_json(&new_p).unwrap();
+        let cmp = compare_bench_json(
+            &old_p,
+            &new_p,
+            &["mac_16mb", "combine_k6_fused", "xor_16mb_swar", "brand_new_bench"],
+            0.15,
+        )
+        .unwrap();
+        assert_eq!(cmp.rows.len(), 2, "only keys present in both files get rows");
+        assert_eq!(cmp.regressions.len(), 2, "{:?}", cmp.regressions);
+        assert!(cmp.regressions[0].contains("combine_k6_fused"));
+        assert!(cmp.regressions[1].contains("xor_16mb_swar"));
+        let _ = (std::fs::remove_file(&old_p), std::fs::remove_file(&new_p));
+    }
 
     #[test]
     fn report_json_is_flat_name_to_number() {

@@ -29,8 +29,10 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::metrics::PoolStats;
+use crate::topology::Location;
 
 use super::plan::RepairPlan;
+use super::schedule::{build_task_order, SchedulePolicy};
 
 /// Per-worker scratch-buffer pool (DESIGN.md §9): chunk fetch, partial-
 /// aggregation, and accumulator buffers — and the `(coeff, buffer)`
@@ -44,6 +46,7 @@ use super::plan::RepairPlan;
 pub struct Scratch {
     free: Vec<Vec<u8>>,
     staging: Vec<(u8, Vec<u8>)>,
+    flows: Vec<(Location, u64)>,
     stats: PoolStats,
 }
 
@@ -96,6 +99,18 @@ impl Scratch {
         self.staging = staging;
     }
 
+    /// The reusable `(source, bytes)` flow list for batched fetches —
+    /// always empty, capacity retained across chunks.
+    pub fn take_flows(&mut self) -> Vec<(Location, u64)> {
+        std::mem::take(&mut self.flows)
+    }
+
+    /// Return the flow list (cleared, capacity retained).
+    pub fn put_flows(&mut self, mut flows: Vec<(Location, u64)>) {
+        flows.clear();
+        self.flows = flows;
+    }
+
     pub fn stats(&self) -> PoolStats {
         self.stats
     }
@@ -113,6 +128,21 @@ pub struct ExecutorConfig {
     pub node_inflight: usize,
     /// Max concurrent cross-rack transfers per rack link, 0 = unlimited.
     pub link_inflight: usize,
+    /// Task-admission order: FIFO plan drain or the link-balanced
+    /// wavefront schedule (DESIGN.md §10).
+    pub schedule: SchedulePolicy,
+    /// Fetch-coalescing window in chunks: each task covers `coalesce`
+    /// consecutive chunks, so a source node's whole window moves in one
+    /// batched round trip. 1 = per-chunk fetches (the baseline).
+    pub coalesce: usize,
+    /// Placement period of the plan set, when known — lets the balanced
+    /// scheduler tile one period's coloring across the whole recovery.
+    pub period: Option<u64>,
+    /// Batch each task's same-destination fetches under one ordered gate
+    /// acquisition ([`crate::cluster::links::LinkSet::transfer_batch`]).
+    /// Off by default so the baseline configuration keeps the pre-§10
+    /// one-gated-transfer-per-source path (and its bench rows) intact.
+    pub batched_fetch: bool,
 }
 
 impl Default for ExecutorConfig {
@@ -122,6 +152,10 @@ impl Default for ExecutorConfig {
             chunk_size: 64 << 10,
             node_inflight: 4,
             link_inflight: 8,
+            schedule: SchedulePolicy::Fifo,
+            coalesce: 1,
+            period: None,
+            batched_fetch: false,
         }
     }
 }
@@ -131,6 +165,8 @@ impl Default for ExecutorConfig {
 pub struct ExecStats {
     pub plans: usize,
     pub chunks: usize,
+    /// Admission rounds of the schedule (1 for FIFO).
+    pub rounds: usize,
     pub wall_s: f64,
     /// Seconds each worker spent executing chunk tasks.
     pub worker_busy_s: Vec<f64>,
@@ -197,16 +233,17 @@ pub fn execute_plans<R: ChunkRunner>(
         buf: Vec<u8>,
         remaining: usize,
     }
-    let spans = chunk_spans(block_size, cfg.chunk_size);
+    // The schedule decides the complete task order up front (DESIGN.md
+    // §10): FIFO = plan-major drain, balanced = conflict-free wavefront
+    // rounds. Claiming through one atomic cursor reproduces the round
+    // structure exactly — workers steal within a round, and a round only
+    // opens once the previous one is fully claimed.
+    let order = build_task_order(plans, block_size, cfg);
     let bufs: Vec<Mutex<PlanBuf>> = plans
         .iter()
-        .map(|_| Mutex::new(PlanBuf { buf: Vec::new(), remaining: spans.len() }))
+        .map(|_| Mutex::new(PlanBuf { buf: Vec::new(), remaining: order.tasks_per_plan }))
         .collect();
-    // Plan-major task order: a plan's chunks pipeline through the workers
-    // while the next plan's first fetches are already in flight.
-    let tasks: Vec<(usize, u64, usize)> = (0..plans.len())
-        .flat_map(|pi| spans.iter().map(move |&(off, len)| (pi, off, len)))
-        .collect();
+    let tasks = &order.tasks;
     let next = AtomicUsize::new(0);
     let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
     let workers = cfg.workers.max(1);
@@ -270,6 +307,7 @@ pub fn execute_plans<R: ChunkRunner>(
     Ok(ExecStats {
         plans: plans.len(),
         chunks: tasks.len(),
+        rounds: order.rounds.len(),
         wall_s: t0.elapsed().as_secs_f64(),
         worker_busy_s: per_worker.into_iter().map(|(b, _)| b).collect(),
         scratch,
@@ -351,13 +389,33 @@ mod tests {
     fn assembly_is_schedule_independent() {
         let plans: Vec<RepairPlan> = (0..7u64).map(plan).collect();
         let block_size = 1000u64;
-        for (workers, chunk) in [(1usize, 1000u64), (2, 256), (8, 64), (8, 7), (3, 1 << 20)] {
+        let cases = [
+            (1usize, 1000u64, SchedulePolicy::Fifo, 1usize),
+            (2, 256, SchedulePolicy::Fifo, 1),
+            (8, 64, SchedulePolicy::Fifo, 1),
+            (8, 7, SchedulePolicy::Fifo, 1),
+            (3, 1 << 20, SchedulePolicy::Fifo, 1),
+            (2, 256, SchedulePolicy::Balanced, 1),
+            (8, 64, SchedulePolicy::Balanced, 3),
+            (8, 7, SchedulePolicy::Balanced, 2),
+        ];
+        for (workers, chunk, schedule, coalesce) in cases {
             let runner =
                 MockRunner { finished: Mutex::new(HashMap::new()), fail_chunk_of: None };
-            let cfg = ExecutorConfig { workers, chunk_size: chunk, ..Default::default() };
+            let cfg = ExecutorConfig {
+                workers,
+                chunk_size: chunk,
+                schedule,
+                coalesce,
+                ..Default::default()
+            };
             let stats = execute_plans(&runner, &plans, block_size, &cfg).unwrap();
             assert_eq!(stats.plans, 7);
-            assert_eq!(stats.chunks, 7 * chunk_spans(block_size, chunk).len());
+            assert_eq!(
+                stats.chunks,
+                7 * chunk_spans(block_size, chunk * coalesce as u64).len()
+            );
+            assert!(stats.rounds >= 1);
             assert_eq!(stats.worker_busy_s.len(), workers);
             assert!(stats.utilization().iter().all(|&u| (0.0..=1.0).contains(&u)));
             let finished = runner.finished.into_inner().unwrap();
@@ -409,6 +467,19 @@ mod tests {
         assert!(a.capacity() >= 1 && b.capacity() >= 1);
         // ...and the next staging vector is the same (emptied) allocation
         assert!(s.take_staging().capacity() >= 2);
+    }
+
+    #[test]
+    fn flows_round_trip_keeps_capacity() {
+        let mut s = Scratch::new();
+        let mut flows = s.take_flows();
+        assert!(flows.is_empty());
+        flows.push((Location::new(0, 0), 64));
+        flows.push((Location::new(1, 2), 128));
+        s.put_flows(flows);
+        let again = s.take_flows();
+        assert!(again.is_empty(), "flow list must come back cleared");
+        assert!(again.capacity() >= 2, "flow list must keep its capacity");
     }
 
     #[test]

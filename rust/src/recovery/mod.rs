@@ -1,8 +1,10 @@
 //! Failure recovery (paper §5): minimum-cross-rack repair plans for D³,
 //! the RDD/HDD baseline plans, degraded reads, full-node recovery, the
 //! §5.3 layout-maintenance migration, the multi-erasure planner
-//! ([`multi`]) behind the scenario engine (DESIGN.md §4–§5), and the
-//! pipelined chunk-parallel plan executor ([`executor`], DESIGN.md §8).
+//! ([`multi`]) behind the scenario engine (DESIGN.md §4–§5), the
+//! pipelined chunk-parallel plan executor ([`executor`], DESIGN.md §8),
+//! and the link-balanced deterministic scheduler that orders its work
+//! ([`schedule`], DESIGN.md §10).
 
 pub mod executor;
 pub mod migration;
@@ -10,8 +12,10 @@ pub mod mu;
 pub mod multi;
 pub mod node;
 pub mod plan;
+pub mod schedule;
 
 pub use executor::{execute_plans, ChunkRunner, ExecStats, ExecutorConfig, Scratch};
 pub use multi::{execute_plan_bytes, scenario_recovery_plans, stripe_repair_plans};
 pub use node::node_recovery_plans;
 pub use plan::{plan_repair, Aggregation, RepairPlan};
+pub use schedule::{build_task_order, plan_admission_order, SchedulePolicy, TaskOrder};

@@ -1,0 +1,471 @@
+//! Link-balanced deterministic recovery scheduling (DESIGN.md §10).
+//!
+//! D³ guarantees that repair traffic is uniform across nodes and racks
+//! *in aggregate* — but the executor used to drain chunk tasks in FIFO
+//! plan order, so at any instant the whole worker pool piled onto one
+//! plan's source nodes and rack links while every other port sat idle
+//! (the network bottleneck Rashmi et al. measured on the Facebook
+//! warehouse cluster). Because D³ placement is deterministic and
+//! periodic, the conflict structure of a whole recovery is known *up
+//! front*: this module colors repair plans by the transfer resources
+//! they occupy — source/destination node ports and cross-rack links —
+//! and emits a **wavefront schedule**: every round's tasks are mutually
+//! source-disjoint, and tasks are claimed strictly in round order.
+//!
+//! Three layers, all deterministic:
+//!
+//! * **Coloring.** Plans are greedily packed into conflict-free classes
+//!   (first-fit over their resource signatures). Two plans conflict iff
+//!   they share a node (any source, aggregator, or destination) or a
+//!   cross-rack link. The placement period makes this cheap: when every
+//!   period's plans verifiably occupy the same resources slot for slot,
+//!   one period's coloring tiles the entire plan set.
+//! * **Wavefront rounds.** Classes are banded (enough classes per band
+//!   to keep ≥ 2× the worker pool in flight) and each band is drained
+//!   chunk-major: round *(c, class)* holds chunk window `c` of every
+//!   plan in the class. Tasks are claimed strictly in round order, so
+//!   workers steal freely *within* a round and a later round only opens
+//!   once the previous one is fully claimed. The rounds govern
+//!   *admission*, not completion: when a round is smaller than the
+//!   worker pool, spare workers spill into the next round while it
+//!   finishes — residual conflicts are bounded by that spillover,
+//!   instead of the whole pool piling onto one plan's ports as under
+//!   FIFO.
+//! * **Fetch coalescing.** Each task covers `coalesce` consecutive
+//!   chunks, so everything a task wants from one source node moves in
+//!   one window; with `batched_fetch` on, the window's fetches share a
+//!   single gate acquisition instead of one per source
+//!   (see [`crate::cluster::links`]).
+//!
+//! FIFO remains available as the baseline policy (and is the default,
+//! preserving every pre-existing behavior bit for bit).
+
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::topology::Location;
+
+use super::executor::{chunk_spans, ExecutorConfig};
+use super::plan::RepairPlan;
+
+/// How the executor (and the simulator's admission loop) orders work.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedulePolicy {
+    /// Plan-major FIFO drain (the NameNode queue order) — the baseline.
+    #[default]
+    Fifo,
+    /// Conflict-free wavefront rounds balanced over node ports and
+    /// cross-rack links (DESIGN.md §10).
+    Balanced,
+}
+
+impl SchedulePolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SchedulePolicy::Fifo => "fifo",
+            SchedulePolicy::Balanced => "balanced",
+        }
+    }
+}
+
+impl std::fmt::Display for SchedulePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for SchedulePolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<SchedulePolicy, String> {
+        match s {
+            "fifo" => Ok(SchedulePolicy::Fifo),
+            "balanced" => Ok(SchedulePolicy::Balanced),
+            other => Err(format!("unknown schedule policy {other} (fifo, balanced)")),
+        }
+    }
+}
+
+/// The executor's complete task order: `(plan index, offset, length)`
+/// windows, flattened round-major. Claiming tasks with one atomic cursor
+/// reproduces the wavefront exactly — round r+1's first task can only be
+/// claimed after every round-r task has been claimed.
+#[derive(Clone, Debug)]
+pub struct TaskOrder {
+    pub tasks: Vec<(usize, u64, usize)>,
+    /// Exclusive end index of each round within `tasks`, ascending.
+    pub rounds: Vec<usize>,
+    /// Fetch windows per plan (identical for every plan — one block size).
+    pub tasks_per_plan: usize,
+    /// Conflict-free classes the coloring produced (1 for FIFO).
+    pub colors: usize,
+}
+
+/// `(offset, length)` fetch windows for one block, computed **once per
+/// distinct (block size, window size)** process-wide and shared by every
+/// schedule build and executor run — the spans used to be recomputed and
+/// reallocated per `execute_plans` call.
+pub fn spans_for(block_size: u64, window_bytes: u64) -> Arc<Vec<(u64, usize)>> {
+    type SpanCache = Mutex<HashMap<(u64, u64), Arc<Vec<(u64, usize)>>>>;
+    static CACHE: OnceLock<SpanCache> = OnceLock::new();
+    let cache = CACHE.get_or_init(Default::default);
+    let mut map = cache.lock().unwrap();
+    map.entry((block_size, window_bytes))
+        .or_insert_with(|| Arc::new(chunk_spans(block_size, window_bytes)))
+        .clone()
+}
+
+/// Opaque resource ids a plan's transfers occupy: every node endpoint
+/// (sources, aggregators, compute/writer) plus every cross-rack link
+/// (unordered rack pair). Sorted and deduplicated, so signatures compare
+/// and intersect deterministically.
+pub fn plan_resources(plan: &RepairPlan) -> Vec<u64> {
+    const LINK_TAG: u64 = 1 << 62;
+    let node = |l: Location| ((l.rack as u64) << 32) | l.node as u64;
+    let link = |a: u32, b: u32| {
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        LINK_TAG | ((lo as u64) << 32) | hi as u64
+    };
+    let mut res = Vec::new();
+    for agg in &plan.aggregations {
+        for &(_, l) in &agg.inputs {
+            res.push(node(l));
+        }
+        if agg.at.rack != plan.compute_at.rack {
+            res.push(link(agg.at.rack, plan.compute_at.rack));
+        }
+    }
+    for &(_, l) in &plan.direct {
+        res.push(node(l));
+        if l.rack != plan.compute_at.rack {
+            res.push(link(l.rack, plan.compute_at.rack));
+        }
+    }
+    res.push(node(plan.compute_at));
+    res.push(node(plan.writer));
+    res.sort_unstable();
+    res.dedup();
+    res
+}
+
+/// Greedy first-fit packing of `0..n` items into conflict-free classes:
+/// an item joins the first class whose accumulated resource set is
+/// disjoint from its signature.
+fn greedy_classes<F: FnMut(usize) -> Arc<Vec<u64>>>(
+    n: usize,
+    mut sig_of: F,
+) -> Vec<Vec<usize>> {
+    let mut classes: Vec<(HashSet<u64>, Vec<usize>)> = Vec::new();
+    for i in 0..n {
+        let sig = sig_of(i);
+        match classes
+            .iter_mut()
+            .find(|(used, _)| sig.iter().all(|r| !used.contains(r)))
+        {
+            Some((used, members)) => {
+                used.extend(sig.iter().copied());
+                members.push(i);
+            }
+            None => classes.push((sig.iter().copied().collect(), vec![i])),
+        }
+    }
+    classes.into_iter().map(|(_, members)| members).collect()
+}
+
+/// Conflict-free classes over `plans`, in deterministic class order.
+/// `period` is the placement period when known: when the plan set tiles —
+/// every period's plans occupy, slot for slot, **verifiably identical
+/// resources** to the first period's (the common node/rack-recovery
+/// case; the final period may be a partial prefix) — the first period's
+/// coloring is stamped across the whole run instead of re-running the
+/// quadratic greedy pass. Plan sets that don't tile (e.g. multi-erasure
+/// targets rerouted by a raw-stripe-id hash) fall back to plain greedy
+/// coloring over per-plan signatures, so the conflict-free invariant
+/// never rests on an unchecked periodicity assumption.
+pub fn color_classes(plans: &[RepairPlan], period: Option<u64>) -> Vec<Vec<usize>> {
+    if plans.is_empty() {
+        return Vec::new();
+    }
+    if let Some(p) = period.filter(|&p| p > 0) {
+        if let Some(classes) = tiled_classes(plans, p) {
+            return classes;
+        }
+    }
+    greedy_classes(plans.len(), |i| Arc::new(plan_resources(&plans[i])))
+}
+
+/// Period-tiling fast path: split `plans` into consecutive period runs
+/// (by `stripe / p`) and **verify, resource set by resource set**, that
+/// every later run repeats the first run's slots (middle runs exactly,
+/// the final run as a prefix). Only then is the first period's coloring
+/// replicated — plans in the same relative slot of different periods
+/// occupy identical resources by construction of the check, so
+/// slot-color classes of distinct periods are exactly the conflict-free
+/// classes greedy coloring would rediscover. Any mismatch returns `None`
+/// and the caller colors the full set directly.
+fn tiled_classes(plans: &[RepairPlan], p: u64) -> Option<Vec<Vec<usize>>> {
+    // split into consecutive period runs (stripe / p must be non-decreasing)
+    let mut runs: Vec<(usize, usize)> = Vec::new();
+    let mut start = 0usize;
+    for i in 1..plans.len() {
+        let (prev, cur) = (plans[i - 1].stripe / p, plans[i].stripe / p);
+        if cur < prev {
+            return None;
+        }
+        if cur > prev {
+            runs.push((start, i));
+            start = i;
+        }
+    }
+    runs.push((start, plans.len()));
+    if runs.len() < 2 {
+        return None; // a single period gains nothing from tiling
+    }
+    let (f0, f1) = runs[0];
+    let first_sigs: Vec<Vec<u64>> = plans[f0..f1].iter().map(plan_resources).collect();
+    for (ri, &(a, b)) in runs[1..].iter().enumerate() {
+        // middle periods must repeat exactly; the final (possibly
+        // partial) period may be a prefix of the first
+        let exact = ri + 1 < runs.len() - 1;
+        if (exact && b - a != first_sigs.len()) || b - a > first_sigs.len() {
+            return None;
+        }
+        for (j, plan) in plans[a..b].iter().enumerate() {
+            if plan_resources(plan) != first_sigs[j] {
+                return None;
+            }
+        }
+    }
+    let sigs: Vec<Arc<Vec<u64>>> = first_sigs.into_iter().map(Arc::new).collect();
+    let base = greedy_classes(sigs.len(), |j| sigs[j].clone());
+    let colors = base.len();
+    let mut color_of = vec![0usize; f1 - f0];
+    for (c, members) in base.iter().enumerate() {
+        for &j in members {
+            color_of[j] = c;
+        }
+    }
+    let mut classes: Vec<Vec<usize>> = vec![Vec::new(); colors * runs.len()];
+    for (q, &(a, b)) in runs.iter().enumerate() {
+        for (j, i) in (a..b).enumerate() {
+            classes[q * colors + color_of[j]].push(i);
+        }
+    }
+    Some(classes)
+}
+
+/// The order in which the balanced wavefront first touches each plan —
+/// the admission order the fluid simulator mirrors so both backends run
+/// recovery in the same sequence ([`crate::sim::recovery`]).
+pub fn plan_admission_order(plans: &[RepairPlan], period: Option<u64>) -> Vec<usize> {
+    color_classes(plans, period).into_iter().flatten().collect()
+}
+
+/// Build the executor's complete task order for `plans` under `cfg`.
+pub fn build_task_order(
+    plans: &[RepairPlan],
+    block_size: u64,
+    cfg: &ExecutorConfig,
+) -> TaskOrder {
+    let window = cfg.chunk_size.max(1).saturating_mul(cfg.coalesce.max(1) as u64);
+    let spans = spans_for(block_size, window);
+    let mut tasks = Vec::with_capacity(plans.len() * spans.len());
+    let mut rounds = Vec::new();
+    let colors;
+    match cfg.schedule {
+        SchedulePolicy::Fifo => {
+            // plan-major: a plan's windows pipeline while the next plan's
+            // first fetches are already in flight (pre-§10 behavior)
+            for pi in 0..plans.len() {
+                for &(off, len) in spans.iter() {
+                    tasks.push((pi, off, len));
+                }
+            }
+            if !tasks.is_empty() {
+                rounds.push(tasks.len());
+            }
+            colors = usize::from(!plans.is_empty());
+        }
+        SchedulePolicy::Balanced => {
+            let classes = color_classes(plans, cfg.period);
+            colors = classes.len();
+            // Band the classes so live assembly buffers stay bounded:
+            // each band carries enough plans to keep ≥ 2× the worker
+            // pool in flight per wavefront row, and a band's plans fully
+            // assemble before the next band's buffers materialize.
+            let target = cfg.workers.max(1) * 2;
+            let mut band: Vec<&Vec<usize>> = Vec::new();
+            let mut band_plans = 0usize;
+            let mut flush =
+                |band: &mut Vec<&Vec<usize>>,
+                 tasks: &mut Vec<(usize, u64, usize)>,
+                 rounds: &mut Vec<usize>| {
+                    for &(off, len) in spans.iter() {
+                        for class in band.iter() {
+                            let start = tasks.len();
+                            for &pi in class.iter() {
+                                tasks.push((pi, off, len));
+                            }
+                            if tasks.len() > start {
+                                rounds.push(tasks.len());
+                            }
+                        }
+                    }
+                    band.clear();
+                };
+            for class in &classes {
+                band_plans += class.len();
+                band.push(class);
+                if band_plans >= target {
+                    flush(&mut band, &mut tasks, &mut rounds);
+                    band_plans = 0;
+                }
+            }
+            if !band.is_empty() {
+                flush(&mut band, &mut tasks, &mut rounds);
+            }
+        }
+    }
+    TaskOrder { tasks, rounds, tasks_per_plan: spans.len(), colors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::CodeSpec;
+    use crate::placement::{D3Placement, Placement};
+    use crate::recovery::node_recovery_plans;
+    use crate::topology::ClusterSpec;
+
+    fn node_plans(stripes: u64) -> (Vec<RepairPlan>, Option<u64>) {
+        let cluster = ClusterSpec::new(4, 4);
+        let p = D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, cluster).unwrap();
+        let failed = (0..cluster.node_count())
+            .map(|i| cluster.unflat(i))
+            .find(|&l| (0..stripes).any(|sid| p.stripe(sid).locs.contains(&l)))
+            .expect("no node holds blocks");
+        let plans = node_recovery_plans(&p, stripes, failed, 0);
+        assert!(!plans.is_empty());
+        (plans, p.period())
+    }
+
+    fn cfg(schedule: SchedulePolicy, chunk: u64, coalesce: usize) -> ExecutorConfig {
+        ExecutorConfig {
+            workers: 4,
+            chunk_size: chunk,
+            schedule,
+            coalesce,
+            ..ExecutorConfig::default()
+        }
+    }
+
+    #[test]
+    fn fifo_order_is_plan_major() {
+        let (plans, _) = node_plans(20);
+        let order = build_task_order(&plans, 1024, &cfg(SchedulePolicy::Fifo, 256, 1));
+        assert_eq!(order.tasks_per_plan, 4);
+        assert_eq!(order.tasks.len(), plans.len() * 4);
+        let expect: Vec<(usize, u64, usize)> = (0..plans.len())
+            .flat_map(|pi| (0..4u64).map(move |c| (pi, c * 256, 256usize)))
+            .collect();
+        assert_eq!(order.tasks, expect);
+        assert_eq!(order.rounds, vec![order.tasks.len()]);
+    }
+
+    #[test]
+    fn balanced_covers_every_task_exactly_once() {
+        let (plans, period) = node_plans(40);
+        let mut c = cfg(SchedulePolicy::Balanced, 256, 1);
+        c.period = period;
+        for coalesce in [1usize, 3] {
+            c.coalesce = coalesce;
+            let order = build_task_order(&plans, 1000, &c);
+            let mut seen = std::collections::HashSet::new();
+            let mut per_plan = vec![0u64; plans.len()];
+            for &(pi, off, len) in &order.tasks {
+                assert!(seen.insert((pi, off)), "duplicate task ({pi}, {off})");
+                per_plan[pi] += len as u64;
+            }
+            assert!(per_plan.iter().all(|&b| b == 1000), "coalesce={coalesce}");
+            assert_eq!(order.tasks.len(), plans.len() * order.tasks_per_plan);
+            assert_eq!(*order.rounds.last().unwrap(), order.tasks.len());
+        }
+    }
+
+    #[test]
+    fn balanced_rounds_are_conflict_free() {
+        let (plans, period) = node_plans(40);
+        let mut c = cfg(SchedulePolicy::Balanced, 512, 1);
+        c.period = period;
+        let order = build_task_order(&plans, 1024, &c);
+        assert!(order.colors > 1, "node recovery should need several classes");
+        let mut start = 0usize;
+        for &end in &order.rounds {
+            let mut used: HashSet<u64> = HashSet::new();
+            for &(pi, _, _) in &order.tasks[start..end] {
+                for r in plan_resources(&plans[pi]) {
+                    assert!(
+                        used.insert(r),
+                        "round [{start}, {end}) shares resource {r:#x}"
+                    );
+                }
+            }
+            start = end;
+        }
+    }
+
+    #[test]
+    fn period_tiling_matches_plain_greedy_coloring() {
+        // 2 full periods + a partial third: the tiling fast path applies
+        let (plans, period) = node_plans(2 * 192 + 50);
+        let period = period.expect("D3 is periodic");
+        assert!(plans.last().unwrap().stripe / period >= 1, "need multiple periods");
+        let tiled = color_classes(&plans, Some(period));
+        let plain = color_classes(&plans, None);
+        // same cover either way...
+        let count = |cs: &[Vec<usize>]| cs.iter().map(Vec::len).sum::<usize>();
+        assert_eq!(count(&tiled), plans.len());
+        assert_eq!(count(&plain), plans.len());
+        // ...and every tiled class is genuinely conflict-free
+        for class in &tiled {
+            let mut used: HashSet<u64> = HashSet::new();
+            for &pi in class {
+                for r in plan_resources(&plans[pi]) {
+                    assert!(used.insert(r), "tiled class shares resource");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn admission_order_is_a_permutation() {
+        let (plans, period) = node_plans(30);
+        let order = plan_admission_order(&plans, period);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..plans.len()).collect::<Vec<_>>());
+        // deterministic
+        assert_eq!(order, plan_admission_order(&plans, period));
+    }
+
+    #[test]
+    fn span_cache_returns_shared_covering_spans() {
+        let a = spans_for(1000, 256);
+        let b = spans_for(1000, 256);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+        let total: u64 = a.iter().map(|&(_, l)| l as u64).sum();
+        assert_eq!(total, 1000);
+        assert_eq!(spans_for(0, 64).as_slice(), &[(0, 0)]);
+    }
+
+    #[test]
+    fn schedule_policy_parses_and_prints() {
+        assert_eq!("fifo".parse::<SchedulePolicy>().unwrap(), SchedulePolicy::Fifo);
+        assert_eq!(
+            "balanced".parse::<SchedulePolicy>().unwrap(),
+            SchedulePolicy::Balanced
+        );
+        assert!("fancy".parse::<SchedulePolicy>().is_err());
+        assert_eq!(SchedulePolicy::Balanced.to_string(), "balanced");
+    }
+}

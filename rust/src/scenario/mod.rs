@@ -241,6 +241,12 @@ pub struct ScenarioOutcome {
     /// worker pools (cluster backend recovery kinds only) — near-1.0 hit
     /// rates mean the data path ran allocation-free (DESIGN.md §9).
     pub scratch_pool: Option<crate::metrics::PoolStats>,
+    /// Per-rack-link (busy, stall) seconds during the scenario
+    /// (DESIGN.md §10). The cluster backend measures both from its link
+    /// meters; the fluid backend derives busy from port loads at the
+    /// configured rate and reports zero stall (max-min fair sharing has
+    /// no queueing in front of the ports).
+    pub link_busy_stall: Option<Vec<(f64, f64)>>,
 }
 
 impl ScenarioOutcome {
@@ -294,6 +300,14 @@ impl ScenarioOutcome {
                 p.misses,
                 p.hit_rate() * 100.0
             );
+        }
+        if let Some(ls) = &self.link_busy_stall {
+            let cells: Vec<String> = ls
+                .iter()
+                .enumerate()
+                .map(|(r, &(b, s))| format!("r{r} {b:.2}/{s:.2}"))
+                .collect();
+            println!("  per-rack-link busy/stall (s): {}", cells.join("  "));
         }
     }
 }

@@ -5,6 +5,7 @@
 
 use crate::recovery::migration::MigrationBatch;
 use crate::recovery::plan::RepairPlan;
+use crate::recovery::schedule::{plan_admission_order, SchedulePolicy};
 use crate::sim::engine::{Engine, JobSpec, Work};
 use crate::sim::resources::ResourceTable;
 use crate::topology::{Location, SystemSpec};
@@ -35,6 +36,15 @@ pub struct RecoveryConfig {
     /// (DESIGN.md §8), so cross-backend recovery-time comparisons run both
     /// backends at the same concurrency.
     pub workers: usize,
+    /// Admission order of the repair queue: FIFO stripe order, or the
+    /// same link-balanced class order the cluster executor's wavefront
+    /// schedule uses (DESIGN.md §10) — so both backends admit recovery
+    /// work in the same sequence and stay cross-checkable.
+    pub schedule: SchedulePolicy,
+    /// Placement period of the plan set (set by [`SimBackend`] from the
+    /// policy), so the balanced coloring tiles identically to the
+    /// cluster executor's.
+    pub period: Option<u64>,
 }
 
 impl Default for RecoveryConfig {
@@ -44,6 +54,8 @@ impl Default for RecoveryConfig {
             batch_sync: true,
             task_overhead_s: 0.45,
             workers: 0,
+            schedule: SchedulePolicy::Fifo,
+            period: None,
         }
     }
 }
@@ -181,9 +193,20 @@ pub fn run_recovery_multi(
     let rt = ResourceTable::new(spec);
     let mut engine = Engine::new(rt.caps.clone());
     let extra_ids: Vec<u32> = extra.into_iter().map(|j| engine.spawn(j)).collect();
-    let jobs: Vec<(u32, Location)> = plans
+    // Mirror the cluster executor's admission sequence (DESIGN.md §10):
+    // FIFO admits in stripe order; balanced admits conflict-free class by
+    // conflict-free class, exactly the order the wavefront schedule first
+    // touches each plan.
+    let order: Vec<usize> = match cfg.schedule {
+        SchedulePolicy::Fifo => (0..plans.len()).collect(),
+        SchedulePolicy::Balanced => plan_admission_order(plans, cfg.period),
+    };
+    let jobs: Vec<(u32, Location)> = order
         .iter()
-        .map(|p| (engine.add_job(plan_to_job_with(p, &rt, spec, cfg.task_overhead_s)), p.writer))
+        .map(|&i| {
+            let p = &plans[i];
+            (engine.add_job(plan_to_job_with(p, &rt, spec, cfg.task_overhead_s)), p.writer)
+        })
         .collect();
     let mut wave_budget = cfg.streams_per_node * spec.cluster.node_count();
     if cfg.workers > 0 {
@@ -375,6 +398,15 @@ fn loads_to_bytes(rack_loads: &[(f64, f64)]) -> Vec<(u64, u64)> {
     rack_loads.iter().map(|&(u, d)| (u as u64, d as u64)).collect()
 }
 
+/// Fluid-backend per-rack-link (busy, stall) seconds: busy is the port's
+/// byte volume served at the configured cross-rack rate; stall is zero —
+/// max-min fair sharing never queues work in front of a port, it slows
+/// every flow instead.
+fn fluid_link_busy_stall(rack_loads: &[(f64, f64)], spec: &SystemSpec) -> Vec<(f64, f64)> {
+    let rate = (spec.net.cross_mbps * 1e6 / 8.0).max(1.0);
+    rack_loads.iter().map(|&(u, d)| ((u + d) / rate, 0.0)).collect()
+}
+
 impl crate::scenario::RecoveryBackend for SimBackend {
     fn name(&self) -> &'static str {
         "sim"
@@ -411,6 +443,7 @@ impl crate::scenario::RecoveryBackend for SimBackend {
                     frontend_seconds: None,
                     worker_utilization: None,
                     scratch_pool: None,
+                    link_busy_stall: Some(fluid_link_busy_stall(&rack_loads, spec)),
                 })
             }
             ScenarioKind::FrontendMix { workload } => {
@@ -430,7 +463,11 @@ impl crate::scenario::RecoveryBackend for SimBackend {
                 };
                 // HDFS throttles reconstruction under foreground load
                 // (dfs.namenode.replication.max-streams)
-                let cfg = RecoveryConfig { streams_per_node: 2, ..self.cfg };
+                let cfg = RecoveryConfig {
+                    streams_per_node: 2,
+                    period: self.cfg.period.or_else(|| policy.period()),
+                    ..self.cfg
+                };
                 let racks = distinct_racks(&failed);
                 let (out, extra) = run_recovery_multi(spec, &plans, &racks, cfg, vec![job]);
                 Ok(sim_outcome(scenario, policy.name(), &out, &plans, spec, Some(extra[0])))
@@ -438,8 +475,11 @@ impl crate::scenario::RecoveryBackend for SimBackend {
             _ => {
                 let (failed, plans) = scenario.recovery_plans(policy)?;
                 let racks = distinct_racks(&failed);
-                let (out, _) =
-                    run_recovery_multi(spec, &plans, &racks, self.cfg, Vec::new());
+                let cfg = RecoveryConfig {
+                    period: self.cfg.period.or_else(|| policy.period()),
+                    ..self.cfg
+                };
+                let (out, _) = run_recovery_multi(spec, &plans, &racks, cfg, Vec::new());
                 Ok(sim_outcome(scenario, policy.name(), &out, &plans, spec, None))
             }
         }
@@ -469,6 +509,7 @@ fn sim_outcome(
         frontend_seconds,
         worker_utilization: None,
         scratch_pool: None,
+        link_busy_stall: Some(fluid_link_busy_stall(&out.rack_loads, spec)),
     }
 }
 
@@ -630,6 +671,32 @@ mod tests {
             RecoveryConfig { streams_per_node: 1, ..RecoveryConfig::default() },
         );
         assert!(slow.makespan >= fast.makespan, "more streams can't be slower");
+    }
+
+    #[test]
+    fn balanced_admission_rebuilds_everything_with_identical_traffic() {
+        // the balanced order is a permutation of the same plan set, so
+        // blocks and port bytes must match FIFO exactly
+        let s = spec();
+        let p = D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, s.cluster).unwrap();
+        let failed = Location::new(1, 0);
+        let plans = node_recovery_plans(&p, 120, failed, 0);
+        assert!(!plans.is_empty(), "failed node holds no blocks");
+        let fifo = run_recovery(&s, &plans, failed, RecoveryConfig::default());
+        let bal = run_recovery(
+            &s,
+            &plans,
+            failed,
+            RecoveryConfig {
+                schedule: SchedulePolicy::Balanced,
+                ..RecoveryConfig::default()
+            },
+        );
+        assert_eq!(fifo.blocks, bal.blocks);
+        assert!(bal.makespan > 0.0);
+        let total =
+            |o: &RecoveryOutcome| o.rack_loads.iter().map(|&(u, d)| u + d).sum::<f64>();
+        assert!((total(&fifo) - total(&bal)).abs() < 1.0);
     }
 
     #[test]

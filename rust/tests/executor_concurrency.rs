@@ -8,7 +8,7 @@ use std::sync::Arc;
 use d3ec::cluster::MiniCluster;
 use d3ec::codes::CodeSpec;
 use d3ec::placement::{D3Placement, Placement};
-use d3ec::recovery::{node_recovery_plans, ExecutorConfig};
+use d3ec::recovery::{node_recovery_plans, ExecutorConfig, SchedulePolicy};
 use d3ec::topology::{Location, SystemSpec};
 
 const SEED: u64 = 11;
@@ -104,6 +104,42 @@ fn chunk_sizes_recover_identical_bytes_and_metrics() {
             recover_fixture(ExecutorConfig { chunk_size: chunk, ..base });
         assert_eq!(blocks, blocks_whole, "chunk={chunk} changed recovered bytes");
         assert_eq!(snap, snap_whole, "chunk={chunk} changed byte accounting");
+    }
+}
+
+#[test]
+fn schedule_policies_recover_identical_bytes_and_metrics() {
+    // the balanced wavefront may reorder and coalesce tasks freely, but
+    // recovered bytes and per-rack byte accounting must be identical to
+    // FIFO for every worker count, window size, and fetch mode
+    let base = ExecutorConfig { chunk_size: 8 << 10, ..ExecutorConfig::default() };
+    let (blocks0, snap0, _) = recover_fixture(ExecutorConfig {
+        workers: 1,
+        schedule: SchedulePolicy::Fifo,
+        ..base
+    });
+    let cases = [
+        (2usize, SchedulePolicy::Balanced, 1usize, true),
+        (8, SchedulePolicy::Balanced, 1, true),
+        (8, SchedulePolicy::Balanced, 4, true),
+        (8, SchedulePolicy::Balanced, 3, false),
+        (8, SchedulePolicy::Fifo, 2, false),
+        (4, SchedulePolicy::Balanced, 2, true),
+    ];
+    for (workers, schedule, coalesce, batched_fetch) in cases {
+        let cfg = ExecutorConfig { workers, schedule, coalesce, batched_fetch, ..base };
+        let (blocks, snap, util) = recover_fixture(cfg);
+        assert_eq!(util.len(), workers);
+        assert_eq!(
+            blocks, blocks0,
+            "{schedule}/{workers}w/coalesce={coalesce}/batched={batched_fetch} \
+             recovered different bytes or targets"
+        );
+        assert_eq!(
+            snap, snap0,
+            "{schedule}/{workers}w/coalesce={coalesce}/batched={batched_fetch} \
+             drifted the rack byte accounting"
+        );
     }
 }
 

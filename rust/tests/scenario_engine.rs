@@ -9,7 +9,7 @@ use d3ec::cluster::{ClusterBackend, MiniCluster};
 use d3ec::codes::CodeSpec;
 use d3ec::placement::{D3Placement, Placement, PlacementTable, RddPlacement};
 use d3ec::recovery::multi::scenario_recovery_plans;
-use d3ec::recovery::node_recovery_plans;
+use d3ec::recovery::{node_recovery_plans, SchedulePolicy};
 use d3ec::scenario::{FailureScenario, RecoveryBackend};
 use d3ec::sim::SimBackend;
 use d3ec::topology::{Location, SystemSpec};
@@ -145,6 +145,59 @@ fn rack_failure_recovers_real_bytes_in_the_minicluster() {
 }
 
 #[test]
+fn balanced_schedule_keeps_rack_link_balance_no_worse_than_fifo() {
+    // Rack failure under both admission schedules. Per-rack-link repair
+    // *bytes* are a plan property, so the interesting assertion is the
+    // exact byte-vector equality below: it proves the balanced schedule
+    // moved exactly the same traffic over exactly the same links (and
+    // with it, its max/min per-rack-link byte ratio trivially can't
+    // exceed FIFO's — asserted as the ISSUE's acceptance wording). The
+    // schedule's *runtime* difference lives in time, not bytes, and is
+    // surfaced through `link_busy_stall`, whose presence and plausibility
+    // are checked at the end; the conflict-free round structure itself is
+    // pinned deterministically by recovery::schedule's unit tests.
+    let spec = SystemSpec::paper_default();
+    let scenario = FailureScenario::rack_failure(1, 48, 6);
+    let p = policy("d3", &spec);
+    let run = |schedule| {
+        let backend = ClusterBackend {
+            schedule,
+            coalesce: 2,
+            batched_fetch: true,
+            ..fast_cluster_backend()
+        };
+        backend.run(&scenario, &p, &spec).unwrap()
+    };
+    let fifo = run(SchedulePolicy::Fifo);
+    let balanced = run(SchedulePolicy::Balanced);
+    assert!(fifo.blocks > 0);
+    assert_eq!(fifo.blocks, balanced.blocks, "different plan sets");
+    assert_eq!(
+        fifo.rack_cross_bytes, balanced.rack_cross_bytes,
+        "schedule changed the byte accounting"
+    );
+    let link_ratio = |out: &d3ec::scenario::ScenarioOutcome| {
+        let loads: Vec<f64> = out
+            .rack_cross_bytes
+            .iter()
+            .enumerate()
+            .filter(|&(r, _)| r != 1) // the dead rack moves no repair bytes
+            .map(|(_, &(u, d))| (u + d) as f64)
+            .collect();
+        d3ec::metrics::max_min_ratio(&loads)
+    };
+    let (rf, rb) = (link_ratio(&fifo), link_ratio(&balanced));
+    assert!(
+        rb <= rf + 1e-9,
+        "balanced max/min per-rack-link byte ratio {rb} exceeds FIFO's {rf}"
+    );
+    // the cluster backend must actually report per-link busy/stall time
+    let ls = balanced.link_busy_stall.as_ref().expect("link accounting missing");
+    assert_eq!(ls.len(), spec.cluster.racks);
+    assert!(ls.iter().any(|&(b, _)| b > 0.0), "no link ever went busy");
+}
+
+#[test]
 fn degraded_burst_scenario_reports_latencies() {
     let spec = SystemSpec::paper_default();
     let scenario = FailureScenario::degraded_burst(12, 60, 5);
@@ -190,6 +243,7 @@ fn every_scenario_kind_cross_checks_between_backends() {
         cross_mbps: spec.net.cross_mbps,
         workers: 8,
         chunk_size: 64 << 10,
+        ..ClusterBackend::default()
     };
     let stripes = 60u64;
     let kinds = [
