@@ -1,0 +1,321 @@
+//! Executing a generated request sequence (DESIGN.md §11).
+//!
+//! [`run_on_cluster`] drives real reads/writes through the MiniCluster —
+//! open loop (workers sleep until each request's scheduled arrival, so
+//! latency includes queueing behind a saturated pool) or closed loop
+//! (one thread per client slot, think-time paced by real completions).
+//! [`request_job`] lowers one request into a fluid-simulator job whose
+//! first activity is the arrival delay, so the simulator admits the
+//! *same* sequence at the *same* scheduled times.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::cluster::MiniCluster;
+use crate::metrics::Summary;
+use crate::placement::{Placement, PlacementTable};
+use crate::recovery::plan::plan_degraded_read;
+use crate::sim::engine::{JobSpec, Work};
+use crate::sim::recovery::plan_to_job_with;
+use crate::sim::resources::ResourceTable;
+use crate::topology::SystemSpec;
+use crate::util::rng::xorshift_bytes;
+
+use super::gen::{ArrivalModel, Request, RequestClass};
+
+/// What the engine measured for one foreground run.
+#[derive(Clone, Debug)]
+pub struct FgOutcome {
+    /// Per-request latency in seconds, indexed by request id. Open loop:
+    /// completion − scheduled arrival (queueing included). Closed loop:
+    /// service time.
+    pub latencies: Vec<f64>,
+    /// Wall/simulated seconds until the last request completed.
+    pub seconds: f64,
+    /// Served requests per class: (normal reads, degraded reads, writes).
+    pub by_class: (usize, usize, usize),
+}
+
+impl FgOutcome {
+    pub fn served(&self) -> usize {
+        self.latencies.len()
+    }
+
+    /// Latency percentile summary (None for an empty run).
+    pub fn summary(&self) -> Option<Summary> {
+        if self.latencies.is_empty() {
+            None
+        } else {
+            Some(crate::metrics::summarize(&self.latencies))
+        }
+    }
+}
+
+/// Classify a request sequence (shared by both backends' reports).
+pub fn class_counts(reqs: &[Request]) -> (usize, usize, usize) {
+    let mut counts = (0, 0, 0);
+    for r in reqs {
+        match r.class {
+            RequestClass::NormalRead { .. } => counts.0 += 1,
+            RequestClass::DegradedRead { .. } => counts.1 += 1,
+            RequestClass::Write { .. } => counts.2 += 1,
+        }
+    }
+    counts
+}
+
+/// Deterministic shard data for a foreground [`RequestClass::Write`] —
+/// both the writer and any later verification regenerate it.
+pub fn fg_write_data(stripe: u64, k: usize, len: usize) -> Vec<Vec<u8>> {
+    (0..k)
+        .map(|b| xorshift_bytes(len, stripe.wrapping_mul(131).wrapping_add(b as u64)))
+        .collect()
+}
+
+fn execute_one(cluster: &MiniCluster, req: &Request) -> Result<()> {
+    match req.class {
+        RequestClass::NormalRead { stripe, block } => {
+            cluster.read_block(stripe, block, req.client)?;
+        }
+        RequestClass::DegradedRead { stripe, block } => {
+            cluster.degraded_read(stripe, block, req.client)?;
+        }
+        RequestClass::Write { stripe } => {
+            let k = cluster.policy().code().k();
+            let len = cluster.spec().block_size as usize;
+            // charge encode + distribution to the requesting node, exactly
+            // as request_job models it for the fluid backend
+            cluster.write_stripe_from(stripe, fg_write_data(stripe, k, len), req.client)?;
+        }
+    }
+    Ok(())
+}
+
+/// Run a request sequence against the MiniCluster, measuring per-request
+/// latency. `workers` bounds the open-loop pool (closed loop spawns the
+/// arrival model's client count). While running, `fg_active` (when given)
+/// is held `true` so the recovery executor's QoS throttle and the link
+/// split apply exactly while foreground load exists.
+pub fn run_on_cluster(
+    cluster: &MiniCluster,
+    reqs: &[Request],
+    arrival: ArrivalModel,
+    workers: usize,
+    fg_active: Option<&AtomicBool>,
+) -> Result<FgOutcome> {
+    let by_class = class_counts(reqs);
+    if reqs.is_empty() {
+        // an empty run is never "active": a caller-initialized flag must
+        // not leave recovery throttled against nonexistent traffic
+        if let Some(flag) = fg_active {
+            flag.store(false, Ordering::Relaxed);
+        }
+        return Ok(FgOutcome { latencies: Vec::new(), seconds: 0.0, by_class });
+    }
+    if let Some(flag) = fg_active {
+        flag.store(true, Ordering::Relaxed);
+    }
+    let latencies: Mutex<Vec<f64>> = Mutex::new(vec![0.0; reqs.len()]);
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let t0 = Instant::now();
+    match arrival {
+        ArrivalModel::Open { .. } => {
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..workers.max(1) {
+                    scope.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= reqs.len() {
+                            break;
+                        }
+                        let req = &reqs[i];
+                        let target = t0 + Duration::from_secs_f64(req.arrival_s);
+                        let now = Instant::now();
+                        if target > now {
+                            std::thread::sleep(target - now);
+                        }
+                        match execute_one(cluster, req) {
+                            Ok(()) => {
+                                let lat = target.elapsed().as_secs_f64();
+                                latencies.lock().unwrap()[req.id] = lat;
+                            }
+                            Err(e) => errors.lock().unwrap().push(e.to_string()),
+                        }
+                    });
+                }
+            });
+        }
+        ArrivalModel::Closed { clients, think_s } => {
+            let clients = clients.max(1);
+            std::thread::scope(|scope| {
+                for slot in 0..clients {
+                    let (latencies, errors) = (&latencies, &errors);
+                    scope.spawn(move || {
+                        for req in reqs.iter().filter(|r| r.slot == slot) {
+                            let start = Instant::now();
+                            match execute_one(cluster, req) {
+                                Ok(()) => {
+                                    let lat = start.elapsed().as_secs_f64();
+                                    latencies.lock().unwrap()[req.id] = lat;
+                                }
+                                Err(e) => errors.lock().unwrap().push(e.to_string()),
+                            }
+                            if think_s > 0.0 {
+                                std::thread::sleep(Duration::from_secs_f64(think_s));
+                            }
+                        }
+                    });
+                }
+            });
+        }
+    }
+    let seconds = t0.elapsed().as_secs_f64();
+    if let Some(flag) = fg_active {
+        flag.store(false, Ordering::Relaxed);
+    }
+    let errs = errors.into_inner().unwrap();
+    if !errs.is_empty() {
+        bail!("foreground engine errors: {}", errs.join("; "));
+    }
+    Ok(FgOutcome { latencies: latencies.into_inner().unwrap(), seconds, by_class })
+}
+
+/// Lower one request into a fluid-simulator job. The first activity is a
+/// `Delay(arrival_s)`, so spawning every request at t = 0 reproduces the
+/// generated arrival sequence exactly; a request's simulated latency is
+/// its job's finish time minus its arrival. `failed` is the scenario's
+/// failure set: write flows toward dead nodes are dropped, mirroring
+/// [`crate::cluster::MiniCluster::write_stripe_from`].
+pub fn request_job(
+    req: &Request,
+    table: &PlacementTable,
+    rt: &ResourceTable,
+    spec: &SystemSpec,
+    seed: u64,
+    failed: &[crate::topology::Location],
+) -> JobSpec {
+    let bytes = spec.block_size as f64;
+    let seek = spec.disk.seek_ms / 1e3;
+    let arrival = req.arrival_s.max(0.0);
+    match req.class {
+        RequestClass::DegradedRead { stripe, block } => {
+            // same plan the cluster's degraded_read builds, so both
+            // backends move the same blocks over the same links
+            let plan = plan_degraded_read(table, stripe, block, req.client, seed);
+            plan_to_job_with(&plan, rt, spec, arrival)
+        }
+        RequestClass::NormalRead { stripe, block } => {
+            let mut job = JobSpec::default();
+            let arrive = job.push(Work::Delay(arrival), vec![]);
+            let loc = table.stripe(stripe).locs[block];
+            let s = job.push(Work::Delay(seek), vec![arrive]);
+            let read =
+                job.push(Work::Flow { resources: vec![rt.disk(loc)], bytes }, vec![s]);
+            job.push(
+                Work::Flow { resources: rt.transfer(loc, req.client), bytes },
+                vec![read],
+            );
+            job
+        }
+        RequestClass::Write { stripe } => {
+            let mut job = JobSpec::default();
+            let arrive = job.push(Work::Delay(arrival), vec![]);
+            let k = table.code().k();
+            // client-side encode streams all k sources through the GF path
+            let enc = job.push(
+                Work::Flow {
+                    resources: vec![rt.cpu(req.client)],
+                    bytes: bytes * k as f64,
+                },
+                vec![arrive],
+            );
+            for loc in table.stripe(stripe).locs {
+                if failed.contains(&loc) {
+                    // a dead DataNode cannot accept the replica
+                    continue;
+                }
+                let xfer = job.push(
+                    Work::Flow { resources: rt.transfer(req.client, loc), bytes },
+                    vec![enc],
+                );
+                let sw = job.push(Work::Delay(seek), vec![xfer]);
+                job.push(Work::Flow { resources: vec![rt.disk(loc)], bytes }, vec![sw]);
+            }
+            job
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::gen::FgSpec;
+    use crate::codes::CodeSpec;
+    use crate::placement::D3Placement;
+    use crate::sim::engine::Engine;
+    use std::sync::Arc;
+
+    fn policy() -> Arc<dyn Placement> {
+        let spec = SystemSpec::paper_default();
+        Arc::new(D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, spec.cluster).unwrap())
+    }
+
+    #[test]
+    fn sim_jobs_complete_with_arrival_offset_latencies() {
+        let spec = SystemSpec::paper_default();
+        let p = policy();
+        let table = PlacementTable::build(p.clone(), 30);
+        let rt = ResourceTable::new(&spec);
+        let fg = FgSpec {
+            requests: 12,
+            arrival: ArrivalModel::Open { rate_rps: 2.0 },
+            read_weight: 2,
+            degraded_weight: 1,
+            write_weight: 1,
+        };
+        let failed = vec![p.stripe(2).locs[1]];
+        let reqs = fg.generate(&p, 30, &failed, 4).unwrap();
+        let mut engine = Engine::new(rt.caps.clone());
+        let ids: Vec<(u32, f64)> = reqs
+            .iter()
+            .map(|r| {
+                let job = request_job(r, &table, &rt, &spec, 4, &failed);
+                (engine.spawn(job), r.arrival_s)
+            })
+            .collect();
+        engine.run_to_completion();
+        for &(id, arrival) in &ids {
+            let lat = engine.finish_time(id) - arrival;
+            assert!(lat > 0.0, "request finished before doing any work");
+            assert!(lat < 600.0, "implausible latency {lat}");
+        }
+    }
+
+    #[test]
+    fn class_counts_partition_the_sequence() {
+        let p = policy();
+        let fg = FgSpec {
+            requests: 40,
+            arrival: ArrivalModel::Open { rate_rps: f64::INFINITY },
+            read_weight: 1,
+            degraded_weight: 1,
+            write_weight: 1,
+        };
+        let reqs = fg.generate(&p, 30, &[p.stripe(0).locs[3]], 8).unwrap();
+        let (r, d, w) = class_counts(&reqs);
+        assert_eq!(r + d + w, 40);
+        assert!(r > 0 && d > 0 && w > 0, "{r}/{d}/{w}");
+    }
+
+    #[test]
+    fn fg_write_data_is_deterministic_and_distinct() {
+        let a = fg_write_data(7, 3, 1024);
+        let b = fg_write_data(7, 3, 1024);
+        assert_eq!(a, b);
+        assert_ne!(a[0], a[1]);
+        assert_ne!(fg_write_data(8, 3, 1024)[0], a[0]);
+    }
+}

@@ -1,0 +1,369 @@
+//! Deterministic foreground-request generation (DESIGN.md §11).
+//!
+//! A [`FgSpec`] describes a foreground workload abstractly — how many
+//! requests, how they arrive (open loop at a fixed rate, or closed loop
+//! with N clients and think time), and the class mix (normal reads,
+//! degraded reads, writes). [`FgSpec::generate`] expands it into a
+//! concrete, seed-keyed [`Request`] sequence against a placement: every
+//! derived choice (class, target block, issuing client, arrival time) is
+//! a pure function of `(spec, policy, stripes, failed set, seed)`, so the
+//! fluid simulator and the MiniCluster consume **bit-identical** request
+//! sequences and their foreground measurements are cross-checkable.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::placement::{Placement, PlacementTable};
+use crate::topology::Location;
+use crate::util::Rng;
+use crate::workloads::WorkloadSpec;
+
+/// What one foreground request does.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestClass {
+    /// Read a healthy data block.
+    NormalRead { stripe: u64, block: usize },
+    /// Read a block lost to the failure set (rebuilt on the fly).
+    DegradedRead { stripe: u64, block: usize },
+    /// Write (encode + distribute) a fresh stripe.
+    Write { stripe: u64 },
+}
+
+/// One generated foreground request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    /// Position in the generated sequence.
+    pub id: usize,
+    /// Closed-loop client slot serving this request (0 under open loop).
+    pub slot: usize,
+    pub class: RequestClass,
+    /// Node issuing the request (never a failed node).
+    pub client: Location,
+    /// Scheduled arrival in seconds from the run's start. Open loop:
+    /// `id / rate`. Closed loop: the think-time pacing of the request's
+    /// slot — the fluid backend admits at these times; the cluster
+    /// backend paces each slot by real completions instead.
+    pub arrival_s: f64,
+}
+
+/// How requests arrive.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalModel {
+    /// Fixed-rate open loop: request `i` arrives at `i / rate_rps`
+    /// regardless of completions (an infinite rate arrives everything at
+    /// t = 0 — the burst case).
+    Open { rate_rps: f64 },
+    /// Closed loop: `clients` concurrent clients, each issuing its next
+    /// request `think_s` after the previous one completes.
+    Closed { clients: usize, think_s: f64 },
+}
+
+/// A foreground workload, abstract of any backend.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FgSpec {
+    /// Total requests in the sequence.
+    pub requests: usize,
+    pub arrival: ArrivalModel,
+    /// Relative weight of [`RequestClass::NormalRead`] in the mix.
+    pub read_weight: u32,
+    /// Relative weight of [`RequestClass::DegradedRead`].
+    pub degraded_weight: u32,
+    /// Relative weight of [`RequestClass::Write`].
+    pub write_weight: u32,
+}
+
+impl FgSpec {
+    /// Pure normal-read traffic.
+    pub fn reads(requests: usize, arrival: ArrivalModel) -> FgSpec {
+        FgSpec { requests, arrival, read_weight: 1, degraded_weight: 0, write_weight: 0 }
+    }
+
+    /// The degraded-read burst (paper Exp 3 as a concurrent burst): all
+    /// requests target lost blocks and arrive at t = 0.
+    pub fn burst(reads: usize) -> FgSpec {
+        FgSpec {
+            requests: reads,
+            arrival: ArrivalModel::Open { rate_rps: f64::INFINITY },
+            read_weight: 0,
+            degraded_weight: 1,
+            write_weight: 0,
+        }
+    }
+
+    /// A MapReduce-shaped job (paper Table 2) as a block-request mix: the
+    /// map phase reads one input block per map task, reducers write their
+    /// output stripes, and four concurrent clients drive the job (the
+    /// task-slot analogue). Both backends then serve the *same* request
+    /// sequence instead of one simulating shuffles while the other
+    /// samples ad-hoc reads.
+    pub fn from_workload(w: &WorkloadSpec) -> FgSpec {
+        let reads = w.maps.max(1);
+        let writes = if w.output_bytes > 0 { w.reduces } else { 0 };
+        FgSpec {
+            requests: reads + writes,
+            arrival: ArrivalModel::Closed { clients: 4, think_s: 0.0 },
+            read_weight: reads as u32,
+            degraded_weight: 0,
+            write_weight: writes as u32,
+        }
+    }
+
+    /// [`FgSpec::from_workload`] by Table-2 benchmark name.
+    pub fn from_workload_name(name: &str) -> Result<FgSpec> {
+        let all = crate::workloads::specs();
+        let w = all
+            .iter()
+            .find(|w| w.name == name)
+            .ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?;
+        Ok(FgSpec::from_workload(w))
+    }
+
+    /// Expand into the concrete request sequence. Deterministic: the same
+    /// arguments always produce the same sequence, on every backend.
+    pub fn generate(
+        &self,
+        policy: &Arc<dyn Placement>,
+        stripes: u64,
+        failed: &[Location],
+        seed: u64,
+    ) -> Result<Vec<Request>> {
+        let stripes = stripes.max(1);
+        let table = PlacementTable::build(policy.clone(), stripes);
+        self.generate_with(&table, stripes, failed, seed)
+    }
+
+    /// [`FgSpec::generate`] against a placement table the caller already
+    /// built — scenario runs build ONE table and share it between request
+    /// generation and plan derivation instead of rebuilding per use.
+    pub fn generate_with(
+        &self,
+        table: &PlacementTable,
+        stripes: u64,
+        failed: &[Location],
+        seed: u64,
+    ) -> Result<Vec<Request>> {
+        let cluster = table.cluster();
+        let stripes = stripes.max(1);
+        let k = table.code().k();
+        let total_weight = self.read_weight + self.degraded_weight + self.write_weight;
+        if total_weight == 0 {
+            bail!("foreground spec has an all-zero class mix");
+        }
+        // lost blocks (any block on a failed node) for the degraded class
+        let lost: Vec<(u64, usize)> = if self.degraded_weight > 0 {
+            let mut lost = Vec::new();
+            for sid in 0..stripes {
+                let sp = table.stripe(sid);
+                for (bi, loc) in sp.locs.iter().enumerate() {
+                    if failed.contains(loc) {
+                        lost.push((sid, bi));
+                    }
+                }
+            }
+            if lost.is_empty() {
+                bail!("degraded foreground traffic: failure set holds no blocks");
+            }
+            lost
+        } else {
+            Vec::new()
+        };
+        let mut rng = Rng::keyed(seed, 0xf9_c11e, 7);
+        let mut out = Vec::with_capacity(self.requests);
+        let mut writes = 0u64;
+        for id in 0..self.requests {
+            let pick = rng.below(total_weight as usize) as u32;
+            let class = if pick < self.read_weight {
+                // healthy data block: rejection-sample away from the
+                // failure set (bounded; the failure set never covers
+                // every data block of every stripe in practice)
+                let mut choice = None;
+                for _ in 0..64 {
+                    let sid = rng.below(stripes as usize) as u64;
+                    let block = rng.below(k);
+                    if !failed.contains(&table.stripe(sid).locs[block]) {
+                        choice = Some(RequestClass::NormalRead { stripe: sid, block });
+                        break;
+                    }
+                }
+                let Some(c) = choice else {
+                    bail!("no healthy data block found in {stripes} stripes");
+                };
+                c
+            } else if pick < self.read_weight + self.degraded_weight {
+                let (stripe, block) = lost[rng.below(lost.len())];
+                RequestClass::DegradedRead { stripe, block }
+            } else {
+                // fresh stripes land beyond the stored population
+                let stripe = stripes + writes;
+                writes += 1;
+                RequestClass::Write { stripe }
+            };
+            let client = loop {
+                let c = cluster.unflat(rng.below(cluster.node_count()));
+                if !failed.contains(&c) {
+                    break c;
+                }
+            };
+            let (slot, arrival_s) = match self.arrival {
+                ArrivalModel::Open { rate_rps } => {
+                    let arrival = if rate_rps.is_finite() && rate_rps > 0.0 {
+                        id as f64 / rate_rps
+                    } else {
+                        0.0
+                    };
+                    (0, arrival)
+                }
+                ArrivalModel::Closed { clients, think_s } => {
+                    let clients = clients.max(1);
+                    (id % clients, (id / clients) as f64 * think_s.max(0.0))
+                }
+            };
+            out.push(Request { id, slot, class, client, arrival_s });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::CodeSpec;
+    use crate::placement::D3Placement;
+    use crate::topology::ClusterSpec;
+
+    fn policy() -> Arc<dyn Placement> {
+        Arc::new(
+            D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, ClusterSpec::new(8, 3)).unwrap(),
+        )
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let p = policy();
+        let spec = FgSpec {
+            requests: 50,
+            arrival: ArrivalModel::Open { rate_rps: 100.0 },
+            read_weight: 3,
+            degraded_weight: 1,
+            write_weight: 1,
+        };
+        // a node that certainly stores blocks
+        let failed = vec![p.stripe(0).locs[0]];
+        let a = spec.generate(&p, 40, &failed, 9).unwrap();
+        let b = spec.generate(&p, 40, &failed, 9).unwrap();
+        assert_eq!(a, b);
+        let c = spec.generate(&p, 40, &failed, 10).unwrap();
+        assert_ne!(a, c, "different seeds must differ");
+    }
+
+    #[test]
+    fn requests_respect_the_failure_set() {
+        let p = policy();
+        let failed = vec![p.stripe(1).locs[2]];
+        let spec = FgSpec {
+            requests: 80,
+            arrival: ArrivalModel::Closed { clients: 4, think_s: 0.5 },
+            read_weight: 2,
+            degraded_weight: 1,
+            write_weight: 0,
+        };
+        let reqs = spec.generate(&p, 60, &failed, 3).unwrap();
+        assert_eq!(reqs.len(), 80);
+        let mut saw_degraded = false;
+        for r in &reqs {
+            assert!(!failed.contains(&r.client), "client on failed node");
+            match r.class {
+                RequestClass::NormalRead { stripe, block } => {
+                    assert!(block < 3);
+                    assert!(!failed.contains(&p.stripe(stripe).locs[block]));
+                }
+                RequestClass::DegradedRead { stripe, block } => {
+                    saw_degraded = true;
+                    assert_eq!(p.stripe(stripe).locs[block], failed[0]);
+                }
+                RequestClass::Write { .. } => unreachable!("write weight is 0"),
+            }
+            assert!(r.slot < 4);
+        }
+        assert!(saw_degraded, "80 draws at weight 1/3 must hit degraded");
+    }
+
+    #[test]
+    fn open_loop_arrivals_are_fixed_rate_and_burst_is_t0() {
+        let p = policy();
+        let spec = FgSpec::reads(10, ArrivalModel::Open { rate_rps: 4.0 });
+        let reqs = spec.generate(&p, 20, &[], 1).unwrap();
+        for (i, r) in reqs.iter().enumerate() {
+            assert!((r.arrival_s - i as f64 / 4.0).abs() < 1e-12);
+        }
+        let burst = FgSpec::burst(6)
+            .generate(&p, 20, &[p.stripe(0).locs[0]], 1)
+            .unwrap();
+        assert!(burst.iter().all(|r| r.arrival_s == 0.0));
+        assert!(burst
+            .iter()
+            .all(|r| matches!(r.class, RequestClass::DegradedRead { .. })));
+    }
+
+    #[test]
+    fn closed_loop_slots_round_robin_with_think_pacing() {
+        let p = policy();
+        let spec = FgSpec::reads(9, ArrivalModel::Closed { clients: 3, think_s: 2.0 });
+        let reqs = spec.generate(&p, 20, &[], 5).unwrap();
+        for r in &reqs {
+            assert_eq!(r.slot, r.id % 3);
+            assert!((r.arrival_s - (r.id / 3) as f64 * 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn workload_mix_reflects_table_2_shape() {
+        let all = crate::workloads::specs();
+        let grep = all.iter().find(|w| w.name == "grep").unwrap();
+        let spec = FgSpec::from_workload(grep);
+        assert_eq!(spec.requests, grep.maps + grep.reduces);
+        assert_eq!(spec.read_weight, grep.maps as u32);
+        assert_eq!(spec.write_weight, grep.reduces as u32);
+        let pi = all.iter().find(|w| w.name == "pi").unwrap();
+        let spec = FgSpec::from_workload(pi);
+        assert!(spec.write_weight > 0, "pi writes its tiny output");
+        assert!(FgSpec::from_workload_name("nope").is_err());
+    }
+
+    #[test]
+    fn writes_target_fresh_stripes_in_order() {
+        let p = policy();
+        let spec = FgSpec {
+            requests: 12,
+            arrival: ArrivalModel::Open { rate_rps: f64::INFINITY },
+            read_weight: 0,
+            degraded_weight: 0,
+            write_weight: 1,
+        };
+        let reqs = spec.generate(&p, 30, &[], 2).unwrap();
+        let sids: Vec<u64> = reqs
+            .iter()
+            .map(|r| match r.class {
+                RequestClass::Write { stripe } => stripe,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(sids, (30..42).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn empty_mix_and_vacuous_degraded_are_errors() {
+        let p = policy();
+        let none = FgSpec {
+            requests: 4,
+            arrival: ArrivalModel::Open { rate_rps: 1.0 },
+            read_weight: 0,
+            degraded_weight: 0,
+            write_weight: 0,
+        };
+        assert!(none.generate(&p, 10, &[], 0).is_err());
+        // a degraded mix against an empty failure set is vacuous
+        assert!(FgSpec::burst(4).generate(&p, 10, &[], 0).is_err());
+    }
+}

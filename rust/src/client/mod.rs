@@ -1,0 +1,74 @@
+//! The QoS-aware client I/O engine (DESIGN.md §11): **one** foreground-
+//! traffic path shared by every backend.
+//!
+//! The paper's second headline claim — "D³ supports front-end applications
+//! better than RDD in both of normal and recovery states" (§6.2.3–§6.2.4)
+//! — used to be served by three disjoint ad-hoc code paths (the
+//! ClusterBackend's reader-thread hack, a bespoke degraded-burst loop, and
+//! the standalone `sim::frontend` job builder). Production systems treat
+//! foreground I/O and recovery as one scheduled resource problem: recovery
+//! traffic is throttled so repair does not destroy tail latency (Rashmi et
+//! al., arXiv:1309.0186; XORing Elephants, arXiv:1301.3791). This module
+//! is that one problem's one implementation:
+//!
+//! * [`gen`] — request classes ([`RequestClass`]) and deterministic seeded
+//!   open-loop / closed-loop generators ([`FgSpec::generate`]); both
+//!   backends consume the **same** generated [`Request`] sequence, so
+//!   foreground arrival patterns are bit-identical across the fluid
+//!   simulator and the MiniCluster.
+//! * [`engine`] — executes a request sequence: real reads/writes through
+//!   [`crate::cluster::MiniCluster`] (per-request wall-clock latency), or
+//!   fluid-engine jobs for the simulator (per-request simulated latency).
+//! * [`QosConfig`] — the recovery/foreground split: `recovery_share`
+//!   throttles recovery-class traffic at node ports and rack links
+//!   ([`crate::cluster::links::LinkSet`]), and `fg_weight` scales the
+//!   recovery executor's inter-chunk pacing while foreground load is
+//!   active ([`crate::recovery::executor::ChunkRunner::throttle`]).
+
+pub mod engine;
+pub mod gen;
+
+pub use engine::{request_job, run_on_cluster, FgOutcome};
+pub use gen::{ArrivalModel, FgSpec, Request, RequestClass};
+
+/// The QoS policy a mixed-load scenario carries (DESIGN.md §11): how the
+/// cluster's scarce ports are split between recovery and foreground
+/// traffic.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QosConfig {
+    /// Fraction (0, 1] of every node port and rack link available to
+    /// recovery-class traffic while foreground load is active. `1.0`
+    /// disables the split entirely — byte-for-byte the pre-QoS data path.
+    pub recovery_share: f64,
+    /// Weight of the recovery executor's inter-chunk pacing under
+    /// foreground load: after a chunk that took `b` busy seconds, the
+    /// worker yields `b · fg_weight · (1/recovery_share − 1)` seconds.
+    /// `0.0` keeps only the link-level split.
+    pub fg_weight: f64,
+}
+
+impl Default for QosConfig {
+    fn default() -> QosConfig {
+        QosConfig { recovery_share: 1.0, fg_weight: 1.0 }
+    }
+}
+
+impl QosConfig {
+    /// True when this config actually constrains recovery traffic.
+    pub fn is_active(&self) -> bool {
+        self.recovery_share < 1.0 && self.recovery_share > 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_qos_is_inactive() {
+        let q = QosConfig::default();
+        assert!(!q.is_active());
+        assert!(QosConfig { recovery_share: 0.5, fg_weight: 1.0 }.is_active());
+        assert!(!QosConfig { recovery_share: 0.0, fg_weight: 1.0 }.is_active());
+    }
+}

@@ -3,11 +3,21 @@
 //! in-process transfers, so wall-clock recovery times are network-shaped
 //! exactly like the testbed's.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::topology::Location;
+
+/// Which traffic class a transfer belongs to (DESIGN.md §11): client I/O
+/// (reads, degraded reads, writes) is foreground; the recovery executor's
+/// fetches and aggregated-partial shipments are recovery. The QoS split
+/// ([`LinkSet::set_qos`]) throttles only the recovery class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrafficClass {
+    Foreground,
+    Recovery,
+}
 
 /// Counting in-flight gate: at most `cap` concurrent holders, 0 = no limit.
 /// The recovery executor (DESIGN.md §8) sets per-node and per-rack-link
@@ -141,6 +151,18 @@ impl LinkMeter {
     }
 }
 
+/// The recovery-class rate split (DESIGN.md §11): a second bank of token
+/// buckets at `share × rate` on every node port and rack link. Recovery
+/// transfers charge both banks, so while foreground load is active
+/// (`fg_active`) recovery can use at most its share of any port and the
+/// remainder stays available to client I/O. Foreground transfers never
+/// touch this bank.
+struct QosSplit {
+    nodes: Vec<(TokenBucket, TokenBucket)>,
+    racks: Vec<(TokenBucket, TokenBucket)>,
+    fg_active: Arc<AtomicBool>,
+}
+
 /// All throttled links of the cluster.
 pub struct LinkSet {
     /// per-node NIC (up, down)
@@ -153,6 +175,15 @@ pub struct LinkSet {
     rack_gates: Vec<Gate>,
     /// per-rack-link busy/stall accounting for cross-rack transfers
     meters: Vec<LinkMeter>,
+    /// recovery-class QoS bucket bank, present while a split is set
+    qos: Mutex<Option<Arc<QosSplit>>>,
+    /// lock-free fast-path flag mirroring `qos.is_some()`, so the common
+    /// no-QoS recovery path never touches the mutex (DESIGN.md §9's
+    /// zero-overhead hot path stays zero-overhead)
+    qos_on: AtomicBool,
+    /// full port rates (bytes/s), kept to size the QoS bank
+    inner_rate: f64,
+    cross_rate: f64,
     nodes_per_rack: usize,
 }
 
@@ -170,8 +201,49 @@ impl LinkSet {
             node_gates: (0..spec.cluster.node_count()).map(|_| Gate::new()).collect(),
             rack_gates: (0..spec.cluster.racks).map(|_| Gate::new()).collect(),
             meters: (0..spec.cluster.racks).map(|_| LinkMeter::default()).collect(),
+            qos: Mutex::new(None),
+            qos_on: AtomicBool::new(false),
+            inner_rate: inner,
+            cross_rate: cross,
             nodes_per_rack: spec.cluster.nodes_per_rack,
         }
+    }
+
+    /// Install the recovery/foreground split: recovery-class transfers are
+    /// capped at `share` of every node port and rack link while
+    /// `fg_active` holds true. `share` outside (0, 1) removes the split.
+    pub fn set_qos(&self, share: f64, fg_active: Arc<AtomicBool>) {
+        let mut qos = self.qos.lock().unwrap();
+        *qos = if share > 0.0 && share < 1.0 {
+            Some(Arc::new(QosSplit {
+                nodes: (0..self.nics.len())
+                    .map(|_| {
+                        (
+                            TokenBucket::new(self.inner_rate * share),
+                            TokenBucket::new(self.inner_rate * share),
+                        )
+                    })
+                    .collect(),
+                racks: (0..self.racks.len())
+                    .map(|_| {
+                        (
+                            TokenBucket::new(self.cross_rate * share),
+                            TokenBucket::new(self.cross_rate * share),
+                        )
+                    })
+                    .collect(),
+                fg_active,
+            }))
+        } else {
+            None
+        };
+        self.qos_on.store(qos.is_some(), Ordering::Relaxed);
+    }
+
+    /// Remove the recovery/foreground split.
+    pub fn clear_qos(&self) {
+        *self.qos.lock().unwrap() = None;
+        self.qos_on.store(false, Ordering::Relaxed);
     }
 
     /// Per-rack-link (busy seconds, stall seconds) accumulated by
@@ -199,12 +271,29 @@ impl LinkSet {
         }
     }
 
-    /// Throttle a `src → dst` transfer of `bytes` (blocking). Transfers are
-    /// chunked so concurrent flows interleave fairly. In-flight gates are
-    /// held for the whole transfer and acquired in a single global order
-    /// (node gates by flat index, then rack gates by rack index) so
-    /// concurrent transfers can never deadlock on them.
+    /// [`LinkSet::transfer_class`] for foreground traffic.
     pub fn transfer(&self, src: Location, dst: Location, bytes: u64) {
+        self.transfer_class(src, dst, bytes, TrafficClass::Foreground);
+    }
+
+    /// Throttle a `src → dst` transfer of `bytes` (blocking). Transfers are
+    /// chunked so concurrent flows interleave fairly. The in-flight gates
+    /// are the recovery executor's xmits analogue (DESIGN.md §8) and gate
+    /// **recovery-class** transfers only — client I/O is not subject to
+    /// reconstruction caps, so a QoS-throttled recovery flow can never
+    /// hold a gate slot a foreground read is queued on (no priority
+    /// inversion under the split). Gates are held for the whole transfer
+    /// and acquired in a single global order (node gates by flat index,
+    /// then rack gates by rack index) so concurrent transfers can never
+    /// deadlock on them. Recovery-class transfers additionally charge the
+    /// QoS bucket bank when a split is installed ([`LinkSet::set_qos`]).
+    pub fn transfer_class(
+        &self,
+        src: Location,
+        dst: Location,
+        bytes: u64,
+        class: TrafficClass,
+    ) {
         if src == dst || bytes == 0 {
             return;
         }
@@ -212,21 +301,23 @@ impl LinkSet {
         let dst_i = dst.rack as usize * self.nodes_per_rack + dst.node as usize;
         let t0 = Instant::now();
         let mut guards: Vec<GateGuard<'_>> = Vec::with_capacity(4);
-        let (lo, hi) = if src_i < dst_i { (src_i, dst_i) } else { (dst_i, src_i) };
-        guards.push(self.node_gates[lo].enter());
-        guards.push(self.node_gates[hi].enter());
-        if src.rack != dst.rack {
-            let (rlo, rhi) = if src.rack < dst.rack {
-                (src.rack, dst.rack)
-            } else {
-                (dst.rack, src.rack)
-            };
-            guards.push(self.rack_gates[rlo as usize].enter());
-            guards.push(self.rack_gates[rhi as usize].enter());
+        if class == TrafficClass::Recovery {
+            let (lo, hi) = if src_i < dst_i { (src_i, dst_i) } else { (dst_i, src_i) };
+            guards.push(self.node_gates[lo].enter());
+            guards.push(self.node_gates[hi].enter());
+            if src.rack != dst.rack {
+                let (rlo, rhi) = if src.rack < dst.rack {
+                    (src.rack, dst.rack)
+                } else {
+                    (dst.rack, src.rack)
+                };
+                guards.push(self.rack_gates[rlo as usize].enter());
+                guards.push(self.rack_gates[rhi as usize].enter());
+            }
         }
         let stall = t0.elapsed();
         let t1 = Instant::now();
-        self.pace(src, dst, src_i, dst_i, bytes);
+        self.pace(src, dst, src_i, dst_i, bytes, class);
         if src.rack != dst.rack {
             let busy = t1.elapsed();
             self.meters[src.rack as usize].add(busy, stall);
@@ -242,7 +333,12 @@ impl LinkSet {
     /// by rack index), so singles and batches can never deadlock; token
     /// buckets still charge per flow, so byte pacing and accounting are
     /// identical to issuing the transfers one by one.
-    pub fn transfer_batch(&self, dst: Location, flows: &[(Location, u64)]) {
+    pub fn transfer_batch(
+        &self,
+        dst: Location,
+        flows: &[(Location, u64)],
+        class: TrafficClass,
+    ) {
         let dst_i = dst.rack as usize * self.nodes_per_rack + dst.node as usize;
         let mut nodes: Vec<usize> = Vec::with_capacity(flows.len() + 1);
         let mut rack_ids: Vec<usize> = Vec::new();
@@ -267,11 +363,14 @@ impl LinkSet {
         let t0 = Instant::now();
         let mut guards: Vec<GateGuard<'_>> =
             Vec::with_capacity(nodes.len() + rack_ids.len());
-        for &i in &nodes {
-            guards.push(self.node_gates[i].enter());
-        }
-        for &r in &rack_ids {
-            guards.push(self.rack_gates[r].enter());
+        if class == TrafficClass::Recovery {
+            // gates are the reconstruction xmits caps; see transfer_class
+            for &i in &nodes {
+                guards.push(self.node_gates[i].enter());
+            }
+            for &r in &rack_ids {
+                guards.push(self.rack_gates[r].enter());
+            }
         }
         let stall = t0.elapsed();
         for &(src, bytes) in flows {
@@ -280,7 +379,7 @@ impl LinkSet {
             }
             let src_i = src.rack as usize * self.nodes_per_rack + src.node as usize;
             let t1 = Instant::now();
-            self.pace(src, dst, src_i, dst_i, bytes);
+            self.pace(src, dst, src_i, dst_i, bytes, class);
             if src.rack != dst.rack {
                 // busy is metered per flow, so inner-rack flows in the
                 // batch never inflate a rack link's busy time
@@ -297,12 +396,42 @@ impl LinkSet {
     }
 
     /// Token-bucket pacing of one flow (chunked so concurrent flows
-    /// interleave fairly); gates must already be held.
-    fn pace(&self, src: Location, dst: Location, src_i: usize, dst_i: usize, bytes: u64) {
+    /// interleave fairly); gates must already be held. Recovery-class
+    /// flows also drain the share-scaled QoS bank while foreground load
+    /// is active, so recovery can never exceed its configured fraction of
+    /// a port that client I/O is competing for.
+    fn pace(
+        &self,
+        src: Location,
+        dst: Location,
+        src_i: usize,
+        dst_i: usize,
+        bytes: u64,
+        class: TrafficClass,
+    ) {
+        let qos: Option<Arc<QosSplit>> =
+            if class == TrafficClass::Recovery && self.qos_on.load(Ordering::Relaxed) {
+                self.qos.lock().unwrap().clone()
+            } else {
+                None
+            };
         let chunk = 256 * 1024;
         let mut left = bytes;
         while left > 0 {
             let take = left.min(chunk);
+            // re-sample the foreground-activity flag per chunk, so a long
+            // flow starts (and stops) honoring the split as client load
+            // comes and goes mid-transfer
+            if let Some(q) = qos.as_deref() {
+                if q.fg_active.load(Ordering::Relaxed) {
+                    q.nodes[src_i].0.acquire(take);
+                    q.nodes[dst_i].1.acquire(take);
+                    if src.rack != dst.rack {
+                        q.racks[src.rack as usize].0.acquire(take);
+                        q.racks[dst.rack as usize].1.acquire(take);
+                    }
+                }
+            }
             self.nics[src_i].0.acquire(take);
             self.nics[dst_i].1.acquire(take);
             if src.rack != dst.rack {
@@ -384,22 +513,43 @@ mod tests {
         spec.net.cross_mbps = 1600.0;
         let links = std::sync::Arc::new(LinkSet::new(&spec));
         links.set_inflight_caps(2, 3);
-        // a mesh of opposing transfers that would deadlock under unordered
-        // two-gate acquisition
+        // a mesh of opposing recovery transfers (the gated class) that
+        // would deadlock under unordered two-gate acquisition
         let hs: Vec<_> = (0..12u64)
             .map(|i| {
                 let l = links.clone();
                 std::thread::spawn(move || {
                     let a = Location::new((i % 4) as usize, (i % 3) as usize);
                     let b = Location::new(((i + 1) % 4) as usize, ((i + 2) % 3) as usize);
-                    l.transfer(a, b, 64 * 1024);
-                    l.transfer(b, a, 64 * 1024);
+                    l.transfer_class(a, b, 64 * 1024, TrafficClass::Recovery);
+                    l.transfer_class(b, a, 64 * 1024, TrafficClass::Recovery);
                 })
             })
             .collect();
         for h in hs {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn foreground_transfers_bypass_the_reconstruction_gates() {
+        // the in-flight caps are the recovery xmits analogue: with every
+        // gate slot held by (simulated) recovery, a foreground transfer
+        // must still go through immediately
+        let mut spec = SystemSpec::paper_default();
+        spec.net.inner_mbps = 8000.0;
+        spec.net.cross_mbps = 1600.0;
+        let links = LinkSet::new(&spec);
+        links.set_inflight_caps(1, 1);
+        let holds: Vec<_> = links.node_gates.iter().map(|g| g.enter()).collect();
+        let rack_holds: Vec<_> = links.rack_gates.iter().map(|g| g.enter()).collect();
+        let t0 = Instant::now();
+        links.transfer(Location::new(0, 0), Location::new(1, 1), 64 * 1024);
+        assert!(
+            t0.elapsed().as_secs_f64() < 1.0,
+            "foreground transfer queued behind recovery gates"
+        );
+        drop((holds, rack_holds));
     }
 
     #[test]
@@ -417,7 +567,7 @@ mod tests {
             (Location::new(3, 2), 0),         // empty: skipped
         ];
         let t0 = Instant::now();
-        links.transfer_batch(dst, &flows);
+        links.transfer_batch(dst, &flows, TrafficClass::Recovery);
         let secs = t0.elapsed().as_secs_f64();
         // 4 MB into one 20 MB/s rack downlink ⇒ well above 0.1 s
         assert!(secs > 0.1, "batch finished implausibly fast: {secs}");
@@ -448,14 +598,44 @@ mod tests {
                             )
                         })
                         .collect();
-                    l.transfer_batch(dst, &srcs);
-                    l.transfer(dst, srcs[0].0, 32 * 1024);
+                    l.transfer_batch(dst, &srcs, TrafficClass::Recovery);
+                    l.transfer_class(dst, srcs[0].0, 32 * 1024, TrafficClass::Recovery);
                 })
             })
             .collect();
         for h in hs {
             h.join().unwrap();
         }
+    }
+
+    #[test]
+    fn qos_split_caps_recovery_but_not_foreground() {
+        let mut spec = SystemSpec::paper_default();
+        spec.net.inner_mbps = 8000.0;
+        spec.net.cross_mbps = 160.0; // 20 MB/s rack port
+        let links = LinkSet::new(&spec);
+        let fg_active = Arc::new(AtomicBool::new(true));
+        links.set_qos(0.25, fg_active.clone()); // recovery at 5 MB/s
+        let n = 2_000_000u64;
+        let a = Location::new(1, 0);
+        let b = Location::new(0, 0);
+        let t0 = Instant::now();
+        links.transfer_class(a, b, n, TrafficClass::Recovery);
+        let rec = t0.elapsed().as_secs_f64();
+        // 2 MB at 25% of 20 MB/s ≈ 0.4 s (minus burst credit)
+        assert!(rec > 0.25, "recovery not throttled to its share: {rec}s");
+        let t1 = Instant::now();
+        links.transfer_class(a, b, n, TrafficClass::Foreground);
+        let fg = t1.elapsed().as_secs_f64();
+        assert!(fg < rec * 0.8, "foreground throttled like recovery: {fg} vs {rec}");
+        // with foreground inactive the split idles and recovery runs at
+        // the full port rate again
+        fg_active.store(false, Ordering::Relaxed);
+        let t2 = Instant::now();
+        links.transfer_class(a, b, n, TrafficClass::Recovery);
+        let idle = t2.elapsed().as_secs_f64();
+        assert!(idle < rec * 0.8, "idle split still throttles: {idle} vs {rec}");
+        links.clear_qos();
     }
 
     #[test]

@@ -13,23 +13,23 @@ pub mod links;
 pub mod service;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context};
 
+use crate::client::QosConfig;
 use crate::codes::CodeSpec;
 use crate::gf;
 use crate::metrics::PoolStats;
-use crate::placement::Placement;
+use crate::placement::{Placement, PlacementTable};
 use crate::recovery::executor::{execute_plans, ChunkRunner, ExecutorConfig, Scratch};
 use crate::recovery::plan::{plan_coefficients, plan_degraded_read, plan_repair, RepairPlan};
 use crate::recovery::schedule::SchedulePolicy;
 use crate::topology::{Location, SystemSpec};
-use crate::util::Rng;
 
-use links::LinkSet;
+use links::{LinkSet, TrafficClass};
 use service::CoderService;
 
 type BlockKey = (u64, usize);
@@ -76,7 +76,20 @@ pub struct MiniCluster {
     /// snapshot can never observe a transfer's up-count without its
     /// down-count under the multi-threaded executor.
     accounting: RwLock<()>,
+    /// Mixed-load QoS runtime (DESIGN.md §11): the active split and the
+    /// foreground-activity flag the client engine toggles.
+    qos: Mutex<Option<QosRuntime>>,
+    /// Lock-free mirror of `qos.is_some()`: the per-chunk throttle hook
+    /// checks this first, so plain recovery never touches the mutex.
+    qos_on: AtomicBool,
     seed: u64,
+}
+
+/// The QoS parameters in force during a mixed-load run.
+#[derive(Clone)]
+struct QosRuntime {
+    cfg: QosConfig,
+    fg_active: Arc<AtomicBool>,
 }
 
 impl MiniCluster {
@@ -99,6 +112,8 @@ impl MiniCluster {
             rack_up: (0..spec.cluster.racks).map(|_| AtomicU64::new(0)).collect(),
             rack_down: (0..spec.cluster.racks).map(|_| AtomicU64::new(0)).collect(),
             accounting: RwLock::new(()),
+            qos: Mutex::new(None),
+            qos_on: AtomicBool::new(false),
             spec,
             policy,
             coder,
@@ -126,19 +141,20 @@ impl MiniCluster {
         self.policy.stripe(sid).locs[block]
     }
 
-    fn transfer(&self, src: Location, dst: Location, bytes: u64) {
+    fn transfer(&self, src: Location, dst: Location, bytes: u64, class: TrafficClass) {
         if src.rack != dst.rack {
             let _pairwise = self.accounting.read().unwrap();
             self.rack_up[src.rack as usize].fetch_add(bytes, Ordering::Relaxed);
             self.rack_down[dst.rack as usize].fetch_add(bytes, Ordering::Relaxed);
         }
-        self.links.transfer(src, dst, bytes);
+        self.links.transfer_class(src, dst, bytes, class);
     }
 
-    /// Batched inbound transfer: account every flow's cross-rack bytes
-    /// under one pairwise-consistency hold, then move the whole group
-    /// through the links under a single ordered gate acquisition
-    /// ([`links::LinkSet::transfer_batch`]) — the fetch-coalescing path.
+    /// Batched inbound transfer (recovery-class): account every flow's
+    /// cross-rack bytes under one pairwise-consistency hold, then move the
+    /// whole group through the links under a single ordered gate
+    /// acquisition ([`links::LinkSet::transfer_batch`]) — the
+    /// fetch-coalescing path.
     fn transfer_group(&self, to: Location, flows: &[(Location, u64)]) {
         {
             let _pairwise = self.accounting.read().unwrap();
@@ -149,7 +165,52 @@ impl MiniCluster {
                 }
             }
         }
-        self.links.transfer_batch(to, flows);
+        self.links.transfer_batch(to, flows, TrafficClass::Recovery);
+    }
+
+    /// Install a QoS split for a mixed-load run (DESIGN.md §11): recovery
+    /// traffic is capped at `cfg.recovery_share` of every port while
+    /// `fg_active` holds true, and the executor's throttle hook paces
+    /// recovery workers by `cfg.fg_weight`. [`MiniCluster::clear_qos`]
+    /// restores the unsplit data path.
+    pub fn set_qos(&self, cfg: QosConfig, fg_active: Arc<AtomicBool>) {
+        self.links.set_qos(cfg.recovery_share, fg_active.clone());
+        *self.qos.lock().unwrap() = Some(QosRuntime { cfg, fg_active });
+        self.qos_on.store(true, Ordering::Relaxed);
+    }
+
+    /// Remove the QoS split.
+    pub fn clear_qos(&self) {
+        self.links.clear_qos();
+        *self.qos.lock().unwrap() = None;
+        self.qos_on.store(false, Ordering::Relaxed);
+    }
+
+    /// The recovery executor's pacing hook ([`ChunkRunner::throttle`]):
+    /// after a chunk that kept a worker busy for `busy_s`, yield
+    /// `busy_s × fg_weight × (1/recovery_share − 1)` seconds while
+    /// foreground load is active, so recovery's *compute admission* backs
+    /// off in the same proportion as its link share. Each yield is capped
+    /// at 50 ms so a slow chunk cannot park a worker for seconds — the
+    /// link-level bucket split ([`links::LinkSet::set_qos`]) remains the
+    /// bandwidth guarantee; this hook only adds admission back-pressure.
+    fn qos_pace(&self, busy_s: f64) {
+        if !self.qos_on.load(Ordering::Relaxed) {
+            return;
+        }
+        let rt = self.qos.lock().unwrap().clone();
+        let Some(rt) = rt else { return };
+        if !rt.cfg.is_active()
+            || rt.cfg.fg_weight <= 0.0
+            || !rt.fg_active.load(Ordering::Relaxed)
+        {
+            return;
+        }
+        let share = rt.cfg.recovery_share;
+        let pause = busy_s * rt.cfg.fg_weight * (1.0 / share - 1.0);
+        if pause > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(pause.min(0.05)));
+        }
     }
 
     /// Client write path: encode `data` (k shards) and distribute the
@@ -162,6 +223,33 @@ impl MiniCluster {
     /// Callers that need the bytes afterwards clone at the call site or
     /// regenerate from their deterministic generator.
     pub fn write_stripe(&self, sid: u64, data: Vec<Vec<u8>>) -> anyhow::Result<()> {
+        self.write_stripe_inner(sid, data, None)
+    }
+
+    /// [`MiniCluster::write_stripe`] with an explicit issuing client — the
+    /// client engine's write path (DESIGN.md §11). Encode and every block
+    /// distribution are charged to `client`, exactly as the fluid backend
+    /// models the same request, so cross-backend byte accounting agrees.
+    pub fn write_stripe_from(
+        &self,
+        sid: u64,
+        data: Vec<Vec<u8>>,
+        client: Location,
+    ) -> anyhow::Result<()> {
+        self.write_stripe_inner(sid, data, Some(client))
+    }
+
+    /// Shared write path: one placement derivation per stripe; `client`
+    /// defaults to the first replica's node (HDFS write-local). Replicas
+    /// whose placement lands on a failed node are skipped (a dead
+    /// DataNode cannot accept data; [`crate::client::request_job`] drops
+    /// the same flows), leaving the stripe degraded until recovery.
+    fn write_stripe_inner(
+        &self,
+        sid: u64,
+        data: Vec<Vec<u8>>,
+        client: Option<Location>,
+    ) -> anyhow::Result<()> {
         let code = self.policy.code();
         if data.len() != code.k() {
             bail!("expected {} data shards, got {}", code.k(), data.len());
@@ -169,10 +257,14 @@ impl MiniCluster {
         let (data, parity) =
             self.coder.encode(parity_matrix(&code), data).context("encode")?;
         let sp = self.policy.stripe(sid);
-        let client = sp.locs[0];
+        let client = client.unwrap_or(sp.locs[0]);
+        let failed = self.failed.lock().unwrap().clone();
         for (bi, bytes) in data.into_iter().chain(parity).enumerate() {
             let dst = sp.locs[bi];
-            self.transfer(client, dst, bytes.len() as u64);
+            if failed.contains(&dst) {
+                continue;
+            }
+            self.transfer(client, dst, bytes.len() as u64, TrafficClass::Foreground);
             self.store_of(dst).lock().unwrap().insert((sid, bi), bytes);
         }
         Ok(())
@@ -224,7 +316,7 @@ impl MiniCluster {
             .get(&(sid, block))
             .cloned()
             .ok_or_else(|| anyhow!("block ({sid},{block}) missing at {loc}"))?;
-        self.transfer(loc, client, data.len() as u64);
+        self.transfer(loc, client, data.len() as u64, TrafficClass::Foreground);
         Ok(data)
     }
 
@@ -243,7 +335,7 @@ impl MiniCluster {
             .get(&(sid, block))
             .cloned()
             .ok_or_else(|| anyhow!("source block ({sid},{block}) missing at {loc}"))?;
-        self.transfer(loc, to, data.len() as u64);
+        self.transfer(loc, to, data.len() as u64, TrafficClass::Foreground);
         Ok(data)
     }
 
@@ -261,7 +353,7 @@ impl MiniCluster {
         buf: &mut Vec<u8>,
     ) -> anyhow::Result<()> {
         let loc = self.read_chunk_into(sid, block, off, len, buf)?;
-        self.transfer(loc, to, len as u64);
+        self.transfer(loc, to, len as u64, TrafficClass::Recovery);
         Ok(())
     }
 
@@ -336,7 +428,12 @@ impl MiniCluster {
                         }
                         let partial = self.coder.combine(c, shards)?;
                         // ship ONE aggregated block to the compute node
-                        self.transfer(agg.at, plan.compute_at, partial.len() as u64);
+                        self.transfer(
+                            agg.at,
+                            plan.compute_at,
+                            partial.len() as u64,
+                            TrafficClass::Foreground,
+                        );
                         Ok(partial)
                     })
                 })
@@ -477,6 +574,36 @@ impl MiniCluster {
             scratch: stats.scratch,
             link_busy_stall,
         })
+    }
+
+    /// Run recovery and a foreground request sequence concurrently under
+    /// `qos` (DESIGN.md §11): install the split, drive the client engine
+    /// beside the recovery executor, remove the split afterwards. The ONE
+    /// mixed-load orchestration, shared by the scenario backend and the
+    /// perf harness — the fg-activity flag's lifecycle lives here.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_mixed_load(
+        &self,
+        plans: Vec<RepairPlan>,
+        cfg: ExecutorConfig,
+        failed_racks: &[u32],
+        reqs: &[crate::client::Request],
+        arrival: crate::client::ArrivalModel,
+        fg_workers: usize,
+        qos: QosConfig,
+    ) -> anyhow::Result<(ClusterRecoveryStats, crate::client::FgOutcome)> {
+        let fg_active = Arc::new(AtomicBool::new(true));
+        self.set_qos(qos, fg_active.clone());
+        let flag: &AtomicBool = fg_active.as_ref();
+        let (stats, fgout) = std::thread::scope(|scope| {
+            let engine = scope.spawn(move || {
+                crate::client::run_on_cluster(self, reqs, arrival, fg_workers, Some(flag))
+            });
+            let stats = self.recover_with_plans_cfg(plans, cfg, failed_racks);
+            (stats, engine.join().expect("client engine thread"))
+        });
+        self.clear_qos();
+        Ok((stats?, fgout?))
     }
 
     /// Blocks currently stored on `loc`.
@@ -640,7 +767,8 @@ impl ChunkRunner for ChunkIo<'_> {
             for (_, buf) in fetched.drain(..) {
                 scratch.put(buf);
             }
-            self.cluster.transfer(*at, plan.compute_at, len as u64);
+            self.cluster
+                .transfer(*at, plan.compute_at, len as u64, TrafficClass::Recovery);
             gf::xor_into(&mut acc, &partial);
             scratch.put(partial);
         }
@@ -678,6 +806,10 @@ impl ChunkRunner for ChunkIo<'_> {
         }
         Ok(())
     }
+
+    fn throttle(&self, busy_s: f64) {
+        self.cluster.qos_pace(busy_s);
+    }
 }
 
 /// The MiniCluster implementation of the scenario engine
@@ -688,9 +820,11 @@ impl ChunkRunner for ChunkIo<'_> {
 /// inner/cross ratio as the paper) so wall-clock stays interactive;
 /// backend-independent quantities — blocks rebuilt, planned cross-rack
 /// block transfers, *relative* cross-rack bytes between policies — are the
-/// cross-check against the fluid backend. In the frontend-mix kind the
-/// byte accounting also includes the foreground reads (they share the
-/// same links, as on a real cluster).
+/// cross-check against the fluid backend. Foreground traffic (mixed-load
+/// kinds) runs through the shared client engine (DESIGN.md §11), so both
+/// backends serve the identical generated request sequence; its byte
+/// accounting lands in the same rack counters (foreground and recovery
+/// share the links, as on a real cluster).
 pub struct ClusterBackend {
     /// Coding data path: "native" or "pjrt".
     pub data_backend: String,
@@ -777,153 +911,121 @@ impl crate::scenario::RecoveryBackend for ClusterBackend {
         cspec.block_size = self.block_size;
         cspec.net.inner_mbps = self.inner_mbps;
         cspec.net.cross_mbps = self.cross_mbps;
-        let cluster =
-            MiniCluster::new(cspec, policy.clone(), &self.data_backend, scenario.seed)?;
         let k = policy.code().k();
         let bs = self.block_size as usize;
-        cluster.write_stripes_parallel(scenario.stripes, self.workers.max(2), |sid| {
-            deterministic_data(sid, k, bs)
-        })?;
+        let populate = || -> anyhow::Result<MiniCluster> {
+            let cluster =
+                MiniCluster::new(cspec, policy.clone(), &self.data_backend, scenario.seed)?;
+            cluster.write_stripes_parallel(scenario.stripes, self.workers.max(2), |sid| {
+                deterministic_data(sid, k, bs)
+            })?;
+            Ok(cluster)
+        };
+        let cluster = populate()?;
 
-        match &scenario.kind {
-            ScenarioKind::DegradedBurst { .. } => {
-                // one derivation: the degraded-read plans carry the sample
-                // triples (stripe, failed block, client = compute_at)
-                let (failed, plans) = scenario.burst_read_plans(policy)?;
-                let samples: Vec<(u64, usize, Location)> = plans
-                    .iter()
-                    .map(|p| (p.stripe, p.failed_block, p.compute_at))
-                    .collect();
-                cluster.fail_node(failed);
-                let before = cluster.rack_byte_snapshot();
-                let links_before = cluster.links.link_busy_stall();
-                let latencies: Mutex<Vec<f64>> = Mutex::new(Vec::new());
-                let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
-                let t0 = Instant::now();
-                let cl = &cluster;
-                let lat = &latencies;
-                let errs = &errors;
-                // bounded client pool (like recover_with_plans), not one
-                // OS thread per read
-                let queue = Mutex::new(std::collections::VecDeque::from(samples.clone()));
-                let q = &queue;
-                std::thread::scope(|scope| {
-                    for _ in 0..self.workers.max(1) {
-                        scope.spawn(move || loop {
-                            let next = q.lock().unwrap().pop_front();
-                            let Some((sid, block, client)) = next else { break };
-                            match cl.degraded_read(sid, block, client) {
-                                Ok((_, dur)) => {
-                                    lat.lock().unwrap().push(dur.as_secs_f64());
-                                }
-                                Err(e) => {
-                                    errs.lock().unwrap().push(e.to_string());
-                                }
-                            }
-                        });
-                    }
-                });
-                let errs = errors.into_inner().unwrap();
-                if !errs.is_empty() {
-                    bail!("degraded burst errors: {}", errs.join("; "));
-                }
-                let wall = t0.elapsed().as_secs_f64();
-                let after = cluster.rack_byte_snapshot();
-                let rack_cross_bytes: Vec<(u64, u64)> = before
-                    .iter()
-                    .zip(&after)
-                    .map(|(&(u0, d0), &(u1, d1))| (u1 - u0, d1 - d0))
-                    .collect();
-                let link_busy_stall = cluster.link_busy_stall_since(&links_before);
-                let lats = latencies.into_inner().unwrap();
-                let mean = if lats.is_empty() {
-                    0.0
-                } else {
-                    lats.iter().sum::<f64>() / lats.len() as f64
-                };
-                let loads: Vec<(f64, f64)> = rack_cross_bytes
-                    .iter()
-                    .map(|&(u, d)| (u as f64, d as f64))
-                    .collect();
-                let bytes = samples.len() as u64 * self.block_size;
-                Ok(ScenarioOutcome {
-                    backend: "cluster",
-                    scenario: scenario.name(),
-                    policy: policy.name().to_string(),
-                    blocks: samples.len(),
-                    bytes,
-                    seconds: wall,
-                    throughput_mb_s: if wall > 0.0 { bytes as f64 / wall / 1e6 } else { 0.0 },
-                    lambda: crate::sim::recovery::lambda_metric_excluding(
-                        &loads,
-                        &[failed.rack],
-                    ),
-                    rack_cross_bytes,
-                    planned_cross_rack_blocks: planned_cross_rack_blocks(&plans),
-                    degraded_read_mean_s: Some(mean),
-                    frontend_seconds: None,
-                    worker_utilization: None,
-                    scratch_pool: None,
-                    link_busy_stall: Some(link_busy_stall),
-                })
-            }
-            ScenarioKind::FrontendMix { .. } => {
-                let (failed, plans) = scenario.recovery_plans(policy)?;
-                for &f in &failed {
-                    cluster.fail_node(f);
-                }
-                let planned = planned_cross_rack_blocks(&plans);
-                let racks = distinct_racks(&failed);
-                let cl = &cluster;
-                let cluster_spec = cspec.cluster;
-                let stripes = scenario.stripes.max(1);
-                let (stats, frontend) = std::thread::scope(|scope| {
-                    let readers: Vec<_> = (0..4u64)
-                        .map(|t| {
-                            let mut rng = Rng::keyed(scenario.seed, 0xf407, t);
-                            let failed_v = failed.clone();
-                            scope.spawn(move || {
-                                let t0 = Instant::now();
-                                let mut done = 0usize;
-                                let mut attempts = 0usize;
-                                while done < 40 && attempts < 400 {
-                                    attempts += 1;
-                                    let sid = rng.below(stripes as usize) as u64;
-                                    let block = rng.below(k);
-                                    let client = cluster_spec
-                                        .unflat(rng.below(cluster_spec.node_count()));
-                                    if failed_v.contains(&client) {
-                                        continue;
-                                    }
-                                    if cl.read_block(sid, block, client).is_ok() {
-                                        done += 1;
-                                    }
-                                }
-                                t0.elapsed().as_secs_f64()
-                            })
-                        })
-                        .collect();
-                    let stats = cl.recover_with_plans_cfg(plans, self.exec_cfg(), &racks);
-                    let frontend = readers
-                        .into_iter()
-                        .map(|h| h.join().expect("reader thread"))
-                        .fold(0.0f64, f64::max);
-                    (stats, frontend)
-                });
-                let stats = stats?;
-                Ok(cluster_outcome(scenario, policy.name(), &stats, planned, Some(frontend)))
-            }
-            _ => {
-                let (failed, plans) = scenario.recovery_plans(policy)?;
-                for &f in &failed {
-                    cluster.fail_node(f);
-                }
-                let planned = planned_cross_rack_blocks(&plans);
-                let racks = distinct_racks(&failed);
-                let stats = cluster.recover_with_plans_cfg(plans, self.exec_cfg(), &racks)?;
-                Ok(cluster_outcome(scenario, policy.name(), &stats, planned, None))
-            }
+        if matches!(scenario.kind, ScenarioKind::DegradedBurst { .. }) {
+            // pure foreground load: the client engine *is* the scenario —
+            // no separate burst loop (DESIGN.md §11); one table serves
+            // generation and plan derivation
+            let table = PlacementTable::build(policy.clone(), scenario.stripes);
+            let (fgspec, reqs) = scenario
+                .fg_requests_with(&table)?
+                .expect("degraded burst always carries fg traffic");
+            let failed = scenario.failed_nodes(policy.as_ref())[0];
+            cluster.fail_node(failed);
+            let plans = crate::scenario::degraded_read_plans(&table, &reqs, scenario.seed);
+            let before = cluster.rack_byte_snapshot();
+            let links_before = cluster.links.link_busy_stall();
+            let out = crate::client::run_on_cluster(
+                &cluster,
+                &reqs,
+                fgspec.arrival,
+                self.workers,
+                None,
+            )?;
+            let after = cluster.rack_byte_snapshot();
+            let rack_cross_bytes: Vec<(u64, u64)> = before
+                .iter()
+                .zip(&after)
+                .map(|(&(u0, d0), &(u1, d1))| (u1 - u0, d1 - d0))
+                .collect();
+            let link_busy_stall = cluster.link_busy_stall_since(&links_before);
+            let summary = out.summary();
+            let mean = summary.as_ref().map(|s| s.mean).unwrap_or(0.0);
+            let loads: Vec<(f64, f64)> = rack_cross_bytes
+                .iter()
+                .map(|&(u, d)| (u as f64, d as f64))
+                .collect();
+            let wall = out.seconds;
+            let bytes = out.served() as u64 * self.block_size;
+            return Ok(ScenarioOutcome {
+                backend: "cluster",
+                scenario: scenario.name(),
+                policy: policy.name().to_string(),
+                blocks: out.served(),
+                bytes,
+                seconds: wall,
+                throughput_mb_s: if wall > 0.0 { bytes as f64 / wall / 1e6 } else { 0.0 },
+                lambda: crate::sim::recovery::lambda_metric_excluding(
+                    &loads,
+                    &[failed.rack],
+                ),
+                rack_cross_bytes,
+                planned_cross_rack_blocks: planned_cross_rack_blocks(&plans),
+                degraded_read_mean_s: Some(mean),
+                frontend_seconds: None,
+                worker_utilization: None,
+                scratch_pool: None,
+                link_busy_stall: Some(link_busy_stall),
+                fg_latency: summary,
+                recovery_slowdown: None,
+            });
         }
+
+        let (failed, plans) = scenario.recovery_plans(policy)?;
+        for &f in &failed {
+            cluster.fail_node(f);
+        }
+        let planned = planned_cross_rack_blocks(&plans);
+        let racks = distinct_racks(&failed);
+        let Some((fgspec, reqs)) = scenario.fg_requests(policy)? else {
+            // plain recovery: no foreground traffic, no QoS split
+            let stats = cluster.recover_with_plans_cfg(plans, self.exec_cfg(), &racks)?;
+            return Ok(cluster_outcome(scenario, policy.name(), &stats, planned, None));
+        };
+
+        // mixed load: recovery and the client engine share the links under
+        // the scenario's QoS split. The slowdown factor needs the same
+        // recovery measured alone, on an identically populated cluster.
+        let baseline_s = {
+            let isolated = populate()?;
+            for &f in &failed {
+                isolated.fail_node(f);
+            }
+            isolated
+                .recover_with_plans_cfg(plans.clone(), self.exec_cfg(), &racks)?
+                .wall
+                .as_secs_f64()
+        };
+        let (stats, fgout) = cluster.run_mixed_load(
+            plans,
+            self.exec_cfg(),
+            &racks,
+            &reqs,
+            fgspec.arrival,
+            self.workers,
+            scenario.qos,
+        )?;
+        let mut out = cluster_outcome(
+            scenario,
+            policy.name(),
+            &stats,
+            planned,
+            Some(fgout.seconds),
+        );
+        out.fg_latency = fgout.summary();
+        out.recovery_slowdown = Some(stats.wall.as_secs_f64() / baseline_s.max(1e-9));
+        Ok(out)
     }
 }
 
@@ -950,6 +1052,8 @@ fn cluster_outcome(
         worker_utilization: Some(stats.worker_utilization.clone()),
         scratch_pool: Some(stats.scratch),
         link_busy_stall: Some(stats.link_busy_stall.clone()),
+        fg_latency: None,
+        recovery_slowdown: None,
     }
 }
 

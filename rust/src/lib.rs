@@ -11,12 +11,16 @@
 //!   planning, and migration;
 //! * [`scenario`] — first-class failure scenarios executed on either
 //!   backend through one `RecoveryBackend` pipeline (DESIGN.md §5);
+//! * [`client`] — the QoS-aware foreground-traffic engine: one request
+//!   generator and one execution path for front-end load on both
+//!   backends (DESIGN.md §11);
 //! * [`sim`] — flow-level discrete-event cluster simulator (the testbed
 //!   substitute; see DESIGN.md §2);
 //! * [`runtime`] — PJRT execution of the AOT-lowered GF kernels;
 //! * [`cluster`] — mini-HDFS (NameNode + DataNodes) with a real data path;
 //! * [`workloads`], [`metrics`], [`experiments`] — the paper's evaluation.
 
+pub mod client;
 pub mod cluster;
 pub mod codes;
 pub mod experiments;

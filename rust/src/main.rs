@@ -7,20 +7,24 @@
 //!                [--backend sim|cluster|both] [--stripes N]
 //!                [--workers N] [--chunk-size KB]   # pipelined recovery executor
 //!                [--schedule fifo|balanced] [--coalesce N] [--batched-fetch true|false]
+//!                [--fg-rate RPS | --fg-clients N] [--fg-requests N]  # client engine
+//!                [--recovery-share S] [--fg-weight W] [--json]       # QoS + machine output
 //! d3ctl layout --policy d3|rdd|hdd --code rs-3-2 [--stripes N] [--racks R] [--nodes N]
 //! d3ctl mu --code rs-6-3               # Lemma 4 closed form vs planner
 //! d3ctl oa --n 5 [--cols 4]            # print + verify an orthogonal array
 //! d3ctl cluster-demo [--backend pjrt|native] [--stripes N]
 //! d3ctl calibrate                      # coding throughput, native vs PJRT
-//! d3ctl bench [--quick] [--json PATH]  # hot-path suite → BENCH_PR4.json
+//! d3ctl bench [--quick] [--json PATH]  # hot-path suite → BENCH_PR5.json
 //! d3ctl bench-compare --old A.json --new B.json [--tolerance 0.15]
 //! ```
 
 use std::collections::HashMap;
 
+use d3ec::client::{ArrivalModel, FgSpec, QosConfig};
 use d3ec::cluster::{ClusterBackend, MiniCluster};
 use d3ec::codes::CodeSpec;
 use d3ec::experiments as exp;
+use d3ec::util::json::Json;
 use d3ec::oa::{max_columns, OrthogonalArray};
 use d3ec::recovery::mu::mu_rs;
 use d3ec::recovery::SchedulePolicy;
@@ -34,9 +38,18 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut i = 0;
     while i < args.len() {
         if let Some(key) = args[i].strip_prefix("--") {
-            let val = args.get(i + 1).cloned().unwrap_or_default();
-            out.insert(key.to_string(), val);
-            i += 2;
+            // a following `--flag` is the next flag, not this one's value
+            // (so bare boolean flags like `--json` don't swallow it)
+            match args.get(i + 1).filter(|v| !v.starts_with("--")) {
+                Some(val) => {
+                    out.insert(key.to_string(), val.clone());
+                    i += 2;
+                }
+                None => {
+                    out.insert(key.to_string(), String::new());
+                    i += 1;
+                }
+            }
         } else {
             i += 1;
         }
@@ -65,7 +78,7 @@ fn main() {
     let flags = parse_flags(&args);
     match cmd {
         "exp" => cmd_exp(&args, &flags),
-        "scenario" => cmd_scenario(&flags),
+        "scenario" => cmd_scenario(&args, &flags),
         "layout" => cmd_layout(&flags),
         "mu" => cmd_mu(&flags),
         "oa" => cmd_oa(&flags),
@@ -75,7 +88,7 @@ fn main() {
         "bench-compare" => cmd_bench_compare(&flags),
         _ => {
             println!("d3ctl — Deterministic Data Distribution (D³) reproduction");
-            println!("{}", include_str!("main.rs").lines().skip(2).take(15)
+            println!("{}", include_str!("main.rs").lines().skip(2).take(17)
                 .map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
         }
     }
@@ -83,10 +96,8 @@ fn main() {
 
 /// `d3ctl bench`: the machine-readable hot-path suite (same harness as
 /// `cargo bench --bench hotpath`, DESIGN.md §9). Writes the
-/// `{bench_name: ns_per_byte}` perf-trajectory file — `BENCH_PR4.json`
+/// `{bench_name: ns_per_byte}` perf-trajectory file — `BENCH_PR5.json`
 /// by default, `--json PATH` to override; `--quick` for CI-sized runs.
-/// Boolean flags are parsed from the raw args (the generic flag parser
-/// treats every `--key` as taking a value).
 fn cmd_bench(args: &[String]) {
     let quick = args.iter().any(|a| a == "--quick");
     let path = args
@@ -94,7 +105,7 @@ fn cmd_bench(args: &[String]) {
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1))
         .cloned()
-        .unwrap_or_else(|| "BENCH_PR4.json".to_string());
+        .unwrap_or_else(|| "BENCH_PR5.json".to_string());
     let report = d3ec::perf::run_hotpath(&d3ec::perf::BenchOpts { quick });
     if let Some(r) = report.ratio("sched_fifo_8w", "sched_balanced_8w") {
         println!("headline: balanced schedule is {r:.2}x FIFO on contended links");
@@ -107,12 +118,12 @@ fn cmd_bench(args: &[String]) {
 
 /// `d3ctl bench-compare`: diff two `{bench_name: ns_per_byte}` reports
 /// and fail (exit 1) when any tracked kernel regressed beyond the
-/// tolerance — the CI perf gate between `BENCH_PR3.json` and
-/// `BENCH_PR4.json` (lower ns/B is better; ratio rows are skipped by
-/// default via the key list).
+/// tolerance — the CI perf gate between the previous PR's trajectory
+/// file and `BENCH_PR5.json` (lower ns/B is better; ratio rows are
+/// skipped by default via the key list).
 fn cmd_bench_compare(flags: &HashMap<String, String>) {
-    let old: String = flag(flags, "old", "BENCH_PR3.json".into());
-    let new: String = flag(flags, "new", "BENCH_PR4.json".into());
+    let old: String = flag(flags, "old", "BENCH_PR4.json".into());
+    let new: String = flag(flags, "new", "BENCH_PR5.json".into());
     let tolerance: f64 = flag(flags, "tolerance", 0.15);
     let keys: String = flag(
         flags,
@@ -149,8 +160,11 @@ fn cmd_bench_compare(flags: &HashMap<String, String>) {
 
 /// `d3ctl scenario`: run one failure scenario on the fluid simulator and
 /// the MiniCluster through the same `FailureScenario → RecoveryBackend`
-/// pipeline and report both outcomes side by side.
-fn cmd_scenario(flags: &HashMap<String, String>) {
+/// pipeline and report both outcomes side by side. `--fg-rate`/
+/// `--fg-clients` attach client-engine foreground traffic to any kind,
+/// `--recovery-share`/`--fg-weight` set the QoS split, and `--json`
+/// emits the full `ScenarioOutcome`s as one JSON array for sweeps.
+fn cmd_scenario(args: &[String], flags: &HashMap<String, String>) {
     let spec = spec_from(flags);
     let code = CodeSpec::parse(&flag::<String>(flags, "code", "rs-6-3".into()))
         .expect("bad --code (rs-K-M or lrc-K-L-G)");
@@ -182,16 +196,47 @@ fn cmd_scenario(flags: &HashMap<String, String>) {
             return;
         }
     };
+    // QoS split + optional client-engine foreground traffic (DESIGN.md
+    // §11): --fg-rate attaches an open-loop read stream, --fg-clients a
+    // closed-loop one; either turns any kind into a mixed-load scenario.
+    // Only explicit flags override a kind's QoS default (frontend-mix
+    // ships with recovery_share 0.25, the HDFS max-streams throttle).
+    let mut scenario = scenario;
+    if flags.contains_key("recovery-share") || flags.contains_key("fg-weight") {
+        let base = scenario.qos;
+        scenario = scenario.with_qos(QosConfig {
+            recovery_share: flag::<f64>(flags, "recovery-share", base.recovery_share)
+                .clamp(0.01, 1.0),
+            fg_weight: flag::<f64>(flags, "fg-weight", base.fg_weight).max(0.0),
+        });
+    }
+    let fg_rate: f64 = flag(flags, "fg-rate", 0.0);
+    let fg_clients: usize = flag(flags, "fg-clients", 0);
+    if fg_rate > 0.0 || fg_clients > 0 {
+        let requests: usize = flag(flags, "fg-requests", 64);
+        let arrival = if fg_rate > 0.0 {
+            ArrivalModel::Open { rate_rps: fg_rate }
+        } else {
+            ArrivalModel::Closed {
+                clients: fg_clients,
+                think_s: flag(flags, "fg-think", 0.0),
+            }
+        };
+        scenario = scenario.with_fg(FgSpec::reads(requests, arrival));
+    }
+    let json_out = args.iter().any(|a| a == "--json");
     let policy = exp::build_policy(&policy_name, code, &spec, seed);
-    println!(
-        "# scenario {} · {} · {} on {} racks × {} nodes · {} stripes",
-        scenario.name(),
-        policy.name(),
-        code.name(),
-        spec.cluster.racks,
-        spec.cluster.nodes_per_rack,
-        stripes
-    );
+    if !json_out {
+        println!(
+            "# scenario {} · {} · {} on {} racks × {} nodes · {} stripes",
+            scenario.name(),
+            policy.name(),
+            code.name(),
+            spec.cluster.racks,
+            spec.cluster.nodes_per_rack,
+            stripes
+        );
+    }
     // pipelined executor knobs: same worker count and admission schedule
     // on both backends so the recovery-time comparison runs at matched
     // concurrency and in the same order (DESIGN.md §10)
@@ -222,6 +267,22 @@ fn cmd_scenario(flags: &HashMap<String, String>) {
     }
     if backends.is_empty() {
         eprintln!("unknown --backend {backend_sel} (sim, cluster, both)");
+        return;
+    }
+    if json_out {
+        // machine-readable path: one JSON array of full outcomes on
+        // stdout, nothing else (sweep scripts pipe this)
+        let mut outs = Vec::with_capacity(backends.len());
+        for backend in &backends {
+            match backend.run(&scenario, &policy, &spec) {
+                Ok(out) => outs.push(out.to_json()),
+                Err(e) => {
+                    eprintln!("scenario failed on {}: {e}", backend.name());
+                    std::process::exit(1);
+                }
+            }
+        }
+        println!("{}", Json::Arr(outs).to_string());
         return;
     }
     match run_cross_backend(&scenario, &policy, &spec, &backends) {

@@ -51,13 +51,16 @@ pub fn cv(loads: &[f64]) -> f64 {
     var.sqrt() / mean
 }
 
-/// Simple percentile summary over latency samples (seconds).
+/// Simple percentile summary over latency samples (seconds). The tail
+/// percentiles (p95/p99) are the client engine's QoS witnesses
+/// (DESIGN.md §11): throttling recovery must show up here.
 #[derive(Clone, Debug)]
 pub struct Summary {
     pub count: usize,
     pub mean: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -71,6 +74,7 @@ pub fn summarize(samples: &[f64]) -> Summary {
         mean: v.iter().sum::<f64>() / v.len() as f64,
         p50: pct(0.50),
         p95: pct(0.95),
+        p99: pct(0.99),
         max: *v.last().unwrap(),
     }
 }
@@ -163,6 +167,8 @@ mod tests {
         assert!((s.mean - 50.5).abs() < 1e-9);
         assert!((s.p50 - 50.0).abs() <= 1.0);
         assert!((s.p95 - 95.0).abs() <= 1.0);
+        assert!((s.p99 - 99.0).abs() <= 1.0);
+        assert!(s.p95 <= s.p99 && s.p99 <= s.max);
         assert_eq!(s.max, 100.0);
     }
 

@@ -322,12 +322,126 @@ pub fn run_sched_benches(opts: &BenchOpts, report: &mut BenchReport) {
     println!("  batched-fetch speedup over per-chunk: {:.2}x", per_chunk / batched);
 }
 
+/// The PR 5 acceptance benches (DESIGN.md §11): foreground-only,
+/// recovery-only and the QoS-split mixed run on the contended 4-rack
+/// topology, all at 8 workers. `mixed_vs_isolated` is the recovery
+/// interference factor (mixed recovery wall ÷ isolated recovery wall) —
+/// the quantity the QoS split trades against foreground tail latency.
+pub fn run_fg_benches(opts: &BenchOpts, report: &mut BenchReport) {
+    use crate::client::{ArrivalModel, FgSpec, QosConfig};
+    let stripes: u64 = if opts.quick { 12 } else { 24 };
+    let block: u64 = 256 << 10;
+    let requests: usize = if opts.quick { 24 } else { 48 };
+    println!(
+        "=== client engine: fg-only vs recovery-only vs QoS-mixed \
+         ({stripes} stripes, {requests} requests) ==="
+    );
+    let build = || -> (Arc<dyn Placement>, MiniCluster) {
+        let mut cspec = SystemSpec::paper_default();
+        cspec.cluster = ClusterSpec::new(4, 4);
+        cspec.block_size = block;
+        cspec.net.inner_mbps = 1600.0;
+        cspec.net.cross_mbps = 160.0; // scarce rack ports: the contended case
+        let policy: Arc<dyn Placement> =
+            Arc::new(D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, cspec.cluster).unwrap());
+        let cluster = MiniCluster::new(cspec, policy.clone(), "native", 11).unwrap();
+        cluster
+            .write_stripes_parallel(stripes, 8, |sid| {
+                (0..3).map(|b| deterministic_bytes(block as usize, sid * 3 + b)).collect()
+            })
+            .unwrap();
+        (policy, cluster)
+    };
+    let fg_spec = FgSpec::reads(requests, ArrivalModel::Closed { clients: 8, think_s: 0.0 });
+    let arrival = fg_spec.arrival;
+    // a failed node that actually stores blocks at this population
+    let failed = {
+        let cspec = ClusterSpec::new(4, 4);
+        let policy = D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, cspec).unwrap();
+        (0..cspec.node_count())
+            .map(|i| cspec.unflat(i))
+            .find(|&l| (0..stripes).any(|sid| policy.stripe(sid).locs.contains(&l)))
+            .expect("no node holds blocks")
+    };
+    let cfg = ExecutorConfig { workers: 8, chunk_size: block / 8, ..Default::default() };
+
+    // foreground alone: healthy cluster, closed-loop reads
+    {
+        let (policy, cluster) = build();
+        let reqs = fg_spec.generate(&policy, stripes, &[], 11).unwrap();
+        let out = crate::client::run_on_cluster(&cluster, &reqs, arrival, 8, None).unwrap();
+        let bytes = out.served() as u64 * block;
+        report.record("fg_only_8w", out.seconds * 1e9 / bytes.max(1) as f64);
+        let p99 = out.summary().map(|s| s.p99 * 1e3).unwrap_or(0.0);
+        println!(
+            "  fg_only_8w: {} reads in {:.0} ms (p99 {p99:.1} ms)",
+            out.served(),
+            out.seconds * 1e3
+        );
+    }
+
+    // recovery alone: whole-node rebuild at 8 workers
+    let isolated_wall = {
+        let (policy, cluster) = build();
+        cluster.fail_node(failed);
+        let plans = node_recovery_plans(policy.as_ref(), stripes, failed, 11);
+        let stats = cluster.recover_with_plans_cfg(plans, cfg, &[failed.rack]).unwrap();
+        report.record(
+            "recovery_only_8w",
+            stats.wall.as_secs_f64() * 1e9 / stats.bytes.max(1) as f64,
+        );
+        println!(
+            "  recovery_only_8w: {} blocks in {:.0} ms → {:.1} MB/s",
+            stats.blocks,
+            stats.wall.as_secs_f64() * 1e3,
+            stats.throughput_mb_s
+        );
+        stats.wall.as_secs_f64()
+    };
+
+    // both together under a 50% recovery share
+    let mixed_wall = {
+        let (policy, cluster) = build();
+        cluster.fail_node(failed);
+        let reqs = fg_spec.generate(&policy, stripes, &[failed], 11).unwrap();
+        let plans = node_recovery_plans(policy.as_ref(), stripes, failed, 11);
+        let (stats, fgout) = cluster
+            .run_mixed_load(
+                plans,
+                cfg,
+                &[failed.rack],
+                &reqs,
+                arrival,
+                8,
+                QosConfig { recovery_share: 0.5, fg_weight: 1.0 },
+            )
+            .unwrap();
+        report.record(
+            "mixed_qos_8w",
+            stats.wall.as_secs_f64() * 1e9 / stats.bytes.max(1) as f64,
+        );
+        let p99 = fgout.summary().map(|s| s.p99 * 1e3).unwrap_or(0.0);
+        println!(
+            "  mixed_qos_8w: recovery {:.0} ms alongside {} fg reads (fg p99 {p99:.1} ms)",
+            stats.wall.as_secs_f64() * 1e3,
+            fgout.served()
+        );
+        stats.wall.as_secs_f64()
+    };
+    report.record("mixed_vs_isolated", mixed_wall / isolated_wall);
+    println!(
+        "  recovery slowdown under foreground load at share 0.5: {:.2}x",
+        mixed_wall / isolated_wall
+    );
+}
+
 /// The full hot-path suite (`d3ctl bench`, `cargo bench --bench hotpath`).
 pub fn run_hotpath(opts: &BenchOpts) -> BenchReport {
     let mut report = BenchReport::default();
     run_kernel_benches(opts, &mut report);
     run_cluster_benches(opts, &mut report);
     run_sched_benches(opts, &mut report);
+    run_fg_benches(opts, &mut report);
     report
 }
 

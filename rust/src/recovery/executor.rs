@@ -200,6 +200,13 @@ pub trait ChunkRunner: Sync {
 
     /// Every chunk of `plan` has landed; persist the assembled block.
     fn finish_plan(&self, plan_idx: usize, plan: &RepairPlan, block: Vec<u8>) -> Result<()>;
+
+    /// QoS pacing hook (DESIGN.md §11): called after every chunk with the
+    /// busy seconds it consumed. Backends that schedule recovery against
+    /// foreground traffic yield here (the MiniCluster's `ChunkIo` sleeps
+    /// `busy × fg_weight × (1/recovery_share − 1)` while client load is
+    /// active); the default is a no-op, so plain recovery pays nothing.
+    fn throttle(&self, _busy_s: f64) {}
 }
 
 /// `(offset, length)` spans covering one block of `block_size` bytes.
@@ -288,7 +295,9 @@ pub fn execute_plans<R: ChunkRunner>(
                             }
                             Err(e) => errors.lock().unwrap().push(e.to_string()),
                         }
-                        busy += t.elapsed().as_secs_f64();
+                        let dt = t.elapsed().as_secs_f64();
+                        busy += dt;
+                        runner.throttle(dt);
                     }
                     (busy, scratch.stats())
                 })

@@ -25,10 +25,12 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::client::{FgSpec, QosConfig, Request, RequestClass};
 use crate::placement::{Placement, PlacementTable};
 use crate::recovery::multi::scenario_recovery_plans;
 use crate::recovery::plan::{plan_degraded_read, RepairPlan};
 use crate::topology::{Location, SystemSpec};
+use crate::util::json::Json;
 use crate::util::Rng;
 
 /// What goes wrong.
@@ -47,39 +49,120 @@ pub enum ScenarioKind {
     DegradedBurst { reads: usize },
 }
 
-/// A failure scenario: the kind, the stored-stripe population it hits, and
-/// the seed that makes every derived choice (failed nodes, read samples)
-/// deterministic and identical across backends.
+/// A failure scenario: the kind, the stored-stripe population it hits,
+/// the seed that makes every derived choice (failed nodes, foreground
+/// requests) deterministic and identical across backends, plus the
+/// mixed-load parameters — the QoS split and an optional explicit
+/// foreground-traffic spec (DESIGN.md §11). Any kind becomes a mixed-load
+/// scenario via [`FailureScenario::with_fg`]; `FrontendMix` and
+/// `DegradedBurst` derive their foreground spec from the kind itself.
 #[derive(Clone, Debug)]
 pub struct FailureScenario {
     pub kind: ScenarioKind,
     pub stripes: u64,
     pub seed: u64,
+    /// Recovery/foreground bandwidth split applied while foreground load
+    /// is active (default: no split).
+    pub qos: QosConfig,
+    /// Explicit foreground traffic; `None` derives it from the kind
+    /// (`FrontendMix`/`DegradedBurst`) or runs no foreground load.
+    pub fg: Option<FgSpec>,
 }
 
 impl FailureScenario {
+    fn new(kind: ScenarioKind, stripes: u64, seed: u64) -> FailureScenario {
+        FailureScenario { kind, stripes, seed, qos: QosConfig::default(), fg: None }
+    }
+
     pub fn single_node(stripes: u64, seed: u64) -> FailureScenario {
-        FailureScenario { kind: ScenarioKind::SingleNode, stripes, seed }
+        FailureScenario::new(ScenarioKind::SingleNode, stripes, seed)
     }
 
     pub fn multi_node(failures: usize, stripes: u64, seed: u64) -> FailureScenario {
-        FailureScenario { kind: ScenarioKind::MultiNode { failures }, stripes, seed }
+        FailureScenario::new(ScenarioKind::MultiNode { failures }, stripes, seed)
     }
 
     pub fn rack_failure(rack: u32, stripes: u64, seed: u64) -> FailureScenario {
-        FailureScenario { kind: ScenarioKind::RackFailure { rack }, stripes, seed }
+        FailureScenario::new(ScenarioKind::RackFailure { rack }, stripes, seed)
     }
 
+    /// One node fails while a front-end workload runs. Defaults to
+    /// `recovery_share = 0.25` — the HDFS posture of throttling
+    /// reconstruction under foreground load
+    /// (`dfs.namenode.replication.max-streams`; the fluid backend's 8
+    /// default streams × 0.25 = the 2-stream throttle this kind always
+    /// ran with). Override with [`FailureScenario::with_qos`].
     pub fn frontend_mix(workload: &str, stripes: u64, seed: u64) -> FailureScenario {
-        FailureScenario {
-            kind: ScenarioKind::FrontendMix { workload: workload.to_string() },
+        let mut s = FailureScenario::new(
+            ScenarioKind::FrontendMix { workload: workload.to_string() },
             stripes,
             seed,
-        }
+        );
+        s.qos = QosConfig { recovery_share: 0.25, fg_weight: 1.0 };
+        s
     }
 
     pub fn degraded_burst(reads: usize, stripes: u64, seed: u64) -> FailureScenario {
-        FailureScenario { kind: ScenarioKind::DegradedBurst { reads }, stripes, seed }
+        FailureScenario::new(ScenarioKind::DegradedBurst { reads }, stripes, seed)
+    }
+
+    /// Set the recovery/foreground QoS split.
+    pub fn with_qos(mut self, qos: QosConfig) -> FailureScenario {
+        self.qos = qos;
+        self
+    }
+
+    /// Attach explicit foreground traffic, turning any failure kind into
+    /// a mixed-load scenario.
+    pub fn with_fg(mut self, fg: FgSpec) -> FailureScenario {
+        self.fg = Some(fg);
+        self
+    }
+
+    /// The scenario's foreground-traffic spec: the explicit override if
+    /// set, else the kind's derived spec (`FrontendMix` → the Table-2
+    /// workload as a request mix, `DegradedBurst` → an all-degraded
+    /// burst), else `None`.
+    pub fn fg_spec(&self) -> Result<Option<FgSpec>> {
+        if let Some(fg) = &self.fg {
+            return Ok(Some(fg.clone()));
+        }
+        match &self.kind {
+            ScenarioKind::FrontendMix { workload } => {
+                Ok(Some(FgSpec::from_workload_name(workload)?))
+            }
+            ScenarioKind::DegradedBurst { reads } => Ok(Some(FgSpec::burst(*reads))),
+            _ => Ok(None),
+        }
+    }
+
+    /// The deterministic foreground request sequence both backends serve
+    /// (DESIGN.md §11). `None` when the scenario carries no foreground
+    /// load.
+    pub fn fg_requests(
+        &self,
+        policy: &Arc<dyn Placement>,
+    ) -> Result<Option<(FgSpec, Vec<Request>)>> {
+        if self.fg_spec()?.is_none() {
+            return Ok(None);
+        }
+        let table = PlacementTable::build(policy.clone(), self.stripes);
+        self.fg_requests_with(&table)
+    }
+
+    /// [`FailureScenario::fg_requests`] against a table the caller
+    /// already built — backends that need the table anyway (plan
+    /// derivation, fluid job lowering) share one build per run.
+    pub fn fg_requests_with(
+        &self,
+        table: &PlacementTable,
+    ) -> Result<Option<(FgSpec, Vec<Request>)>> {
+        let Some(spec) = self.fg_spec()? else {
+            return Ok(None);
+        };
+        let failed = self.failed_nodes(table);
+        let reqs = spec.generate_with(table, self.stripes, &failed, self.seed)?;
+        Ok(Some((spec, reqs)))
     }
 
     /// Short label, e.g. `single-node`, `multi-node-2`, `rack-failure-0`.
@@ -106,13 +189,25 @@ impl FailureScenario {
             | ScenarioKind::DegradedBurst { .. } => {
                 let mut rng = Rng::keyed(self.seed, 0x0fa1_1ed, 0);
                 let start = rng.below(count);
-                let probe = self.stripes.min(200);
+                // one placement period proves coverage for periodic
+                // policies (stripe(sid) == stripe(sid % p)); aperiodic
+                // policies must probe the whole stored population — a
+                // fixed 200-stripe window could miss a node whose blocks
+                // all lie beyond it and declare the scenario vacuous.
+                let probe = match policy.period() {
+                    Some(p) => self.stripes.min(p),
+                    None => self.stripes,
+                };
+                let mut holds = vec![false; count];
+                for sid in 0..probe {
+                    for &loc in &policy.stripe(sid).locs {
+                        holds[cluster.flat(loc)] = true;
+                    }
+                }
                 for off in 0..count {
-                    let loc = cluster.unflat((start + off) % count);
-                    let holds = (0..probe)
-                        .any(|sid| policy.stripe(sid).locs.contains(&loc));
-                    if holds {
-                        return vec![loc];
+                    let idx = (start + off) % count;
+                    if holds[idx] {
+                        return vec![cluster.unflat(idx)];
                     }
                 }
                 vec![cluster.unflat(start)]
@@ -149,60 +244,30 @@ impl FailureScenario {
     }
 
     /// For [`ScenarioKind::DegradedBurst`]: the failed node and the
-    /// seed-keyed `(stripe, block, client)` read samples, identical across
-    /// backends.
+    /// seed-keyed `(stripe, block, client)` read samples — now just a
+    /// projection of the client engine's generated request sequence, so
+    /// there is exactly one derivation of burst traffic (DESIGN.md §11).
     pub fn burst_samples(
         &self,
         policy: &Arc<dyn Placement>,
     ) -> Result<(Location, Vec<(u64, usize, Location)>)> {
-        let ScenarioKind::DegradedBurst { reads } = &self.kind else {
+        if !matches!(self.kind, ScenarioKind::DegradedBurst { .. }) {
             bail!("burst_samples on a non-burst scenario");
-        };
-        let reads = *reads;
-        let cluster = policy.cluster();
+        }
         let failed = self.failed_nodes(policy.as_ref())[0];
-        let table = PlacementTable::build(policy.clone(), self.stripes);
-        let mut lost: Vec<(u64, usize)> = Vec::new();
-        for sid in 0..self.stripes {
-            let sp = table.stripe(sid);
-            for (bi, &loc) in sp.locs.iter().enumerate() {
-                if loc == failed {
-                    lost.push((sid, bi));
+        let (_, reqs) = self
+            .fg_requests(policy)?
+            .expect("degraded burst always carries foreground traffic");
+        let samples = reqs
+            .iter()
+            .filter_map(|r| match r.class {
+                RequestClass::DegradedRead { stripe, block } => {
+                    Some((stripe, block, r.client))
                 }
-            }
-        }
-        if lost.is_empty() {
-            bail!("degraded burst: failed node {failed} holds no blocks");
-        }
-        let mut rng = Rng::keyed(self.seed, 0xb125_7, 2);
-        let mut samples = Vec::with_capacity(reads);
-        for _ in 0..reads {
-            let (sid, block) = lost[rng.below(lost.len())];
-            let client = loop {
-                let c = cluster.unflat(rng.below(cluster.node_count()));
-                if c != failed {
-                    break c;
-                }
-            };
-            samples.push((sid, block, client));
-        }
-        Ok((failed, samples))
-    }
-
-    /// Degraded-read plans for the burst samples (fluid backend).
-    pub fn burst_read_plans(
-        &self,
-        policy: &Arc<dyn Placement>,
-    ) -> Result<(Location, Vec<RepairPlan>)> {
-        let (failed, samples) = self.burst_samples(policy)?;
-        let table = PlacementTable::build(policy.clone(), self.stripes);
-        let plans = samples
-            .into_iter()
-            .map(|(sid, block, client)| {
-                plan_degraded_read(&table, sid, block, client, self.seed)
+                _ => None,
             })
             .collect();
-        Ok((failed, plans))
+        Ok((failed, samples))
     }
 }
 
@@ -247,6 +312,14 @@ pub struct ScenarioOutcome {
     /// configured rate and reports zero stall (max-min fair sharing has
     /// no queueing in front of the ports).
     pub link_busy_stall: Option<Vec<(f64, f64)>>,
+    /// Foreground-request latency summary (mixed-load kinds; DESIGN.md
+    /// §11): count, mean, p50/p95/p99 and max over the per-request
+    /// latencies of the shared client engine.
+    pub fg_latency: Option<crate::metrics::Summary>,
+    /// Recovery time under foreground load ÷ the same recovery alone —
+    /// the interference factor the QoS split trades against foreground
+    /// tail latency (mixed-load kinds that execute recovery).
+    pub recovery_slowdown: Option<f64>,
 }
 
 impl ScenarioOutcome {
@@ -309,6 +382,88 @@ impl ScenarioOutcome {
                 .collect();
             println!("  per-rack-link busy/stall (s): {}", cells.join("  "));
         }
+        if let Some(l) = &self.fg_latency {
+            println!(
+                "  fg latency over {} requests: mean {:.3} s · p50/p95/p99 \
+                 {:.3}/{:.3}/{:.3} s · max {:.3} s",
+                l.count, l.mean, l.p50, l.p95, l.p99, l.max
+            );
+        }
+        if let Some(x) = self.recovery_slowdown {
+            println!("  recovery slowdown under foreground load: {x:.2}x");
+        }
+    }
+
+    /// The full outcome as a JSON document (`d3ctl scenario --json`), so
+    /// sweeps are scriptable without parsing the human-readable report.
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let pair_arr = |v: &[(f64, f64)]| {
+            Json::Arr(
+                v.iter()
+                    .map(|&(a, b)| Json::Arr(vec![Json::Num(a), Json::Num(b)]))
+                    .collect(),
+            )
+        };
+        let mut m = BTreeMap::new();
+        m.insert("backend".into(), Json::Str(self.backend.into()));
+        m.insert("scenario".into(), Json::Str(self.scenario.clone()));
+        m.insert("policy".into(), Json::Str(self.policy.clone()));
+        m.insert("blocks".into(), Json::Num(self.blocks as f64));
+        m.insert("bytes".into(), Json::Num(self.bytes as f64));
+        m.insert("seconds".into(), Json::Num(self.seconds));
+        m.insert("throughput_mb_s".into(), Json::Num(self.throughput_mb_s));
+        m.insert("lambda".into(), Json::Num(self.lambda));
+        m.insert(
+            "rack_cross_bytes".into(),
+            Json::Arr(
+                self.rack_cross_bytes
+                    .iter()
+                    .map(|&(u, d)| {
+                        Json::Arr(vec![Json::Num(u as f64), Json::Num(d as f64)])
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "planned_cross_rack_blocks".into(),
+            Json::Num(self.planned_cross_rack_blocks as f64),
+        );
+        if let Some(d) = self.degraded_read_mean_s {
+            m.insert("degraded_read_mean_s".into(), Json::Num(d));
+        }
+        if let Some(f) = self.frontend_seconds {
+            m.insert("frontend_seconds".into(), Json::Num(f));
+        }
+        if let Some(u) = &self.worker_utilization {
+            m.insert(
+                "worker_utilization".into(),
+                Json::Arr(u.iter().map(|&x| Json::Num(x)).collect()),
+            );
+        }
+        if let Some(p) = &self.scratch_pool {
+            let mut sp = BTreeMap::new();
+            sp.insert("hits".into(), Json::Num(p.hits as f64));
+            sp.insert("misses".into(), Json::Num(p.misses as f64));
+            m.insert("scratch_pool".into(), Json::Obj(sp));
+        }
+        if let Some(ls) = &self.link_busy_stall {
+            m.insert("link_busy_stall".into(), pair_arr(ls));
+        }
+        if let Some(l) = &self.fg_latency {
+            let mut fl = BTreeMap::new();
+            fl.insert("count".into(), Json::Num(l.count as f64));
+            fl.insert("mean".into(), Json::Num(l.mean));
+            fl.insert("p50".into(), Json::Num(l.p50));
+            fl.insert("p95".into(), Json::Num(l.p95));
+            fl.insert("p99".into(), Json::Num(l.p99));
+            fl.insert("max".into(), Json::Num(l.max));
+            m.insert("fg_latency".into(), Json::Obj(fl));
+        }
+        if let Some(x) = self.recovery_slowdown {
+            m.insert("recovery_slowdown".into(), Json::Num(x));
+        }
+        Json::Obj(m)
     }
 }
 
@@ -327,6 +482,25 @@ pub trait RecoveryBackend {
 /// Cross-rack block transfers prescribed by a plan set (backend-free).
 pub fn planned_cross_rack_blocks(plans: &[RepairPlan]) -> usize {
     plans.iter().map(|p| p.cross_rack_blocks()).sum()
+}
+
+/// Degraded-read plans for the degraded requests of a generated sequence,
+/// through a table the caller already built — the backends' burst path
+/// derives its plans in one pass from the request sequence it already
+/// holds instead of regenerating sequence and table per use.
+pub fn degraded_read_plans(
+    table: &PlacementTable,
+    reqs: &[Request],
+    seed: u64,
+) -> Vec<RepairPlan> {
+    reqs.iter()
+        .filter_map(|r| match r.class {
+            RequestClass::DegradedRead { stripe, block } => {
+                Some(plan_degraded_read(table, stripe, block, r.client, seed))
+            }
+            _ => None,
+        })
+        .collect()
 }
 
 /// The distinct racks of a failure set, in first-seen order — the racks
@@ -422,5 +596,109 @@ mod tests {
             assert_eq!(p.stripe(sid).locs[block], failed);
             assert_ne!(client, failed);
         }
+    }
+
+    #[test]
+    fn failed_node_probe_covers_stripes_beyond_the_old_200_window() {
+        // Regression for the fixed probe (ISSUE 5): on a sparse aperiodic
+        // layout the old 200-stripe window could pick a node whose blocks
+        // all lie beyond it, making the degraded burst bail with "holds
+        // no blocks". The period-aware probe must always pick a holder.
+        use crate::placement::RddPlacement;
+        let cluster = ClusterSpec::new(20, 20); // 400 nodes
+        let stripes = 260u64; // 780 block slots: many nodes hold few/late
+        for seed in 0..24u64 {
+            let p: Arc<dyn Placement> = Arc::new(RddPlacement::new(
+                CodeSpec::Rs { k: 2, m: 1 },
+                cluster,
+                seed,
+            ));
+            let scenario = FailureScenario::degraded_burst(4, stripes, seed);
+            let failed = scenario.failed_nodes(p.as_ref())[0];
+            let holds = (0..stripes).any(|sid| p.stripe(sid).locs.contains(&failed));
+            assert!(holds, "seed {seed}: picked node {failed} holds no blocks");
+            let (f, samples) = scenario.burst_samples(&p).unwrap();
+            assert_eq!(f, failed);
+            assert_eq!(samples.len(), 4);
+        }
+    }
+
+    #[test]
+    fn periodic_probe_uses_one_period_and_still_finds_holders() {
+        let p = policy();
+        let period = p.period().expect("D³ is periodic");
+        let stripes = period * 3 + 7; // well beyond 200 for this layout
+        let scenario = FailureScenario::single_node(stripes, 11);
+        let failed = scenario.failed_nodes(p.as_ref())[0];
+        assert!(
+            (0..stripes).any(|sid| p.stripe(sid).locs.contains(&failed)),
+            "failed node {failed} holds nothing"
+        );
+        // deterministic across calls
+        assert_eq!(
+            scenario.failed_nodes(p.as_ref()),
+            scenario.failed_nodes(p.as_ref())
+        );
+    }
+
+    #[test]
+    fn fg_requests_derive_from_kind_and_are_deterministic() {
+        let p = policy();
+        let burst = FailureScenario::degraded_burst(8, 60, 2);
+        let (spec, reqs) = burst.fg_requests(&p).unwrap().expect("burst has fg");
+        assert_eq!(spec.requests, 8);
+        assert_eq!(reqs.len(), 8);
+        assert_eq!(
+            reqs,
+            burst.fg_requests(&p).unwrap().unwrap().1,
+            "request sequence must be reproducible"
+        );
+        let mix = FailureScenario::frontend_mix("terasort", 60, 2);
+        let (spec, reqs) = mix.fg_requests(&p).unwrap().expect("mix has fg");
+        assert_eq!(reqs.len(), spec.requests);
+        assert!(FailureScenario::frontend_mix("bogus", 60, 2)
+            .fg_requests(&p)
+            .is_err());
+        let plain = FailureScenario::single_node(60, 2);
+        assert!(plain.fg_requests(&p).unwrap().is_none());
+        // any kind becomes mixed-load via with_fg
+        let mixed = FailureScenario::single_node(60, 2).with_fg(crate::client::FgSpec::reads(
+            10,
+            crate::client::ArrivalModel::Open { rate_rps: 50.0 },
+        ));
+        assert_eq!(mixed.fg_requests(&p).unwrap().unwrap().1.len(), 10);
+    }
+
+    #[test]
+    fn outcome_json_includes_fg_latency_block() {
+        let out = ScenarioOutcome {
+            backend: "sim",
+            scenario: "single-node".into(),
+            policy: "d3".into(),
+            blocks: 3,
+            bytes: 3 << 20,
+            seconds: 1.5,
+            throughput_mb_s: 2.0,
+            lambda: 0.1,
+            rack_cross_bytes: vec![(1, 2), (3, 4)],
+            planned_cross_rack_blocks: 5,
+            degraded_read_mean_s: None,
+            frontend_seconds: Some(9.0),
+            worker_utilization: Some(vec![0.5, 0.25]),
+            scratch_pool: None,
+            link_busy_stall: Some(vec![(0.5, 0.0)]),
+            fg_latency: Some(crate::metrics::summarize(&[0.1, 0.2, 0.3, 0.4])),
+            recovery_slowdown: Some(1.25),
+        };
+        let j = out.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("blocks").and_then(Json::as_usize), Some(3));
+        let fl = parsed.get("fg_latency").expect("fg_latency block");
+        assert_eq!(fl.get("count").and_then(Json::as_usize), Some(4));
+        assert!(fl.get("p99").and_then(Json::as_f64).is_some());
+        assert_eq!(
+            parsed.get("recovery_slowdown").and_then(Json::as_f64),
+            Some(1.25)
+        );
     }
 }

@@ -63,7 +63,9 @@ impl Default for RecoveryConfig {
 /// Aggregate outcome of a simulated recovery.
 #[derive(Clone, Debug)]
 pub struct RecoveryOutcome {
-    /// Total simulated wall-clock (s).
+    /// Simulated seconds until the last *repair* completed (foreground
+    /// jobs sharing the engine report their own finish times and do not
+    /// extend this).
     pub makespan: f64,
     /// Rebuilt volume / makespan, MB/s (the paper's recovery throughput).
     pub throughput_mb_s: f64,
@@ -299,7 +301,13 @@ pub fn run_recovery_multi(
         "not all repairs completed"
     );
 
-    let makespan = engine.now();
+    // recovery completion, not the engine's global clock: foreground jobs
+    // sharing the engine may outlast the rebuild and must not inflate
+    // recovery time (the cluster backend times recovery alone too)
+    let makespan = jobs
+        .iter()
+        .map(|&(id, _)| engine.finish_time(id))
+        .fold(0.0f64, f64::max);
     let rebuilt = plans.len() as f64 * spec.block_size as f64;
     let racks = spec.cluster.racks;
     let mut rack_loads = Vec::with_capacity(racks);
@@ -350,38 +358,12 @@ pub fn lambda_metric_excluding(rack_loads: &[(f64, f64)], excluded: &[u32]) -> f
     (max - avg) / avg
 }
 
-/// Simulate a concurrent degraded-read burst: all plans start at t = 0 and
-/// contend for the same ports. Returns `(makespan, mean latency, per-rack
-/// (up, down) port bytes)`.
-pub fn run_degraded_burst(
-    spec: &SystemSpec,
-    plans: &[RepairPlan],
-) -> (f64, f64, Vec<(f64, f64)>) {
-    let rt = ResourceTable::new(spec);
-    let mut engine = Engine::new(rt.caps.clone());
-    let ids: Vec<u32> = plans
-        .iter()
-        .map(|p| engine.spawn(plan_to_job(p, &rt, spec)))
-        .collect();
-    engine.run_to_completion();
-    let mean = if ids.is_empty() {
-        0.0
-    } else {
-        ids.iter().map(|&id| engine.finish_time(id)).sum::<f64>() / ids.len() as f64
-    };
-    let mut rack_loads = Vec::with_capacity(spec.cluster.racks);
-    for rack in 0..spec.cluster.racks as u32 {
-        rack_loads.push((
-            engine.resource_bytes[rt.rack_up(rack) as usize],
-            engine.resource_bytes[rt.rack_down(rack) as usize],
-        ));
-    }
-    (engine.now(), mean, rack_loads)
-}
-
 /// The fluid-simulator implementation of the scenario engine
 /// ([`crate::scenario::RecoveryBackend`], DESIGN.md §5): simulated
-/// seconds, analytic max-min-fair port loads.
+/// seconds, analytic max-min-fair port loads. Foreground traffic
+/// (mixed-load kinds) is the client engine's generated request sequence
+/// lowered into fluid jobs ([`crate::client::request_job`], DESIGN.md
+/// §11) — the *same* sequence the MiniCluster backend serves.
 pub struct SimBackend {
     pub cfg: RecoveryConfig,
 }
@@ -418,71 +400,123 @@ impl crate::scenario::RecoveryBackend for SimBackend {
         policy: &std::sync::Arc<dyn crate::placement::Placement>,
         spec: &SystemSpec,
     ) -> anyhow::Result<crate::scenario::ScenarioOutcome> {
+        use crate::client::request_job;
+        use crate::placement::PlacementTable;
         use crate::scenario::{planned_cross_rack_blocks, ScenarioKind, ScenarioOutcome};
-        match &scenario.kind {
-            ScenarioKind::DegradedBurst { .. } => {
-                let (failed, plans) = scenario.burst_read_plans(policy)?;
-                let (makespan, mean, rack_loads) = run_degraded_burst(spec, &plans);
-                let bytes = plans.len() as u64 * spec.block_size;
-                Ok(ScenarioOutcome {
-                    backend: "sim",
-                    scenario: scenario.name(),
-                    policy: policy.name().to_string(),
-                    blocks: plans.len(),
-                    bytes,
-                    seconds: makespan,
-                    throughput_mb_s: if makespan > 0.0 {
-                        bytes as f64 / makespan / 1e6
-                    } else {
-                        0.0
-                    },
-                    lambda: lambda_metric_excluding(&rack_loads, &[failed.rack]),
-                    rack_cross_bytes: loads_to_bytes(&rack_loads),
-                    planned_cross_rack_blocks: planned_cross_rack_blocks(&plans),
-                    degraded_read_mean_s: Some(mean),
-                    frontend_seconds: None,
-                    worker_utilization: None,
-                    scratch_pool: None,
-                    link_busy_stall: Some(fluid_link_busy_stall(&rack_loads, spec)),
+
+        if matches!(scenario.kind, ScenarioKind::DegradedBurst { .. }) {
+            // pure foreground load: serve the generated request sequence
+            // through the fluid engine — no recovery competes; one table
+            // serves generation, plan derivation and job lowering
+            let table = PlacementTable::build(policy.clone(), scenario.stripes);
+            let (_, reqs) = scenario
+                .fg_requests_with(&table)?
+                .expect("degraded burst always carries fg traffic");
+            let failed = scenario.failed_nodes(policy.as_ref())[0];
+            let plans =
+                crate::scenario::degraded_read_plans(&table, &reqs, scenario.seed);
+            let rt = ResourceTable::new(spec);
+            let mut engine = Engine::new(rt.caps.clone());
+            let ids: Vec<(u32, f64)> = reqs
+                .iter()
+                .map(|r| {
+                    let job = request_job(
+                        r,
+                        &table,
+                        &rt,
+                        spec,
+                        scenario.seed,
+                        std::slice::from_ref(&failed),
+                    );
+                    (engine.spawn(job), r.arrival_s)
                 })
+                .collect();
+            engine.run_to_completion();
+            let latencies: Vec<f64> = ids
+                .iter()
+                .map(|&(id, arrival)| engine.finish_time(id) - arrival)
+                .collect();
+            let makespan = engine.now();
+            let mut rack_loads = Vec::with_capacity(spec.cluster.racks);
+            for rack in 0..spec.cluster.racks as u32 {
+                rack_loads.push((
+                    engine.resource_bytes[rt.rack_up(rack) as usize],
+                    engine.resource_bytes[rt.rack_down(rack) as usize],
+                ));
             }
-            ScenarioKind::FrontendMix { workload } => {
-                let (failed, plans) = scenario.recovery_plans(policy)?;
-                let w0 = crate::workloads::specs()
-                    .into_iter()
-                    .find(|w| w.name == workload.as_str())
-                    .ok_or_else(|| anyhow::anyhow!("unknown workload {workload}"))?;
-                let w = w0.scaled(20);
-                let rt = ResourceTable::new(spec);
-                let job = if policy.name().starts_with("d3") {
-                    let placer = crate::sim::frontend::UniformPlacer::new(spec);
-                    crate::sim::frontend::workload_job(&w, &placer, &rt, spec)
+            let summary =
+                (!latencies.is_empty()).then(|| crate::metrics::summarize(&latencies));
+            let mean = summary.as_ref().map(|s| s.mean).unwrap_or(0.0);
+            let bytes = reqs.len() as u64 * spec.block_size;
+            return Ok(ScenarioOutcome {
+                backend: "sim",
+                scenario: scenario.name(),
+                policy: policy.name().to_string(),
+                blocks: reqs.len(),
+                bytes,
+                seconds: makespan,
+                throughput_mb_s: if makespan > 0.0 {
+                    bytes as f64 / makespan / 1e6
                 } else {
-                    let placer = crate::sim::frontend::RandomPlacer::new(spec, scenario.seed);
-                    crate::sim::frontend::workload_job(&w, &placer, &rt, spec)
-                };
-                // HDFS throttles reconstruction under foreground load
-                // (dfs.namenode.replication.max-streams)
-                let cfg = RecoveryConfig {
-                    streams_per_node: 2,
-                    period: self.cfg.period.or_else(|| policy.period()),
-                    ..self.cfg
-                };
-                let racks = distinct_racks(&failed);
-                let (out, extra) = run_recovery_multi(spec, &plans, &racks, cfg, vec![job]);
-                Ok(sim_outcome(scenario, policy.name(), &out, &plans, spec, Some(extra[0])))
-            }
-            _ => {
-                let (failed, plans) = scenario.recovery_plans(policy)?;
-                let racks = distinct_racks(&failed);
-                let cfg = RecoveryConfig {
-                    period: self.cfg.period.or_else(|| policy.period()),
-                    ..self.cfg
-                };
-                let (out, _) = run_recovery_multi(spec, &plans, &racks, cfg, Vec::new());
-                Ok(sim_outcome(scenario, policy.name(), &out, &plans, spec, None))
-            }
+                    0.0
+                },
+                lambda: lambda_metric_excluding(&rack_loads, &[failed.rack]),
+                rack_cross_bytes: loads_to_bytes(&rack_loads),
+                planned_cross_rack_blocks: planned_cross_rack_blocks(&plans),
+                degraded_read_mean_s: Some(mean),
+                frontend_seconds: None,
+                worker_utilization: None,
+                scratch_pool: None,
+                link_busy_stall: Some(fluid_link_busy_stall(&rack_loads, spec)),
+                fg_latency: summary,
+                recovery_slowdown: None,
+            });
         }
+
+        let (failed, plans) = scenario.recovery_plans(policy)?;
+        let racks = distinct_racks(&failed);
+        let cfg = RecoveryConfig {
+            period: self.cfg.period.or_else(|| policy.period()),
+            ..self.cfg
+        };
+        if scenario.fg_spec()?.is_none() {
+            let (out, _) = run_recovery_multi(spec, &plans, &racks, cfg, Vec::new());
+            return Ok(sim_outcome(scenario, policy.name(), &out, &plans, spec, None));
+        }
+        let table = PlacementTable::build(policy.clone(), scenario.stripes);
+        let (_, reqs) = scenario
+            .fg_requests_with(&table)?
+            .expect("fg spec presence checked above");
+
+        // mixed load: the fluid analogue of the link split scales the
+        // per-node reconstruction-stream admission to recovery's share
+        // (only while foreground traffic exists — the isolated baseline
+        // below runs unthrottled, like the cluster backend's)
+        let mut mixed_cfg = cfg;
+        if scenario.qos.is_active() {
+            let streams = cfg.streams_per_node as f64 * scenario.qos.recovery_share;
+            mixed_cfg.streams_per_node = (streams.round() as usize).max(1);
+        }
+        let rt = ResourceTable::new(spec);
+        let extra: Vec<crate::sim::engine::JobSpec> = reqs
+            .iter()
+            .map(|r| request_job(r, &table, &rt, spec, scenario.seed, &failed))
+            .collect();
+        let (out, times) = run_recovery_multi(spec, &plans, &racks, mixed_cfg, extra);
+        // the same recovery alone and unthrottled, for the interference
+        // factor (QoS applies only while foreground load is active)
+        let (isolated, _) = run_recovery_multi(spec, &plans, &racks, cfg, Vec::new());
+        let latencies: Vec<f64> = times
+            .iter()
+            .zip(&reqs)
+            .map(|(&t, r)| t - r.arrival_s)
+            .collect();
+        let fg_done = times.iter().cloned().fold(0.0f64, f64::max);
+        let mut o =
+            sim_outcome(scenario, policy.name(), &out, &plans, spec, Some(fg_done));
+        o.fg_latency = (!latencies.is_empty()).then(|| crate::metrics::summarize(&latencies));
+        o.recovery_slowdown = Some(out.makespan / isolated.makespan.max(1e-12));
+        Ok(o)
     }
 }
 
@@ -510,6 +544,8 @@ fn sim_outcome(
         worker_utilization: None,
         scratch_pool: None,
         link_busy_stall: Some(fluid_link_busy_stall(&out.rack_loads, spec)),
+        fg_latency: None,
+        recovery_slowdown: None,
     }
 }
 

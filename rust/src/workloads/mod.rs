@@ -25,16 +25,18 @@ pub struct WorkloadSpec {
 impl WorkloadSpec {
     /// Scale all demands by `f` (models multi-wave task execution /
     /// framework overhead so simulated durations match real Hadoop jobs,
-    /// which run for minutes at Table 2's configurations).
+    /// which run for minutes at Table 2's configurations). Saturating:
+    /// an absurd factor pins demands at `u64::MAX` instead of wrapping
+    /// into a tiny (or zero) workload.
     pub fn scaled(&self, f: u64) -> WorkloadSpec {
         WorkloadSpec {
             name: self.name,
             maps: self.maps,
             reduces: self.reduces,
-            input_bytes: self.input_bytes * f,
-            shuffle_bytes: self.shuffle_bytes * f,
-            output_bytes: self.output_bytes * f,
-            cpu_bytes_equiv: self.cpu_bytes_equiv * f,
+            input_bytes: self.input_bytes.saturating_mul(f),
+            shuffle_bytes: self.shuffle_bytes.saturating_mul(f),
+            output_bytes: self.output_bytes.saturating_mul(f),
+            cpu_bytes_equiv: self.cpu_bytes_equiv.saturating_mul(f),
         }
     }
 }
@@ -107,5 +109,21 @@ mod tests {
         for w in specs().iter().filter(|w| w.name != "pi") {
             assert!(w.shuffle_bytes > 100 << 20, "{} shuffle too small", w.name);
         }
+    }
+
+    #[test]
+    fn scaled_saturates_instead_of_wrapping() {
+        let all = specs();
+        let ts = all.iter().find(|w| w.name == "terasort").unwrap();
+        let sane = ts.scaled(20);
+        assert_eq!(sane.input_bytes, ts.input_bytes * 20);
+        assert_eq!(sane.cpu_bytes_equiv, ts.cpu_bytes_equiv * 20);
+        // 500 MB × 2^60 wraps under plain multiplication; it must pin
+        let huge = ts.scaled(1 << 60);
+        assert_eq!(huge.input_bytes, u64::MAX);
+        assert_eq!(huge.shuffle_bytes, u64::MAX);
+        assert_eq!(huge.output_bytes, u64::MAX);
+        assert_eq!(huge.cpu_bytes_equiv, u64::MAX);
+        assert_eq!(huge.maps, ts.maps, "task counts are not scaled");
     }
 }

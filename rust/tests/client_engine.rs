@@ -1,0 +1,206 @@
+//! Client-engine integration (DESIGN.md §11): the QoS-aware foreground
+//! path is ONE implementation across backends — identical generated
+//! request sequences, cross-backend served-count agreement, byte-exact
+//! equivalence of the `recovery_share = 1.0` data path with plain
+//! recovery, and the acceptance property: throttling recovery improves
+//! foreground tail latency while recovery still completes bit-exact.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use d3ec::client::{ArrivalModel, FgSpec, QosConfig};
+use d3ec::cluster::{ClusterBackend, MiniCluster};
+use d3ec::codes::CodeSpec;
+use d3ec::placement::{D3Placement, Placement};
+use d3ec::recovery::{node_recovery_plans, ExecutorConfig};
+use d3ec::scenario::{FailureScenario, RecoveryBackend};
+use d3ec::sim::SimBackend;
+use d3ec::topology::{Location, SystemSpec};
+
+fn policy(spec: &SystemSpec) -> Arc<dyn Placement> {
+    Arc::new(D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, spec.cluster).unwrap())
+}
+
+fn data_for(sid: u64, k: usize, len: usize) -> Vec<Vec<u8>> {
+    (0..k)
+        .map(|b| {
+            let mut v = vec![0u8; len];
+            let mut s = sid.wrapping_mul(97).wrapping_add(b as u64) | 1;
+            for byte in v.iter_mut() {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                *byte = (s >> 24) as u8;
+            }
+            v
+        })
+        .collect()
+}
+
+#[test]
+fn both_backends_serve_the_identical_generated_sequence() {
+    let spec = SystemSpec::paper_default();
+    let p = policy(&spec);
+    let scenario = FailureScenario::frontend_mix("grep", 30, 5);
+    // the sequence itself is backend-free and reproducible
+    let (fgspec, reqs) = scenario.fg_requests(&p).unwrap().expect("mix has fg");
+    assert_eq!(reqs, scenario.fg_requests(&p).unwrap().unwrap().1);
+    assert_eq!(reqs.len(), fgspec.requests);
+
+    let sim = SimBackend::default();
+    let cluster = ClusterBackend { block_size: 16 << 10, ..ClusterBackend::default() };
+    let s = sim.run(&scenario, &p, &spec).unwrap();
+    let c = cluster.run(&scenario, &p, &spec).unwrap();
+    // every generated request was served, on both backends
+    let sl = s.fg_latency.as_ref().expect("sim fg latency");
+    let cl = c.fg_latency.as_ref().expect("cluster fg latency");
+    assert_eq!(sl.count, reqs.len(), "sim dropped requests");
+    assert_eq!(cl.count, reqs.len(), "cluster dropped requests");
+    assert!(sl.p50 <= sl.p99 && sl.p99 <= sl.max);
+    assert!(cl.p50 <= cl.p99 && cl.p99 <= cl.max);
+    assert!(s.frontend_seconds.unwrap() > 0.0);
+    assert!(c.frontend_seconds.unwrap() > 0.0);
+    // both executed the same recovery plans alongside
+    assert_eq!(s.blocks, c.blocks);
+    assert_eq!(s.planned_cross_rack_blocks, c.planned_cross_rack_blocks);
+    // the interference factor is measured on both backends; the fluid
+    // backend's is deterministic (sharing can only slow recovery)
+    assert!(s.recovery_slowdown.unwrap() >= 1.0 - 1e-9);
+    assert!(c.recovery_slowdown.unwrap() > 0.0);
+}
+
+#[test]
+fn mixed_load_on_any_kind_reports_fg_latency() {
+    // with_fg generalizes FrontendMix/DegradedBurst: a rack failure with
+    // an open-loop read stream is a first-class mixed-load scenario
+    let spec = SystemSpec::paper_default();
+    let p = policy(&spec);
+    let scenario = FailureScenario::rack_failure(1, 24, 3)
+        .with_fg(FgSpec::reads(16, ArrivalModel::Open { rate_rps: 200.0 }))
+        .with_qos(QosConfig { recovery_share: 0.5, fg_weight: 1.0 });
+    let out = SimBackend::default().run(&scenario, &p, &spec).unwrap();
+    let fg = out.fg_latency.expect("fg latency on mixed rack failure");
+    assert_eq!(fg.count, 16);
+    assert!(out.recovery_slowdown.is_some());
+    assert!(out.blocks > 0, "recovery still rebuilt the rack");
+}
+
+#[test]
+fn full_share_reproduces_plain_recovery_byte_accounting_exactly() {
+    // recovery_share = 1.0 must leave the recovery data path byte-for-byte
+    // identical to the pre-QoS executor (PR 4): same plans, same config,
+    // same rack byte accounting, whether or not the QoS runtime is
+    // installed.
+    let mut spec = SystemSpec::paper_default();
+    spec.block_size = 32 << 10;
+    spec.net.inner_mbps = 8000.0;
+    spec.net.cross_mbps = 1600.0;
+    let stripes = 24u64;
+    let failed = Location::new(2, 1);
+    let run = |with_qos: bool| -> Vec<(u64, u64)> {
+        let p = policy(&spec);
+        let cluster = MiniCluster::new(spec, p.clone(), "native", 5).unwrap();
+        cluster
+            .write_stripes_parallel(stripes, 4, |sid| data_for(sid, 3, 32 << 10))
+            .unwrap();
+        cluster.fail_node(failed);
+        if with_qos {
+            let flag = Arc::new(AtomicBool::new(true));
+            cluster.set_qos(
+                QosConfig { recovery_share: 1.0, fg_weight: 1.0 },
+                flag,
+            );
+        }
+        let plans = node_recovery_plans(p.as_ref(), stripes, failed, 5);
+        let cfg = ExecutorConfig { workers: 4, chunk_size: 8 << 10, ..Default::default() };
+        let stats = cluster.recover_with_plans_cfg(plans, cfg, &[failed.rack]).unwrap();
+        if with_qos {
+            cluster.clear_qos();
+        }
+        stats.rack_bytes
+    };
+    let plain = run(false);
+    let qos = run(true);
+    assert_eq!(plain, qos, "share=1.0 changed the byte accounting");
+    assert!(plain.iter().any(|&(u, d)| u + d > 0), "no cross-rack traffic?");
+}
+
+#[test]
+fn qos_split_improves_fg_p99_and_recovery_stays_bit_exact() {
+    // The acceptance property: under mixed load on contended links, a
+    // recovery_share < 1.0 improves foreground p99 versus the unthrottled
+    // run, while recovery still completes and every rebuilt block is
+    // bit-identical to the original data.
+    let mut spec = SystemSpec::paper_default();
+    spec.cluster = d3ec::topology::ClusterSpec::new(4, 4);
+    spec.block_size = 64 << 10;
+    spec.net.inner_mbps = 1600.0;
+    spec.net.cross_mbps = 160.0; // scarce 20 MB/s rack ports
+    let stripes = 60u64;
+    let fg_spec = FgSpec::reads(120, ArrivalModel::Closed { clients: 6, think_s: 0.0 });
+    let run = |qos: QosConfig| -> (f64, f64) {
+        let p = policy(&spec);
+        let cluster = MiniCluster::new(spec, p.clone(), "native", 7).unwrap();
+        cluster
+            .write_stripes_parallel(stripes, 8, |sid| data_for(sid, 3, 64 << 10))
+            .unwrap();
+        // a failed node that holds blocks (the period-aware scenario probe
+        // guarantees this for scenario runs; mirror it here)
+        let failed = (0..spec.cluster.node_count())
+            .map(|i| spec.cluster.unflat(i))
+            .find(|&l| (0..stripes).any(|sid| p.stripe(sid).locs.contains(&l)))
+            .unwrap();
+        cluster.fail_node(failed);
+        let plans = node_recovery_plans(p.as_ref(), stripes, failed, 7);
+        let lost: Vec<(u64, usize)> =
+            plans.iter().map(|pl| (pl.stripe, pl.failed_block)).collect();
+        let reqs = fg_spec.generate(&p, stripes, &[failed], 7).unwrap();
+        let cfg = ExecutorConfig { workers: 8, chunk_size: 16 << 10, ..Default::default() };
+        let (stats, fgout) = cluster
+            .run_mixed_load(plans, cfg, &[failed.rack], &reqs, fg_spec.arrival, 8, qos)
+            .unwrap();
+        assert_eq!(stats.blocks, lost.len(), "recovery incomplete");
+        // bit-exact: every rebuilt block matches the regenerated original
+        let client_loc = (0..spec.cluster.node_count())
+            .map(|i| spec.cluster.unflat(i))
+            .find(|&l| l != failed)
+            .unwrap();
+        for (sid, b) in lost {
+            let got = cluster.read_block(sid, b, client_loc).unwrap();
+            if b < 3 {
+                assert_eq!(got, data_for(sid, 3, 64 << 10)[b], "sid={sid} b={b}");
+            }
+            assert_ne!(cluster.locate(sid, b), failed);
+        }
+        let p99 = fgout.summary().expect("latencies").p99;
+        (p99, stats.wall.as_secs_f64())
+    };
+    let (unthrottled_p99, _) = run(QosConfig { recovery_share: 1.0, fg_weight: 0.0 });
+    let (throttled_p99, throttled_wall) =
+        run(QosConfig { recovery_share: 0.2, fg_weight: 2.0 });
+    assert!(
+        throttled_p99 < unthrottled_p99,
+        "QoS split did not improve fg p99: {throttled_p99:.4}s (share 0.2) vs \
+         {unthrottled_p99:.4}s (share 1.0)"
+    );
+    assert!(throttled_wall > 0.0);
+}
+
+#[test]
+fn degraded_burst_runs_through_the_engine_on_both_backends() {
+    let spec = SystemSpec::paper_default();
+    let p = policy(&spec);
+    let scenario = FailureScenario::degraded_burst(10, 40, 6);
+    let s = SimBackend::default().run(&scenario, &p, &spec).unwrap();
+    let cluster = ClusterBackend { block_size: 16 << 10, ..ClusterBackend::default() };
+    let c = cluster.run(&scenario, &p, &spec).unwrap();
+    assert_eq!(s.blocks, 10);
+    assert_eq!(c.blocks, 10);
+    assert_eq!(s.planned_cross_rack_blocks, c.planned_cross_rack_blocks);
+    for out in [&s, &c] {
+        let fg = out.fg_latency.as_ref().expect("burst fg latency");
+        assert_eq!(fg.count, 10);
+        let mean = out.degraded_read_mean_s.expect("burst mean latency");
+        assert!((mean - fg.mean).abs() < 1e-9, "mean must come from the engine");
+    }
+}
