@@ -49,6 +49,12 @@ fn main() {
     if let Some(r) = report.ratio("sched_fifo_8w", "sched_balanced_8w") {
         println!("headline: balanced schedule is {r:.2}x FIFO on contended links");
     }
+    if let Some(r) = report.ns_per_byte.get("simd_vs_swar_mac") {
+        println!("headline: simd MAC lane is {r:.2}x the swar kernel");
+    }
+    if let Some(r) = report.ns_per_byte.get("encode_ingest_1w_vs_8w") {
+        println!("headline: 8-writer encode ingest is {r:.2}x one writer");
+    }
     if let Some(path) = &json_path {
         report.write_json(path).expect("write bench json");
         println!("wrote {} bench rows to {}", report.ns_per_byte.len(), path.display());

@@ -63,6 +63,10 @@ pub struct MiniCluster {
     policy: Arc<dyn Placement>,
     links: Arc<LinkSet>,
     coder: CoderService,
+    /// Parity rows of the policy's code, computed once at construction —
+    /// every stripe encode reuses them instead of rebuilding the
+    /// generator matrix per stripe.
+    parity_rows: crate::gf::Matrix,
     /// per-node block store
     stores: Vec<Arc<Mutex<HashMap<BlockKey, Vec<u8>>>>>,
     /// metadata overrides after recovery (NameNode block map)
@@ -101,7 +105,8 @@ impl MiniCluster {
         seed: u64,
     ) -> anyhow::Result<MiniCluster> {
         assert_eq!(policy.cluster(), spec.cluster, "policy/topology mismatch");
-        let coder = CoderService::spawn(backend)?;
+        let coder = CoderService::spawn_pool(backend, encode_pool_size())?;
+        let parity_rows = parity_matrix(&policy.code());
         Ok(MiniCluster {
             links: Arc::new(LinkSet::new(&spec)),
             stores: (0..spec.cluster.node_count())
@@ -117,6 +122,7 @@ impl MiniCluster {
             spec,
             policy,
             coder,
+            parity_rows,
             seed,
         })
     }
@@ -255,7 +261,7 @@ impl MiniCluster {
             bail!("expected {} data shards, got {}", code.k(), data.len());
         }
         let (data, parity) =
-            self.coder.encode(parity_matrix(&code), data).context("encode")?;
+            self.coder.encode(self.parity_rows.clone(), data).context("encode")?;
         let sp = self.policy.stripe(sid);
         let client = client.unwrap_or(sp.locs[0]);
         let failed = self.failed.lock().unwrap().clone();
@@ -1063,6 +1069,13 @@ fn parity_matrix(code: &CodeSpec) -> crate::gf::Matrix {
         CodeSpec::Rs { k, m } => crate::codes::RsCode::new(k, m).parity_rows(),
         CodeSpec::Lrc { k, l, g } => crate::codes::LrcCode::new(k, l, g).parity_rows(),
     }
+}
+
+/// Coder-pool width for the native backend: one worker per core, capped —
+/// encode is CPU-bound GF arithmetic, so wider pools only add contention
+/// on the shared request channel. `spawn_pool` pins pjrt to 1 regardless.
+fn encode_pool_size() -> usize {
+    std::thread::available_parallelism().map_or(1, |n| n.get()).min(8)
 }
 
 #[cfg(test)]

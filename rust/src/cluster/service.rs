@@ -1,11 +1,16 @@
-//! The coding service: a dedicated thread owning the [`Coder`] (the PJRT
-//! client is not `Send`, and a single coding executor per host models the
-//! paper's per-node coding CPU anyway). DataNode workers submit combine
-//! requests over a channel and block on the reply.
+//! The coding service: a bounded pool of coder threads (DESIGN.md §12).
+//! Native coding is CPU-bound GF arithmetic, so the pool sizes to the
+//! host ([`super::MiniCluster`] passes one worker per core, capped) and
+//! every worker owns a recovery-style [`Scratch`] pool for its encode
+//! buffers; the PJRT client is not `Send` (and one device queue
+//! serializes anyway), so that backend keeps a single dedicated thread.
+//! DataNode workers submit requests over a shared channel and block on
+//! the reply.
 
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc, Mutex};
 
-use crate::gf::Matrix;
+use crate::gf::{self, Matrix};
+use crate::recovery::Scratch;
 use crate::runtime::Coder;
 
 pub enum CodeRequest {
@@ -26,61 +31,70 @@ pub enum CodeRequest {
     },
 }
 
-/// Handle to the coding thread. Cheap to clone; dropping all handles shuts
-/// the thread down.
+/// Handle to the coding pool. Cheap to clone; dropping all handles shuts
+/// every worker down.
 #[derive(Clone)]
 pub struct CoderService {
     tx: mpsc::Sender<CodeRequest>,
 }
 
 impl CoderService {
-    /// Spawn the service. `backend` = "native" or "pjrt".
+    /// Spawn a single-worker service. `backend` = "native" or "pjrt".
     pub fn spawn(backend: &str) -> anyhow::Result<CoderService> {
+        CoderService::spawn_pool(backend, 1)
+    }
+
+    /// Spawn the service with a bounded worker pool. Native workers share
+    /// the request channel (each parks in `recv()` while holding the
+    /// receiver lock; the lock is released the moment a request arrives,
+    /// so the next idle worker takes over waiting while this one codes)
+    /// and each owns its own [`Scratch`]. The pjrt backend is pinned to
+    /// one thread regardless of `threads`.
+    pub fn spawn_pool(backend: &str, threads: usize) -> anyhow::Result<CoderService> {
+        let threads = if backend == "pjrt" { 1 } else { threads.max(1) };
         let (tx, rx) = mpsc::channel::<CodeRequest>();
-        let backend = backend.to_string();
+        let rx = Arc::new(Mutex::new(rx));
         let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
-        std::thread::Builder::new()
-            .name("coder-service".into())
-            .spawn(move || {
-                let coder = match backend.as_str() {
-                    "pjrt" => match Coder::pjrt() {
-                        Ok(c) => {
+        for w in 0..threads {
+            let rx = Arc::clone(&rx);
+            let ready_tx = ready_tx.clone();
+            let backend = backend.to_string();
+            std::thread::Builder::new()
+                .name(format!("coder-{w}"))
+                .spawn(move || {
+                    let coder = match backend.as_str() {
+                        "pjrt" => match Coder::pjrt() {
+                            Ok(c) => {
+                                let _ = ready_tx.send(Ok(()));
+                                c
+                            }
+                            Err(e) => {
+                                let _ = ready_tx.send(Err(e));
+                                return;
+                            }
+                        },
+                        _ => {
                             let _ = ready_tx.send(Ok(()));
-                            c
+                            Coder::native()
                         }
-                        Err(e) => {
-                            let _ = ready_tx.send(Err(e));
-                            return;
-                        }
-                    },
-                    _ => {
-                        let _ = ready_tx.send(Ok(()));
-                        Coder::native()
+                    };
+                    let mut scratch = Scratch::new();
+                    loop {
+                        let req = rx.lock().unwrap().recv();
+                        let Ok(req) = req else { break };
+                        serve(&coder, req, &mut scratch);
                     }
-                };
-                while let Ok(req) = rx.recv() {
-                    match req {
-                        CodeRequest::Combine { coeffs, shards, reply } => {
-                            let refs: Vec<&[u8]> =
-                                shards.iter().map(|s| s.as_slice()).collect();
-                            let out = coder.combine(&coeffs, &refs);
-                            let _ = reply.send(out);
-                        }
-                        CodeRequest::Encode { rows, data, reply } => {
-                            let refs: Vec<&[u8]> =
-                                data.iter().map(|s| s.as_slice()).collect();
-                            let parity = coder.encode(&rows, &refs);
-                            let _ = reply.send(parity.map(|p| (data, p)));
-                        }
-                    }
-                }
-            })
-            .expect("spawn coder service");
-        ready_rx.recv().expect("coder thread died before ready")?;
+                })
+                .expect("spawn coder service");
+        }
+        drop(ready_tx);
+        for _ in 0..threads {
+            ready_rx.recv().expect("coder thread died before ready")?;
+        }
         Ok(CoderService { tx })
     }
 
-    /// One GF linear combination, executed on the service thread.
+    /// One GF linear combination, executed on a pool worker.
     pub fn combine(&self, coeffs: Vec<u8>, shards: Vec<Vec<u8>>) -> anyhow::Result<Vec<u8>> {
         let (reply, rx) = mpsc::channel();
         self.tx
@@ -103,6 +117,60 @@ impl CoderService {
             .map_err(|_| anyhow::anyhow!("coder service stopped"))?;
         rx.recv().map_err(|_| anyhow::anyhow!("coder service dropped request"))?
     }
+}
+
+/// Run one request on a worker's coder + scratch.
+fn serve(coder: &Coder, req: CodeRequest, scratch: &mut Scratch) {
+    match req {
+        CodeRequest::Combine { coeffs, shards, reply } => {
+            let refs: Vec<&[u8]> = shards.iter().map(|s| s.as_slice()).collect();
+            let out = coder.combine(&coeffs, &refs);
+            let _ = reply.send(out);
+        }
+        CodeRequest::Encode { rows, data, reply } => {
+            let out = if coder.backend_name() == "native" {
+                encode_native(&rows, data, scratch)
+            } else {
+                let refs: Vec<&[u8]> = data.iter().map(|s| s.as_slice()).collect();
+                let parity = coder.encode(&rows, &refs);
+                parity.map(|p| (data, p))
+            };
+            let _ = reply.send(out);
+        }
+    }
+}
+
+/// Native encode with pooled buffers: the data shards move into the
+/// worker's `(coeff, buffer)` staging vector, each parity row rewrites
+/// the coefficient slots in place and runs one fused lane-dispatched
+/// combine into a pooled accumulator, then the shards move back out
+/// untouched. The staging vector itself cycles through the worker's
+/// [`Scratch`] (the executor's pattern, DESIGN.md §9), so steady-state
+/// encode allocates only the parity buffers it returns.
+#[allow(clippy::type_complexity)]
+fn encode_native(
+    rows: &Matrix,
+    data: Vec<Vec<u8>>,
+    scratch: &mut Scratch,
+) -> anyhow::Result<(Vec<Vec<u8>>, Vec<Vec<u8>>)> {
+    if rows.cols() != data.len() {
+        anyhow::bail!("encode: {} data shards for a {}-column matrix", data.len(), rows.cols());
+    }
+    let len = data.first().map_or(0, |s| s.len());
+    let mut staging = scratch.take_staging();
+    staging.extend(data.into_iter().map(|shard| (0u8, shard)));
+    let mut parity = Vec::with_capacity(rows.rows());
+    for r in 0..rows.rows() {
+        for (slot, &c) in staging.iter_mut().zip(rows.row(r)) {
+            slot.0 = c;
+        }
+        let mut out = scratch.take_zeroed(len);
+        gf::combine_many_into(&mut out, &staging);
+        parity.push(out);
+    }
+    let data: Vec<Vec<u8>> = staging.drain(..).map(|(_, shard)| shard).collect();
+    scratch.put_staging(staging);
+    Ok((data, parity))
 }
 
 #[cfg(test)]
@@ -129,6 +197,54 @@ mod tests {
         let (back, parity) = svc.encode(code.parity_rows(), data.clone()).unwrap();
         assert_eq!(back, data, "data shards must come back unmodified");
         assert_eq!(parity, want);
+    }
+
+    #[test]
+    fn pooled_encode_matches_single_worker_encode() {
+        let single = CoderService::spawn_pool("native", 1).unwrap();
+        let pool = CoderService::spawn_pool("native", 4).unwrap();
+        let code = crate::codes::RsCode::new(4, 2);
+        for sid in 0..12u8 {
+            let data: Vec<Vec<u8>> =
+                (0..4u8).map(|i| vec![sid.wrapping_mul(13).wrapping_add(i); 257]).collect();
+            let (d1, p1) = single.encode(code.parity_rows(), data.clone()).unwrap();
+            let (d2, p2) = pool.encode(code.parity_rows(), data.clone()).unwrap();
+            assert_eq!(d1, data);
+            assert_eq!(d2, data);
+            assert_eq!(p1, p2, "sid={sid}: pool and single worker must agree");
+        }
+    }
+
+    #[test]
+    fn pool_serves_concurrent_encodes() {
+        let svc = CoderService::spawn_pool("native", 4).unwrap();
+        let code = crate::codes::RsCode::new(3, 2);
+        let handles: Vec<_> = (0..8u8)
+            .map(|i| {
+                let svc = svc.clone();
+                let rows = code.parity_rows();
+                std::thread::spawn(move || {
+                    let data: Vec<Vec<u8>> =
+                        (0..3u8).map(|b| vec![i.wrapping_mul(31).wrapping_add(b); 2048]).collect();
+                    let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+                    let want = crate::codes::RsCode::new(3, 2).encode(&refs);
+                    let (back, parity) = svc.encode(rows, data.clone()).unwrap();
+                    assert_eq!(back, data);
+                    assert_eq!(parity, want);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn encode_rejects_shard_count_mismatch() {
+        let svc = CoderService::spawn("native").unwrap();
+        let code = crate::codes::RsCode::new(3, 2);
+        let data: Vec<Vec<u8>> = (0..2u8).map(|i| vec![i; 32]).collect();
+        assert!(svc.encode(code.parity_rows(), data).is_err());
     }
 
     #[test]

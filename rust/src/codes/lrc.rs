@@ -128,7 +128,9 @@ impl LrcCode {
     }
 
     /// Encode: data shards (k) -> l + g parity shards, through the fused
-    /// cache-blocked engine ([`gf::combine_many_into`]).
+    /// cache-blocked engine ([`gf::combine_many_into`]) on the
+    /// process-wide kernel lane (DESIGN.md §12); the all-ones local rows
+    /// ride its wide XOR fast path.
     pub fn encode(&self, data: &[&[u8]]) -> Vec<Vec<u8>> {
         assert_eq!(data.len(), self.k);
         let len = data.first().map_or(0, |s| s.len());

@@ -77,8 +77,10 @@ impl RsCode {
 
     /// Encode: data shards (k × len) -> m parity shards. The byte
     /// crunching runs through the fused cache-blocked engine
-    /// ([`gf::combine_many_into`]): each parity row streams the
-    /// accumulator once per L1 window, not once per data shard.
+    /// ([`gf::combine_many_into`]) on the process-wide kernel lane
+    /// (AVX2/NEON shuffles when detected — DESIGN.md §12): each parity
+    /// row streams the accumulator once per L1 window, not once per
+    /// data shard.
     pub fn encode(&self, data: &[&[u8]]) -> Vec<Vec<u8>> {
         assert_eq!(data.len(), self.k);
         let len = data.first().map_or(0, |s| s.len());

@@ -1,0 +1,285 @@
+//! Runtime kernel-lane dispatch for the GF(2^8) engine (DESIGN.md §12).
+//!
+//! Three lanes implement the same MAC/XOR contract over equal-length
+//! slices:
+//!
+//! - **scalar** — per-byte nibble-table lookups, no unrolling: the
+//!   differential-test oracle.
+//! - **swar** — the portable fast path: u64 XOR words plus the unrolled
+//!   [`SliceTable::mac`] kernel. Always available.
+//! - **simd** — AVX2 (x86_64) / NEON (aarch64) byte-shuffle kernels
+//!   ([`super::simd`]). Available only when runtime feature detection
+//!   succeeds.
+//!
+//! Selection happens **once per process** ([`active_lane`]): the
+//! `D3_FORCE_KERNEL=scalar|swar|simd` environment variable pins a lane
+//! (CI runs the suite under each), otherwise the best detected lane wins.
+//! Forcing an unavailable or unknown lane warns on stderr and falls back
+//! — it never selects a lane the CPU cannot execute, so the `unsafe`
+//! SIMD entry points are only ever reached behind a successful probe.
+//!
+//! The dispatched entry points ([`kernel::xor_into`],
+//! [`kernel::combine_many_into`], [`super::combine_into`]) resolve their
+//! lane per call from the process-wide choice; the `*_lane` functions
+//! here pin an explicit lane for differential tests and benches.
+
+use std::sync::OnceLock;
+
+use super::{kernel, simd, SliceTable};
+
+/// One implementation of the GF kernel contract.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    /// Per-byte oracle.
+    Scalar,
+    /// u64 SWAR XOR + unrolled two-nibble table MAC (the portable path).
+    Swar,
+    /// AVX2 / NEON byte-shuffle kernels.
+    Simd,
+}
+
+impl Lane {
+    /// The `D3_FORCE_KERNEL` spelling of this lane.
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Scalar => "scalar",
+            Lane::Swar => "swar",
+            Lane::Simd => "simd",
+        }
+    }
+
+    /// Inverse of [`Lane::name`].
+    pub fn parse(s: &str) -> Option<Lane> {
+        match s {
+            "scalar" => Some(Lane::Scalar),
+            "swar" => Some(Lane::Swar),
+            "simd" => Some(Lane::Simd),
+            _ => None,
+        }
+    }
+}
+
+/// The MAC kernel contract: `acc[i] ^= t.mul(src[i])` over equal-length
+/// slices — one entry per lane, resolved once per combine call.
+pub(crate) type MacFn = fn(&SliceTable, &mut [u8], &[u8]);
+/// The XOR (c == 1) kernel contract: `acc[i] ^= src[i]`.
+pub(crate) type XorFn = fn(&mut [u8], &[u8]);
+
+/// Whether this CPU can run the simd lane (AVX2 on x86_64, NEON on
+/// aarch64). The detection macros cache their probe, so this is an atomic
+/// load after the first call.
+#[cfg(target_arch = "x86_64")]
+pub fn simd_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// Whether this CPU can run the simd lane (AVX2 on x86_64, NEON on
+/// aarch64).
+#[cfg(target_arch = "aarch64")]
+pub fn simd_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+/// No simd lane exists on other architectures.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn simd_available() -> bool {
+    false
+}
+
+/// `(feature, detected)` probe rows for `d3ctl kernel-info`.
+#[cfg(target_arch = "x86_64")]
+pub fn cpu_features() -> Vec<(&'static str, bool)> {
+    vec![
+        ("sse2", std::arch::is_x86_feature_detected!("sse2")),
+        ("ssse3", std::arch::is_x86_feature_detected!("ssse3")),
+        ("sse4.1", std::arch::is_x86_feature_detected!("sse4.1")),
+        ("avx", std::arch::is_x86_feature_detected!("avx")),
+        ("avx2", std::arch::is_x86_feature_detected!("avx2")),
+    ]
+}
+
+/// `(feature, detected)` probe rows for `d3ctl kernel-info`.
+#[cfg(target_arch = "aarch64")]
+pub fn cpu_features() -> Vec<(&'static str, bool)> {
+    vec![("neon", std::arch::is_aarch64_feature_detected!("neon"))]
+}
+
+/// No probes on other architectures.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn cpu_features() -> Vec<(&'static str, bool)> {
+    Vec::new()
+}
+
+/// Lanes this CPU can actually run (scalar and swar always, simd when the
+/// ISA extension is detected) — the differential-test iteration set.
+pub fn available_lanes() -> Vec<Lane> {
+    let mut lanes = vec![Lane::Scalar, Lane::Swar];
+    if simd_available() {
+        lanes.push(Lane::Simd);
+    }
+    lanes
+}
+
+/// Resolve the lane for an optional `D3_FORCE_KERNEL` value. Pure (no
+/// environment read) so the policy is unit-testable; an unknown or
+/// unavailable request warns on stderr and falls back to the best
+/// detected lane rather than failing or selecting something unrunnable.
+pub fn resolve_lane(force: Option<&str>) -> Lane {
+    let best = if simd_available() { Lane::Simd } else { Lane::Swar };
+    let Some(raw) = force else { return best };
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return best;
+    }
+    match Lane::parse(raw) {
+        Some(Lane::Simd) if !simd_available() => {
+            eprintln!(
+                "D3_FORCE_KERNEL=simd: no SIMD lane on this CPU; using {}",
+                best.name()
+            );
+            best
+        }
+        Some(lane) => lane,
+        None => {
+            eprintln!(
+                "D3_FORCE_KERNEL={raw}: unknown lane (scalar|swar|simd); using {}",
+                best.name()
+            );
+            best
+        }
+    }
+}
+
+/// The process-wide active lane: `D3_FORCE_KERNEL` if set and runnable,
+/// otherwise the best runtime-detected lane. Resolved exactly once.
+pub fn active_lane() -> Lane {
+    static ACTIVE: OnceLock<Lane> = OnceLock::new();
+    *ACTIVE.get_or_init(|| resolve_lane(std::env::var("D3_FORCE_KERNEL").ok().as_deref()))
+}
+
+pub(crate) fn xor_fn(lane: Lane) -> XorFn {
+    match lane {
+        Lane::Scalar => kernel::xor_into_scalar,
+        Lane::Swar => kernel::xor_into_swar,
+        Lane::Simd => simd::xor_into_simd,
+    }
+}
+
+pub(crate) fn mac_fn(lane: Lane) -> MacFn {
+    match lane {
+        Lane::Scalar => kernel::mac_scalar,
+        Lane::Swar => SliceTable::mac,
+        Lane::Simd => simd::mac_simd,
+    }
+}
+
+fn xor_mac_scalar(_t: &SliceTable, acc: &mut [u8], src: &[u8]) {
+    kernel::xor_into_scalar(acc, src);
+}
+
+fn xor_mac_swar(_t: &SliceTable, acc: &mut [u8], src: &[u8]) {
+    kernel::xor_into_swar(acc, src);
+}
+
+fn xor_mac_simd(_t: &SliceTable, acc: &mut [u8], src: &[u8]) {
+    simd::xor_into_simd(acc, src);
+}
+
+/// The c == 1 lane expressed under the MAC contract (table ignored), so
+/// the fused engine's hoisted per-source op list is a single fn-pointer
+/// type for both coefficient classes.
+pub(crate) fn xor_as_mac_fn(lane: Lane) -> MacFn {
+    match lane {
+        Lane::Scalar => xor_mac_scalar,
+        Lane::Swar => xor_mac_swar,
+        Lane::Simd => xor_mac_simd,
+    }
+}
+
+fn assert_lane_available(lane: Lane) {
+    assert!(
+        lane != Lane::Simd || simd_available(),
+        "simd lane unavailable on this CPU"
+    );
+}
+
+/// `acc[i] ^= src[i]` on an explicitly pinned lane (panics if `lane`
+/// cannot run on this CPU) — the differential-test and bench surface.
+pub fn xor_into_lane(lane: Lane, acc: &mut [u8], src: &[u8]) {
+    assert_lane_available(lane);
+    assert_eq!(acc.len(), src.len());
+    xor_fn(lane)(acc, src);
+}
+
+/// `acc[i] ^= c · src[i]` on a pinned lane through the cached table —
+/// exercises the MAC kernel for *every* coefficient class, including the
+/// 0/1 values the dispatched paths special-case away. Panics if `lane`
+/// cannot run on this CPU.
+pub fn mac_into_lane(lane: Lane, c: u8, acc: &mut [u8], src: &[u8]) {
+    assert_lane_available(lane);
+    assert_eq!(acc.len(), src.len());
+    mac_fn(lane)(kernel::table(c), acc, src);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::mul;
+    use crate::util::rng::xorshift_bytes as pattern;
+
+    #[test]
+    fn force_values_resolve_as_documented() {
+        assert_eq!(resolve_lane(Some("scalar")), Lane::Scalar);
+        assert_eq!(resolve_lane(Some("swar")), Lane::Swar);
+        let best = resolve_lane(None);
+        if simd_available() {
+            assert_eq!(best, Lane::Simd);
+            assert_eq!(resolve_lane(Some("simd")), Lane::Simd);
+        } else {
+            assert_eq!(best, Lane::Swar);
+            assert_eq!(resolve_lane(Some("simd")), Lane::Swar, "unavailable → fallback");
+        }
+        assert_eq!(resolve_lane(Some("turbo")), best, "unknown → fallback");
+        assert_eq!(resolve_lane(Some("")), best);
+        assert_eq!(resolve_lane(Some("  swar  ")), Lane::Swar, "whitespace-trimmed");
+    }
+
+    #[test]
+    fn lane_names_round_trip() {
+        for lane in available_lanes() {
+            assert_eq!(Lane::parse(lane.name()), Some(lane));
+        }
+        assert_eq!(Lane::parse("avx2"), None);
+    }
+
+    #[test]
+    fn active_lane_is_available_and_stable() {
+        let first = active_lane();
+        assert!(available_lanes().contains(&first));
+        assert_eq!(active_lane(), first, "one-time selection");
+    }
+
+    #[test]
+    fn every_available_lane_agrees_with_the_scalar_oracle() {
+        let len = 257;
+        let src = pattern(len, 6);
+        for lane in available_lanes() {
+            for c in [0u8, 1, 0x8e] {
+                let mut acc = pattern(len, 7);
+                let mut want = acc.clone();
+                for (w, &s) in want.iter_mut().zip(&src) {
+                    *w ^= mul(c, s);
+                }
+                mac_into_lane(lane, c, &mut acc, &src);
+                assert_eq!(acc, want, "lane={lane:?} c={c}");
+            }
+            let mut acc = pattern(len, 8);
+            let mut want = acc.clone();
+            for (w, &s) in want.iter_mut().zip(&src) {
+                *w ^= s;
+            }
+            xor_into_lane(lane, &mut acc, &src);
+            assert_eq!(acc, want, "lane={lane:?} xor");
+        }
+    }
+}

@@ -1,7 +1,7 @@
 //! Fused, table-cached, word-parallel GF(2^8) combine engine — the
-//! byte-crunching core of the recovery data path (DESIGN.md §9).
+//! byte-crunching core of the recovery data path (DESIGN.md §9, §12).
 //!
-//! Three ideas, each attacking a distinct per-byte cost that profiling the
+//! Four ideas, each attacking a distinct per-byte cost that profiling the
 //! chunked executor (PR 2) exposed:
 //!
 //! 1. **Process-wide table cache.** [`SliceTable`] construction costs 32
@@ -9,23 +9,34 @@
 //!    at the executor's 16 KiB chunk granularity is once per source per
 //!    chunk. All 256 tables together are only 8 KiB, so [`table`] builds
 //!    them exactly once per process and every caller shares them.
-//! 2. **SWAR XOR lane.** Coefficient 1 (the LRC/replica/aggregation-merge
+//! 2. **Wide XOR lane.** Coefficient 1 (the LRC/replica/aggregation-merge
 //!    lane) is a pure XOR, which is linear over machine words: the u64
-//!    fast path in [`xor_into`] moves 8 bytes per op instead of 1.
+//!    fast path in [`xor_into_swar`] moves 8 bytes per op instead of 1,
+//!    and the simd lane 16–32.
 //! 3. **Cache-blocked fusion.** `XOR_j c_j·src_j` evaluated one source at
 //!    a time streams the accumulator through the cache hierarchy once per
 //!    source. [`combine_many_into`] instead walks the accumulator in
 //!    L1-sized blocks and applies *all* sources to each block before
 //!    moving on, so every accumulator byte is read and written once per
-//!    block no matter how many sources feed it.
+//!    block no matter how many sources feed it. Per-source dispatch
+//!    (coefficient class, table lookup, lane kernel) is hoisted out of
+//!    the window loop into a one-pass op list, so inside a window each
+//!    source is a single branch-free indirect call.
+//! 4. **Lane dispatch.** The XOR and MAC primitives run on the
+//!    process-wide active lane ([`super::dispatch`]): AVX2/NEON
+//!    byte-shuffle kernels ([`super::simd`]) when the CPU has them, the
+//!    portable SWAR/table kernels otherwise, a per-byte scalar oracle for
+//!    differential testing.
 //!
 //! Every path here is differentially tested against the scalar
 //! [`super::mul`] reference (`tests/kernel_equivalence.rs`) — the fused
 //! engine must be byte-identical to the per-byte loop for every
-//! coefficient class (0, 1, arbitrary), every length, and any source mix.
+//! coefficient class (0, 1, arbitrary), every length, every lane, and
+//! any source mix.
 
 use std::sync::OnceLock;
 
+use super::dispatch::{self, Lane};
 use super::SliceTable;
 
 /// Accumulator block size for the fused combine: big enough to amortize
@@ -35,22 +46,35 @@ pub const FUSE_BLOCK: usize = 16 << 10;
 
 static TABLES: OnceLock<Box<[SliceTable; 256]>> = OnceLock::new();
 
-/// The shared slice table for coefficient `c` — all 256 tables (8 KiB)
-/// are built once per process on first use.
-#[inline]
-pub fn table(c: u8) -> &'static SliceTable {
-    let tables = TABLES.get_or_init(|| {
+/// All 256 cached slice tables (8 KiB), built once per process — one
+/// `OnceLock` acquisition serves a whole combine call.
+pub(crate) fn all_tables() -> &'static [SliceTable; 256] {
+    TABLES.get_or_init(|| {
         let mut t = [SliceTable::new(0); 256];
         for (c, slot) in t.iter_mut().enumerate() {
             *slot = SliceTable::new(c as u8);
         }
         Box::new(t)
-    });
-    &tables[c as usize]
+    })
 }
 
-/// `acc[i] ^= src[i]` — the c == 1 lane, 8 bytes per op (u64 SWAR).
+/// The shared slice table for coefficient `c` — all 256 tables (8 KiB)
+/// are built once per process on first use.
+#[inline]
+pub fn table(c: u8) -> &'static SliceTable {
+    &all_tables()[c as usize]
+}
+
+/// `acc[i] ^= src[i]` — the c == 1 lane, dispatched to the process-wide
+/// active kernel lane (AVX2/NEON when detected, u64 SWAR otherwise).
 pub fn xor_into(acc: &mut [u8], src: &[u8]) {
+    assert_eq!(acc.len(), src.len());
+    dispatch::xor_fn(dispatch::active_lane())(acc, src);
+}
+
+/// The portable SWAR XOR kernel: u64 words, 8 bytes per op — the `swar`
+/// lane, and the fallback wherever no SIMD extension is detected.
+pub fn xor_into_swar(acc: &mut [u8], src: &[u8]) {
     assert_eq!(acc.len(), src.len());
     let mut a = acc.chunks_exact_mut(8);
     let mut s = src.chunks_exact(8);
@@ -64,34 +88,79 @@ pub fn xor_into(acc: &mut [u8], src: &[u8]) {
     }
 }
 
+/// The per-byte XOR oracle — the `scalar` lane.
+pub fn xor_into_scalar(acc: &mut [u8], src: &[u8]) {
+    assert_eq!(acc.len(), src.len());
+    for (a, &s) in acc.iter_mut().zip(src) {
+        *a ^= s;
+    }
+}
+
+/// The per-byte MAC oracle — the `scalar` lane: one nibble-table lookup
+/// pair per byte, no unrolling. The reference the wide lanes are
+/// differentially tested against.
+pub fn mac_scalar(t: &SliceTable, acc: &mut [u8], src: &[u8]) {
+    assert_eq!(acc.len(), src.len());
+    for (a, &s) in acc.iter_mut().zip(src) {
+        *a ^= t.mul(s);
+    }
+}
+
+/// One hoisted per-source op of the fused combine: lane kernel + table +
+/// source bytes, resolved once per call so the window loop runs each
+/// source as a single indirect call with no per-window branching.
+struct SourceOp<'a> {
+    run: dispatch::MacFn,
+    table: &'static SliceTable,
+    src: &'a [u8],
+}
+
 /// Fused k-way multiply-accumulate:
 /// `acc[i] ^= XOR_j sources[j].0 · sources[j].1[i]`.
 ///
 /// Cache-blocked: the accumulator is processed in [`FUSE_BLOCK`]-sized
 /// windows, and within a window every source is applied before the window
 /// advances — the accumulator is read/written once per window instead of
-/// once per source. Coefficient 0 sources are skipped, coefficient 1
-/// sources take the SWAR XOR lane, the rest run the cached two-nibble
-/// slice kernel.
+/// once per source. Per-source work (coefficient-class dispatch, table
+/// lookup, lane selection) is resolved **once per call**: coefficient 0
+/// sources drop out of the op list entirely, coefficient 1 sources bind
+/// the active lane's XOR kernel, the rest bind its MAC kernel with their
+/// cached table.
 ///
 /// Generic over the shard representation (`&[u8]`, `Vec<u8>`, …) so the
 /// executor's pooled `(coeff, buffer)` staging vector feeds the kernel
 /// directly — no per-chunk borrow-slice vector needs to be built.
 pub fn combine_many_into<S: AsRef<[u8]>>(acc: &mut [u8], sources: &[(u8, S)]) {
+    combine_many_into_lane(dispatch::active_lane(), acc, sources);
+}
+
+/// [`combine_many_into`] pinned to an explicit lane (panics if `lane`
+/// cannot run on this CPU) — the differential-test surface that lets the
+/// equivalence suite force every lane in one process.
+pub fn combine_many_into_lane<S: AsRef<[u8]>>(lane: Lane, acc: &mut [u8], sources: &[(u8, S)]) {
     for (_, src) in sources {
         assert_eq!(src.as_ref().len(), acc.len(), "ragged source shard");
     }
+    let mac = dispatch::mac_fn(lane);
+    let xor = dispatch::xor_as_mac_fn(lane);
+    let tables = all_tables();
+    // the hoist: one pass over the sources builds ~three words per live
+    // source; the window loop below never re-derives any of it
+    let ops: Vec<SourceOp> = sources
+        .iter()
+        .filter_map(|(c, src)| match *c {
+            0 => None,
+            1 => Some(SourceOp { run: xor, table: &tables[1], src: src.as_ref() }),
+            _ => Some(SourceOp { run: mac, table: &tables[*c as usize], src: src.as_ref() }),
+        })
+        .collect();
     let len = acc.len();
     let mut off = 0usize;
     while off < len {
         let end = (off + FUSE_BLOCK).min(len);
         let window = &mut acc[off..end];
-        for (c, src) in sources {
-            match *c {
-                0 => {}
-                1 => xor_into(window, &src.as_ref()[off..end]),
-                _ => table(*c).mac(window, &src.as_ref()[off..end]),
-            }
+        for op in &ops {
+            (op.run)(op.table, window, &op.src[off..end]);
         }
         off = end;
     }
@@ -128,6 +197,18 @@ mod tests {
     }
 
     #[test]
+    fn swar_xor_kernel_matches_scalar_for_all_alignments() {
+        let src = pattern(67, 3);
+        for len in 0..src.len() {
+            let mut acc = pattern(len, 4);
+            let mut want = acc.clone();
+            xor_into_scalar(&mut want, &src[..len]);
+            xor_into_swar(&mut acc, &src[..len]);
+            assert_eq!(acc, want, "len={len}");
+        }
+    }
+
+    #[test]
     fn fused_combine_crosses_block_boundaries_correctly() {
         // length straddles two FUSE_BLOCK windows plus a ragged tail
         let len = FUSE_BLOCK + FUSE_BLOCK / 2 + 7;
@@ -144,6 +225,31 @@ mod tests {
             coeffs.iter().zip(&srcs).map(|(&c, s)| (c, s.as_slice())).collect();
         combine_many_into(&mut acc, &pairs);
         assert_eq!(acc, want);
+    }
+
+    #[test]
+    fn hoisted_ops_respect_window_boundaries_on_every_lane() {
+        // regression for the window-loop hoist: a source mix containing
+        // the dropped (c == 0), XOR (c == 1) and table classes must apply
+        // each live source to every window exactly once, for lengths on
+        // both sides of the block boundary
+        for lane in dispatch::available_lanes() {
+            for len in [FUSE_BLOCK - 1, FUSE_BLOCK, FUSE_BLOCK + 1, 2 * FUSE_BLOCK + 13] {
+                let srcs: Vec<Vec<u8>> = (0..4).map(|i| pattern(len, 40 + i)).collect();
+                let coeffs = [0u8, 1, 0x1d, 0xff];
+                let mut acc = pattern(len, 77);
+                let mut want = acc.clone();
+                for (&c, src) in coeffs.iter().zip(&srcs) {
+                    for (w, &s) in want.iter_mut().zip(src) {
+                        *w ^= mul(c, s);
+                    }
+                }
+                let pairs: Vec<(u8, &[u8])> =
+                    coeffs.iter().zip(&srcs).map(|(&c, s)| (c, s.as_slice())).collect();
+                combine_many_into_lane(lane, &mut acc, &pairs);
+                assert_eq!(acc, want, "lane={lane:?} len={len}");
+            }
+        }
     }
 
     #[test]

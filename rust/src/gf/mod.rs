@@ -6,11 +6,17 @@
 //! native coder (`runtime::native`) is bit-identical to the PJRT path.
 //!
 //! The hot combine loop is the fused engine in [`kernel`]
-//! ([`combine_into`] / [`combine_many_into`]); everything else (inverse,
-//! matrix inversion) runs on the control path only.
+//! ([`combine_into`] / [`combine_many_into`]); it runs on one of three
+//! interchangeable **lanes** — scalar (the differential oracle), swar
+//! (portable u64 words + unrolled nibble tables), or simd (AVX2/NEON
+//! byte shuffles in [`simd`]) — selected once per process by [`dispatch`]
+//! (DESIGN.md §12). Everything else (inverse, matrix inversion) runs on
+//! the control path only.
 
+pub mod dispatch;
 pub mod kernel;
 pub mod matrix;
+pub mod simd;
 
 pub use kernel::{combine_many_into, xor_into};
 pub use matrix::Matrix;
@@ -132,6 +138,18 @@ impl SliceTable {
         self.lo[(s & 0x0f) as usize] ^ self.hi[(s >> 4) as usize]
     }
 
+    /// The low-nibble product table (`lo[x] = c·x` for `x < 16`) — exactly
+    /// the 16-byte shuffle vector the SIMD lanes feed to `PSHUFB`/`TBL`
+    /// ([`crate::gf::simd`]).
+    pub fn lo(&self) -> &[u8; 16] {
+        &self.lo
+    }
+
+    /// The high-nibble product table (`hi[x] = c·(x << 4)` for `x < 16`).
+    pub fn hi(&self) -> &[u8; 16] {
+        &self.hi
+    }
+
     /// `acc[i] ^= c · src[i]` — the multiply-accumulate hot loop, unrolled
     /// eight bytes per step so both nibble tables stay register/L1-resident.
     pub fn mac(&self, acc: &mut [u8], src: &[u8]) {
@@ -157,15 +175,19 @@ impl SliceTable {
 }
 
 /// `acc[i] ^= c * src[i]` — the byte-crunching inner loop of the native
-/// coder. Specializes c == 0 (no-op) and c == 1 (the u64 SWAR XOR lane,
-/// the LRC/replica path) before falling back to the *cached* two-nibble
+/// coder. Specializes c == 0 (no-op) and c == 1 (the wide XOR lane, the
+/// LRC/replica path) before falling back to the *cached* two-nibble
 /// [`SliceTable`] kernel ([`kernel::table`] — no per-call table build).
+/// Both non-trivial classes run on the process-wide active lane
+/// ([`dispatch::active_lane`]): AVX2/NEON byte shuffles when detected,
+/// the SWAR/table kernels otherwise.
 pub fn combine_into(acc: &mut [u8], c: u8, src: &[u8]) {
     assert_eq!(acc.len(), src.len());
+    let lane = dispatch::active_lane();
     match c {
         0 => {}
-        1 => kernel::xor_into(acc, src),
-        _ => kernel::table(c).mac(acc, src),
+        1 => dispatch::xor_fn(lane)(acc, src),
+        _ => dispatch::mac_fn(lane)(kernel::table(c), acc, src),
     }
 }
 

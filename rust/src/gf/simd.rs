@@ -1,0 +1,258 @@
+//! SIMD GF(2^8) kernels: byte-shuffle nibble lookups (DESIGN.md §12).
+//!
+//! GF multiply by a fixed coefficient is linear over the source byte's
+//! nibbles, so the two 16-entry halves of a [`SliceTable`] are exactly
+//! the lookup vectors the x86 `PSHUFB` (`_mm256_shuffle_epi8`) and
+//! aarch64 `TBL` (`vqtbl1q_u8`) instructions consume: each shuffle pair
+//! produces 32 (AVX2) or 16 (NEON) products per step instead of one per
+//! scalar table lookup — the ISA-L / `galois_8` technique.
+//!
+//! Soundness: the `#[target_feature]` kernels are `unsafe fn`s whose only
+//! contract is ISA availability — every memory access is either an
+//! *unaligned* vector load/store at an in-bounds offset or a safe slice
+//! tail loop, so there is no alignment invariant for callers to uphold.
+//! The safe wrappers re-verify detection before entering them (a cached
+//! atomic load), so a stray call on an unsupported CPU panics instead of
+//! executing illegal instructions; [`super::dispatch`] only routes here
+//! when detection succeeded in the first place.
+//!
+//! On architectures with neither lane, the wrappers fall back to the
+//! portable SWAR/table kernels so the module always compiles; the
+//! dispatcher never selects the simd lane there.
+
+use super::SliceTable;
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+use super::dispatch::simd_available;
+
+/// `acc[i] ^= src[i]` on the SIMD lane (AVX2 32-byte / NEON 16-byte wide
+/// XOR). Panics if the ISA extension is missing — select lanes through
+/// [`super::dispatch`] rather than calling this directly.
+pub fn xor_into_simd(acc: &mut [u8], src: &[u8]) {
+    assert_eq!(acc.len(), src.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        assert!(simd_available(), "xor_into_simd without AVX2");
+        // SAFETY: AVX2 presence was just verified. The kernel performs
+        // only unaligned 32-byte loads/stores at offsets i with
+        // i + 32 <= acc.len() == src.len(), plus a safe scalar tail — no
+        // alignment invariant exists.
+        unsafe { x86::xor_avx2(acc, src) }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        assert!(simd_available(), "xor_into_simd without NEON");
+        // SAFETY: NEON presence was just verified. The kernel performs
+        // only unaligned 16-byte loads/stores at offsets i with
+        // i + 16 <= acc.len() == src.len(), plus a safe scalar tail — no
+        // alignment invariant exists.
+        unsafe { arm::xor_neon(acc, src) }
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    super::kernel::xor_into_swar(acc, src);
+}
+
+/// `acc[i] ^= t.mul(src[i])` on the SIMD lane: both nibble tables are
+/// loaded into vector registers once, then every wide step is two
+/// shuffles and two XORs. Panics if the ISA extension is missing —
+/// select lanes through [`super::dispatch`] rather than calling this
+/// directly.
+pub fn mac_simd(t: &SliceTable, acc: &mut [u8], src: &[u8]) {
+    assert_eq!(acc.len(), src.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        assert!(simd_available(), "mac_simd without AVX2");
+        // SAFETY: AVX2 presence was just verified. The kernel performs
+        // only unaligned 32-byte loads/stores at offsets i with
+        // i + 32 <= acc.len() == src.len(), plus a safe scalar tail — no
+        // alignment invariant exists.
+        unsafe { x86::mac_avx2(t.lo(), t.hi(), acc, src) }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        assert!(simd_available(), "mac_simd without NEON");
+        // SAFETY: NEON presence was just verified. The kernel performs
+        // only unaligned 16-byte loads/stores at offsets i with
+        // i + 16 <= acc.len() == src.len(), plus a safe scalar tail — no
+        // alignment invariant exists.
+        unsafe { arm::mac_neon(t.lo(), t.hi(), acc, src) }
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    t.mac(acc, src);
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::{
+        __m128i, __m256i, _mm256_and_si256, _mm256_broadcastsi128_si256, _mm256_loadu_si256,
+        _mm256_set1_epi8, _mm256_shuffle_epi8, _mm256_srli_epi16, _mm256_storeu_si256,
+        _mm256_xor_si256, _mm_loadu_si128,
+    };
+
+    /// 32-bytes-per-step XOR.
+    ///
+    /// # Safety
+    /// AVX2 must be available. There is no alignment invariant (all
+    /// vector memory ops are `loadu`/`storeu`); every vector access is at
+    /// an offset `i` with `i + 32 <= acc.len()` and
+    /// `acc.len() == src.len()`, and the ragged tail uses safe slices.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn xor_avx2(acc: &mut [u8], src: &[u8]) {
+        debug_assert_eq!(acc.len(), src.len());
+        let len = acc.len();
+        let wide = len - len % 32;
+        let ap = acc.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut i = 0;
+        while i < wide {
+            let av = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+            let sv = _mm256_loadu_si256(sp.add(i) as *const __m256i);
+            _mm256_storeu_si256(ap.add(i) as *mut __m256i, _mm256_xor_si256(av, sv));
+            i += 32;
+        }
+        for (a, &s) in acc[wide..].iter_mut().zip(&src[wide..]) {
+            *a ^= s;
+        }
+    }
+
+    /// 32-products-per-step multiply-accumulate: `PSHUFB` over the
+    /// broadcast low/high nibble tables.
+    ///
+    /// # Safety
+    /// Same contract as [`xor_avx2`]: AVX2 available, no alignment
+    /// invariant, every vector access at `i + 32 <= acc.len() ==
+    /// src.len()`.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mac_avx2(lo: &[u8; 16], hi: &[u8; 16], acc: &mut [u8], src: &[u8]) {
+        debug_assert_eq!(acc.len(), src.len());
+        // broadcast each 16-entry nibble table across both 128-bit halves
+        // so one shuffle looks up all 32 lanes
+        let lo_t = _mm256_broadcastsi128_si256(_mm_loadu_si128(lo.as_ptr() as *const __m128i));
+        let hi_t = _mm256_broadcastsi128_si256(_mm_loadu_si128(hi.as_ptr() as *const __m128i));
+        let mask = _mm256_set1_epi8(0x0f);
+        let len = acc.len();
+        let wide = len - len % 32;
+        let ap = acc.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut i = 0;
+        while i < wide {
+            let sv = _mm256_loadu_si256(sp.add(i) as *const __m256i);
+            let lo_n = _mm256_and_si256(sv, mask);
+            // per-byte `src >> 4`: the 16-bit shift smears bits across
+            // byte lanes; the mask drops them
+            let hi_n = _mm256_and_si256(_mm256_srli_epi16::<4>(sv), mask);
+            let prod = _mm256_xor_si256(
+                _mm256_shuffle_epi8(lo_t, lo_n),
+                _mm256_shuffle_epi8(hi_t, hi_n),
+            );
+            let av = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+            _mm256_storeu_si256(ap.add(i) as *mut __m256i, _mm256_xor_si256(av, prod));
+            i += 32;
+        }
+        for (a, &s) in acc[wide..].iter_mut().zip(&src[wide..]) {
+            *a ^= lo[(s & 0x0f) as usize] ^ hi[(s >> 4) as usize];
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use std::arch::aarch64::{
+        vandq_u8, vdupq_n_u8, veorq_u8, vld1q_u8, vqtbl1q_u8, vshrq_n_u8, vst1q_u8,
+    };
+
+    /// 16-bytes-per-step XOR.
+    ///
+    /// # Safety
+    /// NEON must be available. There is no alignment invariant
+    /// (`vld1q_u8`/`vst1q_u8` accept unaligned pointers); every vector
+    /// access is at an offset `i` with `i + 16 <= acc.len()` and
+    /// `acc.len() == src.len()`, and the ragged tail uses safe slices.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn xor_neon(acc: &mut [u8], src: &[u8]) {
+        debug_assert_eq!(acc.len(), src.len());
+        let len = acc.len();
+        let wide = len - len % 16;
+        let ap = acc.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut i = 0;
+        while i < wide {
+            let av = vld1q_u8(ap.add(i));
+            let sv = vld1q_u8(sp.add(i));
+            vst1q_u8(ap.add(i), veorq_u8(av, sv));
+            i += 16;
+        }
+        for (a, &s) in acc[wide..].iter_mut().zip(&src[wide..]) {
+            *a ^= s;
+        }
+    }
+
+    /// 16-products-per-step multiply-accumulate: `TBL` over the low/high
+    /// nibble tables.
+    ///
+    /// # Safety
+    /// Same contract as [`xor_neon`]: NEON available, no alignment
+    /// invariant, every vector access at `i + 16 <= acc.len() ==
+    /// src.len()`.
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn mac_neon(lo: &[u8; 16], hi: &[u8; 16], acc: &mut [u8], src: &[u8]) {
+        debug_assert_eq!(acc.len(), src.len());
+        let lo_t = vld1q_u8(lo.as_ptr());
+        let hi_t = vld1q_u8(hi.as_ptr());
+        let mask = vdupq_n_u8(0x0f);
+        let len = acc.len();
+        let wide = len - len % 16;
+        let ap = acc.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut i = 0;
+        while i < wide {
+            let sv = vld1q_u8(sp.add(i));
+            let lo_n = vandq_u8(sv, mask);
+            // u8-lane logical shift: indices land in 0..=15 directly
+            let hi_n = vshrq_n_u8::<4>(sv);
+            let prod = veorq_u8(vqtbl1q_u8(lo_t, lo_n), vqtbl1q_u8(hi_t, hi_n));
+            let av = vld1q_u8(ap.add(i));
+            vst1q_u8(ap.add(i), veorq_u8(av, prod));
+            i += 16;
+        }
+        for (a, &s) in acc[wide..].iter_mut().zip(&src[wide..]) {
+            *a ^= lo[(s & 0x0f) as usize] ^ hi[(s >> 4) as usize];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::dispatch::simd_available;
+    use crate::gf::{kernel, mul};
+    use crate::util::rng::xorshift_bytes as pattern;
+
+    #[test]
+    fn simd_mac_and_xor_match_scalar_when_available() {
+        if !simd_available() {
+            eprintln!("no SIMD lane on this CPU — skipping");
+            return;
+        }
+        // lengths around both vector widths (16/32) plus ragged tails
+        for len in [0usize, 1, 15, 16, 17, 31, 32, 33, 63, 64, 65, 1000] {
+            let src = pattern(len, 3);
+            for c in [0u8, 1, 2, 0x8e, 0xff] {
+                let mut acc = pattern(len, 4);
+                let mut want = acc.clone();
+                for (w, &s) in want.iter_mut().zip(&src) {
+                    *w ^= mul(c, s);
+                }
+                mac_simd(kernel::table(c), &mut acc, &src);
+                assert_eq!(acc, want, "c={c} len={len}");
+            }
+            let mut acc = pattern(len, 5);
+            let mut want = acc.clone();
+            for (w, &s) in want.iter_mut().zip(&src) {
+                *w ^= s;
+            }
+            xor_into_simd(&mut acc, &src);
+            assert_eq!(acc, want, "len={len}");
+        }
+    }
+}

@@ -14,7 +14,8 @@
 //! d3ctl oa --n 5 [--cols 4]            # print + verify an orthogonal array
 //! d3ctl cluster-demo [--backend pjrt|native] [--stripes N]
 //! d3ctl calibrate                      # coding throughput, native vs PJRT
-//! d3ctl bench [--quick] [--json PATH]  # hot-path suite → BENCH_PR5.json
+//! d3ctl kernel-info                    # CPU features + selected GF kernel lane
+//! d3ctl bench [--quick] [--json PATH]  # hot-path suite → BENCH_PR6.json
 //! d3ctl bench-compare --old A.json --new B.json [--tolerance 0.15]
 //! ```
 
@@ -84,19 +85,44 @@ fn main() {
         "oa" => cmd_oa(&flags),
         "cluster-demo" => cmd_cluster_demo(&flags),
         "calibrate" => cmd_calibrate(&flags),
+        "kernel-info" => cmd_kernel_info(),
         "bench" => cmd_bench(&args),
         "bench-compare" => cmd_bench_compare(&flags),
         _ => {
             println!("d3ctl — Deterministic Data Distribution (D³) reproduction");
-            println!("{}", include_str!("main.rs").lines().skip(2).take(17)
+            println!("{}", include_str!("main.rs").lines().skip(2).take(18)
                 .map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
         }
     }
 }
 
+/// `d3ctl kernel-info`: which GF kernel lane this process runs, and why —
+/// the CPU-feature probe rows behind the decision, the runnable lanes,
+/// and the `D3_FORCE_KERNEL` override if one is set (DESIGN.md §12).
+fn cmd_kernel_info() {
+    use d3ec::gf::dispatch;
+    println!("arch: {}", std::env::consts::ARCH);
+    let probes = dispatch::cpu_features();
+    if probes.is_empty() {
+        println!("cpu features: (no SIMD probes on this architecture)");
+    } else {
+        println!("cpu features:");
+        for (name, detected) in probes {
+            println!("  {name}: {}", if detected { "yes" } else { "no" });
+        }
+    }
+    let lanes: Vec<&str> = dispatch::available_lanes().iter().map(|l| l.name()).collect();
+    println!("available lanes: {}", lanes.join(", "));
+    match std::env::var("D3_FORCE_KERNEL") {
+        Ok(v) => println!("D3_FORCE_KERNEL: {v}"),
+        Err(_) => println!("D3_FORCE_KERNEL: unset"),
+    }
+    println!("selected lane: {}", dispatch::active_lane().name());
+}
+
 /// `d3ctl bench`: the machine-readable hot-path suite (same harness as
 /// `cargo bench --bench hotpath`, DESIGN.md §9). Writes the
-/// `{bench_name: ns_per_byte}` perf-trajectory file — `BENCH_PR5.json`
+/// `{bench_name: ns_per_byte}` perf-trajectory file — `BENCH_PR6.json`
 /// by default, `--json PATH` to override; `--quick` for CI-sized runs.
 fn cmd_bench(args: &[String]) {
     let quick = args.iter().any(|a| a == "--quick");
@@ -105,10 +131,16 @@ fn cmd_bench(args: &[String]) {
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1))
         .cloned()
-        .unwrap_or_else(|| "BENCH_PR5.json".to_string());
+        .unwrap_or_else(|| "BENCH_PR6.json".to_string());
     let report = d3ec::perf::run_hotpath(&d3ec::perf::BenchOpts { quick });
     if let Some(r) = report.ratio("sched_fifo_8w", "sched_balanced_8w") {
         println!("headline: balanced schedule is {r:.2}x FIFO on contended links");
+    }
+    if let Some(r) = report.ns_per_byte.get("simd_vs_swar_mac") {
+        println!("headline: simd MAC lane is {r:.2}x the swar kernel");
+    }
+    if let Some(r) = report.ns_per_byte.get("encode_ingest_1w_vs_8w") {
+        println!("headline: 8-writer encode ingest is {r:.2}x one writer");
     }
     match report.write_json(std::path::Path::new(&path)) {
         Ok(()) => println!("wrote {} bench rows to {path}", report.ns_per_byte.len()),
@@ -119,11 +151,11 @@ fn cmd_bench(args: &[String]) {
 /// `d3ctl bench-compare`: diff two `{bench_name: ns_per_byte}` reports
 /// and fail (exit 1) when any tracked kernel regressed beyond the
 /// tolerance — the CI perf gate between the previous PR's trajectory
-/// file and `BENCH_PR5.json` (lower ns/B is better; ratio rows are
+/// file and `BENCH_PR6.json` (lower ns/B is better; ratio rows are
 /// skipped by default via the key list).
 fn cmd_bench_compare(flags: &HashMap<String, String>) {
-    let old: String = flag(flags, "old", "BENCH_PR4.json".into());
-    let new: String = flag(flags, "new", "BENCH_PR5.json".into());
+    let old: String = flag(flags, "old", "BENCH_PR5.json".into());
+    let new: String = flag(flags, "new", "BENCH_PR6.json".into());
     let tolerance: f64 = flag(flags, "tolerance", 0.15);
     let keys: String = flag(
         flags,

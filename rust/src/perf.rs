@@ -9,9 +9,19 @@
 //! (a `SliceTable::new` per 16 KiB chunk, the old `combine_into` tax at
 //! executor chunk granularity) and `xor_16mb_scalar` (byte-at-a-time
 //! XOR). `combine_k6_sequential` deliberately uses *today's*
-//! `gf::combine_into` (table-cached, SWAR) as its baseline, so the
-//! fused-vs-sequential ratio isolates the cache-blocking win alone and
-//! keeps measuring it even as `combine_into` itself improves.
+//! `gf::combine_into` (table-cached, lane-dispatched) as its baseline, so
+//! the fused-vs-sequential ratio isolates the cache-blocking win alone
+//! and keeps measuring it even as `combine_into` itself improves.
+//!
+//! Kernel rows that compare lanes pin their lane explicitly
+//! ([`gf::dispatch`]): `xor_16mb_swar` and `mac_16mb` always measure the
+//! portable kernels regardless of what the process would auto-select, and
+//! the `simd_vs_swar_*` ratio rows measure the AVX2/NEON shuffle kernels
+//! against them (on CPUs without a SIMD lane both sides run SWAR and the
+//! ratio degenerates to 1.0 — noted on stdout, kept in the JSON so the
+//! schema is machine-independent). `encode_ingest_1w/8w` time the full
+//! `write_stripes_parallel` ingest path (encode pool + link model) at 1
+//! vs 8 client writers.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -20,7 +30,7 @@ use std::time::Instant;
 
 use crate::cluster::MiniCluster;
 use crate::codes::CodeSpec;
-use crate::gf;
+use crate::gf::{self, dispatch, dispatch::Lane};
 use crate::placement::{D3Placement, Placement};
 use crate::recovery::{node_recovery_plans, ExecutorConfig, SchedulePolicy};
 use crate::topology::{ClusterSpec, Location, SystemSpec};
@@ -115,7 +125,10 @@ pub fn run_kernel_benches(opts: &BenchOpts, report: &mut BenchReport) {
     );
 
     println!("=== gf kernel: c == 1 XOR lane ===");
-    let swar = bench_ns_per_byte(iters, len, || gf::xor_into(&mut acc, &src));
+    // pinned to the SWAR lane: this row is the portable-kernel baseline,
+    // stable no matter which lane the process auto-selects
+    let swar =
+        bench_ns_per_byte(iters, len, || dispatch::xor_into_lane(Lane::Swar, &mut acc, &src));
     let scalar = bench_ns_per_byte(iters, len, || {
         for (a, s) in acc.iter_mut().zip(&src) {
             *a ^= s;
@@ -124,6 +137,34 @@ pub fn run_kernel_benches(opts: &BenchOpts, report: &mut BenchReport) {
     report.record("xor_16mb_swar", swar);
     report.record("xor_16mb_scalar", scalar);
     println!("  swar {swar:.3} vs scalar {scalar:.3} ns/B → {:.2}x", scalar / swar);
+
+    println!("=== gf kernel: simd vs swar lanes (16 MB) ===");
+    // swar MAC re-timed through the lane surface so both ratio legs pay
+    // the identical call shape
+    let mac_swar =
+        bench_ns_per_byte(iters, len, || dispatch::mac_into_lane(Lane::Swar, c, &mut acc, &src));
+    let (mac_simd, xor_simd) = if dispatch::simd_available() {
+        let m = bench_ns_per_byte(iters, len, || {
+            dispatch::mac_into_lane(Lane::Simd, c, &mut acc, &src)
+        });
+        let x = bench_ns_per_byte(iters, len, || {
+            dispatch::xor_into_lane(Lane::Simd, &mut acc, &src)
+        });
+        (m, x)
+    } else {
+        println!("  (no SIMD lane on this CPU — simd rows mirror swar, ratios 1.0)");
+        (mac_swar, swar)
+    };
+    report.record("mac_16mb_simd", mac_simd);
+    report.record("xor_16mb_simd", xor_simd);
+    report.record("simd_vs_swar_mac", mac_swar / mac_simd);
+    report.record("simd_vs_swar_xor", swar / xor_simd);
+    println!(
+        "  mac: swar {mac_swar:.3} vs simd {mac_simd:.3} ns/B → {:.2}x; \
+         xor: swar {swar:.3} vs simd {xor_simd:.3} ns/B → {:.2}x",
+        mac_swar / mac_simd,
+        swar / xor_simd
+    );
 
     println!("=== gf kernel: k = 6 combine over 16 MB shards ===");
     let shards: Vec<Vec<u8>> = (0..6).map(|i| deterministic_bytes(len, 10 + i)).collect();
@@ -192,6 +233,48 @@ pub fn run_cluster_benches(opts: &BenchOpts, report: &mut BenchReport) {
     let w1 = recover(1, "cluster_recover_1w");
     let w8 = recover(8, "cluster_recover_8w");
     println!("  8-worker speedup over 1 worker: {:.2}x", w1 / w8);
+}
+
+/// Stripe-encode ingest at 1 vs 8 client writers (the PR 6 acceptance
+/// bench): `write_stripes_parallel` drives the full write path — encode
+/// through the coder pool, then block distribution over the link model —
+/// so the 8-writer row measures how far the pooled coder service lets
+/// concurrent writers overlap each other's encode and transfer time.
+/// Rows are ns per ingested *data* byte.
+pub fn run_encode_benches(opts: &BenchOpts, report: &mut BenchReport) {
+    let stripes: u64 = if opts.quick { 8 } else { 16 };
+    let block: usize = if opts.quick { 512 << 10 } else { 1 << 20 };
+    println!("=== cluster: stripe-encode ingest (1 vs 8 writers, {stripes} stripes) ===");
+    let mut ingest = |workers: usize, name: &str| {
+        let mut cspec = SystemSpec::paper_default();
+        cspec.block_size = block as u64;
+        cspec.net.inner_mbps = 1600.0;
+        cspec.net.cross_mbps = 160.0;
+        let policy: Arc<dyn Placement> =
+            Arc::new(D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, cspec.cluster).unwrap());
+        let cluster = MiniCluster::new(cspec, policy, "native", 5).unwrap();
+        let bytes = stripes * 3 * block as u64;
+        let t0 = Instant::now();
+        cluster
+            .write_stripes_parallel(stripes, workers, |sid| {
+                (0..3).map(|b| deterministic_bytes(block, sid * 3 + b)).collect()
+            })
+            .unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        let ns_per_byte = secs * 1e9 / bytes as f64;
+        report.record(name, ns_per_byte);
+        println!(
+            "  {workers} writer(s): {stripes} stripes ({} MB data) in {:.0} ms → {:.1} MB/s",
+            bytes >> 20,
+            secs * 1e3,
+            bytes as f64 / secs / 1e6
+        );
+        secs
+    };
+    let w1 = ingest(1, "encode_ingest_1w");
+    let w8 = ingest(8, "encode_ingest_8w");
+    report.record("encode_ingest_1w_vs_8w", w1 / w8);
+    println!("  8-writer ingest speedup over 1 writer: {:.2}x", w1 / w8);
 }
 
 /// One whole-node recovery on a 4-rack topology with contended cross-rack
@@ -440,6 +523,7 @@ pub fn run_hotpath(opts: &BenchOpts) -> BenchReport {
     let mut report = BenchReport::default();
     run_kernel_benches(opts, &mut report);
     run_cluster_benches(opts, &mut report);
+    run_encode_benches(opts, &mut report);
     run_sched_benches(opts, &mut report);
     run_fg_benches(opts, &mut report);
     report

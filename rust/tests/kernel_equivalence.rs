@@ -1,10 +1,16 @@
-//! Differential tests for the fused GF combine engine (DESIGN.md §9): the
-//! wide-word, table-cached, cache-blocked kernels must be byte-identical
-//! to a naive per-byte `gf::mul` accumulation for every coefficient class
-//! (0, 1, arbitrary), every small length, large unaligned lengths that
-//! straddle the fusion block, and mixed-coefficient source sets.
+//! Differential tests for the fused GF combine engine (DESIGN.md §9,
+//! §12): the wide-word, table-cached, cache-blocked kernels must be
+//! byte-identical to a naive per-byte `gf::mul` accumulation for every
+//! coefficient class (0, 1, arbitrary), every small length, large
+//! unaligned lengths that straddle the fusion block, and
+//! mixed-coefficient source sets — on **every lane this CPU can run**
+//! (scalar oracle, SWAR, and the AVX2/NEON shuffle kernels when
+//! detected), forced through the `dispatch::*_lane` surface so one test
+//! process covers them all regardless of `D3_FORCE_KERNEL`.
 
 use d3ec::gf;
+use d3ec::gf::dispatch::{self, Lane};
+use d3ec::gf::kernel::{combine_many_into_lane, FUSE_BLOCK};
 use d3ec::util::rng::xorshift_bytes as bytes;
 
 /// The scalar reference: per-byte multiply-accumulate over `gf::mul`
@@ -119,6 +125,90 @@ fn fused_combine_equals_sequential_combine_into() {
         gf::combine_into(&mut seq, c, src);
     }
     assert_eq!(fused, seq);
+}
+
+#[test]
+fn every_lane_mac_matches_reference_for_lengths_0_to_64() {
+    // full coefficient-class × length sweep on each runnable lane; the
+    // lane surface routes 0 and 1 through the MAC kernel too, so the
+    // shuffle tables for those degenerate coefficients are also covered
+    let src = bytes(64, 21);
+    for lane in dispatch::available_lanes() {
+        for &c in &COEFF_CLASSES {
+            for len in 0..=64usize {
+                let mut acc = bytes(len, 22);
+                let mut want = acc.clone();
+                mac_ref(&mut want, c, &src[..len]);
+                dispatch::mac_into_lane(lane, c, &mut acc, &src[..len]);
+                assert_eq!(acc, want, "lane={lane:?} c={c} len={len}");
+            }
+        }
+    }
+}
+
+#[test]
+fn every_lane_handles_unaligned_offsets_1_to_31() {
+    // slide the window start across every sub-vector offset (AVX2 reads
+    // 32 bytes, NEON 16, SWAR 8 — 1..=31 misaligns all of them) so the
+    // unaligned loads and ragged heads/tails are exercised directly
+    let n = 4096;
+    let src = bytes(n, 23);
+    let base = bytes(n, 24);
+    for lane in dispatch::available_lanes() {
+        for off in 1..=31usize {
+            let mut acc = base.clone();
+            let mut want = base.clone();
+            mac_ref(&mut want[off..], 0x8e, &src[off..]);
+            dispatch::mac_into_lane(lane, 0x8e, &mut acc[off..], &src[off..]);
+            assert_eq!(acc, want, "lane={lane:?} mac off={off}");
+            let mut acc = base.clone();
+            let mut want = base.clone();
+            mac_ref(&mut want[off..], 1, &src[off..]);
+            dispatch::xor_into_lane(lane, &mut acc[off..], &src[off..]);
+            assert_eq!(acc, want, "lane={lane:?} xor off={off}");
+        }
+    }
+}
+
+#[test]
+fn every_lane_fused_combine_matches_reference_for_mixed_sets() {
+    // k = 6 with all three coefficient classes present, at lengths on
+    // both sides of the fusion-block boundary, on every runnable lane
+    let k = 6;
+    for lane in dispatch::available_lanes() {
+        for len in [63usize, 4093, FUSE_BLOCK - 1, FUSE_BLOCK + 1, 2 * FUSE_BLOCK + 77] {
+            let srcs: Vec<Vec<u8>> = (0..k).map(|i| bytes(len, 3000 + i as u64)).collect();
+            let coeffs: Vec<u8> =
+                (0..k).map(|i| COEFF_CLASSES[i % COEFF_CLASSES.len()]).collect();
+            let mut acc = bytes(len, 25);
+            let mut want = acc.clone();
+            for (&c, src) in coeffs.iter().zip(&srcs) {
+                mac_ref(&mut want, c, src);
+            }
+            let pairs: Vec<(u8, &[u8])> =
+                coeffs.iter().zip(&srcs).map(|(&c, s)| (c, s.as_slice())).collect();
+            combine_many_into_lane(lane, &mut acc, &pairs);
+            assert_eq!(acc, want, "lane={lane:?} len={len}");
+        }
+    }
+}
+
+#[test]
+fn forced_lane_resolution_matches_documented_policy() {
+    // the pure resolver behind D3_FORCE_KERNEL: known lanes pin, simd
+    // falls back when undetected, junk falls back — and whatever the
+    // process actually selected must be runnable here
+    assert_eq!(dispatch::resolve_lane(Some("scalar")), Lane::Scalar);
+    assert_eq!(dispatch::resolve_lane(Some("swar")), Lane::Swar);
+    let best = dispatch::resolve_lane(None);
+    if dispatch::simd_available() {
+        assert_eq!(best, Lane::Simd);
+    } else {
+        assert_eq!(best, Lane::Swar);
+        assert_eq!(dispatch::resolve_lane(Some("simd")), Lane::Swar);
+    }
+    assert_eq!(dispatch::resolve_lane(Some("sse9")), best);
+    assert!(dispatch::available_lanes().contains(&dispatch::active_lane()));
 }
 
 #[test]

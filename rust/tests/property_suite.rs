@@ -316,3 +316,43 @@ fn d3_lrc_invariants_over_random_configs() {
         tested += 1;
     }
 }
+
+/// Randomized unaligned-window property for the lane-dispatched kernels
+/// (DESIGN.md §12): for random (offset, length) windows into a shared
+/// buffer — misaligning the AVX2/NEON/SWAR vector widths on both ends —
+/// every runnable lane's fused combine must match the per-byte `gf::mul`
+/// reference, and every byte outside the window must be untouched.
+#[test]
+fn fused_combine_handles_random_unaligned_windows_on_every_lane() {
+    use d3ec::gf;
+    use d3ec::gf::dispatch;
+    use d3ec::gf::kernel::combine_many_into_lane;
+
+    let n = 9001;
+    let mut rng = Rng::new(0xd3);
+    let base: Vec<u8> = (0..n).map(|_| (rng.next_u64() >> 17) as u8).collect();
+    let srcs: Vec<Vec<u8>> =
+        (0..3).map(|_| (0..n).map(|_| (rng.next_u64() >> 9) as u8).collect()).collect();
+    for lane in dispatch::available_lanes() {
+        for case in 0..60u32 {
+            let off = rng.below(n - 1);
+            let len = rng.below(n - off);
+            let coeffs = [
+                (rng.next_u64() % 4 == 0) as u8, // mix 0/1 in
+                (rng.next_u64() & 0xff) as u8,
+                0x8e,
+            ];
+            let mut acc = base.clone();
+            let mut want = base.clone();
+            for (&c, src) in coeffs.iter().zip(&srcs) {
+                for (w, &s) in want[off..off + len].iter_mut().zip(&src[off..off + len]) {
+                    *w ^= gf::mul(c, s);
+                }
+            }
+            let pairs: Vec<(u8, &[u8])> =
+                coeffs.iter().zip(&srcs).map(|(&c, s)| (c, &s[off..off + len])).collect();
+            combine_many_into_lane(lane, &mut acc[off..off + len], &pairs);
+            assert_eq!(acc, want, "lane={lane:?} case={case} off={off} len={len}");
+        }
+    }
+}
