@@ -14,17 +14,38 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::cluster::MiniCluster;
 use crate::metrics::Summary;
 use crate::placement::{Placement, PlacementTable};
 use crate::recovery::plan::plan_degraded_read;
 use crate::sim::engine::{JobSpec, Work};
 use crate::sim::recovery::plan_to_job_with;
 use crate::sim::resources::ResourceTable;
-use crate::topology::SystemSpec;
+use crate::topology::{Location, SystemSpec};
 use crate::util::rng::xorshift_bytes;
 
 use super::gen::{ArrivalModel, Request, RequestClass};
+
+/// A cluster the client engine can drive requests against — implemented
+/// by the in-process [`crate::cluster::MiniCluster`] and the
+/// socket-backed [`crate::net::NetCluster`], so the identical generated
+/// request sequence exercises both data planes (DESIGN.md §11, §13).
+pub trait ClientIo: Sync {
+    /// Data shards per stripe (the code's k) — sizes a write's payload.
+    fn data_shards(&self) -> usize;
+    /// Block size in bytes.
+    fn block_len(&self) -> usize;
+    /// Plain read of a healthy block at `client`.
+    fn read_block(&self, sid: u64, block: usize, client: Location) -> Result<Vec<u8>>;
+    /// Rebuild `(sid, block)` at `client` (paper Exp 3).
+    fn degraded_read(
+        &self,
+        sid: u64,
+        block: usize,
+        client: Location,
+    ) -> Result<(Vec<u8>, Duration)>;
+    /// Encode + distribute a stripe, charging the issuing `client`.
+    fn write_stripe_from(&self, sid: u64, data: Vec<Vec<u8>>, client: Location) -> Result<()>;
+}
 
 /// What the engine measured for one foreground run.
 #[derive(Clone, Debug)]
@@ -75,7 +96,7 @@ pub fn fg_write_data(stripe: u64, k: usize, len: usize) -> Vec<Vec<u8>> {
         .collect()
 }
 
-fn execute_one(cluster: &MiniCluster, req: &Request) -> Result<()> {
+fn execute_one<C: ClientIo>(cluster: &C, req: &Request) -> Result<()> {
     match req.class {
         RequestClass::NormalRead { stripe, block } => {
             cluster.read_block(stripe, block, req.client)?;
@@ -84,8 +105,8 @@ fn execute_one(cluster: &MiniCluster, req: &Request) -> Result<()> {
             cluster.degraded_read(stripe, block, req.client)?;
         }
         RequestClass::Write { stripe } => {
-            let k = cluster.policy().code().k();
-            let len = cluster.spec().block_size as usize;
+            let k = cluster.data_shards();
+            let len = cluster.block_len();
             // charge encode + distribution to the requesting node, exactly
             // as request_job models it for the fluid backend
             cluster.write_stripe_from(stripe, fg_write_data(stripe, k, len), req.client)?;
@@ -94,13 +115,14 @@ fn execute_one(cluster: &MiniCluster, req: &Request) -> Result<()> {
     Ok(())
 }
 
-/// Run a request sequence against the MiniCluster, measuring per-request
-/// latency. `workers` bounds the open-loop pool (closed loop spawns the
-/// arrival model's client count). While running, `fg_active` (when given)
-/// is held `true` so the recovery executor's QoS throttle and the link
-/// split apply exactly while foreground load exists.
-pub fn run_on_cluster(
-    cluster: &MiniCluster,
+/// Run a request sequence against a cluster (any [`ClientIo`] data
+/// plane), measuring per-request latency. `workers` bounds the open-loop
+/// pool (closed loop spawns the arrival model's client count). While
+/// running, `fg_active` (when given) is held `true` so the recovery
+/// executor's QoS throttle and the link split apply exactly while
+/// foreground load exists.
+pub fn run_on_cluster<C: ClientIo>(
+    cluster: &C,
     reqs: &[Request],
     arrival: ArrivalModel,
     workers: usize,

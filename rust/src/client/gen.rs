@@ -172,14 +172,14 @@ impl FgSpec {
         let mut out = Vec::with_capacity(self.requests);
         let mut writes = 0u64;
         for id in 0..self.requests {
-            let pick = rng.below(total_weight as usize) as u32;
+            let pick = rng.below_u64(u64::from(total_weight)) as u32;
             let class = if pick < self.read_weight {
                 // healthy data block: rejection-sample away from the
                 // failure set (bounded; the failure set never covers
                 // every data block of every stripe in practice)
                 let mut choice = None;
                 for _ in 0..64 {
-                    let sid = rng.below(stripes as usize) as u64;
+                    let sid = rng.below_u64(stripes);
                     let block = rng.below(k);
                     if !failed.contains(&table.stripe(sid).locs[block]) {
                         choice = Some(RequestClass::NormalRead { stripe: sid, block });

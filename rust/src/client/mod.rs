@@ -28,7 +28,7 @@
 pub mod engine;
 pub mod gen;
 
-pub use engine::{request_job, run_on_cluster, FgOutcome};
+pub use engine::{request_job, run_on_cluster, ClientIo, FgOutcome};
 pub use gen::{ArrivalModel, FgSpec, Request, RequestClass};
 
 /// The QoS policy a mixed-load scenario carries (DESIGN.md §11): how the

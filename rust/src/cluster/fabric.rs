@@ -1,0 +1,511 @@
+//! Transport-agnostic recovery/scenario orchestration (DESIGN.md §13).
+//!
+//! [`BlockFabric`] is the narrow waist between the orchestration layers
+//! (pipelined recovery executor, client engine, scenario runner, §5.3
+//! migration) and a concrete data plane. Two fabrics implement it: the
+//! in-process [`super::MiniCluster`] (blocks in per-node hash maps) and
+//! the socket-backed [`crate::net::NetCluster`] (blocks on node workers
+//! behind a length-prefixed RPC). Everything above the trait — chunking,
+//! scheduling, QoS pacing, byte accounting diffs, outcome assembly — is
+//! shared code, which is what makes exact cross-backend byte parity a
+//! property by construction instead of a tuning exercise.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::client::{ArrivalModel, ClientIo, FgOutcome, QosConfig, Request};
+use crate::codes::CodeSpec;
+use crate::gf;
+use crate::placement::{Placement, PlacementTable};
+use crate::recovery::executor::{execute_plans, ChunkRunner, ExecutorConfig, Scratch};
+use crate::recovery::migration::MigrationBatch;
+use crate::recovery::plan::{plan_coefficients, RepairPlan};
+use crate::scenario::{
+    degraded_read_plans, distinct_racks, planned_cross_rack_blocks, FailureScenario,
+    ScenarioKind, ScenarioOutcome,
+};
+use crate::topology::Location;
+
+use super::links::{LinkSet, TrafficClass};
+use super::ClusterRecoveryStats;
+
+/// A cluster data plane the shared orchestration layers can drive.
+///
+/// Contract for implementors: every *modeled* byte movement (the
+/// `transfer`/`transfer_group` calls and the rack counters behind
+/// [`BlockFabric::rack_byte_snapshot`]) must be charged identically for
+/// identical logical operations, regardless of how the payload actually
+/// moves — that invariant is what the three-way parity suite checks.
+pub trait BlockFabric: Sync {
+    /// The placement policy's erasure code.
+    fn code(&self) -> CodeSpec;
+    /// The policy's placement period, if periodic (DESIGN.md §10).
+    fn period(&self) -> Option<u64>;
+    /// Block size in bytes.
+    fn block_size(&self) -> u64;
+    /// The modeled link fabric (token buckets, gates, QoS split).
+    fn links(&self) -> &LinkSet;
+    /// Current location of a block (NameNode metadata).
+    fn locate(&self, sid: u64, block: usize) -> Location;
+    /// Read bytes `[off, off + len)` of a block into `buf` (cleared
+    /// first) and return where the block lives. Disk half only — the
+    /// caller owes the fabric a matching `transfer`/`transfer_group`.
+    fn read_chunk(
+        &self,
+        sid: u64,
+        block: usize,
+        off: u64,
+        len: usize,
+        buf: &mut Vec<u8>,
+    ) -> Result<Location>;
+    /// Store a finished block at `at` and update the block map: if `at`
+    /// is the block's canonical (policy) home the relocation override is
+    /// dropped, otherwise it is (re)pointed at `at`.
+    fn persist_block(&self, sid: u64, block: usize, at: Location, bytes: Vec<u8>) -> Result<()>;
+    /// Drop a block replica from `at` (metadata is NOT touched — callers
+    /// re-point via [`BlockFabric::persist_block`] first).
+    fn remove_block(&self, sid: u64, block: usize, at: Location) -> Result<()>;
+    /// Charge one modeled transfer (cross-rack accounting + links).
+    fn transfer(&self, src: Location, dst: Location, bytes: u64, class: TrafficClass);
+    /// Charge a batched inbound recovery-class group (DESIGN.md §10).
+    fn transfer_group(&self, to: Location, flows: &[(Location, u64)]);
+    /// Snapshot of the per-rack cross-rack byte counters (up, down).
+    fn rack_byte_snapshot(&self) -> Vec<(u64, u64)>;
+    /// Kill a node: erase its storage (recovery must rebuild from peers).
+    fn fail_node(&self, loc: Location);
+    /// Install a QoS split for a mixed-load run (DESIGN.md §11).
+    fn set_qos(&self, cfg: QosConfig, fg_active: Arc<AtomicBool>);
+    /// Remove the QoS split.
+    fn clear_qos(&self);
+    /// The recovery executor's per-chunk pacing hook.
+    fn qos_pace(&self, _busy_s: f64) {}
+}
+
+/// Per-rack-link (busy, stall) seconds accumulated since `before`, a
+/// snapshot taken with [`LinkSet::link_busy_stall`] — the time analogue
+/// of diffing two [`BlockFabric::rack_byte_snapshot`]s.
+fn link_busy_stall_since<F: BlockFabric + ?Sized>(
+    fabric: &F,
+    before: &[(f64, f64)],
+) -> Vec<(f64, f64)> {
+    before
+        .iter()
+        .zip(fabric.links().link_busy_stall())
+        .map(|(&(b0, s0), (b1, s1))| (b1 - b0, s1 - s0))
+        .collect()
+}
+
+/// One plan's fetch structure with decode coefficients resolved at build
+/// time (once per plan, not once per chunk): inner-rack aggregation
+/// groups and the direct source set, each as `(block, coeff)` lists.
+struct PlanFetch {
+    /// (aggregator location, that rack's inputs).
+    aggs: Vec<(Location, Vec<(usize, u8)>)>,
+    /// Sources shipped straight to the compute node.
+    direct: Vec<(usize, u8)>,
+}
+
+/// Chunk-level IO behind the pipelined executor: fetches source-chunk
+/// bytes through the gated, token-bucket-throttled links into pooled
+/// scratch buffers — per source, or per window through the batched
+/// single-gate-acquisition path (DESIGN.md §10) — runs ONE fused
+/// cache-blocked multiply-accumulate per aggregation group and per
+/// direct-source set ([`gf::combine_many_into`], DESIGN.md §9), and
+/// persists finished blocks into the NameNode metadata. Decode
+/// coefficients are resolved once per plan, not once per chunk, and the
+/// steady-state chunk loop allocates nothing — every buffer (including
+/// the batched-fetch flow list) cycles through the worker's [`Scratch`]
+/// pool. Generic over the fabric, so the identical chunk loop drives
+/// both the in-process and the socket-backed cluster.
+struct ChunkIo<'a, F: BlockFabric> {
+    fabric: &'a F,
+    /// Per-plan resolved fetch groups.
+    fetch: Vec<PlanFetch>,
+    /// Coalesce each task's same-destination fetches into one batched
+    /// gated round trip (DESIGN.md §10) instead of one per source.
+    batched: bool,
+}
+
+impl<'a, F: BlockFabric> ChunkIo<'a, F> {
+    fn new(fabric: &'a F, plans: &[RepairPlan], batched: bool) -> ChunkIo<'a, F> {
+        let code = fabric.code();
+        let fetch = plans
+            .iter()
+            .map(|p| {
+                let sources = p.source_blocks();
+                let coeffs = plan_coefficients(&code, p);
+                let coeff_of = |b: usize| -> u8 {
+                    coeffs[sources.binary_search(&b).expect("source present")]
+                };
+                PlanFetch {
+                    aggs: p
+                        .aggregations
+                        .iter()
+                        .map(|agg| {
+                            (
+                                agg.at,
+                                agg.inputs
+                                    .iter()
+                                    .map(|&(b, _)| (b, coeff_of(b)))
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                    direct: p.direct.iter().map(|&(b, _)| (b, coeff_of(b))).collect(),
+                }
+            })
+            .collect();
+        ChunkIo { fabric, fetch, batched }
+    }
+
+    /// Fetch every `(block, coeff)` source's `[off, off + len)` window to
+    /// `to`, pushing `(coeff, bytes)` pairs onto `fetched`. Batched mode
+    /// reads all windows from disk first and then moves the whole group
+    /// through the links in one gated round trip; per-chunk mode issues
+    /// one gated transfer per source (the pre-§10 baseline).
+    #[allow(clippy::too_many_arguments)]
+    fn fetch_sources(
+        &self,
+        stripe: u64,
+        blocks: &[(usize, u8)],
+        off: u64,
+        len: usize,
+        to: Location,
+        scratch: &mut Scratch,
+        fetched: &mut Vec<(u8, Vec<u8>)>,
+    ) -> Result<()> {
+        if self.batched {
+            let mut flows = scratch.take_flows();
+            for &(b, c) in blocks {
+                let mut buf = scratch.take();
+                match self.fabric.read_chunk(stripe, b, off, len, &mut buf) {
+                    Ok(src) => {
+                        flows.push((src, len as u64));
+                        fetched.push((c, buf));
+                    }
+                    Err(e) => {
+                        scratch.put(buf);
+                        scratch.put_flows(flows);
+                        return Err(e);
+                    }
+                }
+            }
+            self.fabric.transfer_group(to, &flows);
+            scratch.put_flows(flows);
+        } else {
+            for &(b, c) in blocks {
+                let mut buf = scratch.take();
+                let src = self.fabric.read_chunk(stripe, b, off, len, &mut buf)?;
+                self.fabric.transfer(src, to, len as u64, TrafficClass::Recovery);
+                fetched.push((c, buf));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<F: BlockFabric> ChunkRunner for ChunkIo<'_, F> {
+    fn run_chunk(
+        &self,
+        plan_idx: usize,
+        plan: &RepairPlan,
+        off: u64,
+        len: usize,
+        scratch: &mut Scratch,
+    ) -> Result<Vec<u8>> {
+        let fetch = &self.fetch[plan_idx];
+        let mut acc = scratch.take_zeroed(len);
+        let mut fetched = scratch.take_staging();
+        for (at, inputs) in &fetch.aggs {
+            // inner-rack aggregation at `at`, then ship ONE aggregated
+            // chunk to the compute node
+            let mut partial = scratch.take_zeroed(len);
+            self.fetch_sources(plan.stripe, inputs, off, len, *at, scratch, &mut fetched)?;
+            gf::combine_many_into(&mut partial, &fetched);
+            for (_, buf) in fetched.drain(..) {
+                scratch.put(buf);
+            }
+            self.fabric
+                .transfer(*at, plan.compute_at, len as u64, TrafficClass::Recovery);
+            gf::xor_into(&mut acc, &partial);
+            scratch.put(partial);
+        }
+        self.fetch_sources(
+            plan.stripe,
+            &fetch.direct,
+            off,
+            len,
+            plan.compute_at,
+            scratch,
+            &mut fetched,
+        )?;
+        gf::combine_many_into(&mut acc, &fetched);
+        scratch.put_staging(fetched);
+        Ok(acc)
+    }
+
+    fn finish_plan(&self, _plan_idx: usize, plan: &RepairPlan, block: Vec<u8>) -> Result<()> {
+        if plan.persist {
+            self.fabric
+                .persist_block(plan.stripe, plan.failed_block, plan.writer, block)?;
+        }
+        Ok(())
+    }
+
+    fn throttle(&self, busy_s: f64) {
+        self.fabric.qos_pace(busy_s);
+    }
+}
+
+/// Plan-set recovery with full control of the pipelined executor
+/// (DESIGN.md §8) on any [`BlockFabric`]: plans are split into
+/// `cfg.chunk_size` tasks, scheduled over `cfg.workers` threads, and
+/// every transfer runs under the per-node / per-rack-link in-flight
+/// caps. λ is computed over the racks not in `failed_racks`; traffic
+/// accounting covers exactly this recovery.
+pub fn recover_with_plans_cfg<F: BlockFabric>(
+    fabric: &F,
+    plans: Vec<RepairPlan>,
+    cfg: ExecutorConfig,
+    failed_racks: &[u32],
+) -> Result<ClusterRecoveryStats> {
+    let mut cfg = cfg;
+    // the balanced scheduler tiles its coloring across the placement
+    // period when the policy is periodic (DESIGN.md §10)
+    if cfg.period.is_none() {
+        cfg.period = fabric.period();
+    }
+    let before = fabric.rack_byte_snapshot();
+    let links_before = fabric.links().link_busy_stall();
+    let blocks = plans.len();
+    let bytes: u64 = blocks as u64 * fabric.block_size();
+    fabric.links().set_inflight_caps(cfg.node_inflight, cfg.link_inflight);
+    let io = ChunkIo::new(fabric, &plans, cfg.batched_fetch);
+    let run = execute_plans(&io, &plans, fabric.block_size(), &cfg);
+    // lift the caps so post-recovery traffic (reads, writes) is ungated
+    fabric.links().set_inflight_caps(0, 0);
+    let stats = run?;
+    let after = fabric.rack_byte_snapshot();
+    let rack_bytes: Vec<(u64, u64)> = before
+        .iter()
+        .zip(&after)
+        .map(|(&(u0, d0), &(u1, d1))| (u1 - u0, d1 - d0))
+        .collect();
+    let link_busy_stall = link_busy_stall_since(fabric, &links_before);
+    let loads: Vec<(f64, f64)> = rack_bytes.iter().map(|&(u, d)| (u as f64, d as f64)).collect();
+    let lambda = crate::sim::recovery::lambda_metric_excluding(&loads, failed_racks);
+    let secs = stats.wall_s;
+    Ok(ClusterRecoveryStats {
+        blocks,
+        bytes,
+        wall: Duration::from_secs_f64(secs),
+        throughput_mb_s: if secs > 0.0 { bytes as f64 / secs / 1e6 } else { 0.0 },
+        rack_bytes,
+        lambda,
+        chunks: stats.chunks,
+        rounds: stats.rounds,
+        worker_utilization: stats.utilization(),
+        scratch: stats.scratch,
+        link_busy_stall,
+    })
+}
+
+/// Run recovery and a foreground request sequence concurrently under
+/// `qos` (DESIGN.md §11): install the split, drive the client engine
+/// beside the recovery executor, remove the split afterwards. The ONE
+/// mixed-load orchestration, shared by every backend and the perf
+/// harness — the fg-activity flag's lifecycle lives here.
+#[allow(clippy::too_many_arguments)]
+pub fn run_mixed_load<F: BlockFabric + ClientIo>(
+    fabric: &F,
+    plans: Vec<RepairPlan>,
+    cfg: ExecutorConfig,
+    failed_racks: &[u32],
+    reqs: &[Request],
+    arrival: ArrivalModel,
+    fg_workers: usize,
+    qos: QosConfig,
+) -> Result<(ClusterRecoveryStats, FgOutcome)> {
+    let fg_active = Arc::new(AtomicBool::new(true));
+    fabric.set_qos(qos, fg_active.clone());
+    let flag: &AtomicBool = fg_active.as_ref();
+    let (stats, fgout) = std::thread::scope(|scope| {
+        let engine = scope.spawn(move || {
+            crate::client::run_on_cluster(fabric, reqs, arrival, fg_workers, Some(flag))
+        });
+        let stats = recover_with_plans_cfg(fabric, plans, cfg, failed_racks);
+        (stats, engine.join().expect("client engine thread"))
+    });
+    fabric.clear_qos();
+    Ok((stats?, fgout?))
+}
+
+/// Execute §5.3 layout-maintenance migration batches on a fabric: each
+/// move reads the block at its post-recovery writer, ships it to the
+/// relived node's replacement (recovery-class traffic, exactly the flow
+/// [`crate::sim::recovery::run_migration`] models), persists it there —
+/// which drops the relocation override when the target is the canonical
+/// home — and removes the stray replica. Returns per-batch wall seconds,
+/// index-aligned with the sim's per-batch times.
+pub fn run_migration<F: BlockFabric>(
+    fabric: &F,
+    batches: &[MigrationBatch],
+    relived: Location,
+) -> Result<Vec<f64>> {
+    let bs = fabric.block_size();
+    let mut times = Vec::with_capacity(batches.len());
+    let mut buf = Vec::new();
+    for batch in batches {
+        let t0 = Instant::now();
+        for mv in &batch.moves {
+            fabric.read_chunk(mv.stripe, mv.block, 0, bs as usize, &mut buf)?;
+            fabric.transfer(mv.from, relived, bs, TrafficClass::Recovery);
+            fabric.persist_block(mv.stripe, mv.block, relived, std::mem::take(&mut buf))?;
+            if mv.from != relived {
+                fabric.remove_block(mv.stripe, mv.block, mv.from)?;
+            }
+        }
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    Ok(times)
+}
+
+/// The scenario engine's shared backend body (DESIGN.md §5, §13): fail,
+/// recover (or serve the degraded burst / mixed load) and assemble a
+/// [`ScenarioOutcome`] tagged with `backend`. `populate` builds a fresh,
+/// fully written fabric — called once for the measured run and once more
+/// for the isolated mixed-load baseline.
+pub fn run_scenario<F, P>(
+    backend: &'static str,
+    scenario: &FailureScenario,
+    policy: &Arc<dyn Placement>,
+    populate: P,
+    cfg: ExecutorConfig,
+    workers: usize,
+    block_size: u64,
+) -> Result<ScenarioOutcome>
+where
+    F: BlockFabric + ClientIo,
+    P: Fn() -> Result<F>,
+{
+    let cluster = populate()?;
+
+    if matches!(scenario.kind, ScenarioKind::DegradedBurst { .. }) {
+        // pure foreground load: the client engine *is* the scenario —
+        // no separate burst loop (DESIGN.md §11); one table serves
+        // generation and plan derivation
+        let table = PlacementTable::build(policy.clone(), scenario.stripes);
+        let (fgspec, reqs) = scenario
+            .fg_requests_with(&table)?
+            .expect("degraded burst always carries fg traffic");
+        let failed = scenario.failed_nodes(policy.as_ref())[0];
+        cluster.fail_node(failed);
+        let plans = degraded_read_plans(&table, &reqs, scenario.seed);
+        let before = cluster.rack_byte_snapshot();
+        let links_before = cluster.links().link_busy_stall();
+        let out =
+            crate::client::run_on_cluster(&cluster, &reqs, fgspec.arrival, workers, None)?;
+        let after = cluster.rack_byte_snapshot();
+        let rack_cross_bytes: Vec<(u64, u64)> = before
+            .iter()
+            .zip(&after)
+            .map(|(&(u0, d0), &(u1, d1))| (u1 - u0, d1 - d0))
+            .collect();
+        let link_busy_stall = link_busy_stall_since(&cluster, &links_before);
+        let summary = out.summary();
+        let mean = summary.as_ref().map(|s| s.mean).unwrap_or(0.0);
+        let loads: Vec<(f64, f64)> =
+            rack_cross_bytes.iter().map(|&(u, d)| (u as f64, d as f64)).collect();
+        let wall = out.seconds;
+        let bytes = out.served() as u64 * block_size;
+        return Ok(ScenarioOutcome {
+            backend,
+            scenario: scenario.name(),
+            policy: policy.name().to_string(),
+            blocks: out.served(),
+            bytes,
+            seconds: wall,
+            throughput_mb_s: if wall > 0.0 { bytes as f64 / wall / 1e6 } else { 0.0 },
+            lambda: crate::sim::recovery::lambda_metric_excluding(&loads, &[failed.rack]),
+            rack_cross_bytes,
+            planned_cross_rack_blocks: planned_cross_rack_blocks(&plans),
+            degraded_read_mean_s: Some(mean),
+            frontend_seconds: None,
+            worker_utilization: None,
+            scratch_pool: None,
+            link_busy_stall: Some(link_busy_stall),
+            fg_latency: summary,
+            recovery_slowdown: None,
+        });
+    }
+
+    let (failed, plans) = scenario.recovery_plans(policy)?;
+    for &f in &failed {
+        cluster.fail_node(f);
+    }
+    let planned = planned_cross_rack_blocks(&plans);
+    let racks = distinct_racks(&failed);
+    let Some((fgspec, reqs)) = scenario.fg_requests(policy)? else {
+        // plain recovery: no foreground traffic, no QoS split
+        let stats = recover_with_plans_cfg(&cluster, plans, cfg, &racks)?;
+        return Ok(backend_outcome(backend, scenario, policy.name(), &stats, planned, None));
+    };
+
+    // mixed load: recovery and the client engine share the links under
+    // the scenario's QoS split. The slowdown factor needs the same
+    // recovery measured alone, on an identically populated cluster.
+    let baseline_s = {
+        let isolated = populate()?;
+        for &f in &failed {
+            isolated.fail_node(f);
+        }
+        recover_with_plans_cfg(&isolated, plans.clone(), cfg, &racks)?.wall.as_secs_f64()
+    };
+    let (stats, fgout) = run_mixed_load(
+        &cluster,
+        plans,
+        cfg,
+        &racks,
+        &reqs,
+        fgspec.arrival,
+        workers,
+        scenario.qos,
+    )?;
+    let mut out =
+        backend_outcome(backend, scenario, policy.name(), &stats, planned, Some(fgout.seconds));
+    out.fg_latency = fgout.summary();
+    out.recovery_slowdown = Some(stats.wall.as_secs_f64() / baseline_s.max(1e-9));
+    Ok(out)
+}
+
+fn backend_outcome(
+    backend: &'static str,
+    scenario: &FailureScenario,
+    policy_name: &str,
+    stats: &ClusterRecoveryStats,
+    planned_cross_rack_blocks: usize,
+    frontend_seconds: Option<f64>,
+) -> ScenarioOutcome {
+    ScenarioOutcome {
+        backend,
+        scenario: scenario.name(),
+        policy: policy_name.to_string(),
+        blocks: stats.blocks,
+        bytes: stats.bytes,
+        seconds: stats.wall.as_secs_f64(),
+        throughput_mb_s: stats.throughput_mb_s,
+        lambda: stats.lambda,
+        rack_cross_bytes: stats.rack_bytes.clone(),
+        planned_cross_rack_blocks,
+        degraded_read_mean_s: None,
+        frontend_seconds,
+        worker_utilization: Some(stats.worker_utilization.clone()),
+        scratch_pool: Some(stats.scratch),
+        link_busy_stall: Some(stats.link_busy_stall.clone()),
+        fg_latency: None,
+        recovery_slowdown: None,
+    }
+}

@@ -4,10 +4,22 @@
 //! exactly like the testbed's.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::topology::Location;
+
+/// Lock a mutex, clearing any poison. Every invariant guarded in this
+/// module survives a panicking holder — gate holder counts are released
+/// by RAII, token-bucket balances are only ever read-modify-written
+/// atomically under the lock, and the QoS bank is a swap-in/out Option —
+/// so a worker that dies mid-transfer must surface *its* panic, not
+/// cascade an opaque `PoisonError` into every later transfer on the same
+/// link (mandatory once RPC node workers can fail mid-flight).
+#[inline]
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Which traffic class a transfer belongs to (DESIGN.md §11): client I/O
 /// (reads, degraded reads, writes) is foreground; the recovery executor's
@@ -35,7 +47,7 @@ pub struct GateGuard<'a>(Option<&'a Gate>);
 impl Drop for GateGuard<'_> {
     fn drop(&mut self) {
         if let Some(g) = self.0 {
-            let mut n = g.holders.lock().unwrap();
+            let mut n = lock_clean(&g.holders);
             *n -= 1;
             g.cv.notify_one();
         }
@@ -51,7 +63,7 @@ impl Gate {
     pub fn set_cap(&self, cap: usize) {
         // store + notify under the holders lock: a waiter between its cap
         // re-check and cv.wait() would otherwise miss the wakeup
-        let _holders = self.holders.lock().unwrap();
+        let _holders = lock_clean(&self.holders);
         self.cap.store(cap, Ordering::Relaxed);
         self.cv.notify_all();
     }
@@ -61,13 +73,13 @@ impl Gate {
         if self.cap.load(Ordering::Relaxed) == 0 {
             return GateGuard(None);
         }
-        let mut n = self.holders.lock().unwrap();
+        let mut n = lock_clean(&self.holders);
         loop {
             let cap = self.cap.load(Ordering::Relaxed);
             if cap == 0 || *n < cap {
                 break;
             }
-            n = self.cv.wait(n).unwrap();
+            n = self.cv.wait(n).unwrap_or_else(PoisonError::into_inner);
         }
         *n += 1;
         GateGuard(Some(self))
@@ -113,7 +125,7 @@ impl TokenBucket {
         loop {
             let wait;
             {
-                let mut st = self.state.lock().unwrap();
+                let mut st = lock_clean(&self.state);
                 let now = Instant::now();
                 st.tokens = (st.tokens + now.duration_since(st.last).as_secs_f64() * self.rate)
                     .min(self.burst);
@@ -213,7 +225,7 @@ impl LinkSet {
     /// capped at `share` of every node port and rack link while
     /// `fg_active` holds true. `share` outside (0, 1) removes the split.
     pub fn set_qos(&self, share: f64, fg_active: Arc<AtomicBool>) {
-        let mut qos = self.qos.lock().unwrap();
+        let mut qos = lock_clean(&self.qos);
         *qos = if share > 0.0 && share < 1.0 {
             Some(Arc::new(QosSplit {
                 nodes: (0..self.nics.len())
@@ -242,7 +254,7 @@ impl LinkSet {
 
     /// Remove the recovery/foreground split.
     pub fn clear_qos(&self) {
-        *self.qos.lock().unwrap() = None;
+        *lock_clean(&self.qos) = None;
         self.qos_on.store(false, Ordering::Relaxed);
     }
 
@@ -411,7 +423,7 @@ impl LinkSet {
     ) {
         let qos: Option<Arc<QosSplit>> =
             if class == TrafficClass::Recovery && self.qos_on.load(Ordering::Relaxed) {
-                self.qos.lock().unwrap().clone()
+                lock_clean(&self.qos).clone()
             } else {
                 None
             };
@@ -636,6 +648,56 @@ mod tests {
         let idle = t2.elapsed().as_secs_f64();
         assert!(idle < rec * 0.8, "idle split still throttles: {idle} vs {rec}");
         links.clear_qos();
+    }
+
+    #[test]
+    fn poisoned_locks_recover_instead_of_cascading() {
+        // Regression: a worker panicking while holding a link-layer lock
+        // used to turn every later transfer into an opaque PoisonError
+        // panic, burying the original failure. Poison each mutex class
+        // and assert the layer keeps working.
+        let mut spec = SystemSpec::paper_default();
+        spec.net.inner_mbps = 8000.0;
+        spec.net.cross_mbps = 1600.0;
+        let links = Arc::new(LinkSet::new(&spec));
+        links.set_inflight_caps(2, 2);
+
+        // poison a gate's holders mutex mid-hold
+        let g = &links.node_gates[0];
+        let poison = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _n = g.holders.lock().unwrap();
+            panic!("worker died holding the gate lock");
+        }));
+        assert!(poison.is_err());
+        assert!(g.holders.is_poisoned());
+        let hold = g.enter(); // must not panic
+        drop(hold);
+        g.set_cap(3);
+
+        // poison a token bucket's state
+        let bucket = &links.nics[0].0;
+        let poison = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _st = bucket.state.lock().unwrap();
+            panic!("worker died holding the bucket lock");
+        }));
+        assert!(poison.is_err());
+        bucket.acquire(1024); // must not panic
+
+        // poison the QoS bank and run a recovery transfer through it
+        links.set_qos(0.5, Arc::new(AtomicBool::new(true)));
+        let poison = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _q = links.qos.lock().unwrap();
+            panic!("worker died holding the qos lock");
+        }));
+        assert!(poison.is_err());
+        links.transfer_class(
+            Location::new(0, 0),
+            Location::new(1, 1),
+            64 * 1024,
+            TrafficClass::Recovery,
+        );
+        links.clear_qos();
+        links.set_inflight_caps(0, 0);
     }
 
     #[test]

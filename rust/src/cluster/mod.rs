@@ -9,6 +9,7 @@
 //! lives in [`MiniCluster`]. The discrete-event simulator answers the
 //! paper's parameter sweeps; this cluster proves the layers compose.
 
+pub mod fabric;
 pub mod links;
 pub mod service;
 
@@ -21,14 +22,15 @@ use anyhow::{anyhow, bail, Context};
 
 use crate::client::QosConfig;
 use crate::codes::CodeSpec;
-use crate::gf;
 use crate::metrics::PoolStats;
-use crate::placement::{Placement, PlacementTable};
-use crate::recovery::executor::{execute_plans, ChunkRunner, ExecutorConfig, Scratch};
+use crate::placement::Placement;
+use crate::recovery::executor::ExecutorConfig;
+use crate::recovery::migration::MigrationBatch;
 use crate::recovery::plan::{plan_coefficients, plan_degraded_read, plan_repair, RepairPlan};
 use crate::recovery::schedule::SchedulePolicy;
 use crate::topology::{Location, SystemSpec};
 
+pub use fabric::BlockFabric;
 use links::{LinkSet, TrafficClass};
 use service::CoderService;
 
@@ -345,29 +347,11 @@ impl MiniCluster {
         Ok(data)
     }
 
-    /// Fetch bytes `[off, off + len)` of a source block to `to` — the
-    /// executor's chunk-granular read + throttled transfer. The bytes
-    /// land in `buf` (cleared first), so a pooled scratch buffer can be
-    /// reused across fetches instead of allocating per chunk.
-    fn fetch_chunk_into(
-        &self,
-        sid: u64,
-        block: usize,
-        off: u64,
-        len: usize,
-        to: Location,
-        buf: &mut Vec<u8>,
-    ) -> anyhow::Result<()> {
-        let loc = self.read_chunk_into(sid, block, off, len, buf)?;
-        self.transfer(loc, to, len as u64, TrafficClass::Recovery);
-        Ok(())
-    }
-
     /// Disk half of a chunk fetch: copy bytes `[off, off + len)` of a
     /// source block into `buf` (cleared first) and return where the
     /// block lives. The caller owes the network a matching transfer —
-    /// either per chunk ([`MiniCluster::fetch_chunk_into`]) or batched
-    /// per window ([`MiniCluster::transfer_group`]).
+    /// either per chunk or batched per window
+    /// ([`MiniCluster::transfer_group`]).
     fn read_chunk_into(
         &self,
         sid: u64,
@@ -540,46 +524,24 @@ impl MiniCluster {
         cfg: ExecutorConfig,
         failed_racks: &[u32],
     ) -> anyhow::Result<ClusterRecoveryStats> {
-        let mut cfg = cfg;
-        // the balanced scheduler tiles its coloring across the placement
-        // period when the policy is periodic (DESIGN.md §10)
-        if cfg.period.is_none() {
-            cfg.period = self.policy.period();
-        }
-        let before = self.rack_byte_snapshot();
-        let links_before = self.links.link_busy_stall();
-        let blocks = plans.len();
-        let bytes: u64 = blocks as u64 * self.spec.block_size;
-        self.links.set_inflight_caps(cfg.node_inflight, cfg.link_inflight);
-        let io = ChunkIo::new(self, &plans, cfg.batched_fetch);
-        let run = execute_plans(&io, &plans, self.spec.block_size, &cfg);
-        // lift the caps so post-recovery traffic (reads, writes) is ungated
-        self.links.set_inflight_caps(0, 0);
-        let stats = run?;
-        let after = self.rack_byte_snapshot();
-        let rack_bytes: Vec<(u64, u64)> = before
-            .iter()
-            .zip(&after)
-            .map(|(&(u0, d0), &(u1, d1))| (u1 - u0, d1 - d0))
-            .collect();
-        let link_busy_stall = self.link_busy_stall_since(&links_before);
-        let loads: Vec<(f64, f64)> =
-            rack_bytes.iter().map(|&(u, d)| (u as f64, d as f64)).collect();
-        let lambda = crate::sim::recovery::lambda_metric_excluding(&loads, failed_racks);
-        let secs = stats.wall_s;
-        Ok(ClusterRecoveryStats {
-            blocks,
-            bytes,
-            wall: Duration::from_secs_f64(secs),
-            throughput_mb_s: if secs > 0.0 { bytes as f64 / secs / 1e6 } else { 0.0 },
-            rack_bytes,
-            lambda,
-            chunks: stats.chunks,
-            rounds: stats.rounds,
-            worker_utilization: stats.utilization(),
-            scratch: stats.scratch,
-            link_busy_stall,
-        })
+        fabric::recover_with_plans_cfg(self, plans, cfg, failed_racks)
+    }
+
+    /// Execute §5.3 layout-maintenance migration batches against the real
+    /// stores (see [`fabric::run_migration`]); per-batch wall seconds,
+    /// index-aligned with [`crate::sim::recovery::run_migration`].
+    pub fn run_migration(
+        &self,
+        batches: &[MigrationBatch],
+        relived: Location,
+    ) -> anyhow::Result<Vec<f64>> {
+        fabric::run_migration(self, batches, relived)
+    }
+
+    /// Bring a failed node back as an empty replacement machine at the
+    /// same location (the §5.3 "relived" node migration restores onto).
+    pub fn relive_node(&self, loc: Location) {
+        self.failed.lock().unwrap().retain(|&f| f != loc);
     }
 
     /// Run recovery and a foreground request sequence concurrently under
@@ -598,34 +560,12 @@ impl MiniCluster {
         fg_workers: usize,
         qos: QosConfig,
     ) -> anyhow::Result<(ClusterRecoveryStats, crate::client::FgOutcome)> {
-        let fg_active = Arc::new(AtomicBool::new(true));
-        self.set_qos(qos, fg_active.clone());
-        let flag: &AtomicBool = fg_active.as_ref();
-        let (stats, fgout) = std::thread::scope(|scope| {
-            let engine = scope.spawn(move || {
-                crate::client::run_on_cluster(self, reqs, arrival, fg_workers, Some(flag))
-            });
-            let stats = self.recover_with_plans_cfg(plans, cfg, failed_racks);
-            (stats, engine.join().expect("client engine thread"))
-        });
-        self.clear_qos();
-        Ok((stats?, fgout?))
+        fabric::run_mixed_load(self, plans, cfg, failed_racks, reqs, arrival, fg_workers, qos)
     }
 
     /// Blocks currently stored on `loc`.
     pub fn block_count(&self, loc: Location) -> usize {
         self.store_of(loc).lock().unwrap().len()
-    }
-
-    /// Per-rack-link (busy, stall) seconds accumulated since `before`, a
-    /// snapshot taken with [`links::LinkSet::link_busy_stall`] — the time
-    /// analogue of diffing two [`MiniCluster::rack_byte_snapshot`]s.
-    fn link_busy_stall_since(&self, before: &[(f64, f64)]) -> Vec<(f64, f64)> {
-        before
-            .iter()
-            .zip(self.links.link_busy_stall())
-            .map(|(&(b0, s0), (b1, s1))| (b1 - b0, s1 - s0))
-            .collect()
     }
 
     /// Snapshot of the per-rack cross-rack byte counters (up, down) —
@@ -645,176 +585,123 @@ impl MiniCluster {
     }
 }
 
-/// One plan's fetch structure with decode coefficients resolved at build
-/// time (once per plan, not once per chunk): inner-rack aggregation
-/// groups and the direct source set, each as `(block, coeff)` lists.
-struct PlanFetch {
-    /// (aggregator location, that rack's inputs).
-    aggs: Vec<(Location, Vec<(usize, u8)>)>,
-    /// Sources shipped straight to the compute node.
-    direct: Vec<(usize, u8)>,
-}
-
-/// Chunk-level IO behind the pipelined executor: fetches source-chunk
-/// bytes through the gated, token-bucket-throttled links into pooled
-/// scratch buffers — per source, or per window through the batched
-/// single-gate-acquisition path (DESIGN.md §10) — runs ONE fused
-/// cache-blocked multiply-accumulate per aggregation group and per
-/// direct-source set ([`gf::combine_many_into`], DESIGN.md §9), and
-/// persists finished blocks into the NameNode metadata. Decode
-/// coefficients are resolved once per plan, not once per chunk, and the
-/// steady-state chunk loop allocates nothing — every buffer (including
-/// the batched-fetch flow list) cycles through the worker's [`Scratch`]
-/// pool.
-struct ChunkIo<'a> {
-    cluster: &'a MiniCluster,
-    /// Per-plan resolved fetch groups.
-    fetch: Vec<PlanFetch>,
-    /// Coalesce each task's same-destination fetches into one batched
-    /// gated round trip (DESIGN.md §10) instead of one per source.
-    batched: bool,
-}
-
-impl<'a> ChunkIo<'a> {
-    fn new(cluster: &'a MiniCluster, plans: &[RepairPlan], batched: bool) -> ChunkIo<'a> {
-        let code = cluster.policy.code();
-        let fetch = plans
-            .iter()
-            .map(|p| {
-                let sources = p.source_blocks();
-                let coeffs = plan_coefficients(&code, p);
-                let coeff_of = |b: usize| -> u8 {
-                    coeffs[sources.binary_search(&b).expect("source present")]
-                };
-                PlanFetch {
-                    aggs: p
-                        .aggregations
-                        .iter()
-                        .map(|agg| {
-                            (
-                                agg.at,
-                                agg.inputs
-                                    .iter()
-                                    .map(|&(b, _)| (b, coeff_of(b)))
-                                    .collect(),
-                            )
-                        })
-                        .collect(),
-                    direct: p.direct.iter().map(|&(b, _)| (b, coeff_of(b))).collect(),
-                }
-            })
-            .collect();
-        ChunkIo { cluster, fetch, batched }
+/// The in-process data plane behind the shared orchestration layers
+/// (DESIGN.md §13): blocks live in per-node hash maps, every modeled
+/// transfer is charged through the token-bucket links and rack counters.
+impl BlockFabric for MiniCluster {
+    fn code(&self) -> CodeSpec {
+        self.policy.code()
     }
 
-    /// Fetch every `(block, coeff)` source's `[off, off + len)` window to
-    /// `to`, pushing `(coeff, bytes)` pairs onto `fetched`. Batched mode
-    /// reads all windows from disk first and then moves the whole group
-    /// through the links in one gated round trip; per-chunk mode issues
-    /// one gated transfer per source (the pre-§10 baseline).
-    #[allow(clippy::too_many_arguments)]
-    fn fetch_sources(
+    fn period(&self) -> Option<u64> {
+        self.policy.period()
+    }
+
+    fn block_size(&self) -> u64 {
+        self.spec.block_size
+    }
+
+    fn links(&self) -> &LinkSet {
+        &self.links
+    }
+
+    fn locate(&self, sid: u64, block: usize) -> Location {
+        MiniCluster::locate(self, sid, block)
+    }
+
+    fn read_chunk(
         &self,
-        stripe: u64,
-        blocks: &[(usize, u8)],
+        sid: u64,
+        block: usize,
         off: u64,
         len: usize,
-        to: Location,
-        scratch: &mut Scratch,
-        fetched: &mut Vec<(u8, Vec<u8>)>,
+        buf: &mut Vec<u8>,
+    ) -> anyhow::Result<Location> {
+        self.read_chunk_into(sid, block, off, len, buf)
+    }
+
+    fn persist_block(
+        &self,
+        sid: u64,
+        block: usize,
+        at: Location,
+        bytes: Vec<u8>,
     ) -> anyhow::Result<()> {
-        if self.batched {
-            let mut flows = scratch.take_flows();
-            for &(b, c) in blocks {
-                let mut buf = scratch.take();
-                match self.cluster.read_chunk_into(stripe, b, off, len, &mut buf) {
-                    Ok(src) => {
-                        flows.push((src, len as u64));
-                        fetched.push((c, buf));
-                    }
-                    Err(e) => {
-                        scratch.put(buf);
-                        scratch.put_flows(flows);
-                        return Err(e);
-                    }
-                }
-            }
-            self.cluster.transfer_group(to, &flows);
-            scratch.put_flows(flows);
+        self.store_of(at).lock().unwrap().insert((sid, block), bytes);
+        let canonical = self.policy.stripe(sid).locs[block];
+        let mut rel = self.relocated.lock().unwrap();
+        if canonical == at {
+            rel.remove(&(sid, block));
         } else {
-            for &(b, c) in blocks {
-                let mut buf = scratch.take();
-                self.cluster.fetch_chunk_into(stripe, b, off, len, to, &mut buf)?;
-                fetched.push((c, buf));
-            }
+            rel.insert((sid, block), at);
         }
         Ok(())
+    }
+
+    fn remove_block(&self, sid: u64, block: usize, at: Location) -> anyhow::Result<()> {
+        self.store_of(at).lock().unwrap().remove(&(sid, block));
+        Ok(())
+    }
+
+    fn transfer(&self, src: Location, dst: Location, bytes: u64, class: TrafficClass) {
+        MiniCluster::transfer(self, src, dst, bytes, class);
+    }
+
+    fn transfer_group(&self, to: Location, flows: &[(Location, u64)]) {
+        MiniCluster::transfer_group(self, to, flows);
+    }
+
+    fn rack_byte_snapshot(&self) -> Vec<(u64, u64)> {
+        MiniCluster::rack_byte_snapshot(self)
+    }
+
+    fn fail_node(&self, loc: Location) {
+        MiniCluster::fail_node(self, loc);
+    }
+
+    fn set_qos(&self, cfg: QosConfig, fg_active: Arc<AtomicBool>) {
+        MiniCluster::set_qos(self, cfg, fg_active);
+    }
+
+    fn clear_qos(&self) {
+        MiniCluster::clear_qos(self);
+    }
+
+    fn qos_pace(&self, busy_s: f64) {
+        MiniCluster::qos_pace(self, busy_s);
     }
 }
 
-impl ChunkRunner for ChunkIo<'_> {
-    fn run_chunk(
-        &self,
-        plan_idx: usize,
-        plan: &RepairPlan,
-        off: u64,
-        len: usize,
-        scratch: &mut Scratch,
-    ) -> anyhow::Result<Vec<u8>> {
-        let fetch = &self.fetch[plan_idx];
-        let mut acc = scratch.take_zeroed(len);
-        let mut fetched = scratch.take_staging();
-        for (at, inputs) in &fetch.aggs {
-            // inner-rack aggregation at `at`, then ship ONE aggregated
-            // chunk to the compute node
-            let mut partial = scratch.take_zeroed(len);
-            self.fetch_sources(plan.stripe, inputs, off, len, *at, scratch, &mut fetched)?;
-            gf::combine_many_into(&mut partial, &fetched);
-            for (_, buf) in fetched.drain(..) {
-                scratch.put(buf);
-            }
-            self.cluster
-                .transfer(*at, plan.compute_at, len as u64, TrafficClass::Recovery);
-            gf::xor_into(&mut acc, &partial);
-            scratch.put(partial);
-        }
-        self.fetch_sources(
-            plan.stripe,
-            &fetch.direct,
-            off,
-            len,
-            plan.compute_at,
-            scratch,
-            &mut fetched,
-        )?;
-        gf::combine_many_into(&mut acc, &fetched);
-        scratch.put_staging(fetched);
-        Ok(acc)
+/// The client engine's view of the MiniCluster (DESIGN.md §11).
+impl crate::client::ClientIo for MiniCluster {
+    fn data_shards(&self) -> usize {
+        self.policy.code().k()
     }
 
-    fn finish_plan(
+    fn block_len(&self) -> usize {
+        self.spec.block_size as usize
+    }
+
+    fn read_block(&self, sid: u64, block: usize, client: Location) -> anyhow::Result<Vec<u8>> {
+        MiniCluster::read_block(self, sid, block, client)
+    }
+
+    fn degraded_read(
         &self,
-        _plan_idx: usize,
-        plan: &RepairPlan,
-        block: Vec<u8>,
+        sid: u64,
+        block: usize,
+        client: Location,
+    ) -> anyhow::Result<(Vec<u8>, Duration)> {
+        MiniCluster::degraded_read(self, sid, block, client)
+    }
+
+    fn write_stripe_from(
+        &self,
+        sid: u64,
+        data: Vec<Vec<u8>>,
+        client: Location,
     ) -> anyhow::Result<()> {
-        if plan.persist {
-            self.cluster
-                .store_of(plan.writer)
-                .lock()
-                .unwrap()
-                .insert((plan.stripe, plan.failed_block), block);
-            self.cluster
-                .relocated
-                .lock()
-                .unwrap()
-                .insert((plan.stripe, plan.failed_block), plan.writer);
-        }
-        Ok(())
-    }
-
-    fn throttle(&self, busy_s: f64) {
-        self.cluster.qos_pace(busy_s);
+        MiniCluster::write_stripe_from(self, sid, data, client)
     }
 }
 
@@ -882,8 +769,10 @@ impl ClusterBackend {
     }
 }
 
-/// Deterministic per-stripe data (xorshift fill keyed by stripe + block).
-fn deterministic_data(sid: u64, k: usize, len: usize) -> Vec<Vec<u8>> {
+/// Deterministic per-stripe data (xorshift fill keyed by stripe + block)
+/// — the shared populate oracle: every backend (and the parity tests)
+/// regenerates the identical stripe contents from `(sid, k, len)`.
+pub fn deterministic_data(sid: u64, k: usize, len: usize) -> Vec<Vec<u8>> {
     (0..k)
         .map(|b| {
             let mut v = vec![0u8; len];
@@ -899,8 +788,6 @@ fn deterministic_data(sid: u64, k: usize, len: usize) -> Vec<Vec<u8>> {
         .collect()
 }
 
-use crate::scenario::distinct_racks;
-
 impl crate::scenario::RecoveryBackend for ClusterBackend {
     fn name(&self) -> &'static str {
         "cluster"
@@ -912,7 +799,6 @@ impl crate::scenario::RecoveryBackend for ClusterBackend {
         policy: &Arc<dyn Placement>,
         spec: &SystemSpec,
     ) -> anyhow::Result<crate::scenario::ScenarioOutcome> {
-        use crate::scenario::{planned_cross_rack_blocks, ScenarioKind, ScenarioOutcome};
         let mut cspec = *spec;
         cspec.block_size = self.block_size;
         cspec.net.inner_mbps = self.inner_mbps;
@@ -927,144 +813,20 @@ impl crate::scenario::RecoveryBackend for ClusterBackend {
             })?;
             Ok(cluster)
         };
-        let cluster = populate()?;
-
-        if matches!(scenario.kind, ScenarioKind::DegradedBurst { .. }) {
-            // pure foreground load: the client engine *is* the scenario —
-            // no separate burst loop (DESIGN.md §11); one table serves
-            // generation and plan derivation
-            let table = PlacementTable::build(policy.clone(), scenario.stripes);
-            let (fgspec, reqs) = scenario
-                .fg_requests_with(&table)?
-                .expect("degraded burst always carries fg traffic");
-            let failed = scenario.failed_nodes(policy.as_ref())[0];
-            cluster.fail_node(failed);
-            let plans = crate::scenario::degraded_read_plans(&table, &reqs, scenario.seed);
-            let before = cluster.rack_byte_snapshot();
-            let links_before = cluster.links.link_busy_stall();
-            let out = crate::client::run_on_cluster(
-                &cluster,
-                &reqs,
-                fgspec.arrival,
-                self.workers,
-                None,
-            )?;
-            let after = cluster.rack_byte_snapshot();
-            let rack_cross_bytes: Vec<(u64, u64)> = before
-                .iter()
-                .zip(&after)
-                .map(|(&(u0, d0), &(u1, d1))| (u1 - u0, d1 - d0))
-                .collect();
-            let link_busy_stall = cluster.link_busy_stall_since(&links_before);
-            let summary = out.summary();
-            let mean = summary.as_ref().map(|s| s.mean).unwrap_or(0.0);
-            let loads: Vec<(f64, f64)> = rack_cross_bytes
-                .iter()
-                .map(|&(u, d)| (u as f64, d as f64))
-                .collect();
-            let wall = out.seconds;
-            let bytes = out.served() as u64 * self.block_size;
-            return Ok(ScenarioOutcome {
-                backend: "cluster",
-                scenario: scenario.name(),
-                policy: policy.name().to_string(),
-                blocks: out.served(),
-                bytes,
-                seconds: wall,
-                throughput_mb_s: if wall > 0.0 { bytes as f64 / wall / 1e6 } else { 0.0 },
-                lambda: crate::sim::recovery::lambda_metric_excluding(
-                    &loads,
-                    &[failed.rack],
-                ),
-                rack_cross_bytes,
-                planned_cross_rack_blocks: planned_cross_rack_blocks(&plans),
-                degraded_read_mean_s: Some(mean),
-                frontend_seconds: None,
-                worker_utilization: None,
-                scratch_pool: None,
-                link_busy_stall: Some(link_busy_stall),
-                fg_latency: summary,
-                recovery_slowdown: None,
-            });
-        }
-
-        let (failed, plans) = scenario.recovery_plans(policy)?;
-        for &f in &failed {
-            cluster.fail_node(f);
-        }
-        let planned = planned_cross_rack_blocks(&plans);
-        let racks = distinct_racks(&failed);
-        let Some((fgspec, reqs)) = scenario.fg_requests(policy)? else {
-            // plain recovery: no foreground traffic, no QoS split
-            let stats = cluster.recover_with_plans_cfg(plans, self.exec_cfg(), &racks)?;
-            return Ok(cluster_outcome(scenario, policy.name(), &stats, planned, None));
-        };
-
-        // mixed load: recovery and the client engine share the links under
-        // the scenario's QoS split. The slowdown factor needs the same
-        // recovery measured alone, on an identically populated cluster.
-        let baseline_s = {
-            let isolated = populate()?;
-            for &f in &failed {
-                isolated.fail_node(f);
-            }
-            isolated
-                .recover_with_plans_cfg(plans.clone(), self.exec_cfg(), &racks)?
-                .wall
-                .as_secs_f64()
-        };
-        let (stats, fgout) = cluster.run_mixed_load(
-            plans,
-            self.exec_cfg(),
-            &racks,
-            &reqs,
-            fgspec.arrival,
-            self.workers,
-            scenario.qos,
-        )?;
-        let mut out = cluster_outcome(
+        fabric::run_scenario(
+            "cluster",
             scenario,
-            policy.name(),
-            &stats,
-            planned,
-            Some(fgout.seconds),
-        );
-        out.fg_latency = fgout.summary();
-        out.recovery_slowdown = Some(stats.wall.as_secs_f64() / baseline_s.max(1e-9));
-        Ok(out)
-    }
-}
-
-fn cluster_outcome(
-    scenario: &crate::scenario::FailureScenario,
-    policy_name: &str,
-    stats: &ClusterRecoveryStats,
-    planned_cross_rack_blocks: usize,
-    frontend_seconds: Option<f64>,
-) -> crate::scenario::ScenarioOutcome {
-    crate::scenario::ScenarioOutcome {
-        backend: "cluster",
-        scenario: scenario.name(),
-        policy: policy_name.to_string(),
-        blocks: stats.blocks,
-        bytes: stats.bytes,
-        seconds: stats.wall.as_secs_f64(),
-        throughput_mb_s: stats.throughput_mb_s,
-        lambda: stats.lambda,
-        rack_cross_bytes: stats.rack_bytes.clone(),
-        planned_cross_rack_blocks,
-        degraded_read_mean_s: None,
-        frontend_seconds,
-        worker_utilization: Some(stats.worker_utilization.clone()),
-        scratch_pool: Some(stats.scratch),
-        link_busy_stall: Some(stats.link_busy_stall.clone()),
-        fg_latency: None,
-        recovery_slowdown: None,
+            policy,
+            populate,
+            self.exec_cfg(),
+            self.workers,
+            self.block_size,
+        )
     }
 }
 
 /// Parity rows of the code's generator (encode matrix).
-fn parity_matrix(code: &CodeSpec) -> crate::gf::Matrix {
+pub(crate) fn parity_matrix(code: &CodeSpec) -> crate::gf::Matrix {
     match *code {
         CodeSpec::Rs { k, m } => crate::codes::RsCode::new(k, m).parity_rows(),
         CodeSpec::Lrc { k, l, g } => crate::codes::LrcCode::new(k, l, g).parity_rows(),

@@ -18,6 +18,8 @@
 //!   substitute; see DESIGN.md §2);
 //! * [`runtime`] — PJRT execution of the AOT-lowered GF kernels;
 //! * [`cluster`] — mini-HDFS (NameNode + DataNodes) with a real data path;
+//! * [`net`] — the same cluster as N socket-served node workers behind a
+//!   coordinator with join/drain/fail membership (DESIGN.md §13);
 //! * [`workloads`], [`metrics`], [`experiments`] — the paper's evaluation.
 
 pub mod client;
@@ -26,6 +28,7 @@ pub mod codes;
 pub mod experiments;
 pub mod gf;
 pub mod metrics;
+pub mod net;
 pub mod oa;
 pub mod perf;
 pub mod placement;

@@ -4,7 +4,7 @@
 //! d3ctl exp <1..11|all> [--stripes N] [--racks R] [--nodes N] [--block MB]
 //! d3ctl scenario --kind single-node|multi-node|rack-failure|frontend-mix|degraded-burst
 //!                [--policy d3|rdd|hdd] [--code rs-6-3] [--failures K] [--rack R]
-//!                [--backend sim|cluster|both] [--stripes N]
+//!                [--backend sim|cluster|net|both|all] [--stripes N] [--racks R] [--nodes N]
 //!                [--workers N] [--chunk-size KB]   # pipelined recovery executor
 //!                [--schedule fifo|balanced] [--coalesce N] [--batched-fetch true|false]
 //!                [--fg-rate RPS | --fg-clients N] [--fg-requests N]  # client engine
@@ -26,6 +26,7 @@ use d3ec::cluster::{ClusterBackend, MiniCluster};
 use d3ec::codes::CodeSpec;
 use d3ec::experiments as exp;
 use d3ec::util::json::Json;
+use d3ec::net::NetClusterBackend;
 use d3ec::oa::{max_columns, OrthogonalArray};
 use d3ec::recovery::mu::mu_rs;
 use d3ec::recovery::SchedulePolicy;
@@ -190,9 +191,10 @@ fn cmd_bench_compare(flags: &HashMap<String, String>) {
     }
 }
 
-/// `d3ctl scenario`: run one failure scenario on the fluid simulator and
-/// the MiniCluster through the same `FailureScenario → RecoveryBackend`
-/// pipeline and report both outcomes side by side. `--fg-rate`/
+/// `d3ctl scenario`: run one failure scenario on the fluid simulator, the
+/// MiniCluster, and/or the socket-backed NetCluster (`--backend net`,
+/// `all` for all three) through the same `FailureScenario →
+/// RecoveryBackend` pipeline and report the outcomes side by side. `--fg-rate`/
 /// `--fg-clients` attach client-engine foreground traffic to any kind,
 /// `--recovery-share`/`--fg-weight` set the QoS split, and `--json`
 /// emits the full `ScenarioOutcome`s as one JSON array for sweeps.
@@ -289,16 +291,28 @@ fn cmd_scenario(args: &[String], flags: &HashMap<String, String>) {
     cluster.schedule = schedule;
     cluster.coalesce = coalesce;
     cluster.batched_fetch = batched;
+    // the socket-backed backend shares the cluster backend's knobs, so
+    // `--backend all` runs all three at matched block size / schedule
+    let mut net = NetClusterBackend::default();
+    net.block_size = cluster.block_size;
+    net.workers = workers;
+    net.chunk_size = cluster.chunk_size;
+    net.schedule = schedule;
+    net.coalesce = coalesce;
+    net.batched_fetch = batched;
     let backend_sel: String = flag(flags, "backend", "both".into());
     let mut backends: Vec<&dyn RecoveryBackend> = Vec::new();
-    if backend_sel == "sim" || backend_sel == "both" {
+    if matches!(backend_sel.as_str(), "sim" | "both" | "all") {
         backends.push(&sim);
     }
-    if backend_sel == "cluster" || backend_sel == "both" {
+    if matches!(backend_sel.as_str(), "cluster" | "both" | "all") {
         backends.push(&cluster);
     }
+    if matches!(backend_sel.as_str(), "net" | "all") {
+        backends.push(&net);
+    }
     if backends.is_empty() {
-        eprintln!("unknown --backend {backend_sel} (sim, cluster, both)");
+        eprintln!("unknown --backend {backend_sel} (sim, cluster, net, both, all)");
         return;
     }
     if json_out {
@@ -319,16 +333,25 @@ fn cmd_scenario(args: &[String], flags: &HashMap<String, String>) {
     }
     match run_cross_backend(&scenario, &policy, &spec, &backends) {
         Ok(outs) => {
-            if outs.len() == 2 {
-                let ok = outs[0].planned_cross_rack_blocks == outs[1].planned_cross_rack_blocks
-                    && outs[0].blocks == outs[1].blocks;
+            if outs.len() >= 2 {
+                // every backend must agree with the first on the
+                // backend-independent quantities
+                let ok = outs.iter().all(|o| {
+                    o.planned_cross_rack_blocks == outs[0].planned_cross_rack_blocks
+                        && o.blocks == outs[0].blocks
+                });
+                let sides: Vec<String> = outs
+                    .iter()
+                    .map(|o| {
+                        format!(
+                            "{} / {} ({})",
+                            o.blocks, o.planned_cross_rack_blocks, o.backend
+                        )
+                    })
+                    .collect();
                 println!(
-                    "\ncross-check: {} blocks / {} planned cross-rack transfers (sim) vs \
-                     {} / {} (cluster) → {}",
-                    outs[0].blocks,
-                    outs[0].planned_cross_rack_blocks,
-                    outs[1].blocks,
-                    outs[1].planned_cross_rack_blocks,
+                    "\ncross-check [blocks / planned cross-rack transfers]: {} → {}",
+                    sides.join(" vs "),
                     if ok { "consistent" } else { "MISMATCH" }
                 );
             }

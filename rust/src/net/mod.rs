@@ -1,0 +1,857 @@
+//! NetCluster: the socket-backed recovery backend (DESIGN.md §13).
+//!
+//! N node workers — one real TCP listener each on loopback — hold the
+//! blocks; a coordinator ([`NetCluster`]) owns the NameNode metadata,
+//! cluster membership (join / drain / fail transitions, rebalancing
+//! blocks onto joined nodes) and all byte accounting. The same
+//! [`crate::scenario::FailureScenario`] + client-engine suite that
+//! drives the fluid simulator and the in-process `MiniCluster` runs here
+//! unchanged, through the shared [`fabric`] orchestration.
+//!
+//! **Byte-accounting contract** (what makes three-way parity exact): the
+//! coordinator charges the identical modeled [`LinkSet`] transfers and
+//! per-rack counters as `MiniCluster` for every logical movement, while
+//! the payload bytes additionally traverse real sockets. The modeled
+//! counters are the authoritative numbers in [`ScenarioOutcome`]; the
+//! sockets prove the data path is real (checksums of rebuilt blocks come
+//! from worker-side GF combines over bytes fetched worker-to-worker).
+
+pub mod proto;
+mod worker;
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::client::QosConfig;
+use crate::cluster::fabric::{self, BlockFabric};
+use crate::cluster::links::{LinkSet, TrafficClass};
+use crate::cluster::{deterministic_data, parity_matrix, ClusterRecoveryStats};
+use crate::codes::CodeSpec;
+use crate::gf;
+use crate::placement::Placement;
+use crate::recovery::executor::ExecutorConfig;
+use crate::recovery::migration::MigrationBatch;
+use crate::recovery::plan::{plan_coefficients, plan_degraded_read, RepairPlan};
+use crate::recovery::schedule::SchedulePolicy;
+use crate::scenario::ScenarioOutcome;
+use crate::topology::{Location, SystemSpec};
+
+use proto::{Msg, PlanSource, Reply};
+use worker::WorkerHandle;
+
+type BlockKey = (u64, usize);
+
+/// Coordinator-side view of a worker's membership state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeState {
+    Up,
+    Draining,
+    Failed,
+}
+
+impl NodeState {
+    fn from_wire(b: u8) -> NodeState {
+        match b {
+            proto::STATE_DRAINING => NodeState::Draining,
+            proto::STATE_FAILED => NodeState::Failed,
+            _ => NodeState::Up,
+        }
+    }
+}
+
+/// The socket-backed cluster: real listeners, real frames, modeled time.
+pub struct NetCluster {
+    spec: SystemSpec,
+    policy: Arc<dyn Placement>,
+    links: Arc<LinkSet>,
+    /// Flattened m×k parity coefficient rows for the `Encode` RPC — the
+    /// same generator rows the MiniCluster's coder service multiplies.
+    enc_rows: Vec<u8>,
+    enc_m: usize,
+    addrs: Vec<SocketAddr>,
+    /// Per-node pool of idle coordinator→worker connections. A call pops
+    /// one (or dials), runs request/reply, and returns it on success —
+    /// concurrent executor workers each get their own stream.
+    conns: Vec<Mutex<Vec<TcpStream>>>,
+    /// metadata overrides after recovery/drain (NameNode block map)
+    relocated: Mutex<HashMap<BlockKey, Location>>,
+    failed: Mutex<Vec<Location>>,
+    membership: Mutex<Vec<NodeState>>,
+    /// cross-rack traffic accounting (up, down) per rack
+    rack_up: Vec<AtomicU64>,
+    rack_down: Vec<AtomicU64>,
+    /// Same pairwise-consistency discipline as the MiniCluster: transfers
+    /// hold this as readers, snapshots as writer.
+    accounting: RwLock<()>,
+    qos: Mutex<Option<(QosConfig, Arc<AtomicBool>)>>,
+    qos_on: AtomicBool,
+    seed: u64,
+    /// Held last so every pooled connection (above) closes before the
+    /// listener threads are joined on drop.
+    workers: Vec<WorkerHandle>,
+}
+
+impl NetCluster {
+    /// Spawn one worker per node of `spec.cluster` and connect the
+    /// coordinator. Workers bind ephemeral loopback ports; the cluster is
+    /// fully torn down (listeners joined) on drop.
+    pub fn new(spec: SystemSpec, policy: Arc<dyn Placement>, seed: u64) -> Result<NetCluster> {
+        assert_eq!(policy.cluster(), spec.cluster, "policy/topology mismatch");
+        let n = spec.cluster.node_count();
+        let mut workers = Vec::with_capacity(n);
+        let mut addrs = Vec::with_capacity(n);
+        for i in 0..n {
+            let h = worker::spawn_worker(spec.cluster.unflat(i))
+                .with_context(|| format!("spawn worker {i}"))?;
+            addrs.push(h.addr);
+            workers.push(h);
+        }
+        let pm = parity_matrix(&policy.code());
+        let mut enc_rows = Vec::with_capacity(pm.rows() * pm.cols());
+        for r in 0..pm.rows() {
+            enc_rows.extend_from_slice(pm.row(r));
+        }
+        Ok(NetCluster {
+            links: Arc::new(LinkSet::new(&spec)),
+            enc_m: pm.rows(),
+            enc_rows,
+            conns: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+            relocated: Mutex::new(HashMap::new()),
+            failed: Mutex::new(Vec::new()),
+            membership: Mutex::new(vec![NodeState::Up; n]),
+            rack_up: (0..spec.cluster.racks).map(|_| AtomicU64::new(0)).collect(),
+            rack_down: (0..spec.cluster.racks).map(|_| AtomicU64::new(0)).collect(),
+            accounting: RwLock::new(()),
+            qos: Mutex::new(None),
+            qos_on: AtomicBool::new(false),
+            spec,
+            policy,
+            addrs,
+            seed,
+            workers,
+        })
+    }
+
+    pub fn spec(&self) -> &SystemSpec {
+        &self.spec
+    }
+
+    pub fn policy(&self) -> &dyn Placement {
+        self.policy.as_ref()
+    }
+
+    /// The worker's real socket address (tests dial it directly).
+    pub fn addr_of(&self, loc: Location) -> SocketAddr {
+        self.addrs[self.spec.cluster.flat(loc)]
+    }
+
+    /// One RPC round trip on a pooled connection.
+    fn call(&self, loc: Location, msg: &Msg) -> Result<Reply> {
+        let flat = self.spec.cluster.flat(loc);
+        let mut conn = match self.conns[flat].lock().unwrap().pop() {
+            Some(c) => c,
+            None => {
+                let c = TcpStream::connect(self.addrs[flat])
+                    .with_context(|| format!("connect worker {loc}"))?;
+                c.set_nodelay(true)?;
+                c
+            }
+        };
+        proto::write_frame(&mut conn, &msg.encode())
+            .with_context(|| format!("send to {loc}"))?;
+        let body = proto::read_frame(&mut conn).with_context(|| format!("reply from {loc}"))?;
+        let reply = Reply::decode(&body)?;
+        // only a connection that completed a full round trip is reusable
+        self.conns[flat].lock().unwrap().push(conn);
+        Ok(reply)
+    }
+
+    fn rpc_ok(&self, loc: Location, msg: &Msg) -> Result<()> {
+        match self.call(loc, msg)? {
+            Reply::Ok => Ok(()),
+            Reply::Err(e) => bail!("worker {loc}: {e}"),
+            other => bail!("worker {loc}: unexpected reply {other:?}"),
+        }
+    }
+
+    fn rpc_data(&self, loc: Location, msg: &Msg) -> Result<Vec<u8>> {
+        match self.call(loc, msg)? {
+            Reply::Data(b) => Ok(b),
+            Reply::Err(e) => bail!("worker {loc}: {e}"),
+            other => bail!("worker {loc}: unexpected reply {other:?}"),
+        }
+    }
+
+    /// Current location of a block (NameNode metadata).
+    pub fn locate(&self, sid: u64, block: usize) -> Location {
+        if let Some(loc) = self.relocated.lock().unwrap().get(&(sid, block)) {
+            return *loc;
+        }
+        self.policy.stripe(sid).locs[block]
+    }
+
+    /// Identical modeled charge to [`crate::cluster::MiniCluster`]'s
+    /// transfer — the parity-critical accounting path.
+    fn transfer(&self, src: Location, dst: Location, bytes: u64, class: TrafficClass) {
+        if src.rack != dst.rack {
+            let _pairwise = self.accounting.read().unwrap();
+            self.rack_up[src.rack as usize].fetch_add(bytes, Ordering::Relaxed);
+            self.rack_down[dst.rack as usize].fetch_add(bytes, Ordering::Relaxed);
+        }
+        self.links.transfer_class(src, dst, bytes, class);
+    }
+
+    fn transfer_group(&self, to: Location, flows: &[(Location, u64)]) {
+        {
+            let _pairwise = self.accounting.read().unwrap();
+            for &(src, bytes) in flows {
+                if src.rack != to.rack && bytes > 0 {
+                    self.rack_up[src.rack as usize].fetch_add(bytes, Ordering::Relaxed);
+                    self.rack_down[to.rack as usize].fetch_add(bytes, Ordering::Relaxed);
+                }
+            }
+        }
+        self.links.transfer_batch(to, flows, TrafficClass::Recovery);
+    }
+
+    pub fn rack_byte_snapshot(&self) -> Vec<(u64, u64)> {
+        let _barrier = self.accounting.write().unwrap();
+        (0..self.spec.cluster.racks)
+            .map(|r| {
+                (
+                    self.rack_up[r].load(Ordering::Relaxed),
+                    self.rack_down[r].load(Ordering::Relaxed),
+                )
+            })
+            .collect()
+    }
+
+    fn set_state(&self, loc: Location, state: NodeState) {
+        self.membership.lock().unwrap()[self.spec.cluster.flat(loc)] = state;
+    }
+
+    /// Coordinator-side membership view (as of the last transition RPC).
+    pub fn node_state(&self, loc: Location) -> NodeState {
+        self.membership.lock().unwrap()[self.spec.cluster.flat(loc)]
+    }
+
+    /// Probe a worker over the wire: its own state + block count.
+    pub fn heartbeat(&self, loc: Location) -> Result<(NodeState, u64)> {
+        match self.call(loc, &Msg::Heartbeat)? {
+            Reply::Beat { state, blocks } => Ok((NodeState::from_wire(state), blocks)),
+            Reply::Err(e) => bail!("heartbeat {loc}: {e}"),
+            other => bail!("heartbeat {loc}: unexpected reply {other:?}"),
+        }
+    }
+
+    /// Blocks currently stored on `loc` (over the wire).
+    pub fn block_count(&self, loc: Location) -> usize {
+        self.heartbeat(loc).map(|(_, n)| n as usize).unwrap_or(0)
+    }
+
+    /// Crash `loc`: the worker drops its blocks and rejects I/O, the
+    /// coordinator marks it failed. Recovery must rebuild from peers.
+    pub fn fail(&self, loc: Location) -> Result<()> {
+        self.rpc_ok(loc, &Msg::Fail)?;
+        self.failed.lock().unwrap().push(loc);
+        self.set_state(loc, NodeState::Failed);
+        Ok(())
+    }
+
+    /// Gracefully drain `loc`: the worker stops accepting writes, then
+    /// every block it holds is re-homed (same rack first, then anywhere
+    /// Up that holds no block of the stripe) with recovery-class
+    /// accounting. Returns the number of blocks moved.
+    pub fn drain(&self, loc: Location) -> Result<usize> {
+        self.rpc_ok(loc, &Msg::Drain)?;
+        self.set_state(loc, NodeState::Draining);
+        let mut held = match self.call(loc, &Msg::ListBlocks)? {
+            Reply::Blocks(b) => b,
+            Reply::Err(e) => bail!("list blocks on {loc}: {e}"),
+            other => bail!("list blocks on {loc}: unexpected reply {other:?}"),
+        };
+        held.sort_unstable();
+        let code_len = self.policy.code().len();
+        let mut moved = 0;
+        for (sid, b) in held {
+            let block = b as usize;
+            let dst = self.relocation_target(sid, code_len, loc)?;
+            let bytes = self.rpc_data(loc, &Msg::FetchBlock { sid, block: b })?;
+            self.transfer(loc, dst, bytes.len() as u64, TrafficClass::Recovery);
+            self.rpc_ok(dst, &Msg::WriteBlock { sid, block: b, bytes })?;
+            self.rpc_ok(loc, &Msg::RemoveBlock { sid, block: b })?;
+            let canonical = self.policy.stripe(sid).locs[block];
+            let mut rel = self.relocated.lock().unwrap();
+            if canonical == dst {
+                rel.remove(&(sid, block));
+            } else {
+                rel.insert((sid, block), dst);
+            }
+            moved += 1;
+        }
+        Ok(moved)
+    }
+
+    /// Pick a destination for a block leaving `avoid`: an Up node in the
+    /// same rack that holds no block of stripe `sid`, else any such Up
+    /// node, else any Up node.
+    fn relocation_target(&self, sid: u64, code_len: usize, avoid: Location) -> Result<Location> {
+        let holders: Vec<Location> = (0..code_len).map(|b| self.locate(sid, b)).collect();
+        let membership = self.membership.lock().unwrap();
+        let candidates: Vec<Location> = (0..self.spec.cluster.node_count())
+            .map(|i| self.spec.cluster.unflat(i))
+            .filter(|&cand| {
+                cand != avoid && membership[self.spec.cluster.flat(cand)] == NodeState::Up
+            })
+            .collect();
+        candidates
+            .iter()
+            .find(|c| c.rack == avoid.rack && !holders.contains(c))
+            .or_else(|| candidates.iter().find(|c| !holders.contains(c)))
+            .or_else(|| candidates.first())
+            .copied()
+            .ok_or_else(|| anyhow!("no Up node to relocate stripe {sid} off {avoid}"))
+    }
+
+    /// A replacement machine comes up empty at `loc`'s address (Join RPC,
+    /// state → Up) without any data movement — the §5.3 "relived" node
+    /// that [`NetCluster::run_migration`] batches restore onto, mirror of
+    /// [`crate::cluster::MiniCluster::relive_node`].
+    pub fn relive(&self, loc: Location) -> Result<()> {
+        self.rpc_ok(loc, &Msg::Join)?;
+        self.set_state(loc, NodeState::Up);
+        self.failed.lock().unwrap().retain(|&f| f != loc);
+        Ok(())
+    }
+
+    /// A replacement machine joins at `loc`'s address (empty store, state
+    /// Up) and the coordinator rebalances: every block whose *canonical*
+    /// placement is `loc` but which recovery or drain parked elsewhere is
+    /// moved back — the §5.3 layout-restoring transition. Returns the
+    /// number of blocks rebalanced home.
+    pub fn join(&self, loc: Location) -> Result<usize> {
+        self.relive(loc)?;
+        let mut moves: Vec<(BlockKey, Location)> = self
+            .relocated
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|&(_, &cur)| cur != loc)
+            .map(|(&key, &cur)| (key, cur))
+            .collect();
+        moves.retain(|&((sid, b), _)| self.policy.stripe(sid).locs[b] == loc);
+        moves.sort_unstable_by_key(|&(key, _)| key);
+        let mut rebalanced = 0;
+        for ((sid, block), cur) in moves {
+            let b = block as u32;
+            let bytes = self.rpc_data(cur, &Msg::FetchBlock { sid, block: b })?;
+            self.transfer(cur, loc, bytes.len() as u64, TrafficClass::Recovery);
+            self.rpc_ok(loc, &Msg::WriteBlock { sid, block: b, bytes })?;
+            self.rpc_ok(cur, &Msg::RemoveBlock { sid, block: b })?;
+            self.relocated.lock().unwrap().remove(&(sid, block));
+            rebalanced += 1;
+        }
+        Ok(rebalanced)
+    }
+
+    /// Push one repair plan down to its writer worker as a `RecoverPlan`
+    /// RPC: the worker fetches every source block from its current-holder
+    /// peer over worker-to-worker sockets, GF-combines with the plan's
+    /// decode coefficients and stores the result. The coordinator charges
+    /// one whole-block recovery-class transfer per source (holder →
+    /// writer) and re-points the block map. Returns the rebuilt block's
+    /// [`proto::checksum`].
+    pub fn recover_block_on_worker(&self, plan: &RepairPlan) -> Result<u64> {
+        let code = self.policy.code();
+        let sources = plan.source_blocks();
+        let coeffs = plan_coefficients(&code, plan);
+        let mut srcs = Vec::with_capacity(sources.len());
+        for (&b, &c) in sources.iter().zip(&coeffs) {
+            let holder = self.locate(plan.stripe, b);
+            self.transfer(holder, plan.writer, self.spec.block_size, TrafficClass::Recovery);
+            srcs.push(PlanSource {
+                coeff: c,
+                block: b as u32,
+                addr: self.addr_of(holder).to_string(),
+            });
+        }
+        let msg = Msg::RecoverPlan {
+            sid: plan.stripe,
+            block: plan.failed_block as u32,
+            block_len: self.spec.block_size as u32,
+            sources: srcs,
+        };
+        let sum = match self.call(plan.writer, &msg)? {
+            Reply::Sum(s) => s,
+            Reply::Err(e) => bail!("recover plan on {}: {e}", plan.writer),
+            other => bail!("recover plan on {}: unexpected reply {other:?}", plan.writer),
+        };
+        if plan.persist {
+            let canonical = self.policy.stripe(plan.stripe).locs[plan.failed_block];
+            let mut rel = self.relocated.lock().unwrap();
+            if canonical == plan.writer {
+                rel.remove(&(plan.stripe, plan.failed_block));
+            } else {
+                rel.insert((plan.stripe, plan.failed_block), plan.writer);
+            }
+        }
+        Ok(sum)
+    }
+
+    /// Encode k data shards into m parity shards on the worker at `at`
+    /// (the modeled client-side encode happens wherever the client is).
+    fn encode_at(&self, at: Location, data: &[Vec<u8>]) -> Result<Vec<Vec<u8>>> {
+        let k = data.len();
+        let shard_len = data[0].len();
+        let mut shards = Vec::with_capacity(k * shard_len);
+        for d in data {
+            if d.len() != shard_len {
+                bail!("ragged data shards: {} vs {shard_len}", d.len());
+            }
+            shards.extend_from_slice(d);
+        }
+        let msg = Msg::Encode {
+            k: k as u32,
+            rows: self.enc_rows.clone(),
+            shard_len: shard_len as u32,
+            shards,
+        };
+        let parity = self.rpc_data(at, &msg)?;
+        if parity.len() != self.enc_m * shard_len {
+            bail!("encode reply: {} bytes, want {}", parity.len(), self.enc_m * shard_len);
+        }
+        Ok(parity.chunks(shard_len).map(|c| c.to_vec()).collect())
+    }
+
+    /// Client write path — byte-accounting mirror of
+    /// [`crate::cluster::MiniCluster::write_stripe_inner`]: encode at the
+    /// client (an `Encode` RPC there), then one foreground-class transfer
+    /// plus a `WriteBlock` RPC per surviving placement.
+    fn write_stripe_inner(
+        &self,
+        sid: u64,
+        data: Vec<Vec<u8>>,
+        client: Option<Location>,
+    ) -> Result<()> {
+        let code = self.policy.code();
+        if data.len() != code.k() {
+            bail!("expected {} data shards, got {}", code.k(), data.len());
+        }
+        let sp = self.policy.stripe(sid);
+        let client = client.unwrap_or(sp.locs[0]);
+        let parity = self.encode_at(client, &data)?;
+        let failed = self.failed.lock().unwrap().clone();
+        for (bi, bytes) in data.into_iter().chain(parity).enumerate() {
+            let dst = sp.locs[bi];
+            if failed.contains(&dst) {
+                continue;
+            }
+            self.transfer(client, dst, bytes.len() as u64, TrafficClass::Foreground);
+            self.rpc_ok(dst, &Msg::WriteBlock { sid, block: bi as u32, bytes })?;
+        }
+        Ok(())
+    }
+
+    pub fn write_stripe(&self, sid: u64, data: Vec<Vec<u8>>) -> Result<()> {
+        self.write_stripe_inner(sid, data, None)
+    }
+
+    /// Write many stripes concurrently (`workers` client threads) using a
+    /// data generator — same populate path as the MiniCluster.
+    pub fn write_stripes_parallel(
+        &self,
+        stripes: u64,
+        workers: usize,
+        gen: impl Fn(u64) -> Vec<Vec<u8>> + Sync,
+    ) -> Result<()> {
+        let next = AtomicU64::new(0);
+        let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+        std::thread::scope(|scope| {
+            for _ in 0..workers.max(1) {
+                scope.spawn(|| loop {
+                    let sid = next.fetch_add(1, Ordering::Relaxed);
+                    if sid >= stripes {
+                        break;
+                    }
+                    if let Err(e) = self.write_stripe(sid, gen(sid)) {
+                        errors.lock().unwrap().push(e.to_string());
+                        break;
+                    }
+                });
+            }
+        });
+        let errs = errors.into_inner().unwrap();
+        if !errs.is_empty() {
+            bail!("write errors: {}", errs.join("; "));
+        }
+        Ok(())
+    }
+
+    /// Whole-block fetch with foreground-class accounting — the degraded
+    /// read path's mirror of [`crate::cluster::MiniCluster`]'s `fetch`.
+    fn fetch(&self, sid: u64, block: usize, to: Location) -> Result<Vec<u8>> {
+        let loc = self.locate(sid, block);
+        let data = self.rpc_data(loc, &Msg::FetchBlock { sid, block: block as u32 })?;
+        self.transfer(loc, to, data.len() as u64, TrafficClass::Foreground);
+        Ok(data)
+    }
+
+    /// Coordinator-side plan execution for degraded reads: the identical
+    /// modeled transfer sequence as the MiniCluster's `execute_plan`
+    /// (per-source block to the aggregator, ONE aggregated block to the
+    /// compute node, directs straight there), with the GF combines run by
+    /// the coordinator over the fetched bytes.
+    fn execute_plan(&self, plan: &RepairPlan) -> Result<Vec<u8>> {
+        let code = self.policy.code();
+        let sources = plan.source_blocks();
+        let coeffs = plan_coefficients(&code, plan);
+        let coeff_of =
+            |b: usize| -> u8 { coeffs[sources.binary_search(&b).expect("source present")] };
+        let mut final_pairs: Vec<(u8, Vec<u8>)> = Vec::new();
+        for agg in &plan.aggregations {
+            let mut pairs: Vec<(u8, Vec<u8>)> = Vec::with_capacity(agg.inputs.len());
+            for &(b, _) in &agg.inputs {
+                pairs.push((coeff_of(b), self.fetch(plan.stripe, b, agg.at)?));
+            }
+            let len = pairs.first().map_or(0, |(_, v)| v.len());
+            let mut partial = vec![0u8; len];
+            gf::combine_many_into(&mut partial, &pairs);
+            // ship ONE aggregated block to the compute node
+            self.transfer(agg.at, plan.compute_at, len as u64, TrafficClass::Foreground);
+            final_pairs.push((1, partial));
+        }
+        for &(b, _) in &plan.direct {
+            final_pairs.push((coeff_of(b), self.fetch(plan.stripe, b, plan.compute_at)?));
+        }
+        let len = final_pairs.first().map_or(0, |(_, v)| v.len());
+        let mut rebuilt = vec![0u8; len];
+        gf::combine_many_into(&mut rebuilt, &final_pairs);
+        if plan.persist {
+            let bytes = rebuilt.clone();
+            BlockFabric::persist_block(self, plan.stripe, plan.failed_block, plan.writer, bytes)?;
+        }
+        Ok(rebuilt)
+    }
+
+    /// Plan-set recovery through the shared pipelined executor
+    /// ([`fabric::recover_with_plans_cfg`]) — chunk fetches and block
+    /// persists are RPCs, scheduling/accounting identical to MiniCluster.
+    pub fn recover_with_plans_cfg(
+        &self,
+        plans: Vec<RepairPlan>,
+        cfg: ExecutorConfig,
+        failed_racks: &[u32],
+    ) -> Result<ClusterRecoveryStats> {
+        fabric::recover_with_plans_cfg(self, plans, cfg, failed_racks)
+    }
+
+    /// Execute §5.3 migration batches over the wire
+    /// ([`fabric::run_migration`]).
+    pub fn run_migration(&self, batches: &[MigrationBatch], relived: Location) -> Result<Vec<f64>> {
+        fabric::run_migration(self, batches, relived)
+    }
+
+    fn qos_pace_inner(&self, busy_s: f64) {
+        if !self.qos_on.load(Ordering::Relaxed) {
+            return;
+        }
+        let rt = self.qos.lock().unwrap().clone();
+        let Some((cfg, fg_active)) = rt else { return };
+        if !cfg.is_active() || cfg.fg_weight <= 0.0 || !fg_active.load(Ordering::Relaxed) {
+            return;
+        }
+        let pause = busy_s * cfg.fg_weight * (1.0 / cfg.recovery_share - 1.0);
+        if pause > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(pause.min(0.05)));
+        }
+    }
+}
+
+impl BlockFabric for NetCluster {
+    fn code(&self) -> CodeSpec {
+        self.policy.code()
+    }
+
+    fn period(&self) -> Option<u64> {
+        self.policy.period()
+    }
+
+    fn block_size(&self) -> u64 {
+        self.spec.block_size
+    }
+
+    fn links(&self) -> &LinkSet {
+        &self.links
+    }
+
+    fn locate(&self, sid: u64, block: usize) -> Location {
+        NetCluster::locate(self, sid, block)
+    }
+
+    fn read_chunk(
+        &self,
+        sid: u64,
+        block: usize,
+        off: u64,
+        len: usize,
+        buf: &mut Vec<u8>,
+    ) -> Result<Location> {
+        let loc = self.locate(sid, block);
+        let msg = Msg::FetchChunk { sid, block: block as u32, off, len: len as u32 };
+        let data = self.rpc_data(loc, &msg)?;
+        if data.len() != len {
+            bail!("chunk reply: {} bytes, want {len}", data.len());
+        }
+        buf.clear();
+        buf.extend_from_slice(&data);
+        Ok(loc)
+    }
+
+    fn persist_block(&self, sid: u64, block: usize, at: Location, bytes: Vec<u8>) -> Result<()> {
+        self.rpc_ok(at, &Msg::WriteBlock { sid, block: block as u32, bytes })?;
+        let canonical = self.policy.stripe(sid).locs[block];
+        let mut rel = self.relocated.lock().unwrap();
+        if canonical == at {
+            rel.remove(&(sid, block));
+        } else {
+            rel.insert((sid, block), at);
+        }
+        Ok(())
+    }
+
+    fn remove_block(&self, sid: u64, block: usize, at: Location) -> Result<()> {
+        self.rpc_ok(at, &Msg::RemoveBlock { sid, block: block as u32 })
+    }
+
+    fn transfer(&self, src: Location, dst: Location, bytes: u64, class: TrafficClass) {
+        NetCluster::transfer(self, src, dst, bytes, class);
+    }
+
+    fn transfer_group(&self, to: Location, flows: &[(Location, u64)]) {
+        NetCluster::transfer_group(self, to, flows);
+    }
+
+    fn rack_byte_snapshot(&self) -> Vec<(u64, u64)> {
+        NetCluster::rack_byte_snapshot(self)
+    }
+
+    fn fail_node(&self, loc: Location) {
+        self.fail(loc).expect("fail RPC to in-process worker");
+    }
+
+    fn set_qos(&self, cfg: QosConfig, fg_active: Arc<AtomicBool>) {
+        self.links.set_qos(cfg.recovery_share, fg_active.clone());
+        *self.qos.lock().unwrap() = Some((cfg, fg_active));
+        self.qos_on.store(true, Ordering::Relaxed);
+    }
+
+    fn clear_qos(&self) {
+        self.links.clear_qos();
+        *self.qos.lock().unwrap() = None;
+        self.qos_on.store(false, Ordering::Relaxed);
+    }
+
+    fn qos_pace(&self, busy_s: f64) {
+        self.qos_pace_inner(busy_s);
+    }
+}
+
+impl crate::client::ClientIo for NetCluster {
+    fn data_shards(&self) -> usize {
+        self.policy.code().k()
+    }
+
+    fn block_len(&self) -> usize {
+        self.spec.block_size as usize
+    }
+
+    fn read_block(&self, sid: u64, block: usize, client: Location) -> Result<Vec<u8>> {
+        let loc = self.locate(sid, block);
+        if self.failed.lock().unwrap().contains(&loc) {
+            bail!("block ({sid},{block}) is on failed node {loc} — use degraded_read");
+        }
+        self.fetch(sid, block, client)
+    }
+
+    fn degraded_read(
+        &self,
+        sid: u64,
+        block: usize,
+        client: Location,
+    ) -> Result<(Vec<u8>, Duration)> {
+        let t0 = Instant::now();
+        let plan = plan_degraded_read(self.policy.as_ref(), sid, block, client, self.seed);
+        let data = self.execute_plan(&plan)?;
+        Ok((data, t0.elapsed()))
+    }
+
+    fn write_stripe_from(&self, sid: u64, data: Vec<Vec<u8>>, client: Location) -> Result<()> {
+        self.write_stripe_inner(sid, data, Some(client))
+    }
+}
+
+/// The NetCluster implementation of the scenario engine
+/// ([`crate::scenario::RecoveryBackend`]): same knobs as the in-process
+/// `ClusterBackend` (minus the coder-service selector — workers always
+/// run the in-process GF kernels, honoring `D3_FORCE_KERNEL` uniformly),
+/// same scaled block size and link rates, same shared scenario body.
+pub struct NetClusterBackend {
+    /// Scaled block size (bytes) for the loopback run.
+    pub block_size: u64,
+    pub inner_mbps: f64,
+    pub cross_mbps: f64,
+    /// Concurrent reconstruction workers (HDFS xmits analogue).
+    pub workers: usize,
+    /// Executor chunk size (bytes) — one `FetchChunk` RPC per source per
+    /// chunk, so this is also the RPC payload granularity.
+    pub chunk_size: u64,
+    pub schedule: SchedulePolicy,
+    pub coalesce: usize,
+    pub batched_fetch: bool,
+}
+
+impl Default for NetClusterBackend {
+    fn default() -> NetClusterBackend {
+        NetClusterBackend {
+            block_size: 64 << 10,
+            inner_mbps: 8000.0,
+            cross_mbps: 1600.0,
+            workers: 8,
+            chunk_size: 16 << 10,
+            schedule: SchedulePolicy::Fifo,
+            coalesce: 1,
+            batched_fetch: false,
+        }
+    }
+}
+
+impl NetClusterBackend {
+    fn exec_cfg(&self) -> ExecutorConfig {
+        ExecutorConfig {
+            workers: self.workers,
+            chunk_size: self.chunk_size,
+            schedule: self.schedule,
+            coalesce: self.coalesce,
+            batched_fetch: self.batched_fetch,
+            ..ExecutorConfig::default()
+        }
+    }
+}
+
+impl crate::scenario::RecoveryBackend for NetClusterBackend {
+    fn name(&self) -> &'static str {
+        "net"
+    }
+
+    fn run(
+        &self,
+        scenario: &crate::scenario::FailureScenario,
+        policy: &Arc<dyn Placement>,
+        spec: &SystemSpec,
+    ) -> Result<ScenarioOutcome> {
+        let mut cspec = *spec;
+        cspec.block_size = self.block_size;
+        cspec.net.inner_mbps = self.inner_mbps;
+        cspec.net.cross_mbps = self.cross_mbps;
+        let k = policy.code().k();
+        let bs = self.block_size as usize;
+        let populate = || -> Result<NetCluster> {
+            let cluster = NetCluster::new(cspec, policy.clone(), scenario.seed)?;
+            cluster.write_stripes_parallel(scenario.stripes, self.workers.max(2), |sid| {
+                deterministic_data(sid, k, bs)
+            })?;
+            Ok(cluster)
+        };
+        fabric::run_scenario(
+            "net",
+            scenario,
+            policy,
+            populate,
+            self.exec_cfg(),
+            self.workers,
+            self.block_size,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::ClientIo;
+    use crate::placement::D3Placement;
+
+    fn small_spec() -> SystemSpec {
+        let mut s = SystemSpec::paper_default();
+        s.block_size = 16 * 1024;
+        s.net.inner_mbps = 8000.0;
+        s.net.cross_mbps = 1600.0;
+        s
+    }
+
+    fn net_cluster(seed: u64) -> NetCluster {
+        let spec = small_spec();
+        let policy =
+            Arc::new(D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, spec.cluster).unwrap());
+        NetCluster::new(spec, policy, seed).unwrap()
+    }
+
+    #[test]
+    fn write_read_roundtrip_over_sockets() {
+        let cluster = net_cluster(7);
+        let data = deterministic_data(0, 3, 16 * 1024);
+        cluster.write_stripe(0, data.clone()).unwrap();
+        for (b, want) in data.iter().enumerate() {
+            let got = cluster.read_block(0, b, Location::new(7, 0)).unwrap();
+            assert_eq!(&got, want);
+        }
+        // parity blocks exist on their placed workers too
+        for b in 3..5 {
+            let loc = cluster.locate(0, b);
+            assert!(cluster.block_count(loc) > 0);
+        }
+    }
+
+    #[test]
+    fn degraded_read_rebuilds_over_sockets() {
+        let cluster = net_cluster(7);
+        let data = deterministic_data(5, 3, 16 * 1024);
+        cluster.write_stripe(5, data.clone()).unwrap();
+        let victim = cluster.locate(5, 1);
+        cluster.fail(victim).unwrap();
+        let (got, _) = cluster.degraded_read(5, 1, Location::new(6, 2)).unwrap();
+        assert_eq!(got, data[1]);
+    }
+
+    #[test]
+    fn drained_worker_rejects_writes_but_serves_reads() {
+        let cluster = net_cluster(3);
+        cluster.write_stripe(0, deterministic_data(0, 3, 16 * 1024)).unwrap();
+        let loc = cluster.locate(0, 0);
+        cluster.rpc_ok(loc, &Msg::Drain).unwrap();
+        assert!(cluster
+            .rpc_ok(loc, &Msg::WriteBlock { sid: 9, block: 0, bytes: vec![1] })
+            .is_err());
+        assert!(cluster.rpc_data(loc, &Msg::FetchBlock { sid: 0, block: 0 }).is_ok());
+        cluster.rpc_ok(loc, &Msg::Join).unwrap();
+    }
+
+    #[test]
+    fn failed_worker_rejects_reads_until_join() {
+        let cluster = net_cluster(11);
+        cluster.write_stripe(0, deterministic_data(0, 3, 16 * 1024)).unwrap();
+        let loc = cluster.locate(0, 2);
+        cluster.fail(loc).unwrap();
+        assert_eq!(cluster.node_state(loc), NodeState::Failed);
+        assert!(cluster.rpc_data(loc, &Msg::FetchBlock { sid: 0, block: 2 }).is_err());
+        let (state, blocks) = cluster.heartbeat(loc).unwrap();
+        assert_eq!(state, NodeState::Failed);
+        assert_eq!(blocks, 0, "Fail must drop the store");
+        cluster.join(loc).unwrap();
+        assert_eq!(cluster.heartbeat(loc).unwrap().0, NodeState::Up);
+    }
+}

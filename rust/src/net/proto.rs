@@ -1,0 +1,429 @@
+//! Length-prefixed RPC protocol between the NetCluster coordinator and
+//! its node workers (DESIGN.md §13).
+//!
+//! Framing: every message is `u32 little-endian length ‖ body`, capped at
+//! [`MAX_FRAME`]. Bodies are a one-byte tag followed by fixed-width
+//! little-endian integers and length-prefixed byte strings — hand-rolled
+//! (std-only, no serde) and round-trip tested below. Requests are
+//! [`Msg`]; every request gets exactly one [`Reply`] on the same
+//! connection, so a pooled connection is always in a known state.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+/// Frame-size cap: a 16 MiB paper-default block plus headers fits with
+/// lots of slack; anything larger is a corrupt or hostile length prefix.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Worker membership states (DESIGN.md §13 state machine).
+pub const STATE_UP: u8 = 0;
+pub const STATE_DRAINING: u8 = 1;
+pub const STATE_FAILED: u8 = 2;
+
+/// Write one `len ‖ body` frame.
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read one frame; errors on EOF mid-frame or an oversized length.
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(body)
+}
+
+/// FNV-1a over a block's bytes — the recovered-block integrity digest
+/// workers return from `RecoverPlan`, cheap enough to run inline.
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// One source of a worker-side rebuild: fetch `block` of the plan's
+/// stripe from the worker at `addr` and scale it by `coeff`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanSource {
+    pub coeff: u8,
+    pub block: u32,
+    /// Socket address of the worker currently holding the block.
+    pub addr: String,
+}
+
+/// Coordinator → worker requests.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Msg {
+    /// Liveness + occupancy probe.
+    Heartbeat,
+    /// (Re)join as an empty replacement machine at the same address.
+    Join,
+    /// Stop accepting writes; reads keep working while blocks move off.
+    Drain,
+    /// Crash: drop all blocks, reject reads and writes.
+    Fail,
+    /// Store one block replica.
+    WriteBlock { sid: u64, block: u32, bytes: Vec<u8> },
+    /// Read one whole block.
+    FetchBlock { sid: u64, block: u32 },
+    /// Read bytes `[off, off + len)` of a block (executor chunk fetch).
+    FetchChunk { sid: u64, block: u32, off: u64, len: u32 },
+    /// Drop one block replica (after it was re-homed elsewhere).
+    RemoveBlock { sid: u64, block: u32 },
+    /// Enumerate held blocks (drain orchestration).
+    ListBlocks,
+    /// Pure-compute parity encode: `rows` is the m×k coefficient matrix
+    /// flattened row-major, `shards` is k data shards of `shard_len`
+    /// bytes back to back; the reply is the m parity shards back to back.
+    Encode { k: u32, rows: Vec<u8>, shard_len: u32, shards: Vec<u8> },
+    /// Worker-side block rebuild: pull every source from its peer,
+    /// GF-combine, store the result, reply with its checksum.
+    RecoverPlan { sid: u64, block: u32, block_len: u32, sources: Vec<PlanSource> },
+}
+
+/// Worker → coordinator replies.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Reply {
+    Ok,
+    Err(String),
+    Data(Vec<u8>),
+    Blocks(Vec<(u64, u32)>),
+    Beat { state: u8, blocks: u64 },
+    Sum(u64),
+}
+
+const TAG_HEARTBEAT: u8 = 0x01;
+const TAG_JOIN: u8 = 0x02;
+const TAG_DRAIN: u8 = 0x03;
+const TAG_FAIL: u8 = 0x04;
+const TAG_WRITE_BLOCK: u8 = 0x05;
+const TAG_FETCH_BLOCK: u8 = 0x06;
+const TAG_FETCH_CHUNK: u8 = 0x07;
+const TAG_REMOVE_BLOCK: u8 = 0x08;
+const TAG_LIST_BLOCKS: u8 = 0x09;
+const TAG_ENCODE: u8 = 0x0a;
+const TAG_RECOVER_PLAN: u8 = 0x0b;
+
+const TAG_OK: u8 = 0x80;
+const TAG_ERR: u8 = 0x81;
+const TAG_DATA: u8 = 0x82;
+const TAG_BLOCKS: u8 = 0x83;
+const TAG_BEAT: u8 = 0x84;
+const TAG_SUM: u8 = 0x85;
+
+fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    out.extend_from_slice(&(b.len() as u32).to_le_bytes());
+    out.extend_from_slice(b);
+}
+
+/// Byte-cursor over a frame body; every getter checks bounds.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated frame: wanted {n} bytes at offset {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let len = self.u32()? as usize;
+        Ok(self.take(len)?.to_vec())
+    }
+
+    fn string(&mut self) -> Result<String> {
+        String::from_utf8(self.bytes()?).map_err(|_| anyhow::anyhow!("non-UTF-8 string field"))
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("{} trailing bytes after message", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+impl Msg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Msg::Heartbeat => out.push(TAG_HEARTBEAT),
+            Msg::Join => out.push(TAG_JOIN),
+            Msg::Drain => out.push(TAG_DRAIN),
+            Msg::Fail => out.push(TAG_FAIL),
+            Msg::WriteBlock { sid, block, bytes } => {
+                out.push(TAG_WRITE_BLOCK);
+                out.extend_from_slice(&sid.to_le_bytes());
+                out.extend_from_slice(&block.to_le_bytes());
+                put_bytes(&mut out, bytes);
+            }
+            Msg::FetchBlock { sid, block } => {
+                out.push(TAG_FETCH_BLOCK);
+                out.extend_from_slice(&sid.to_le_bytes());
+                out.extend_from_slice(&block.to_le_bytes());
+            }
+            Msg::FetchChunk { sid, block, off, len } => {
+                out.push(TAG_FETCH_CHUNK);
+                out.extend_from_slice(&sid.to_le_bytes());
+                out.extend_from_slice(&block.to_le_bytes());
+                out.extend_from_slice(&off.to_le_bytes());
+                out.extend_from_slice(&len.to_le_bytes());
+            }
+            Msg::RemoveBlock { sid, block } => {
+                out.push(TAG_REMOVE_BLOCK);
+                out.extend_from_slice(&sid.to_le_bytes());
+                out.extend_from_slice(&block.to_le_bytes());
+            }
+            Msg::ListBlocks => out.push(TAG_LIST_BLOCKS),
+            Msg::Encode { k, rows, shard_len, shards } => {
+                out.push(TAG_ENCODE);
+                out.extend_from_slice(&k.to_le_bytes());
+                put_bytes(&mut out, rows);
+                out.extend_from_slice(&shard_len.to_le_bytes());
+                put_bytes(&mut out, shards);
+            }
+            Msg::RecoverPlan { sid, block, block_len, sources } => {
+                out.push(TAG_RECOVER_PLAN);
+                out.extend_from_slice(&sid.to_le_bytes());
+                out.extend_from_slice(&block.to_le_bytes());
+                out.extend_from_slice(&block_len.to_le_bytes());
+                out.extend_from_slice(&(sources.len() as u32).to_le_bytes());
+                for s in sources {
+                    out.push(s.coeff);
+                    out.extend_from_slice(&s.block.to_le_bytes());
+                    put_bytes(&mut out, s.addr.as_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Msg> {
+        let mut c = Cursor::new(body);
+        let msg = match c.u8()? {
+            TAG_HEARTBEAT => Msg::Heartbeat,
+            TAG_JOIN => Msg::Join,
+            TAG_DRAIN => Msg::Drain,
+            TAG_FAIL => Msg::Fail,
+            TAG_WRITE_BLOCK => {
+                Msg::WriteBlock { sid: c.u64()?, block: c.u32()?, bytes: c.bytes()? }
+            }
+            TAG_FETCH_BLOCK => Msg::FetchBlock { sid: c.u64()?, block: c.u32()? },
+            TAG_FETCH_CHUNK => Msg::FetchChunk {
+                sid: c.u64()?,
+                block: c.u32()?,
+                off: c.u64()?,
+                len: c.u32()?,
+            },
+            TAG_REMOVE_BLOCK => Msg::RemoveBlock { sid: c.u64()?, block: c.u32()? },
+            TAG_LIST_BLOCKS => Msg::ListBlocks,
+            TAG_ENCODE => Msg::Encode {
+                k: c.u32()?,
+                rows: c.bytes()?,
+                shard_len: c.u32()?,
+                shards: c.bytes()?,
+            },
+            TAG_RECOVER_PLAN => {
+                let (sid, block, block_len) = (c.u64()?, c.u32()?, c.u32()?);
+                let n = c.u32()? as usize;
+                let mut sources = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    sources.push(PlanSource {
+                        coeff: c.u8()?,
+                        block: c.u32()?,
+                        addr: c.string()?,
+                    });
+                }
+                Msg::RecoverPlan { sid, block, block_len, sources }
+            }
+            t => bail!("unknown request tag 0x{t:02x}"),
+        };
+        c.finish()?;
+        Ok(msg)
+    }
+}
+
+impl Reply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Reply::Ok => out.push(TAG_OK),
+            Reply::Err(e) => {
+                out.push(TAG_ERR);
+                put_bytes(&mut out, e.as_bytes());
+            }
+            Reply::Data(b) => {
+                out.push(TAG_DATA);
+                put_bytes(&mut out, b);
+            }
+            Reply::Blocks(blocks) => {
+                out.push(TAG_BLOCKS);
+                out.extend_from_slice(&(blocks.len() as u32).to_le_bytes());
+                for &(sid, b) in blocks {
+                    out.extend_from_slice(&sid.to_le_bytes());
+                    out.extend_from_slice(&b.to_le_bytes());
+                }
+            }
+            Reply::Beat { state, blocks } => {
+                out.push(TAG_BEAT);
+                out.push(*state);
+                out.extend_from_slice(&blocks.to_le_bytes());
+            }
+            Reply::Sum(s) => {
+                out.push(TAG_SUM);
+                out.extend_from_slice(&s.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn decode(body: &[u8]) -> Result<Reply> {
+        let mut c = Cursor::new(body);
+        let reply = match c.u8()? {
+            TAG_OK => Reply::Ok,
+            TAG_ERR => Reply::Err(c.string()?),
+            TAG_DATA => Reply::Data(c.bytes()?),
+            TAG_BLOCKS => {
+                let n = c.u32()? as usize;
+                let mut blocks = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    blocks.push((c.u64()?, c.u32()?));
+                }
+                Reply::Blocks(blocks)
+            }
+            TAG_BEAT => Reply::Beat { state: c.u8()?, blocks: c.u64()? },
+            TAG_SUM => Reply::Sum(c.u64()?),
+            t => bail!("unknown reply tag 0x{t:02x}"),
+        };
+        c.finish()?;
+        Ok(reply)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_msg(m: Msg) {
+        assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
+    }
+
+    fn roundtrip_reply(r: Reply) {
+        assert_eq!(Reply::decode(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        roundtrip_msg(Msg::Heartbeat);
+        roundtrip_msg(Msg::Join);
+        roundtrip_msg(Msg::Drain);
+        roundtrip_msg(Msg::Fail);
+        roundtrip_msg(Msg::WriteBlock { sid: 7, block: 3, bytes: vec![1, 2, 3] });
+        roundtrip_msg(Msg::FetchBlock { sid: u64::MAX, block: 11 });
+        roundtrip_msg(Msg::FetchChunk { sid: 9, block: 0, off: 1 << 40, len: 4096 });
+        roundtrip_msg(Msg::RemoveBlock { sid: 1, block: 2 });
+        roundtrip_msg(Msg::ListBlocks);
+        roundtrip_msg(Msg::Encode {
+            k: 3,
+            rows: vec![1, 2, 3, 4, 5, 6],
+            shard_len: 2,
+            shards: vec![9; 6],
+        });
+        roundtrip_msg(Msg::RecoverPlan {
+            sid: 42,
+            block: 4,
+            block_len: 65536,
+            sources: vec![
+                PlanSource { coeff: 0x1d, block: 0, addr: "127.0.0.1:4000".into() },
+                PlanSource { coeff: 1, block: 2, addr: "127.0.0.1:4001".into() },
+            ],
+        });
+    }
+
+    #[test]
+    fn every_reply_roundtrips() {
+        roundtrip_reply(Reply::Ok);
+        roundtrip_reply(Reply::Err("node N1,2 is failed".into()));
+        roundtrip_reply(Reply::Data(vec![0xab; 100]));
+        roundtrip_reply(Reply::Blocks(vec![(0, 1), (9, 4)]));
+        roundtrip_reply(Reply::Beat { state: STATE_DRAINING, blocks: 12 });
+        roundtrip_reply(Reply::Sum(0xdead_beef_cafe));
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Msg::decode(&[]).is_err());
+        assert!(Msg::decode(&[0x7f]).is_err());
+        assert!(Msg::decode(&[TAG_WRITE_BLOCK, 1, 2]).is_err(), "truncated body");
+        // trailing bytes after a complete message are an error, not ignored
+        let mut ok = Msg::Heartbeat.encode();
+        ok.push(0);
+        assert!(Msg::decode(&ok).is_err());
+        assert!(Reply::decode(&[0x01]).is_err());
+    }
+
+    #[test]
+    fn frames_roundtrip_over_a_buffer() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Msg::FetchBlock { sid: 3, block: 1 }.encode()).unwrap();
+        write_frame(&mut wire, &Reply::Ok.encode()).unwrap();
+        let mut r = &wire[..];
+        let m = Msg::decode(&read_frame(&mut r).unwrap()).unwrap();
+        assert_eq!(m, Msg::FetchBlock { sid: 3, block: 1 });
+        let rep = Reply::decode(&read_frame(&mut r).unwrap()).unwrap();
+        assert_eq!(rep, Reply::Ok);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        let mut r = &wire[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn checksum_is_stable_and_content_sensitive() {
+        let a = checksum(b"hello");
+        assert_eq!(a, checksum(b"hello"));
+        assert_ne!(a, checksum(b"hellp"));
+        assert_ne!(checksum(&[]), 0);
+    }
+}

@@ -1,0 +1,262 @@
+//! One storage node as a real network server (DESIGN.md §13): a TCP
+//! listener on an ephemeral loopback port, a block store behind it, and
+//! the membership state machine (Up → Draining/Failed → Up via Join).
+//!
+//! Workers are OS threads inside the test process — which keeps the
+//! `D3_FORCE_KERNEL` GF-lane selection uniform across "machines" — but
+//! nothing in the protocol knows that: every byte a worker serves or
+//! rebuilds crosses a real socket, and worker-to-worker source fetches
+//! during `RecoverPlan` open their own peer connections.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Result};
+
+use crate::gf;
+use crate::topology::Location;
+
+use super::proto::{self, Msg, PlanSource, Reply, STATE_DRAINING, STATE_FAILED, STATE_UP};
+
+/// Coordinator-side handle to one spawned worker.
+pub struct WorkerHandle {
+    pub addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    listener: Option<JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// Stop the accept loop and join the listener thread. Idempotent;
+    /// also runs on drop so a panicking test never leaks the thread.
+    pub fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // wake the blocking accept with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.listener.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Server-side state of one node.
+struct NodeWorker {
+    loc: Location,
+    /// One of [`STATE_UP`], [`STATE_DRAINING`], [`STATE_FAILED`].
+    state: Mutex<u8>,
+    store: Mutex<HashMap<(u64, u32), Vec<u8>>>,
+}
+
+/// Bind a listener on `127.0.0.1:0` and serve until the handle stops it.
+/// Each accepted connection gets its own detached handler thread that
+/// answers frames until the peer hangs up.
+pub fn spawn_worker(loc: Location) -> Result<WorkerHandle> {
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let node = Arc::new(NodeWorker {
+        loc,
+        state: Mutex::new(STATE_UP),
+        store: Mutex::new(HashMap::new()),
+    });
+    let stop = shutdown.clone();
+    let handle = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let Ok(conn) = conn else { break };
+            let node = node.clone();
+            std::thread::spawn(move || serve_conn(&node, conn));
+        }
+    });
+    Ok(WorkerHandle { addr, shutdown, listener: Some(handle) })
+}
+
+fn serve_conn(node: &NodeWorker, mut conn: TcpStream) {
+    let _ = conn.set_nodelay(true);
+    loop {
+        // EOF (peer closed or pooled connection dropped) ends the handler
+        let Ok(body) = proto::read_frame(&mut conn) else { return };
+        let reply = match Msg::decode(&body) {
+            Ok(msg) => node.serve(msg),
+            Err(e) => Reply::Err(format!("bad request: {e}")),
+        };
+        if proto::write_frame(&mut conn, &reply.encode()).is_err() {
+            return;
+        }
+    }
+}
+
+impl NodeWorker {
+    fn serve(&self, msg: Msg) -> Reply {
+        match msg {
+            Msg::Heartbeat => Reply::Beat {
+                state: *self.state.lock().unwrap(),
+                blocks: self.store.lock().unwrap().len() as u64,
+            },
+            Msg::Join => {
+                // a replacement machine at the same address: empty store
+                self.store.lock().unwrap().clear();
+                *self.state.lock().unwrap() = STATE_UP;
+                Reply::Ok
+            }
+            Msg::Drain => {
+                *self.state.lock().unwrap() = STATE_DRAINING;
+                Reply::Ok
+            }
+            Msg::Fail => {
+                self.store.lock().unwrap().clear();
+                *self.state.lock().unwrap() = STATE_FAILED;
+                Reply::Ok
+            }
+            Msg::WriteBlock { sid, block, bytes } => match *self.state.lock().unwrap() {
+                STATE_UP => {
+                    self.store.lock().unwrap().insert((sid, block), bytes);
+                    Reply::Ok
+                }
+                STATE_DRAINING => {
+                    Reply::Err(format!("draining node {} rejects writes", self.loc))
+                }
+                _ => Reply::Err(format!("failed node {} rejects writes", self.loc)),
+            },
+            Msg::FetchBlock { sid, block } => {
+                if *self.state.lock().unwrap() == STATE_FAILED {
+                    return Reply::Err(format!("failed node {} rejects reads", self.loc));
+                }
+                match self.store.lock().unwrap().get(&(sid, block)) {
+                    Some(b) => Reply::Data(b.clone()),
+                    None => {
+                        Reply::Err(format!("block ({sid},{block}) missing at {}", self.loc))
+                    }
+                }
+            }
+            Msg::FetchChunk { sid, block, off, len } => {
+                if *self.state.lock().unwrap() == STATE_FAILED {
+                    return Reply::Err(format!("failed node {} rejects reads", self.loc));
+                }
+                let store = self.store.lock().unwrap();
+                let Some(blk) = store.get(&(sid, block)) else {
+                    return Reply::Err(format!(
+                        "block ({sid},{block}) missing at {}",
+                        self.loc
+                    ));
+                };
+                let (off, len) = (off as usize, len as usize);
+                if off + len > blk.len() {
+                    return Reply::Err(format!(
+                        "chunk [{off}, {}) out of range for block ({sid},{block}) of {} bytes",
+                        off + len,
+                        blk.len()
+                    ));
+                }
+                Reply::Data(blk[off..off + len].to_vec())
+            }
+            Msg::RemoveBlock { sid, block } => {
+                self.store.lock().unwrap().remove(&(sid, block));
+                Reply::Ok
+            }
+            Msg::ListBlocks => {
+                let mut blocks: Vec<(u64, u32)> =
+                    self.store.lock().unwrap().keys().copied().collect();
+                blocks.sort_unstable();
+                Reply::Blocks(blocks)
+            }
+            Msg::Encode { k, rows, shard_len, shards } => {
+                // pure compute — served in every state (a client may pick
+                // any node as its encoder, exactly as the in-process
+                // cluster models the client-side encode)
+                self.encode(k as usize, &rows, shard_len as usize, &shards)
+            }
+            Msg::RecoverPlan { sid, block, block_len, sources } => {
+                self.recover_plan(sid, block, block_len as usize, &sources)
+            }
+        }
+    }
+
+    /// GF parity encode: one fused multiply-accumulate per parity row,
+    /// the same [`gf::combine_many_into`] kernel the coder service runs —
+    /// so worker-side parity is byte-identical to MiniCluster parity.
+    fn encode(&self, k: usize, rows: &[u8], shard_len: usize, shards: &[u8]) -> Reply {
+        if k == 0 || shard_len == 0 {
+            return Reply::Err("encode: empty shards".into());
+        }
+        if shards.len() != k * shard_len || rows.len() % k != 0 || rows.is_empty() {
+            return Reply::Err(format!(
+                "encode: shape mismatch (k={k}, {} coeffs, {} shard bytes)",
+                rows.len(),
+                shards.len()
+            ));
+        }
+        let m = rows.len() / k;
+        let mut parity = vec![0u8; m * shard_len];
+        for (j, out) in parity.chunks_mut(shard_len).enumerate() {
+            let pairs: Vec<(u8, &[u8])> = (0..k)
+                .map(|i| (rows[j * k + i], &shards[i * shard_len..(i + 1) * shard_len]))
+                .collect();
+            gf::combine_many_into(out, &pairs);
+        }
+        Reply::Data(parity)
+    }
+
+    /// Rebuild one block ON the worker: fetch every source block from the
+    /// peer worker named in the plan (real worker-to-worker sockets),
+    /// GF-combine with the plan's decode coefficients, store the result,
+    /// and return its [`proto::checksum`].
+    fn recover_plan(
+        &self,
+        sid: u64,
+        block: u32,
+        block_len: usize,
+        sources: &[PlanSource],
+    ) -> Reply {
+        if *self.state.lock().unwrap() != STATE_UP {
+            return Reply::Err(format!("node {} cannot host a rebuild", self.loc));
+        }
+        let mut pairs: Vec<(u8, Vec<u8>)> = Vec::with_capacity(sources.len());
+        for s in sources {
+            match fetch_peer_block(&s.addr, sid, s.block) {
+                Ok(bytes) if bytes.len() == block_len => pairs.push((s.coeff, bytes)),
+                Ok(bytes) => {
+                    return Reply::Err(format!(
+                        "source block {} from {} is {} bytes, want {block_len}",
+                        s.block,
+                        s.addr,
+                        bytes.len()
+                    ));
+                }
+                Err(e) => {
+                    return Reply::Err(format!(
+                        "fetch source block {} from {}: {e}",
+                        s.block, s.addr
+                    ));
+                }
+            }
+        }
+        let mut acc = vec![0u8; block_len];
+        gf::combine_many_into(&mut acc, &pairs);
+        let sum = proto::checksum(&acc);
+        self.store.lock().unwrap().insert((sid, block), acc);
+        Reply::Sum(sum)
+    }
+}
+
+/// One-shot fetch of a whole block from a peer worker.
+fn fetch_peer_block(addr: &str, sid: u64, block: u32) -> Result<Vec<u8>> {
+    let mut conn = TcpStream::connect(addr)?;
+    conn.set_nodelay(true)?;
+    proto::write_frame(&mut conn, &Msg::FetchBlock { sid, block }.encode())?;
+    match Reply::decode(&proto::read_frame(&mut conn)?)? {
+        Reply::Data(b) => Ok(b),
+        Reply::Err(e) => bail!("{e}"),
+        other => bail!("unexpected reply {other:?}"),
+    }
+}

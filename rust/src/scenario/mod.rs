@@ -274,7 +274,7 @@ impl FailureScenario {
 /// What a backend measured for one scenario run.
 #[derive(Clone, Debug)]
 pub struct ScenarioOutcome {
-    /// Backend that produced this outcome (`sim` or `cluster`).
+    /// Backend that produced this outcome (`sim`, `cluster`, or `net`).
     pub backend: &'static str,
     /// Scenario label ([`FailureScenario::name`]).
     pub scenario: String,

@@ -74,23 +74,33 @@ impl Rng {
     }
 
     /// Uniform in [0, bound) without modulo bias (Lemire's method).
+    ///
+    /// The full-width variant: callers that carry 64-bit quantities
+    /// (stripe ids, weight sums) use this directly instead of
+    /// round-tripping through `usize`, which truncates on 32-bit
+    /// targets. Draws the same stream as `below` for equal bounds.
     #[inline]
-    pub fn below(&mut self, bound: usize) -> usize {
+    pub fn below_u64(&mut self, bound: u64) -> u64 {
         assert!(bound > 0);
-        let bound = bound as u64;
         loop {
             let x = self.next_u64();
             let m = (x as u128).wrapping_mul(bound as u128);
             let lo = m as u64;
             if lo >= bound {
-                return (m >> 64) as usize;
+                return (m >> 64) as u64;
             }
             // reject the biased low zone
             let t = bound.wrapping_neg() % bound;
             if lo >= t {
-                return (m >> 64) as usize;
+                return (m >> 64) as u64;
             }
         }
+    }
+
+    /// Uniform in [0, bound) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        self.below_u64(bound as u64) as usize
     }
 
     /// Uniform f64 in [0, 1).
@@ -181,6 +191,38 @@ mod tests {
         for &c in &counts {
             let expect = n / 8;
             assert!((c as i64 - expect as i64).abs() < (expect / 10) as i64, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn below_u64_handles_bounds_past_u32() {
+        // Regression: client/gen.rs used to funnel 64-bit bounds through
+        // `below(bound as usize)`, truncating for bounds >= 2^32 (and on
+        // 32-bit targets for anything past 2^32-1). The wide variant must
+        // stay in range AND actually reach the region above u32::MAX.
+        let bound = 1u64 << 33;
+        let mut rng = Rng::new(17);
+        let mut above_u32 = 0usize;
+        for _ in 0..256 {
+            let v = rng.below_u64(bound);
+            assert!(v < bound);
+            if v > u32::MAX as u64 {
+                above_u32 += 1;
+            }
+        }
+        // half the range lies above u32::MAX; 256 draws all landing
+        // below it would be a 2^-256 event
+        assert!(above_u32 > 0, "draws never exceeded u32::MAX — truncation regressed");
+    }
+
+    #[test]
+    fn below_u64_matches_below_stream_for_small_bounds() {
+        // `below` delegates to `below_u64`; equal bounds must consume the
+        // identical stream so every seeded test in the tree stays green.
+        let mut a = Rng::new(23);
+        let mut b = Rng::new(23);
+        for bound in [1usize, 2, 7, 100, 1 << 20] {
+            assert_eq!(a.below(bound) as u64, b.below_u64(bound as u64));
         }
     }
 

@@ -1,15 +1,23 @@
-//! Scenario-engine integration: the same `FailureScenario` runs on both
-//! the fluid-simulator and MiniCluster backends, outcomes are
-//! cross-checkable, and D³'s headline property — fewer cross-rack repair
-//! bytes than RDD — holds on *both* backends.
+//! Scenario-engine integration: the same `FailureScenario` runs on the
+//! fluid-simulator, MiniCluster, and socket-backed NetCluster backends,
+//! outcomes are cross-checkable (exactly, for the two real data paths),
+//! and D³'s headline property — fewer cross-rack repair bytes than RDD —
+//! holds on *both* physical backends.
+//!
+//! The `net_`-prefixed tests are the loopback-socket suite CI runs under
+//! a hard timeout (`cargo test --test scenario_engine net_`).
 
 use std::sync::Arc;
 
-use d3ec::cluster::{ClusterBackend, MiniCluster};
+use d3ec::client::ClientIo;
+use d3ec::cluster::{deterministic_data, BlockFabric, ClusterBackend, MiniCluster};
 use d3ec::codes::CodeSpec;
+use d3ec::net::{proto, NetCluster, NetClusterBackend, NodeState};
 use d3ec::placement::{D3Placement, Placement, PlacementTable, RddPlacement};
+use d3ec::recovery::migration::plan_migration;
 use d3ec::recovery::multi::scenario_recovery_plans;
-use d3ec::recovery::{node_recovery_plans, SchedulePolicy};
+use d3ec::recovery::plan::RepairPlan;
+use d3ec::recovery::{node_recovery_plans, plan_repair, ExecutorConfig, SchedulePolicy};
 use d3ec::scenario::{FailureScenario, RecoveryBackend};
 use d3ec::sim::SimBackend;
 use d3ec::topology::{Location, SystemSpec};
@@ -292,6 +300,302 @@ fn every_scenario_kind_cross_checks_between_backends() {
             c.seconds,
             s.seconds
         );
+    }
+}
+
+/// A small, fast testbed for the socket-backed suite: tiny blocks, fat
+/// modeled links, the shared deterministic populate oracle.
+fn fast_spec() -> SystemSpec {
+    let mut spec = SystemSpec::paper_default();
+    spec.block_size = 16 << 10;
+    spec.net.inner_mbps = 8000.0;
+    spec.net.cross_mbps = 1600.0;
+    spec
+}
+
+fn net_pair(spec: SystemSpec, seed: u64) -> (Arc<dyn Placement>, MiniCluster, NetCluster) {
+    let code = CodeSpec::Rs { k: 3, m: 2 };
+    let p: Arc<dyn Placement> = Arc::new(D3Placement::new(code, spec.cluster).unwrap());
+    let mini = MiniCluster::new(spec, p.clone(), "native", seed).unwrap();
+    let net = NetCluster::new(spec, p.clone(), seed).unwrap();
+    (p, mini, net)
+}
+
+fn populate_both(mini: &MiniCluster, net: &NetCluster, stripes: u64, k: usize, bs: usize) {
+    mini.write_stripes_parallel(stripes, 4, |sid| deterministic_data(sid, k, bs)).unwrap();
+    net.write_stripes_parallel(stripes, 4, |sid| deterministic_data(sid, k, bs)).unwrap();
+}
+
+#[test]
+fn net_three_backend_parity() {
+    // The tentpole's acceptance: identical seeds agree EXACTLY on per-rack
+    // repair bytes between the two physical backends (both charge the same
+    // modeled transfers; timing cannot perturb byte counters), and agree
+    // with the fluid simulator at block granularity.
+    let mut spec = SystemSpec::paper_default();
+    spec.block_size = 256 << 10;
+    spec.net.inner_mbps = 1600.0;
+    spec.net.cross_mbps = 160.0;
+    let p = policy("d3", &spec);
+    let mut sim = SimBackend::default();
+    sim.cfg.task_overhead_s = 0.0;
+    sim.cfg.workers = 8;
+    let cluster = fast_cluster_backend();
+    let net = NetClusterBackend { block_size: 16 << 10, ..NetClusterBackend::default() };
+    let stripes = 40u64;
+    let kinds = [
+        FailureScenario::single_node(stripes, 2),
+        FailureScenario::multi_node(2, stripes, 2),
+        FailureScenario::rack_failure(1, stripes, 2),
+        FailureScenario::degraded_burst(10, stripes, 2),
+    ];
+    for scenario in kinds {
+        let name = scenario.name();
+        let s = sim.run(&scenario, &p, &spec).unwrap();
+        let c = cluster.run(&scenario, &p, &spec).unwrap();
+        let n = net.run(&scenario, &p, &spec).unwrap();
+        // served / rebuilt block counts agree three ways
+        assert_eq!(s.blocks, c.blocks, "{name}: sim vs cluster plan sets");
+        assert_eq!(c.blocks, n.blocks, "{name}: cluster vs net plan sets");
+        assert_eq!(
+            c.planned_cross_rack_blocks, n.planned_cross_rack_blocks,
+            "{name}: plan structure diverges"
+        );
+        // the headline acceptance: exact per-rack repair-byte agreement
+        // between the in-process and socket-backed data paths
+        assert_eq!(
+            c.rack_cross_bytes, n.rack_cross_bytes,
+            "{name}: cluster and net per-rack cross-rack bytes differ"
+        );
+        // and block-granular agreement with the fluid model
+        let in_blocks = |bytes: &[(u64, u64)], bs: u64| -> Vec<(u64, u64)> {
+            bytes
+                .iter()
+                .map(|&(u, d)| {
+                    (
+                        (u as f64 / bs as f64).round() as u64,
+                        (d as f64 / bs as f64).round() as u64,
+                    )
+                })
+                .collect()
+        };
+        assert_eq!(
+            in_blocks(&s.rack_cross_bytes, spec.block_size),
+            in_blocks(&n.rack_cross_bytes, net.block_size),
+            "{name}: sim vs net per-rack block counts diverge"
+        );
+        assert!(n.seconds > 0.0, "{name}: net backend reported no wall time");
+    }
+}
+
+#[test]
+fn net_recovered_block_checksum_parity() {
+    // Same populate, same failure, same plans on both physical backends:
+    // every recovered block must hash identically on both, and data
+    // blocks must hash to the populate oracle's bytes.
+    let spec = fast_spec();
+    let (p, mini, net) = net_pair(spec, 2);
+    let stripes = 24u64;
+    populate_both(&mini, &net, stripes, 3, spec.block_size as usize);
+    let failed = Location::new(0, 0);
+    mini.fail_node(failed);
+    net.fail(failed).unwrap();
+    let plans = node_recovery_plans(p.as_ref(), stripes, failed, 2);
+    assert!(!plans.is_empty(), "node held no blocks");
+    let cfg = ExecutorConfig { workers: 6, ..ExecutorConfig::default() };
+    let ms = mini.recover_with_plans_cfg(plans.clone(), cfg, &[0]).unwrap();
+    let ns = net.recover_with_plans_cfg(plans.clone(), cfg, &[0]).unwrap();
+    assert_eq!(ms.blocks, ns.blocks);
+    assert_eq!(ms.rack_bytes, ns.rack_bytes, "recovery byte accounting diverges");
+    let client = Location::new(7, 2);
+    for plan in &plans {
+        let (sid, b) = (plan.stripe, plan.failed_block);
+        let from_mini = mini.read_block(sid, b, client).unwrap();
+        let from_net = ClientIo::read_block(&net, sid, b, client).unwrap();
+        assert_eq!(
+            proto::checksum(&from_mini),
+            proto::checksum(&from_net),
+            "stripe {sid} block {b}: recovered checksums diverge"
+        );
+        if b < 3 {
+            let oracle = deterministic_data(sid, 3, spec.block_size as usize);
+            assert_eq!(from_net, oracle[b], "stripe {sid} block {b}: wrong bytes rebuilt");
+        }
+    }
+}
+
+#[test]
+fn net_recover_plan_rpc_rebuilds_on_worker() {
+    // One RecoverPlan RPC: the writer worker pulls sources from its peers
+    // over worker-to-worker sockets, GF-combines, stores, and returns the
+    // rebuilt block's checksum.
+    let spec = fast_spec();
+    let (p, _mini, net) = net_pair(spec, 3);
+    let data = deterministic_data(4, 3, spec.block_size as usize);
+    net.write_stripe(4, data.clone()).unwrap();
+    let victim = BlockFabric::locate(&net, 4, 1);
+    net.fail(victim).unwrap();
+    let plan = plan_repair(p.as_ref(), 4, 1, 3);
+    let sum = net.recover_block_on_worker(&plan).unwrap();
+    assert_eq!(sum, proto::checksum(&data[1]), "worker rebuilt the wrong bytes");
+    let got = ClientIo::read_block(&net, 4, 1, Location::new(6, 1)).unwrap();
+    assert_eq!(got, data[1]);
+}
+
+#[test]
+fn net_membership_join_rebalance_fail_recover() {
+    // The RPC membership state machine end to end: fail → recover →
+    // (heartbeat sees Failed/empty) → join → rebalance restores the
+    // canonical layout → fail again → recover again → still readable.
+    let spec = fast_spec();
+    let (p, _mini, net) = net_pair(spec, 5);
+    let stripes = 18u64;
+    let bs = spec.block_size as usize;
+    net.write_stripes_parallel(stripes, 4, |sid| deterministic_data(sid, 3, bs)).unwrap();
+    let failed = BlockFabric::locate(&net, 0, 0);
+    assert_eq!(net.heartbeat(failed).unwrap().0, NodeState::Up);
+
+    let recover = |seed_plans: &[RepairPlan]| {
+        let cfg = ExecutorConfig { workers: 4, ..ExecutorConfig::default() };
+        net.recover_with_plans_cfg(seed_plans.to_vec(), cfg, &[failed.rack]).unwrap()
+    };
+    let plans = node_recovery_plans(p.as_ref(), stripes, failed, 5);
+    assert!(!plans.is_empty());
+
+    net.fail(failed).unwrap();
+    let (state, blocks) = net.heartbeat(failed).unwrap();
+    assert_eq!(state, NodeState::Failed);
+    assert_eq!(blocks, 0, "Fail must drop the worker's store");
+    let stats = recover(&plans);
+    assert_eq!(stats.blocks, plans.len());
+
+    // recovered copies live AWAY from the failed node
+    for plan in &plans {
+        assert_ne!(BlockFabric::locate(&net, plan.stripe, plan.failed_block), failed);
+    }
+
+    // a replacement machine joins: rebalance moves every parked block home
+    let rebalanced = net.join(failed).unwrap();
+    assert_eq!(rebalanced, plans.len(), "join must restore the canonical layout");
+    let (state, blocks) = net.heartbeat(failed).unwrap();
+    assert_eq!(state, NodeState::Up);
+    assert_eq!(blocks as usize, plans.len());
+    let client = Location::new(7, 2);
+    for plan in &plans {
+        let (sid, b) = (plan.stripe, plan.failed_block);
+        assert_eq!(
+            BlockFabric::locate(&net, sid, b),
+            p.stripe(sid).locs[b],
+            "stripe {sid} block {b} not back on its canonical node"
+        );
+        if b < 3 {
+            let got = ClientIo::read_block(&net, sid, b, client).unwrap();
+            assert_eq!(got, deterministic_data(sid, 3, bs)[b], "stripe {sid} block {b}");
+        }
+    }
+
+    // the same machine can fail and be recovered a second time
+    net.fail(failed).unwrap();
+    recover(&plans);
+    for plan in &plans {
+        let (sid, b) = (plan.stripe, plan.failed_block);
+        if b < 3 {
+            let got = ClientIo::read_block(&net, sid, b, client).unwrap();
+            assert_eq!(got, deterministic_data(sid, 3, bs)[b], "second recovery broke {sid}/{b}");
+        }
+    }
+}
+
+#[test]
+fn net_drain_rehomes_blocks_and_keeps_them_readable() {
+    let spec = fast_spec();
+    let (_p, _mini, net) = net_pair(spec, 9);
+    let stripes = 12u64;
+    let bs = spec.block_size as usize;
+    net.write_stripes_parallel(stripes, 4, |sid| deterministic_data(sid, 3, bs)).unwrap();
+    let drained = BlockFabric::locate(&net, 0, 2);
+    let held_before = net.block_count(drained);
+    assert!(held_before > 0);
+    let moved = net.drain(drained).unwrap();
+    assert_eq!(moved, held_before, "drain must re-home every held block");
+    assert_eq!(net.heartbeat(drained).unwrap(), (NodeState::Draining, 0));
+    let client = Location::new(6, 0);
+    for sid in 0..stripes {
+        for b in 0..3 {
+            assert_ne!(BlockFabric::locate(&net, sid, b), drained, "block left on drained node");
+            let got = ClientIo::read_block(&net, sid, b, client).unwrap();
+            assert_eq!(got, deterministic_data(sid, 3, bs)[b], "stripe {sid} block {b}");
+        }
+    }
+}
+
+#[test]
+fn migration_restores_layout_on_minicluster_and_net_and_matches_sim() {
+    // Satellite: the §5.3 migration batches execute against real stores on
+    // BOTH physical fabrics — recovered blocks end up back on the relived
+    // node with the canonical layout and oracle bytes — and the simulator
+    // prices the identical batch sequence.
+    let mut spec = SystemSpec::paper_default();
+    spec.cluster.racks = 5;
+    spec.block_size = 16 << 10;
+    spec.net.inner_mbps = 8000.0;
+    spec.net.cross_mbps = 1600.0;
+    let code = CodeSpec::Rs { k: 3, m: 2 };
+    let d3 = D3Placement::new(code, spec.cluster).unwrap();
+    let p: Arc<dyn Placement> = Arc::new(D3Placement::new(code, spec.cluster).unwrap());
+    let mini = MiniCluster::new(spec, p.clone(), "native", 4).unwrap();
+    let net = NetCluster::new(spec, p.clone(), 4).unwrap();
+    let stripes = 45u64;
+    let bs = spec.block_size as usize;
+    populate_both(&mini, &net, stripes, 3, bs);
+
+    let failed = Location::new(0, 0);
+    mini.fail_node(failed);
+    net.fail(failed).unwrap();
+    let plans = node_recovery_plans(p.as_ref(), stripes, failed, 4);
+    assert!(!plans.is_empty());
+    let cfg = ExecutorConfig { workers: 4, ..ExecutorConfig::default() };
+    mini.recover_with_plans_cfg(plans.clone(), cfg, &[0]).unwrap();
+    net.recover_with_plans_cfg(plans.clone(), cfg, &[0]).unwrap();
+
+    // the replacement machine arrives empty; migration restores onto it
+    mini.relive_node(failed);
+    net.relive(failed).unwrap();
+    let appended = |plan: &RepairPlan| {
+        let sp = d3.stripe(plan.stripe);
+        sp.locs
+            .iter()
+            .enumerate()
+            .any(|(bi, l)| bi != plan.failed_block && l.rack == plan.writer.rack)
+    };
+    let batches =
+        plan_migration(&plans, appended, d3.region_size(), spec.cluster.nodes_per_rack);
+    assert!(!batches.is_empty());
+    let moves: usize = batches.iter().map(|b| b.moves.len()).sum();
+    assert_eq!(moves, plans.len(), "every recovered block migrates exactly once");
+
+    let mini_times = mini.run_migration(&batches, failed).unwrap();
+    let net_times = net.run_migration(&batches, failed).unwrap();
+    let sim_times = d3ec::sim::recovery::run_migration(&spec, &batches, failed);
+    assert_eq!(mini_times.len(), batches.len());
+    assert_eq!(net_times.len(), batches.len());
+    assert_eq!(sim_times.len(), batches.len(), "sim prices a different batch sequence");
+    assert!(sim_times.iter().all(|&t| t > 0.0));
+
+    // final placement: canonical layout restored on both fabrics, bytes
+    // identical to the populate oracle
+    let client = Location::new(4, 2);
+    for plan in &plans {
+        let (sid, b) = (plan.stripe, plan.failed_block);
+        let canonical = p.stripe(sid).locs[b];
+        assert_eq!(canonical, failed, "plan for a block the failed node never held");
+        assert_eq!(BlockFabric::locate(&mini, sid, b), canonical, "mini layout not restored");
+        assert_eq!(BlockFabric::locate(&net, sid, b), canonical, "net layout not restored");
+        if b < 3 {
+            let oracle = deterministic_data(sid, 3, bs);
+            assert_eq!(mini.read_block(sid, b, client).unwrap(), oracle[b]);
+            assert_eq!(ClientIo::read_block(&net, sid, b, client).unwrap(), oracle[b]);
+        }
     }
 }
 
