@@ -10,11 +10,12 @@
 //! shared code, which is what makes exact cross-backend byte parity a
 //! property by construction instead of a tuning exercise.
 
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::client::{ArrivalModel, ClientIo, FgOutcome, QosConfig, Request};
 use crate::codes::CodeSpec;
@@ -82,6 +83,38 @@ pub trait BlockFabric: Sync {
     fn clear_qos(&self);
     /// The recovery executor's per-chunk pacing hook.
     fn qos_pace(&self, _busy_s: f64) {}
+    /// Nodes currently marked failed.
+    fn failed_nodes(&self) -> Vec<Location>;
+    /// Mark a node failed WITHOUT erasing its storage — the failure
+    /// detector's escalation path for silent (crashed, partitioned)
+    /// nodes whose disks may still hold bytes nobody can reach.
+    fn mark_failed(&self, loc: Location);
+    /// Probe every node not already failed and escalate unresponsive
+    /// ones; returns the newly failed set. Fabrics without a liveness
+    /// channel (the in-process cluster cannot lose a heartbeat) detect
+    /// nothing.
+    fn detect_failures(&self) -> Vec<Location> {
+        Vec::new()
+    }
+    /// Checksum of the stored replica of `(sid, block)`, read back from
+    /// its current location — the scrub pass's disk-side witness.
+    fn stored_checksum(&self, sid: u64, block: usize) -> Result<u64>;
+    /// Checksum recorded when the block was first written or recovered
+    /// (`None` if the fabric never stored it).
+    fn expected_checksum(&self, sid: u64, block: usize) -> Option<u64>;
+    /// Flip one bit of the stored replica in place — the chaos layer's
+    /// silent-disk-corruption hook, what [`run_scrub`] must catch.
+    fn corrupt_stored(&self, sid: u64, block: usize) -> Result<()>;
+    /// A replacement machine joins at a failed node's location and the
+    /// fabric rebalances relocated blocks home (§5.3); returns how many
+    /// blocks moved.
+    fn rejoin_node(&self, loc: Location) -> Result<usize>;
+    /// Fault-injection counters, when a chaos layer is armed.
+    fn fault_report(&self) -> Option<crate::metrics::FaultReport> {
+        None
+    }
+    /// Tell an armed chaos layer which worker its crash fuse kills.
+    fn arm_crash_victim(&self, _loc: Location) {}
 }
 
 /// Per-rack-link (busy, stall) seconds accumulated since `before`, a
@@ -313,6 +346,222 @@ pub fn recover_with_plans_cfg<F: BlockFabric>(
     })
 }
 
+/// Counters of the failover/replan loop around
+/// [`recover_with_plans_cfg`] (DESIGN.md §14).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReplanStats {
+    /// Executor rounds run (1 = clean first pass).
+    pub rounds: u64,
+    /// Plans re-issued against surviving sources after a failover.
+    pub replanned: u64,
+    /// Nodes newly escalated to failed between rounds.
+    pub detected: u64,
+}
+
+/// Failure-tolerant recovery (DESIGN.md §14): run the plan set, and when
+/// a round errors — a worker crashed mid-recovery, sources went silent —
+/// sweep for newly failed nodes ([`BlockFabric::detect_failures`]),
+/// re-plan every still-missing block against the survivors, and go again
+/// (up to `max_rounds` executor rounds). A round that fails without
+/// revealing any new failure carries a real error and propagates. A clean
+/// first pass returns exactly [`recover_with_plans_cfg`]'s stats, so
+/// fault-free and crash-free fault-injected runs keep byte-level parity.
+#[allow(clippy::too_many_arguments)]
+pub fn recover_with_replan<F: BlockFabric>(
+    fabric: &F,
+    policy: &dyn Placement,
+    stripes: u64,
+    mut failed: Vec<Location>,
+    mut plans: Vec<RepairPlan>,
+    cfg: ExecutorConfig,
+    seed: u64,
+    max_rounds: u64,
+) -> Result<(ClusterRecoveryStats, ReplanStats)> {
+    let t0 = Instant::now();
+    let before = fabric.rack_byte_snapshot();
+    let links_before = fabric.links().link_busy_stall();
+    let mut rstats = ReplanStats::default();
+    // every block key ever planned — the multi-round block count is how
+    // many of these ended up on a live node, not a sum of round sizes
+    // (errored rounds persist part of their plan set)
+    let mut keys: HashSet<(u64, usize)> =
+        plans.iter().map(|p| (p.stripe, p.failed_block)).collect();
+    loop {
+        rstats.rounds += 1;
+        let racks = distinct_racks(&failed);
+        match recover_with_plans_cfg(fabric, plans.clone(), cfg, &racks) {
+            Ok(stats) => {
+                if rstats.rounds == 1 {
+                    return Ok((stats, rstats));
+                }
+                // multi-round: per-round stats only cover the last
+                // round's traffic — rebuild aggregates over the whole run
+                let after = fabric.rack_byte_snapshot();
+                let rack_bytes: Vec<(u64, u64)> = before
+                    .iter()
+                    .zip(&after)
+                    .map(|(&(u0, d0), &(u1, d1))| (u1 - u0, d1 - d0))
+                    .collect();
+                let blocks = keys
+                    .iter()
+                    .filter(|&&(sid, b)| !failed.contains(&fabric.locate(sid, b)))
+                    .count();
+                let bytes = blocks as u64 * fabric.block_size();
+                let secs = t0.elapsed().as_secs_f64();
+                let loads: Vec<(f64, f64)> =
+                    rack_bytes.iter().map(|&(u, d)| (u as f64, d as f64)).collect();
+                let lambda =
+                    crate::sim::recovery::lambda_metric_excluding(&loads, &racks);
+                let link_busy_stall = link_busy_stall_since(fabric, &links_before);
+                return Ok((
+                    ClusterRecoveryStats {
+                        blocks,
+                        bytes,
+                        wall: t0.elapsed(),
+                        throughput_mb_s: if secs > 0.0 {
+                            bytes as f64 / secs / 1e6
+                        } else {
+                            0.0
+                        },
+                        rack_bytes,
+                        lambda,
+                        chunks: stats.chunks,
+                        rounds: stats.rounds,
+                        worker_utilization: stats.worker_utilization,
+                        scratch: stats.scratch,
+                        link_busy_stall,
+                    },
+                    rstats,
+                ));
+            }
+            Err(e) => {
+                if rstats.rounds >= max_rounds {
+                    return Err(e.context(format!(
+                        "recovery still failing after {} rounds",
+                        rstats.rounds
+                    )));
+                }
+                fabric.detect_failures();
+                let now_failed = fabric.failed_nodes();
+                let new: Vec<Location> = now_failed
+                    .iter()
+                    .copied()
+                    .filter(|l| !failed.contains(l))
+                    .collect();
+                if new.is_empty() {
+                    // nothing changed underneath us — the error is real
+                    return Err(e);
+                }
+                rstats.detected += new.len() as u64;
+                failed = now_failed;
+                // re-plan against the survivors, keeping only blocks that
+                // are still missing (earlier rounds persisted the rest)
+                let mut next = crate::recovery::multi::scenario_recovery_plans(
+                    policy, stripes, &failed, seed,
+                )?;
+                next.retain(|p| failed.contains(&fabric.locate(p.stripe, p.failed_block)));
+                keys.extend(next.iter().map(|p| (p.stripe, p.failed_block)));
+                rstats.replanned += next.len() as u64;
+                plans = next;
+            }
+        }
+    }
+}
+
+/// The surviving node writing the most recovered blocks — the chaos
+/// layer's crash victim, so an armed crash fuse lands mid-recovery on a
+/// node the executor actually depends on. Ties break to the earliest
+/// plan order, keeping the choice deterministic.
+pub fn crash_victim(plans: &[RepairPlan], failed: &[Location]) -> Option<Location> {
+    let mut count: HashMap<Location, usize> = HashMap::new();
+    let mut best: Option<(Location, usize)> = None;
+    for p in plans {
+        if failed.contains(&p.writer) {
+            continue;
+        }
+        let c = count.entry(p.writer).or_insert(0);
+        *c += 1;
+        match best {
+            Some((_, n)) if *c <= n => {}
+            _ => best = Some((p.writer, *c)),
+        }
+    }
+    best.map(|(loc, _)| loc)
+}
+
+/// Outcome of one scrub-and-repair pass (DESIGN.md §14).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScrubReport {
+    /// Replicas whose stored checksum was compared to the registry.
+    pub scanned: u64,
+    /// Corrupt replicas dropped from their node.
+    pub quarantined: u64,
+    /// Quarantined blocks rebuilt from survivors and re-verified.
+    pub repaired: u64,
+}
+
+/// Scrub stripes `0..stripes`: read back every reachable replica's
+/// checksum ([`BlockFabric::stored_checksum`] — a disk-only probe, no
+/// modeled transfer), compare it to the write-time registry, quarantine
+/// mismatches (drop the replica), rebuild them from surviving sources
+/// through the normal repair planner — priced as recovery traffic — and
+/// re-verify the rebuilt bytes. Replicas on failed nodes are the failure
+/// detector's job, not the scrub's, and are skipped; a block that is
+/// still corrupt after its re-repair is an error.
+pub fn run_scrub<F: BlockFabric>(
+    fabric: &F,
+    policy: &dyn Placement,
+    stripes: u64,
+    cfg: ExecutorConfig,
+    seed: u64,
+) -> Result<ScrubReport> {
+    let code = fabric.code();
+    let failed_set: HashSet<Location> = fabric.failed_nodes().into_iter().collect();
+    let mut report = ScrubReport::default();
+    // grouped per stripe so same-stripe double corruption goes through
+    // the multi-erasure planner instead of two plans reading each other
+    let mut bad: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    for sid in 0..stripes {
+        for b in 0..code.len() {
+            if failed_set.contains(&fabric.locate(sid, b)) {
+                continue;
+            }
+            let Some(want) = fabric.expected_checksum(sid, b) else { continue };
+            let Ok(got) = fabric.stored_checksum(sid, b) else { continue };
+            report.scanned += 1;
+            if got != want {
+                bad.entry(sid).or_default().push(b);
+            }
+        }
+    }
+    let mut plans = Vec::new();
+    for (&sid, blocks) in &bad {
+        for &b in blocks {
+            fabric.remove_block(sid, b, fabric.locate(sid, b))?;
+            report.quarantined += 1;
+        }
+        plans.extend(crate::recovery::multi::stripe_repair_plans(
+            policy, sid, blocks, &failed_set, seed,
+        )?);
+    }
+    if plans.is_empty() {
+        return Ok(report);
+    }
+    recover_with_plans_cfg(fabric, plans, cfg, &[])?;
+    for (&sid, blocks) in &bad {
+        for &b in blocks {
+            let want = fabric
+                .expected_checksum(sid, b)
+                .expect("quarantined block had a registry entry");
+            if fabric.stored_checksum(sid, b)? != want {
+                bail!("scrub re-repair of ({sid},{b}) left a corrupt replica");
+            }
+            report.repaired += 1;
+        }
+    }
+    Ok(report)
+}
+
 /// Run recovery and a foreground request sequence concurrently under
 /// `qos` (DESIGN.md §11): install the split, drive the client engine
 /// beside the recovery executor, remove the split afterwards. The ONE
@@ -439,6 +688,8 @@ where
             link_busy_stall: Some(link_busy_stall),
             fg_latency: summary,
             recovery_slowdown: None,
+            faults: cluster.fault_report(),
+            trace: None,
         });
     }
 
@@ -449,9 +700,30 @@ where
     let planned = planned_cross_rack_blocks(&plans);
     let racks = distinct_racks(&failed);
     let Some((fgspec, reqs)) = scenario.fg_requests(policy)? else {
-        // plain recovery: no foreground traffic, no QoS split
-        let stats = recover_with_plans_cfg(&cluster, plans, cfg, &racks)?;
-        return Ok(backend_outcome(backend, scenario, policy.name(), &stats, planned, None));
+        // plain recovery: no foreground traffic, no QoS split. The
+        // failover/replan loop absorbs chaos-layer crashes (§14); a
+        // clean first pass is bit-identical to the bare executor call.
+        if let Some(victim) = crash_victim(&plans, &failed) {
+            cluster.arm_crash_victim(victim);
+        }
+        let (stats, replans) = recover_with_replan(
+            &cluster,
+            policy.as_ref(),
+            scenario.stripes,
+            failed,
+            plans,
+            cfg,
+            scenario.seed,
+            3,
+        )?;
+        let mut out = backend_outcome(backend, scenario, policy.name(), &stats, planned, None);
+        // failovers are counted by the fabric's own detection sweep;
+        // only the re-issued plan count lives out here
+        out.faults = cluster.fault_report().map(|mut f| {
+            f.replans += replans.replanned;
+            f
+        });
+        return Ok(out);
     };
 
     // mixed load: recovery and the client engine share the links under
@@ -478,6 +750,7 @@ where
         backend_outcome(backend, scenario, policy.name(), &stats, planned, Some(fgout.seconds));
     out.fg_latency = fgout.summary();
     out.recovery_slowdown = Some(stats.wall.as_secs_f64() / baseline_s.max(1e-9));
+    out.faults = cluster.fault_report();
     Ok(out)
 }
 
@@ -507,5 +780,7 @@ fn backend_outcome(
         link_busy_stall: Some(stats.link_busy_stall.clone()),
         fg_latency: None,
         recovery_slowdown: None,
+        faults: None,
+        trace: None,
     }
 }

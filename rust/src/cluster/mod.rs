@@ -74,6 +74,9 @@ pub struct MiniCluster {
     /// metadata overrides after recovery (NameNode block map)
     relocated: Mutex<HashMap<BlockKey, Location>>,
     failed: Mutex<Vec<Location>>,
+    /// Write-time checksum registry (first write wins): the scrub pass's
+    /// oracle for detecting silent replica corruption (DESIGN.md §14).
+    checksums: Mutex<HashMap<BlockKey, u64>>,
     /// cross-rack traffic accounting (up, down) per rack
     rack_up: Vec<AtomicU64>,
     rack_down: Vec<AtomicU64>,
@@ -116,6 +119,7 @@ impl MiniCluster {
                 .collect(),
             relocated: Mutex::new(HashMap::new()),
             failed: Mutex::new(Vec::new()),
+            checksums: Mutex::new(HashMap::new()),
             rack_up: (0..spec.cluster.racks).map(|_| AtomicU64::new(0)).collect(),
             rack_down: (0..spec.cluster.racks).map(|_| AtomicU64::new(0)).collect(),
             accounting: RwLock::new(()),
@@ -269,6 +273,12 @@ impl MiniCluster {
         let failed = self.failed.lock().unwrap().clone();
         for (bi, bytes) in data.into_iter().chain(parity).enumerate() {
             let dst = sp.locs[bi];
+            // register the checksum even when the replica is skipped —
+            // it is the oracle the eventual recovery is verified against
+            self.checksums
+                .lock()
+                .unwrap()
+                .insert((sid, bi), crate::net::proto::checksum(&bytes));
             if failed.contains(&dst) {
                 continue;
             }
@@ -544,6 +554,39 @@ impl MiniCluster {
         self.failed.lock().unwrap().retain(|&f| f != loc);
     }
 
+    /// A replacement machine joins at `loc` and the NameNode rebalances:
+    /// every block whose *canonical* placement is `loc` but which
+    /// recovery parked elsewhere is moved back (recovery-class traffic),
+    /// dropping its relocation override — the trait-level twin of
+    /// [`crate::net::NetCluster::join`]. Returns the blocks moved home.
+    pub fn rejoin_node(&self, loc: Location) -> anyhow::Result<usize> {
+        self.relive_node(loc);
+        let mut moves: Vec<(BlockKey, Location)> = self
+            .relocated
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|&(&(sid, block), &cur)| {
+                cur != loc && self.policy.stripe(sid).locs[block] == loc
+            })
+            .map(|(&key, &cur)| (key, cur))
+            .collect();
+        moves.sort_unstable_by_key(|&(key, _)| key);
+        for &((sid, block), from) in &moves {
+            let bytes = self
+                .store_of(from)
+                .lock()
+                .unwrap()
+                .get(&(sid, block))
+                .cloned()
+                .ok_or_else(|| anyhow!("relocated block ({sid},{block}) missing at {from}"))?;
+            self.transfer(from, loc, bytes.len() as u64, TrafficClass::Recovery);
+            BlockFabric::persist_block(self, sid, block, loc, bytes)?;
+            self.store_of(from).lock().unwrap().remove(&(sid, block));
+        }
+        Ok(moves.len())
+    }
+
     /// Run recovery and a foreground request sequence concurrently under
     /// `qos` (DESIGN.md §11): install the split, drive the client engine
     /// beside the recovery executor, remove the split afterwards. The ONE
@@ -627,6 +670,7 @@ impl BlockFabric for MiniCluster {
         at: Location,
         bytes: Vec<u8>,
     ) -> anyhow::Result<()> {
+        let sum = crate::net::proto::checksum(&bytes);
         self.store_of(at).lock().unwrap().insert((sid, block), bytes);
         let canonical = self.policy.stripe(sid).locs[block];
         let mut rel = self.relocated.lock().unwrap();
@@ -635,6 +679,10 @@ impl BlockFabric for MiniCluster {
         } else {
             rel.insert((sid, block), at);
         }
+        drop(rel);
+        // first write wins: a recovered block must reproduce the bytes
+        // the original write registered, never redefine them
+        self.checksums.lock().unwrap().entry((sid, block)).or_insert(sum);
         Ok(())
     }
 
@@ -657,6 +705,47 @@ impl BlockFabric for MiniCluster {
 
     fn fail_node(&self, loc: Location) {
         MiniCluster::fail_node(self, loc);
+    }
+
+    fn failed_nodes(&self) -> Vec<Location> {
+        self.failed.lock().unwrap().clone()
+    }
+
+    fn mark_failed(&self, loc: Location) {
+        let mut failed = self.failed.lock().unwrap();
+        if !failed.contains(&loc) {
+            failed.push(loc);
+        }
+    }
+
+    fn stored_checksum(&self, sid: u64, block: usize) -> anyhow::Result<u64> {
+        let loc = MiniCluster::locate(self, sid, block);
+        let store = self.store_of(loc).lock().unwrap();
+        let blk = store
+            .get(&(sid, block))
+            .ok_or_else(|| anyhow!("block ({sid},{block}) missing at {loc}"))?;
+        Ok(crate::net::proto::checksum(blk))
+    }
+
+    fn expected_checksum(&self, sid: u64, block: usize) -> Option<u64> {
+        self.checksums.lock().unwrap().get(&(sid, block)).copied()
+    }
+
+    fn corrupt_stored(&self, sid: u64, block: usize) -> anyhow::Result<()> {
+        let loc = MiniCluster::locate(self, sid, block);
+        let mut store = self.store_of(loc).lock().unwrap();
+        let blk = store
+            .get_mut(&(sid, block))
+            .ok_or_else(|| anyhow!("block ({sid},{block}) missing at {loc}"))?;
+        let Some(byte) = blk.first_mut() else {
+            bail!("block ({sid},{block}) at {loc} is empty");
+        };
+        *byte ^= 1;
+        Ok(())
+    }
+
+    fn rejoin_node(&self, loc: Location) -> anyhow::Result<usize> {
+        MiniCluster::rejoin_node(self, loc)
     }
 
     fn set_qos(&self, cfg: QosConfig, fg_active: Arc<AtomicBool>) {

@@ -9,6 +9,10 @@
 //!                [--schedule fifo|balanced] [--coalesce N] [--batched-fetch true|false]
 //!                [--fg-rate RPS | --fg-clients N] [--fg-requests N]  # client engine
 //!                [--recovery-share S] [--fg-weight W] [--json]       # QoS + machine output
+//! d3ctl chaos [--backend cluster|net] [--drop P] [--delay P] [--delay-ms MS] [--corrupt P]
+//!             [--truncate P] [--corrupt-stored P] [--crash N] [--scrub] [--stripes N] [--seed S]
+//! d3ctl trace [--backend sim|cluster|net|all] [--rate PER_HOUR] [--horizon-h H]
+//!             [--repair-mb-s R] [--file TRACE] [--stripes N] [--seed S]
 //! d3ctl layout --policy d3|rdd|hdd --code rs-3-2 [--stripes N] [--racks R] [--nodes N]
 //! d3ctl mu --code rs-6-3               # Lemma 4 closed form vs planner
 //! d3ctl oa --n 5 [--cols 4]            # print + verify an orthogonal array
@@ -22,16 +26,20 @@
 use std::collections::HashMap;
 
 use d3ec::client::{ArrivalModel, FgSpec, QosConfig};
-use d3ec::cluster::{ClusterBackend, MiniCluster};
+use d3ec::cluster::fabric::{crash_victim, recover_with_replan, run_scrub};
+use d3ec::cluster::{deterministic_data, BlockFabric, ClusterBackend, MiniCluster};
 use d3ec::codes::CodeSpec;
 use d3ec::experiments as exp;
 use d3ec::util::json::Json;
-use d3ec::net::NetClusterBackend;
+use d3ec::net::chaos::{corrupt_set, FaultSpec};
+use d3ec::net::{NetCluster, NetClusterBackend};
 use d3ec::oa::{max_columns, OrthogonalArray};
 use d3ec::recovery::mu::mu_rs;
-use d3ec::recovery::SchedulePolicy;
+use d3ec::recovery::{scenario_recovery_plans, ExecutorConfig, SchedulePolicy};
 use d3ec::runtime::Coder;
+use d3ec::scenario::trace::{parse_trace, run_trace, run_trace_sim, TraceSpec, TraceSummary};
 use d3ec::scenario::{run_cross_backend, FailureScenario, RecoveryBackend};
+use d3ec::sim::recovery::RecoveryConfig;
 use d3ec::sim::SimBackend;
 use d3ec::topology::{Location, SystemSpec};
 
@@ -81,6 +89,8 @@ fn main() {
     match cmd {
         "exp" => cmd_exp(&args, &flags),
         "scenario" => cmd_scenario(&args, &flags),
+        "chaos" => cmd_chaos(&flags),
+        "trace" => cmd_trace(&flags),
         "layout" => cmd_layout(&flags),
         "mu" => cmd_mu(&flags),
         "oa" => cmd_oa(&flags),
@@ -91,7 +101,7 @@ fn main() {
         "bench-compare" => cmd_bench_compare(&flags),
         _ => {
             println!("d3ctl — Deterministic Data Distribution (D³) reproduction");
-            println!("{}", include_str!("main.rs").lines().skip(2).take(18)
+            println!("{}", include_str!("main.rs").lines().skip(2).take(22)
                 .map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
         }
     }
@@ -358,6 +368,259 @@ fn cmd_scenario(args: &[String], flags: &HashMap<String, String>) {
         }
         Err(e) => eprintln!("scenario failed: {e}"),
     }
+}
+
+/// `d3ctl chaos`: a fault-injection drill (DESIGN.md §14). Populates a
+/// physical fabric, arms the chaos layer (net backend: frame drop /
+/// delay / corrupt / truncate plus an optional mid-recovery worker
+/// crash), runs a single-node recovery through the replan-capable
+/// driver, then optionally plants latent stored corruption and runs the
+/// scrub-and-repair pass. Every block is finally verified against its
+/// write-time checksum. `--backend cluster` runs the storage-level
+/// faults only (the in-process cluster has no RPC layer).
+fn cmd_chaos(flags: &HashMap<String, String>) {
+    let mut spec = spec_from(flags);
+    spec.block_size = flag::<u64>(flags, "cluster-block-kb", 64) << 10;
+    spec.net.inner_mbps = 8000.0;
+    spec.net.cross_mbps = 1600.0;
+    let code = CodeSpec::parse(&flag::<String>(flags, "code", "rs-6-3".into()))
+        .expect("bad --code (rs-K-M or lrc-K-L-G)");
+    let policy_name: String = flag(flags, "policy", "d3".into());
+    let seed: u64 = flag(flags, "seed", 1u64);
+    let stripes: u64 = flag(flags, "stripes", 100u64);
+    let policy = exp::build_policy(&policy_name, code, &spec, seed);
+    let crash: u64 = flag(flags, "crash", 0u64);
+    let fspec = FaultSpec {
+        drop: flag(flags, "drop", 0.02),
+        delay: flag(flags, "delay", 0.02),
+        delay_ms: flag(flags, "delay-ms", 2u64),
+        corrupt: flag(flags, "corrupt", 0.02),
+        truncate: flag(flags, "truncate", 0.02),
+        corrupt_stored: flag(flags, "corrupt-stored", 0.0),
+        crash_after_rpcs: (crash > 0).then_some(crash),
+        seed,
+        ..FaultSpec::default()
+    };
+    let cfg = ExecutorConfig {
+        workers: flag(flags, "workers", 8usize),
+        chunk_size: flag::<u64>(flags, "chunk-size", 16u64).max(1) << 10,
+        ..ExecutorConfig::default()
+    };
+    let backend_sel: String = flag(flags, "backend", "net".into());
+    let k = code.k();
+    let bs = spec.block_size as usize;
+    println!(
+        "# chaos drill · {} · {} · {stripes} stripes · backend {backend_sel}",
+        policy.name(),
+        code.name()
+    );
+    match backend_sel.as_str() {
+        "net" => {
+            let cluster = NetCluster::new(spec, policy.clone(), seed).expect("net cluster");
+            cluster
+                .write_stripes_parallel(stripes, cfg.workers.max(2), |sid| {
+                    deterministic_data(sid, k, bs)
+                })
+                .expect("populate");
+            cluster.arm_chaos(fspec);
+            run_chaos_drill(&cluster, policy.as_ref(), stripes, &fspec, cfg, seed, flags);
+        }
+        "cluster" => {
+            if fspec.any_frame_faults() {
+                println!(
+                    "note: frame faults apply to the net backend only; \
+                     running storage-level faults"
+                );
+            }
+            let cluster =
+                MiniCluster::new(spec, policy.clone(), "native", seed).expect("cluster");
+            for sid in 0..stripes {
+                cluster
+                    .write_stripe(sid, deterministic_data(sid, k, bs))
+                    .expect("populate");
+            }
+            run_chaos_drill(&cluster, policy.as_ref(), stripes, &fspec, cfg, seed, flags);
+        }
+        other => eprintln!("unknown --backend {other} (cluster, net)"),
+    }
+}
+
+/// The backend-generic body of `d3ctl chaos`: fail one node, recover
+/// with replanning (surviving an armed crash), plant latent corruption,
+/// scrub, verify everything against write-time checksums.
+fn run_chaos_drill<F: BlockFabric>(
+    fabric: &F,
+    policy: &dyn d3ec::placement::Placement,
+    stripes: u64,
+    fspec: &FaultSpec,
+    cfg: ExecutorConfig,
+    seed: u64,
+    flags: &HashMap<String, String>,
+) {
+    let scenario = FailureScenario::single_node(stripes, seed);
+    let failed = scenario.failed_nodes(policy);
+    let plans = scenario_recovery_plans(policy, stripes, &failed, seed).expect("plans");
+    for &loc in &failed {
+        fabric.fail_node(loc);
+    }
+    if fspec.crash_after_rpcs.is_some() {
+        if let Some(victim) = crash_victim(&plans, &failed) {
+            fabric.arm_crash_victim(victim);
+            println!("crash armed on {victim} after {:?} RPCs", fspec.crash_after_rpcs);
+        }
+    }
+    match recover_with_replan(fabric, policy, stripes, failed, plans, cfg, seed, 3) {
+        Ok((stats, replan)) => println!(
+            "recovered {} blocks ({:.1} MB) in {:.2?} → {:.1} MB/s · {} rounds, \
+             {} blocks replanned, {} extra failures detected",
+            stats.blocks,
+            stats.bytes as f64 / 1e6,
+            stats.wall,
+            stats.throughput_mb_s,
+            replan.rounds,
+            replan.replanned,
+            replan.detected,
+        ),
+        Err(e) => {
+            eprintln!("recovery failed: {e}");
+            return;
+        }
+    }
+    // latent storage corruption, found and fixed by the scrub pass
+    let victims = corrupt_set(fspec, stripes, policy.code().len());
+    for &(sid, b) in &victims {
+        if let Err(e) = fabric.corrupt_stored(sid, b) {
+            eprintln!("corrupt ({sid},{b}): {e}");
+        }
+    }
+    if !victims.is_empty() || flags.contains_key("scrub") {
+        match run_scrub(fabric, policy, stripes, cfg, seed) {
+            Ok(rep) => println!(
+                "scrub: scanned {} blocks → quarantined {}, repaired {}",
+                rep.scanned, rep.quarantined, rep.repaired
+            ),
+            Err(e) => eprintln!("scrub failed: {e}"),
+        }
+    }
+    // oracle check: every live block matches its write-time checksum
+    let (mut checked, mut bad) = (0u64, 0u64);
+    for sid in 0..stripes {
+        for b in 0..policy.code().len() {
+            let Some(want) = fabric.expected_checksum(sid, b) else { continue };
+            match fabric.stored_checksum(sid, b) {
+                Ok(got) if got == want => checked += 1,
+                _ => bad += 1,
+            }
+        }
+    }
+    println!("oracle check: {checked} blocks match write-time checksums, {bad} corrupt");
+    if let Some(rep) = fabric.fault_report() {
+        println!(
+            "faults: {} injected (drops {} · delays {} · corrupts {} · truncates {}) · \
+             retries {} · evictions {} · crashes {} · failovers {} · replans {}",
+            rep.total_injected(),
+            rep.drops,
+            rep.delays,
+            rep.corrupts,
+            rep.truncates,
+            rep.retries,
+            rep.evictions,
+            rep.crashes,
+            rep.failovers,
+            rep.replans,
+        );
+    }
+}
+
+/// `d3ctl trace`: long-horizon failure arrivals (Poisson at `--rate`
+/// events/hour, or replayed from `--file`) with repair overlapping
+/// subsequent failures, on any of the three backends (DESIGN.md §14).
+/// All backends batch events against the same modeled clock, so their
+/// counters agree; each reports its own measured sustained repair rate.
+fn cmd_trace(flags: &HashMap<String, String>) {
+    let mut spec = spec_from(flags);
+    spec.block_size = flag::<u64>(flags, "cluster-block-kb", 64) << 10;
+    spec.net.inner_mbps = 8000.0;
+    spec.net.cross_mbps = 1600.0;
+    let code = CodeSpec::parse(&flag::<String>(flags, "code", "rs-6-3".into()))
+        .expect("bad --code (rs-K-M or lrc-K-L-G)");
+    let policy_name: String = flag(flags, "policy", "d3".into());
+    let seed: u64 = flag(flags, "seed", 1u64);
+    let stripes: u64 = flag(flags, "stripes", 100u64);
+    let policy = exp::build_policy(&policy_name, code, &spec, seed);
+    let mut tspec = TraceSpec {
+        horizon_s: flag::<f64>(flags, "horizon-h", 24.0) * 3600.0,
+        rate_per_hour: flag(flags, "rate", 2.0),
+        repair_mb_s: flag(flags, "repair-mb-s", 64.0),
+        events: None,
+    };
+    if let Some(path) = flags.get("file").filter(|p| !p.is_empty()) {
+        let text = std::fs::read_to_string(path).expect("read trace file");
+        tspec.events = Some(parse_trace(&text, &spec.cluster).expect("parse trace"));
+    }
+    let cfg = ExecutorConfig {
+        workers: flag(flags, "workers", 8usize),
+        chunk_size: flag::<u64>(flags, "chunk-size", 16u64).max(1) << 10,
+        ..ExecutorConfig::default()
+    };
+    let backend_sel: String = flag(flags, "backend", "sim".into());
+    let k = code.k();
+    let bs = spec.block_size as usize;
+    println!(
+        "# trace · {} · {} · {stripes} stripes · horizon {:.1} h · rate {:.2}/h",
+        policy.name(),
+        code.name(),
+        tspec.horizon_s / 3600.0,
+        tspec.rate_per_hour
+    );
+    if matches!(backend_sel.as_str(), "sim" | "all") {
+        let scfg = RecoveryConfig { workers: cfg.workers, ..RecoveryConfig::default() };
+        match run_trace_sim(&spec, policy.as_ref(), stripes, &tspec, scfg, seed) {
+            Ok(s) => print_trace("sim", &s),
+            Err(e) => eprintln!("sim trace failed: {e}"),
+        }
+    }
+    if matches!(backend_sel.as_str(), "cluster" | "all") {
+        let cluster = MiniCluster::new(spec, policy.clone(), "native", seed).expect("cluster");
+        for sid in 0..stripes {
+            cluster
+                .write_stripe(sid, deterministic_data(sid, k, bs))
+                .expect("populate");
+        }
+        match run_trace(&cluster, policy.as_ref(), stripes, &tspec, cfg, seed) {
+            Ok(s) => print_trace("cluster", &s),
+            Err(e) => eprintln!("cluster trace failed: {e}"),
+        }
+    }
+    if matches!(backend_sel.as_str(), "net" | "all") {
+        let cluster = NetCluster::new(spec, policy.clone(), seed).expect("net cluster");
+        cluster
+            .write_stripes_parallel(stripes, cfg.workers.max(2), |sid| {
+                deterministic_data(sid, k, bs)
+            })
+            .expect("populate");
+        match run_trace(&cluster, policy.as_ref(), stripes, &tspec, cfg, seed) {
+            Ok(s) => print_trace("net", &s),
+            Err(e) => eprintln!("net trace failed: {e}"),
+        }
+    }
+    if !matches!(backend_sel.as_str(), "sim" | "cluster" | "net" | "all") {
+        eprintln!("unknown --backend {backend_sel} (sim, cluster, net, all)");
+    }
+}
+
+fn print_trace(backend: &str, s: &TraceSummary) {
+    println!(
+        "{backend}: {} failures → {} rounds · {} blocks repaired · backlog peak {} · \
+         lost stripes {} · arrival {:.2} MB/s vs sustained {:.1} MB/s",
+        s.failures,
+        s.rounds,
+        s.blocks_repaired,
+        s.backlog_peak,
+        s.lost_stripes,
+        s.arrival_mb_s,
+        s.sustained_mb_s
+    );
 }
 
 fn cmd_exp(args: &[String], flags: &HashMap<String, String>) {

@@ -116,6 +116,47 @@ impl PoolStats {
     }
 }
 
+/// Fault-injection and robustness counters of one scenario run
+/// (DESIGN.md §14): what the chaos layer injected and what the
+/// coordinator did to survive it. Injection decisions are keyed off
+/// message *content* (not arrival order), so for a fixed seed + fault
+/// spec the drop/delay/corrupt/truncate/retry/eviction counts replay
+/// exactly across runs and thread interleavings; `failovers`/`replans`
+/// depend on crash timing and are excluded from that determinism
+/// contract.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultReport {
+    /// RPC frames dropped before they hit the wire.
+    pub drops: u64,
+    /// RPC frames delivered after an injected delay.
+    pub delays: u64,
+    /// RPC frames delivered with a flipped bit.
+    pub corrupts: u64,
+    /// RPC frames delivered with a truncated body.
+    pub truncates: u64,
+    /// Retry attempts the coordinator made after a failed round trip.
+    pub retries: u64,
+    /// Pooled connections evicted (closed instead of returned).
+    pub evictions: u64,
+    /// Workers crashed by the chaos layer.
+    pub crashes: u64,
+    /// Silent workers the heartbeat sweep escalated to Failed.
+    pub failovers: u64,
+    /// Repair plans re-issued against surviving sources after a failover.
+    pub replans: u64,
+    /// Corrupt replicas the scrub pass quarantined.
+    pub quarantined: u64,
+    /// Quarantined blocks rebuilt and re-verified by targeted re-repair.
+    pub scrub_repaired: u64,
+}
+
+impl FaultReport {
+    /// Total frames the chaos layer interfered with.
+    pub fn total_injected(&self) -> u64 {
+        self.drops + self.delays + self.corrupts + self.truncates
+    }
+}
+
 /// Per-worker utilization: each worker's busy seconds as a fraction of the
 /// wall clock, clamped to [0, 1] (timer jitter can push busy ≳ wall).
 /// Used by the recovery executor's `ExecStats` and `d3ctl scenario`.

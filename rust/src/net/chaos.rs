@@ -1,0 +1,375 @@
+//! Deterministic, seeded fault injection for the socket backend
+//! (DESIGN.md §14).
+//!
+//! The chaos layer sits in the coordinator's single RPC choke point
+//! ([`crate::net::NetCluster`]'s `call`): before each attempt of each
+//! round trip it draws one [`FaultAction`] — drop, delay, corrupt, or
+//! truncate the request frame — and the coordinator's retry loop
+//! (bounded attempts, exponential backoff + jitter, connection-pool
+//! eviction and re-dial) must absorb it.
+//!
+//! **Determinism contract:** every draw is keyed off the *content* of the
+//! message (`proto::checksum` of the encoded body, mixed with the target
+//! node) plus the attempt number — never off arrival order or wall clock.
+//! The set of RPCs a recovery issues is a pure function of the plan set,
+//! so two runs with the same seed and fault spec inject the identical
+//! fault multiset regardless of thread interleaving, and the injection
+//! counters in [`crate::metrics::FaultReport`] replay exactly.
+//!
+//! Faults never perturb byte accounting: the coordinator charges modeled
+//! transfers once per *successful* logical operation, so a fault-injected
+//! run reports byte-identical per-rack traffic to a fault-free run of the
+//! same scenario — the chaos-parity cross-check CI runs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::metrics::FaultReport;
+use crate::topology::Location;
+use crate::util::Rng;
+
+/// Domain-separation keys for the chaos RNG streams.
+const KEY_ACTION: u64 = 0xfa_017_ac7;
+const KEY_BACKOFF: u64 = 0xbac_0ff;
+const KEY_MUTATE: u64 = 0x5e1ec7_b17;
+const KEY_STORED: u64 = 0x5c_2b_c0_22;
+
+/// What the chaos layer may inject into one RPC round trip.
+///
+/// Frame-drop probability also covers heartbeats — a probe that draws
+/// `Drop` on every bounded attempt looks exactly like a silent worker, so
+/// the failure detector's false-positive path is exercised too.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Probability a request frame is dropped before hitting the wire.
+    pub drop: f64,
+    /// Probability a request is delayed by up to `delay_ms` (jittered).
+    pub delay: f64,
+    /// Maximum injected delay, milliseconds.
+    pub delay_ms: u64,
+    /// Probability one bit of the request body is flipped.
+    pub corrupt: f64,
+    /// Probability the request body is truncated (frame stays well-formed,
+    /// the message inside does not).
+    pub truncate: f64,
+    /// Probability each stored replica is latently corrupted at populate
+    /// time (the scrub pass's workload; see [`corrupt_set`]).
+    pub corrupt_stored: f64,
+    /// Crash the worker hosting the most repair writes after this many
+    /// chaos-armed recovery RPCs have completed (`None` = no crash).
+    pub crash_after_rpcs: Option<u64>,
+    /// Attempts on which injection still applies; from this attempt on the
+    /// chaos layer stands down so a bounded retry loop always converges
+    /// (real transport failures are still possible).
+    pub give_up_after: u32,
+    /// Bounded retry attempts per RPC.
+    pub max_attempts: u32,
+    /// Per-attempt RPC deadline (read timeout), milliseconds.
+    pub rpc_timeout_ms: u64,
+    /// Seed of every chaos stream (independent of the scenario seed).
+    pub seed: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> FaultSpec {
+        FaultSpec {
+            drop: 0.0,
+            delay: 0.0,
+            delay_ms: 2,
+            corrupt: 0.0,
+            truncate: 0.0,
+            corrupt_stored: 0.0,
+            crash_after_rpcs: None,
+            give_up_after: 3,
+            max_attempts: 5,
+            rpc_timeout_ms: 2000,
+            seed: 0,
+        }
+    }
+}
+
+/// The decision for one attempt of one RPC.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    None,
+    Drop,
+    /// Deliver after sleeping this long.
+    Delay(Duration),
+    /// Deliver with one bit of the body flipped at this bit index.
+    Corrupt(usize),
+    /// Deliver only the first `n` bytes of the body.
+    Truncate(usize),
+}
+
+impl FaultSpec {
+    /// A spec with the given uniform fault probability on drop, delay,
+    /// corrupt, and truncate (the CI chaos-parity configuration).
+    pub fn uniform(p: f64, seed: u64) -> FaultSpec {
+        FaultSpec { drop: p, delay: p, corrupt: p, truncate: p, seed, ..FaultSpec::default() }
+    }
+
+    /// True when any frame-level fault can fire.
+    pub fn any_frame_faults(&self) -> bool {
+        self.drop > 0.0 || self.delay > 0.0 || self.corrupt > 0.0 || self.truncate > 0.0
+    }
+
+    /// Draw the fault action for `(content_key, attempt)`. `body_len` is
+    /// the encoded request length, used to pick corrupt/truncate offsets.
+    pub fn decide(&self, content_key: u64, attempt: u32, body_len: usize) -> FaultAction {
+        if attempt >= self.give_up_after {
+            return FaultAction::None;
+        }
+        let mut rng = Rng::keyed(self.seed ^ KEY_ACTION, content_key, attempt as u64);
+        let p = rng.f64();
+        if p < self.drop {
+            return FaultAction::Drop;
+        }
+        if p < self.drop + self.delay {
+            let mut jitter = Rng::keyed(self.seed ^ KEY_MUTATE, content_key, attempt as u64);
+            let ms = 1 + jitter.below_u64(self.delay_ms.max(1));
+            return FaultAction::Delay(Duration::from_millis(ms));
+        }
+        if body_len > 0 {
+            if p < self.drop + self.delay + self.corrupt {
+                let mut pick = Rng::keyed(self.seed ^ KEY_MUTATE, content_key, attempt as u64);
+                return FaultAction::Corrupt(pick.below(body_len * 8));
+            }
+            if p < self.drop + self.delay + self.corrupt + self.truncate {
+                let mut pick = Rng::keyed(self.seed ^ KEY_MUTATE, content_key, attempt as u64);
+                return FaultAction::Truncate(pick.below(body_len));
+            }
+        }
+        FaultAction::None
+    }
+
+    /// Exponential backoff with seeded jitter before retry `attempt`
+    /// (attempt ≥ 1): `2^(attempt-1)` milliseconds base, plus up to 100%
+    /// jitter, capped at 50 ms so chaos tests stay fast.
+    pub fn backoff(&self, content_key: u64, attempt: u32) -> Duration {
+        let base_ms = 1u64 << (attempt.saturating_sub(1)).min(6);
+        let mut rng = Rng::keyed(self.seed ^ KEY_BACKOFF, content_key, attempt as u64);
+        let jitter_us = rng.below_u64(base_ms * 1000 + 1);
+        Duration::from_micros((base_ms * 1000 + jitter_us).min(50_000))
+    }
+}
+
+/// The content key of one RPC: FNV over the encoded body, mixed with the
+/// flat index of the target node so identical messages to different
+/// workers draw independent streams.
+pub fn content_key(body: &[u8], target_flat: usize) -> u64 {
+    super::proto::checksum(body) ^ (target_flat as u64).wrapping_mul(0x9e3779b97f4a7c15)
+}
+
+/// Apply a corrupt/truncate action to an encoded body (drop/delay/none
+/// leave it untouched). Returns the bytes to actually put on the wire.
+pub fn mutate_body(body: &[u8], action: FaultAction) -> Vec<u8> {
+    match action {
+        FaultAction::Corrupt(bit) => {
+            let mut out = body.to_vec();
+            let bit = bit % (out.len() * 8).max(1);
+            out[bit / 8] ^= 1 << (bit % 8);
+            out
+        }
+        FaultAction::Truncate(n) => body[..n.min(body.len())].to_vec(),
+        _ => body.to_vec(),
+    }
+}
+
+/// The deterministic latent-corruption set: every `(stripe, block)` the
+/// chaos seed marks corrupt with probability `spec.corrupt_stored`. Both
+/// physical fabrics inject exactly this set after populate, and the fluid
+/// backend derives it analytically to price the same scrub traffic.
+pub fn corrupt_set(spec: &FaultSpec, stripes: u64, code_len: usize) -> Vec<(u64, usize)> {
+    if spec.corrupt_stored <= 0.0 {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for sid in 0..stripes {
+        for b in 0..code_len {
+            let mut rng = Rng::keyed(spec.seed ^ KEY_STORED, sid, b as u64);
+            if rng.f64() < spec.corrupt_stored {
+                out.push((sid, b));
+            }
+        }
+    }
+    out
+}
+
+/// Shared atomic fault counters — one per armed [`crate::net::NetCluster`],
+/// held by `Arc` so the scenario backend can read the totals after the
+/// cluster itself is dropped.
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    pub drops: AtomicU64,
+    pub delays: AtomicU64,
+    pub corrupts: AtomicU64,
+    pub truncates: AtomicU64,
+    pub retries: AtomicU64,
+    pub evictions: AtomicU64,
+    pub crashes: AtomicU64,
+    pub failovers: AtomicU64,
+    pub replans: AtomicU64,
+    pub quarantined: AtomicU64,
+    pub scrub_repaired: AtomicU64,
+}
+
+impl FaultCounters {
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn report(&self) -> FaultReport {
+        FaultReport {
+            drops: self.drops.load(Ordering::Relaxed),
+            delays: self.delays.load(Ordering::Relaxed),
+            corrupts: self.corrupts.load(Ordering::Relaxed),
+            truncates: self.truncates.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            crashes: self.crashes.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            replans: self.replans.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
+            scrub_repaired: self.scrub_repaired.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One armed chaos runtime: the spec, its counters, and the crash
+/// trigger's remaining-RPC countdown + victim.
+#[derive(Debug)]
+pub struct ChaosRuntime {
+    pub spec: FaultSpec,
+    pub counters: FaultCounters,
+    /// Recovery RPCs left before the crash directive fires (u64::MAX when
+    /// no crash is armed). Decremented once per completed chaos-armed RPC
+    /// — but only after a victim is armed, so "crash after N RPCs" counts
+    /// from mid-recovery, not from populate.
+    pub crash_fuse: AtomicU64,
+    /// The worker the crash directive kills. Armed by the scenario driver
+    /// once plans exist (the busiest plan writer makes the best victim).
+    crash_victim: std::sync::Mutex<Option<Location>>,
+}
+
+impl ChaosRuntime {
+    pub fn new(spec: FaultSpec) -> ChaosRuntime {
+        let fuse = spec.crash_after_rpcs.unwrap_or(u64::MAX);
+        ChaosRuntime {
+            spec,
+            counters: FaultCounters::default(),
+            crash_fuse: AtomicU64::new(fuse),
+            crash_victim: std::sync::Mutex::new(None),
+        }
+    }
+
+    /// Arm the crash directive's victim (no-op unless the spec asked for
+    /// a crash; the fuse only burns once a victim is set).
+    pub fn set_victim(&self, loc: Location) {
+        if self.spec.crash_after_rpcs.is_some() {
+            *self.crash_victim.lock().unwrap() = Some(loc);
+        }
+    }
+
+    /// Burn one RPC off the crash fuse; returns the victim exactly once,
+    /// on the call that crosses zero.
+    pub fn burn_fuse(&self) -> Option<Location> {
+        let victim = *self.crash_victim.lock().unwrap();
+        victim?;
+        let prev = self.crash_fuse.fetch_sub(1, Ordering::Relaxed);
+        if prev == 1 {
+            victim
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_and_content_keyed() {
+        let spec = FaultSpec::uniform(0.05, 42);
+        for key in [1u64, 99, 0xdead_beef] {
+            for attempt in 0..5 {
+                assert_eq!(
+                    spec.decide(key, attempt, 64),
+                    spec.decide(key, attempt, 64),
+                    "key={key} attempt={attempt}"
+                );
+            }
+        }
+        // different keys decorrelate: with 20% total fault rate over many
+        // keys, at least one key must draw a fault and one must not
+        let faulted = (0..500u64)
+            .filter(|&k| spec.decide(k, 0, 64) != FaultAction::None)
+            .count();
+        assert!(faulted > 0 && faulted < 500, "{faulted}/500 keys faulted");
+    }
+
+    #[test]
+    fn injection_stands_down_after_give_up_attempt() {
+        let spec = FaultSpec::uniform(1.0, 7);
+        assert_ne!(spec.decide(3, 0, 64), FaultAction::None);
+        assert_ne!(spec.decide(3, spec.give_up_after - 1, 64), FaultAction::None);
+        assert_eq!(spec.decide(3, spec.give_up_after, 64), FaultAction::None);
+        assert_eq!(spec.decide(3, spec.give_up_after + 1, 64), FaultAction::None);
+    }
+
+    #[test]
+    fn fault_rate_roughly_matches_probability() {
+        let spec = FaultSpec { drop: 0.05, seed: 11, ..FaultSpec::default() };
+        let n = 20_000u64;
+        let drops = (0..n).filter(|&k| spec.decide(k, 0, 32) == FaultAction::Drop).count();
+        let rate = drops as f64 / n as f64;
+        assert!((rate - 0.05).abs() < 0.01, "drop rate {rate}");
+    }
+
+    #[test]
+    fn mutate_body_flips_exactly_one_bit() {
+        let body = vec![0u8; 16];
+        let out = mutate_body(&body, FaultAction::Corrupt(37));
+        let flipped: u32 = out.iter().zip(&body).map(|(a, b)| (a ^ b).count_ones()).sum();
+        assert_eq!(flipped, 1);
+        assert_eq!(mutate_body(&body, FaultAction::Truncate(5)).len(), 5);
+        assert_eq!(mutate_body(&body, FaultAction::None), body);
+    }
+
+    #[test]
+    fn backoff_grows_and_stays_bounded() {
+        let spec = FaultSpec::default();
+        let b1 = spec.backoff(9, 1);
+        let b4 = spec.backoff(9, 4);
+        assert!(b1 >= Duration::from_millis(1));
+        assert!(b4 > b1, "backoff must grow with attempts");
+        assert!(spec.backoff(9, 30) <= Duration::from_millis(50));
+        assert_eq!(spec.backoff(9, 2), spec.backoff(9, 2), "jitter must be seeded");
+    }
+
+    #[test]
+    fn corrupt_set_is_deterministic_and_rate_matched() {
+        let spec = FaultSpec { corrupt_stored: 0.1, seed: 5, ..FaultSpec::default() };
+        let a = corrupt_set(&spec, 200, 5);
+        assert_eq!(a, corrupt_set(&spec, 200, 5));
+        let rate = a.len() as f64 / 1000.0;
+        assert!((rate - 0.1).abs() < 0.04, "corruption rate {rate}");
+        assert!(corrupt_set(&FaultSpec::default(), 200, 5).is_empty());
+    }
+
+    #[test]
+    fn crash_fuse_fires_exactly_once() {
+        let spec =
+            FaultSpec { crash_after_rpcs: Some(3), ..FaultSpec::default() };
+        let rt = ChaosRuntime::new(spec);
+        assert_eq!(rt.burn_fuse(), None, "fuse must not burn before a victim is armed");
+        rt.set_victim(Location::new(1, 2));
+        assert_eq!(rt.burn_fuse(), None);
+        assert_eq!(rt.burn_fuse(), None);
+        assert_eq!(rt.burn_fuse(), Some(Location::new(1, 2)));
+        assert_eq!(rt.burn_fuse(), None);
+        let unarmed = ChaosRuntime::new(FaultSpec::default());
+        unarmed.set_victim(Location::new(0, 0));
+        assert_eq!(unarmed.burn_fuse(), None, "no crash directive, no fuse");
+    }
+}

@@ -16,10 +16,12 @@
 //! sockets prove the data path is real (checksums of rebuilt blocks come
 //! from worker-side GF combines over bytes fetched worker-to-worker).
 
+pub mod chaos;
 pub mod proto;
 mod worker;
 
 use std::collections::HashMap;
+use std::io::Write;
 use std::net::{SocketAddr, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -90,10 +92,28 @@ pub struct NetCluster {
     accounting: RwLock<()>,
     qos: Mutex<Option<(QosConfig, Arc<AtomicBool>)>>,
     qos_on: AtomicBool,
+    /// Expected block checksums, recorded at write/persist time — the
+    /// NameNode-style integrity registry the scrub pass compares against.
+    checksums: Mutex<HashMap<BlockKey, u64>>,
+    /// Armed fault-injection runtime (DESIGN.md §14); `chaos_on` mirrors
+    /// it so the fault-free RPC fast path stays branch-cheap.
+    chaos: Mutex<Option<Arc<chaos::ChaosRuntime>>>,
+    chaos_on: AtomicBool,
     seed: u64,
     /// Held last so every pooled connection (above) closes before the
     /// listener threads are joined on drop.
     workers: Vec<WorkerHandle>,
+}
+
+/// Assemble one wire frame (`len ‖ body ‖ fnv(body)`). The chaos send
+/// path needs raw frame bytes so a corruption can be injected *after*
+/// the integrity trailer is computed — genuine on-the-wire damage.
+fn frame_bytes(body: &[u8]) -> Vec<u8> {
+    let mut f = Vec::with_capacity(body.len() + 12);
+    f.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    f.extend_from_slice(body);
+    f.extend_from_slice(&proto::checksum(body).to_le_bytes());
+    f
 }
 
 impl NetCluster {
@@ -129,6 +149,9 @@ impl NetCluster {
             accounting: RwLock::new(()),
             qos: Mutex::new(None),
             qos_on: AtomicBool::new(false),
+            checksums: Mutex::new(HashMap::new()),
+            chaos: Mutex::new(None),
+            chaos_on: AtomicBool::new(false),
             spec,
             policy,
             addrs,
@@ -150,9 +173,92 @@ impl NetCluster {
         self.addrs[self.spec.cluster.flat(loc)]
     }
 
-    /// One RPC round trip on a pooled connection.
+    /// One RPC round trip on a pooled connection. With chaos armed
+    /// (DESIGN.md §14) this is the coordinator's survival loop: per-
+    /// attempt fault injection keyed off the message *content* (so two
+    /// same-seed runs inject the identical fault multiset regardless of
+    /// thread interleaving), bounded retries with exponential backoff +
+    /// seeded jitter, a per-attempt read deadline, and eviction of any
+    /// connection whose stream may be out of sync.
     fn call(&self, loc: Location, msg: &Msg) -> Result<Reply> {
         let flat = self.spec.cluster.flat(loc);
+        let body = msg.encode();
+        if !self.chaos_on.load(Ordering::Relaxed) {
+            return self.call_once(flat, loc, &frame_bytes(&body), None);
+        }
+        let rt = match self.chaos.lock().unwrap().clone() {
+            Some(rt) => rt,
+            None => return self.call_once(flat, loc, &frame_bytes(&body), None),
+        };
+        let key = chaos::content_key(&body, flat);
+        let timeout = Duration::from_millis(rt.spec.rpc_timeout_ms.max(1));
+        let attempts = rt.spec.max_attempts.max(1);
+        let mut last_err = anyhow!("rpc to {loc}: no attempt made");
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                chaos::FaultCounters::bump(&rt.counters.retries);
+                std::thread::sleep(rt.spec.backoff(key, attempt));
+            }
+            let mut frame = frame_bytes(&body);
+            match rt.spec.decide(key, attempt, body.len()) {
+                chaos::FaultAction::None => {}
+                chaos::FaultAction::Drop => {
+                    chaos::FaultCounters::bump(&rt.counters.drops);
+                    last_err = anyhow!("rpc to {loc}: request frame dropped (injected)");
+                    continue;
+                }
+                chaos::FaultAction::Delay(d) => {
+                    chaos::FaultCounters::bump(&rt.counters.delays);
+                    std::thread::sleep(d);
+                }
+                chaos::FaultAction::Corrupt(bit) => {
+                    // flip a bit *after* the integrity trailer was
+                    // computed: the worker must detect the damage and
+                    // drop the connection, never act on the frame
+                    chaos::FaultCounters::bump(&rt.counters.corrupts);
+                    let bit = bit % (body.len() * 8).max(1);
+                    frame[4 + bit / 8] ^= 1 << (bit % 8);
+                }
+                chaos::FaultAction::Truncate(n) => {
+                    // a shortened but well-framed request: the worker's
+                    // hardened decode must reject it cleanly, never panic
+                    chaos::FaultCounters::bump(&rt.counters.truncates);
+                    frame = frame_bytes(&body[..n.min(body.len())]);
+                }
+            }
+            match self.call_once(flat, loc, &frame, Some(timeout)) {
+                Ok(Reply::Err(e)) if e.starts_with("bad request") => {
+                    // the worker rejected a mutated request; retry clean
+                    last_err = anyhow!("worker {loc}: {e}");
+                    continue;
+                }
+                Ok(reply) => {
+                    if let Some(victim) = rt.burn_fuse() {
+                        chaos::FaultCounters::bump(&rt.counters.crashes);
+                        self.crash_worker(victim);
+                    }
+                    return Ok(reply);
+                }
+                Err(e) => {
+                    last_err = e;
+                    continue;
+                }
+            }
+        }
+        Err(last_err.context(format!("rpc to {loc}: all {attempts} attempts failed")))
+    }
+
+    /// One attempt: pop a pooled connection (or dial), write the raw
+    /// frame, read one reply. The connection returns to the pool only
+    /// after a complete round trip; any failure evicts it — its stream
+    /// may hold a half-read frame — and the next attempt re-dials.
+    fn call_once(
+        &self,
+        flat: usize,
+        loc: Location,
+        frame: &[u8],
+        timeout: Option<Duration>,
+    ) -> Result<Reply> {
         let mut conn = match self.conns[flat].lock().unwrap().pop() {
             Some(c) => c,
             None => {
@@ -162,13 +268,26 @@ impl NetCluster {
                 c
             }
         };
-        proto::write_frame(&mut conn, &msg.encode())
-            .with_context(|| format!("send to {loc}"))?;
-        let body = proto::read_frame(&mut conn).with_context(|| format!("reply from {loc}"))?;
-        let reply = Reply::decode(&body)?;
-        // only a connection that completed a full round trip is reusable
-        self.conns[flat].lock().unwrap().push(conn);
-        Ok(reply)
+        conn.set_read_timeout(timeout)?;
+        let result = (|| -> Result<Reply> {
+            conn.write_all(frame).with_context(|| format!("send to {loc}"))?;
+            conn.flush()?;
+            let body =
+                proto::read_frame(&mut conn).with_context(|| format!("reply from {loc}"))?;
+            Reply::decode(&body)
+        })();
+        match result {
+            Ok(reply) => {
+                self.conns[flat].lock().unwrap().push(conn);
+                Ok(reply)
+            }
+            Err(e) => {
+                if let Some(rt) = self.chaos.lock().unwrap().as_ref() {
+                    chaos::FaultCounters::bump(&rt.counters.evictions);
+                }
+                Err(e)
+            }
+        }
     }
 
     fn rpc_ok(&self, loc: Location, msg: &Msg) -> Result<()> {
@@ -258,9 +377,88 @@ impl NetCluster {
     /// coordinator marks it failed. Recovery must rebuild from peers.
     pub fn fail(&self, loc: Location) -> Result<()> {
         self.rpc_ok(loc, &Msg::Fail)?;
-        self.failed.lock().unwrap().push(loc);
-        self.set_state(loc, NodeState::Failed);
+        self.mark_failed(loc);
         Ok(())
+    }
+
+    /// Record a failure in coordinator metadata only — no data-plane RPC.
+    /// Used when the worker is already unreachable (a chaos crash) and a
+    /// `Fail` RPC could never be delivered.
+    pub fn mark_failed(&self, loc: Location) {
+        let mut failed = self.failed.lock().unwrap();
+        if !failed.contains(&loc) {
+            failed.push(loc);
+        }
+        drop(failed);
+        self.set_state(loc, NodeState::Failed);
+    }
+
+    /// Heartbeat sweep over every node not already marked failed: a
+    /// worker that cannot answer within the bounded retry budget (or
+    /// answers with a Failed state the coordinator missed) is escalated
+    /// to a coordinator-side `Fail` transition. Returns the newly
+    /// detected failures. Heartbeats encode identically, so under
+    /// injected frame loss the per-(seed, node, attempt) decision is
+    /// fixed and detection stays deterministic.
+    pub fn detect_failures(&self) -> Vec<Location> {
+        let known = self.failed.lock().unwrap().clone();
+        let mut found = Vec::new();
+        for i in 0..self.spec.cluster.node_count() {
+            let loc = self.spec.cluster.unflat(i);
+            if known.contains(&loc) {
+                continue;
+            }
+            match self.heartbeat(loc) {
+                Ok((NodeState::Failed, _)) | Err(_) => {
+                    self.mark_failed(loc);
+                    if let Some(rt) = self.chaos.lock().unwrap().as_ref() {
+                        chaos::FaultCounters::bump(&rt.counters.failovers);
+                    }
+                    found.push(loc);
+                }
+                Ok(_) => {}
+            }
+        }
+        found
+    }
+
+    /// Arm the chaos layer (DESIGN.md §14). Call *after* populate so the
+    /// injected faults hit recovery traffic, not the write path — that
+    /// separation is what keeps fault-run byte accounting identical to a
+    /// fault-free run. Returns the runtime handle for counter inspection.
+    pub fn arm_chaos(&self, spec: chaos::FaultSpec) -> Arc<chaos::ChaosRuntime> {
+        let rt = Arc::new(chaos::ChaosRuntime::new(spec));
+        *self.chaos.lock().unwrap() = Some(rt.clone());
+        self.chaos_on.store(true, Ordering::Relaxed);
+        rt
+    }
+
+    /// The armed chaos runtime, if any.
+    pub fn chaos_runtime(&self) -> Option<Arc<chaos::ChaosRuntime>> {
+        self.chaos.lock().unwrap().clone()
+    }
+
+    /// Kill the worker *process* at `loc`: it stops replying entirely and
+    /// closes every connection without a byte. No membership transition
+    /// happens here — noticing the silence is the failure detector's job
+    /// ([`NetCluster::detect_failures`]).
+    pub fn crash_worker(&self, loc: Location) {
+        let flat = self.spec.cluster.flat(loc);
+        self.workers[flat].crash();
+        // pooled connections to the dead process are useless now
+        self.conns[flat].lock().unwrap().clear();
+    }
+
+    /// Scrub probe: the checksum of the stored replica of `(sid, block)`
+    /// wherever it currently lives — a `HashBlock` RPC, i.e. a node-local
+    /// disk read that moves no block bytes over the modeled links.
+    pub fn stored_checksum(&self, sid: u64, block: usize) -> Result<u64> {
+        let loc = self.locate(sid, block);
+        match self.call(loc, &Msg::HashBlock { sid, block: block as u32 })? {
+            Reply::Sum(s) => Ok(s),
+            Reply::Err(e) => bail!("hash ({sid},{block}) on {loc}: {e}"),
+            other => bail!("hash ({sid},{block}) on {loc}: unexpected reply {other:?}"),
+        }
     }
 
     /// Gracefully drain `loc`: the worker stops accepting writes, then
@@ -323,6 +521,9 @@ impl NetCluster {
     /// that [`NetCluster::run_migration`] batches restore onto, mirror of
     /// [`crate::cluster::MiniCluster::relive_node`].
     pub fn relive(&self, loc: Location) -> Result<()> {
+        // a chaos-crashed worker process "reboots" before it can serve
+        // the Join RPC at the same address
+        self.workers[self.spec.cluster.flat(loc)].revive();
         self.rpc_ok(loc, &Msg::Join)?;
         self.set_state(loc, NodeState::Up);
         self.failed.lock().unwrap().retain(|&f| f != loc);
@@ -399,6 +600,13 @@ impl NetCluster {
             } else {
                 rel.insert((plan.stripe, plan.failed_block), plan.writer);
             }
+            drop(rel);
+            // first write wins: the registry keeps the populate-time oracle
+            self.checksums
+                .lock()
+                .unwrap()
+                .entry((plan.stripe, plan.failed_block))
+                .or_insert(sum);
         }
         Ok(sum)
     }
@@ -447,6 +655,10 @@ impl NetCluster {
         let parity = self.encode_at(client, &data)?;
         let failed = self.failed.lock().unwrap().clone();
         for (bi, bytes) in data.into_iter().chain(parity).enumerate() {
+            // record the expected checksum for every block — including
+            // ones whose destination is down: their canonical content is
+            // still what any later rebuild must reproduce
+            self.checksums.lock().unwrap().insert((sid, bi), proto::checksum(&bytes));
             let dst = sp.locs[bi];
             if failed.contains(&dst) {
                 continue;
@@ -613,6 +825,7 @@ impl BlockFabric for NetCluster {
     }
 
     fn persist_block(&self, sid: u64, block: usize, at: Location, bytes: Vec<u8>) -> Result<()> {
+        let sum = proto::checksum(&bytes);
         self.rpc_ok(at, &Msg::WriteBlock { sid, block: block as u32, bytes })?;
         let canonical = self.policy.stripe(sid).locs[block];
         let mut rel = self.relocated.lock().unwrap();
@@ -621,6 +834,9 @@ impl BlockFabric for NetCluster {
         } else {
             rel.insert((sid, block), at);
         }
+        drop(rel);
+        // first write wins: the registry keeps the populate-time oracle
+        self.checksums.lock().unwrap().entry((sid, block)).or_insert(sum);
         Ok(())
     }
 
@@ -641,7 +857,55 @@ impl BlockFabric for NetCluster {
     }
 
     fn fail_node(&self, loc: Location) {
-        self.fail(loc).expect("fail RPC to in-process worker");
+        // a crashed worker cannot serve its own Fail RPC — fall back to
+        // the coordinator-side transition so planning can proceed
+        if self.fail(loc).is_err() {
+            self.mark_failed(loc);
+        }
+    }
+
+    fn failed_nodes(&self) -> Vec<Location> {
+        self.failed.lock().unwrap().clone()
+    }
+
+    fn mark_failed(&self, loc: Location) {
+        NetCluster::mark_failed(self, loc);
+    }
+
+    fn detect_failures(&self) -> Vec<Location> {
+        NetCluster::detect_failures(self)
+    }
+
+    fn stored_checksum(&self, sid: u64, block: usize) -> Result<u64> {
+        NetCluster::stored_checksum(self, sid, block)
+    }
+
+    fn expected_checksum(&self, sid: u64, block: usize) -> Option<u64> {
+        self.checksums.lock().unwrap().get(&(sid, block)).copied()
+    }
+
+    fn corrupt_stored(&self, sid: u64, block: usize) -> Result<()> {
+        let loc = self.locate(sid, block);
+        let flat = self.spec.cluster.flat(loc);
+        if self.workers[flat].corrupt_block(sid, block as u32) {
+            Ok(())
+        } else {
+            bail!("corrupt_stored: block ({sid},{block}) not held at {loc}")
+        }
+    }
+
+    fn rejoin_node(&self, loc: Location) -> Result<usize> {
+        self.join(loc)
+    }
+
+    fn fault_report(&self) -> Option<crate::metrics::FaultReport> {
+        self.chaos.lock().unwrap().as_ref().map(|rt| rt.counters.report())
+    }
+
+    fn arm_crash_victim(&self, loc: Location) {
+        if let Some(rt) = self.chaos.lock().unwrap().as_ref() {
+            rt.set_victim(loc);
+        }
     }
 
     fn set_qos(&self, cfg: QosConfig, fg_active: Arc<AtomicBool>) {
@@ -713,6 +977,9 @@ pub struct NetClusterBackend {
     pub schedule: SchedulePolicy,
     pub coalesce: usize,
     pub batched_fetch: bool,
+    /// Fault-injection spec, armed after populate so injected faults hit
+    /// recovery traffic only (DESIGN.md §14). `None` = fault-free.
+    pub faults: Option<chaos::FaultSpec>,
 }
 
 impl Default for NetClusterBackend {
@@ -726,6 +993,7 @@ impl Default for NetClusterBackend {
             schedule: SchedulePolicy::Fifo,
             coalesce: 1,
             batched_fetch: false,
+            faults: None,
         }
     }
 }
@@ -765,6 +1033,9 @@ impl crate::scenario::RecoveryBackend for NetClusterBackend {
             cluster.write_stripes_parallel(scenario.stripes, self.workers.max(2), |sid| {
                 deterministic_data(sid, k, bs)
             })?;
+            if let Some(faults) = self.faults {
+                cluster.arm_chaos(faults);
+            }
             Ok(cluster)
         };
         fabric::run_scenario(

@@ -1,12 +1,17 @@
 //! Length-prefixed RPC protocol between the NetCluster coordinator and
 //! its node workers (DESIGN.md §13).
 //!
-//! Framing: every message is `u32 little-endian length ‖ body`, capped at
-//! [`MAX_FRAME`]. Bodies are a one-byte tag followed by fixed-width
-//! little-endian integers and length-prefixed byte strings — hand-rolled
-//! (std-only, no serde) and round-trip tested below. Requests are
-//! [`Msg`]; every request gets exactly one [`Reply`] on the same
-//! connection, so a pooled connection is always in a known state.
+//! Framing: every message is `u32 little-endian length ‖ body ‖ u64
+//! FNV-1a(body)`, capped at [`MAX_FRAME`]. The checksum trailer makes
+//! on-the-wire bit-flips *detectable*: a corrupted body can never decode
+//! as a different valid message (which would, e.g., let a flipped
+//! `WriteBlock` payload silently poison a replica) — the receiver gets a
+//! clean integrity error and drops the connection instead. Bodies are a
+//! one-byte tag followed by fixed-width little-endian integers and
+//! length-prefixed byte strings — hand-rolled (std-only, no serde) and
+//! round-trip tested below. Requests are [`Msg`]; every request gets
+//! exactly one [`Reply`] on the same connection, so a pooled connection
+//! is always in a known state.
 
 use std::io::{Read, Write};
 
@@ -21,14 +26,16 @@ pub const STATE_UP: u8 = 0;
 pub const STATE_DRAINING: u8 = 1;
 pub const STATE_FAILED: u8 = 2;
 
-/// Write one `len ‖ body` frame.
+/// Write one `len ‖ body ‖ fnv(body)` frame.
 pub fn write_frame(w: &mut impl Write, body: &[u8]) -> std::io::Result<()> {
     w.write_all(&(body.len() as u32).to_le_bytes())?;
     w.write_all(body)?;
+    w.write_all(&checksum(body).to_le_bytes())?;
     w.flush()
 }
 
-/// Read one frame; errors on EOF mid-frame or an oversized length.
+/// Read one frame; errors on EOF mid-frame, an oversized length, or an
+/// integrity-trailer mismatch (a bit flipped anywhere in the body).
 pub fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
     let mut len = [0u8; 4];
     r.read_exact(&mut len)?;
@@ -41,6 +48,14 @@ pub fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
     }
     let mut body = vec![0u8; len];
     r.read_exact(&mut body)?;
+    let mut sum = [0u8; 8];
+    r.read_exact(&mut sum)?;
+    if u64::from_le_bytes(sum) != checksum(&body) {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "frame integrity checksum mismatch",
+        ));
+    }
     Ok(body)
 }
 
@@ -93,6 +108,9 @@ pub enum Msg {
     /// Worker-side block rebuild: pull every source from its peer,
     /// GF-combine, store the result, reply with its checksum.
     RecoverPlan { sid: u64, block: u32, block_len: u32, sources: Vec<PlanSource> },
+    /// Scrub probe: FNV checksum of the stored replica's bytes — a
+    /// node-local disk read, so the coordinator charges no link traffic.
+    HashBlock { sid: u64, block: u32 },
 }
 
 /// Worker → coordinator replies.
@@ -117,6 +135,7 @@ const TAG_REMOVE_BLOCK: u8 = 0x08;
 const TAG_LIST_BLOCKS: u8 = 0x09;
 const TAG_ENCODE: u8 = 0x0a;
 const TAG_RECOVER_PLAN: u8 = 0x0b;
+const TAG_HASH_BLOCK: u8 = 0x0c;
 
 const TAG_OK: u8 = 0x80;
 const TAG_ERR: u8 = 0x81;
@@ -142,10 +161,16 @@ impl<'a> Cursor<'a> {
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
+        // checked_add: an adversarial length prefix near usize::MAX must
+        // not wrap the bounds check into accepting a huge read
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| anyhow::anyhow!("length overflow at offset {}", self.pos))?;
+        if end > self.buf.len() {
             bail!("truncated frame: wanted {n} bytes at offset {}", self.pos);
         }
-        let s = &self.buf[self.pos..self.pos + n];
+        let s = &self.buf[self.pos..end];
         self.pos += n;
         Ok(s)
     }
@@ -230,6 +255,11 @@ impl Msg {
                     put_bytes(&mut out, s.addr.as_bytes());
                 }
             }
+            Msg::HashBlock { sid, block } => {
+                out.push(TAG_HASH_BLOCK);
+                out.extend_from_slice(&sid.to_le_bytes());
+                out.extend_from_slice(&block.to_le_bytes());
+            }
         }
         out
     }
@@ -272,6 +302,7 @@ impl Msg {
                 }
                 Msg::RecoverPlan { sid, block, block_len, sources }
             }
+            TAG_HASH_BLOCK => Msg::HashBlock { sid: c.u64()?, block: c.u32()? },
             t => bail!("unknown request tag 0x{t:02x}"),
         };
         c.finish()?;
@@ -374,6 +405,7 @@ mod tests {
                 PlanSource { coeff: 1, block: 2, addr: "127.0.0.1:4001".into() },
             ],
         });
+        roundtrip_msg(Msg::HashBlock { sid: 8, block: 4 });
     }
 
     #[test]
@@ -417,6 +449,23 @@ mod tests {
         wire.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
         let mut r = &wire[..];
         assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn flipped_body_bit_fails_frame_integrity() {
+        let body = Msg::WriteBlock { sid: 1, block: 0, bytes: vec![7; 32] }.encode();
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &body).unwrap();
+        for bit in [0usize, 13, body.len() * 8 - 1] {
+            let mut bad = wire.clone();
+            bad[4 + bit / 8] ^= 1 << (bit % 8);
+            let mut r = &bad[..];
+            let e = read_frame(&mut r).unwrap_err();
+            assert_eq!(e.kind(), std::io::ErrorKind::InvalidData, "bit {bit}");
+        }
+        // untouched frame still reads back
+        let mut r = &wire[..];
+        assert_eq!(read_frame(&mut r).unwrap(), body);
     }
 
     #[test]

@@ -7,12 +7,27 @@
 //! nothing in the protocol knows that: every byte a worker serves or
 //! rebuilds crosses a real socket, and worker-to-worker source fetches
 //! during `RecoverPlan` open their own peer connections.
+//!
+//! Per-connection handler threads are *tracked*: the listener records
+//! every spawned handler and [`WorkerHandle::stop`] joins them all under
+//! a drain deadline, so tests that churn workers never leak threads or
+//! race the next test's port. Handlers read with a short poll timeout so
+//! they notice shutdown (and chaos crashes) between frames.
+//!
+//! The chaos layer (DESIGN.md §14) drives two hooks here: `crash()`
+//! makes the worker fall silent — existing handlers close their sockets
+//! without replying and new connections are accepted then dropped,
+//! exactly what a dead process looks like to the coordinator — and
+//! `corrupt_block()` flips a bit in a stored replica to model latent
+//! disk corruption for the scrub pass.
 
 use std::collections::HashMap;
+use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -21,22 +36,82 @@ use crate::topology::Location;
 
 use super::proto::{self, Msg, PlanSource, Reply, STATE_DRAINING, STATE_FAILED, STATE_UP};
 
+/// How often an idle handler wakes to poll shutdown/crash flags.
+const POLL_INTERVAL: Duration = Duration::from_millis(50);
+/// How long `stop()` waits for handler threads before abandoning them.
+const DRAIN_DEADLINE: Duration = Duration::from_secs(5);
+
 /// Coordinator-side handle to one spawned worker.
 pub struct WorkerHandle {
     pub addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
     listener: Option<JoinHandle<()>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    node: Arc<NodeWorker>,
 }
 
 impl WorkerHandle {
-    /// Stop the accept loop and join the listener thread. Idempotent;
-    /// also runs on drop so a panicking test never leaks the thread.
+    /// Stop the accept loop, join the listener thread, then drain every
+    /// tracked per-connection handler under [`DRAIN_DEADLINE`].
+    /// Idempotent; also runs on drop so a panicking test never leaks the
+    /// thread or races the next test's port.
     pub fn stop(&mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
         // wake the blocking accept with a throwaway connection
         let _ = TcpStream::connect(self.addr);
         if let Some(h) = self.listener.take() {
             let _ = h.join();
+        }
+        let deadline = Instant::now() + DRAIN_DEADLINE;
+        loop {
+            let mut guard = self.handlers.lock().unwrap();
+            let mut pending = Vec::new();
+            for h in guard.drain(..) {
+                if h.is_finished() {
+                    let _ = h.join();
+                } else {
+                    pending.push(h);
+                }
+            }
+            if pending.is_empty() {
+                return;
+            }
+            if Instant::now() >= deadline {
+                // abandon stragglers (a wedged socket); dropping the
+                // handles detaches them without blocking teardown
+                return;
+            }
+            *guard = pending;
+            drop(guard);
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// Chaos crash: the worker falls silent. In-flight handlers close
+    /// their connections without replying; new connections are accepted
+    /// and immediately dropped. The process-level state (store, listener)
+    /// survives so a later `revive()` + `Join` models a machine reboot.
+    pub fn crash(&self) {
+        self.node.crashed.store(true, Ordering::Relaxed);
+    }
+
+    /// Undo a chaos crash so the membership `Join` RPC can reach the
+    /// worker again (the replacement machine booting at the same address).
+    pub fn revive(&self) {
+        self.node.crashed.store(false, Ordering::Relaxed);
+    }
+
+    /// Latent-corruption hook: flip one bit of the stored replica of
+    /// `(sid, block)`. Returns false when the worker holds no such block.
+    /// This models silent disk corruption, not a network event, so it is
+    /// an in-process hook rather than an RPC.
+    pub fn corrupt_block(&self, sid: u64, block: u32) -> bool {
+        match self.node.store.lock().unwrap().get_mut(&(sid, block)) {
+            Some(b) if !b.is_empty() => {
+                b[0] ^= 1;
+                true
+            }
+            _ => false,
         }
     }
 }
@@ -53,43 +128,137 @@ struct NodeWorker {
     /// One of [`STATE_UP`], [`STATE_DRAINING`], [`STATE_FAILED`].
     state: Mutex<u8>,
     store: Mutex<HashMap<(u64, u32), Vec<u8>>>,
+    /// Chaos crash flag: when set the worker never writes another byte.
+    crashed: AtomicBool,
 }
 
 /// Bind a listener on `127.0.0.1:0` and serve until the handle stops it.
-/// Each accepted connection gets its own detached handler thread that
-/// answers frames until the peer hangs up.
+/// Each accepted connection gets its own handler thread, tracked in the
+/// handle so shutdown can join it.
 pub fn spawn_worker(loc: Location) -> Result<WorkerHandle> {
     let listener = TcpListener::bind(("127.0.0.1", 0))?;
     let addr = listener.local_addr()?;
     let shutdown = Arc::new(AtomicBool::new(false));
+    let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
     let node = Arc::new(NodeWorker {
         loc,
         state: Mutex::new(STATE_UP),
         store: Mutex::new(HashMap::new()),
+        crashed: AtomicBool::new(false),
     });
     let stop = shutdown.clone();
+    let track = handlers.clone();
+    let served = node.clone();
     let handle = std::thread::spawn(move || {
         for conn in listener.incoming() {
             if stop.load(Ordering::Relaxed) {
                 break;
             }
             let Ok(conn) = conn else { break };
-            let node = node.clone();
-            std::thread::spawn(move || serve_conn(&node, conn));
+            let node = served.clone();
+            let stop = stop.clone();
+            let h = std::thread::spawn(move || serve_conn(&node, &stop, conn));
+            let mut guard = track.lock().unwrap();
+            // reap finished handlers as we go so the list stays bounded
+            let mut live = Vec::with_capacity(guard.len() + 1);
+            for old in guard.drain(..) {
+                if old.is_finished() {
+                    let _ = old.join();
+                } else {
+                    live.push(old);
+                }
+            }
+            live.push(h);
+            *guard = live;
         }
     });
-    Ok(WorkerHandle { addr, shutdown, listener: Some(handle) })
+    Ok(WorkerHandle { addr, shutdown, listener: Some(handle), handlers, node })
 }
 
-fn serve_conn(node: &NodeWorker, mut conn: TcpStream) {
+/// Read one frame with [`POLL_INTERVAL`] wakeups: returns `Ok(None)` on a
+/// clean close (EOF between frames) or when `should_stop` fires, `Err` on
+/// EOF mid-frame, oversized lengths, or integrity failures.
+fn read_frame_polled(
+    conn: &mut TcpStream,
+    should_stop: &impl Fn() -> bool,
+) -> std::io::Result<Option<Vec<u8>>> {
+    use std::io::ErrorKind;
+    let read_exact_polled =
+        |conn: &mut TcpStream, buf: &mut [u8], clean_eof_at_zero: bool| -> std::io::Result<bool> {
+            let mut got = 0usize;
+            while got < buf.len() {
+                match conn.read(&mut buf[got..]) {
+                    Ok(0) => {
+                        if got == 0 && clean_eof_at_zero {
+                            return Ok(false);
+                        }
+                        return Err(ErrorKind::UnexpectedEof.into());
+                    }
+                    Ok(n) => got += n,
+                    Err(e)
+                        if e.kind() == ErrorKind::WouldBlock
+                            || e.kind() == ErrorKind::TimedOut =>
+                    {
+                        if should_stop() {
+                            return Ok(false);
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(e) => return Err(e),
+                }
+            }
+            Ok(true)
+        };
+    let mut len = [0u8; 4];
+    if !read_exact_polled(conn, &mut len, true)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len) as usize;
+    if len > proto::MAX_FRAME {
+        return Err(std::io::Error::new(
+            ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {}-byte cap", proto::MAX_FRAME),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    if !read_exact_polled(conn, &mut body, false)? {
+        return Ok(None);
+    }
+    let mut sum = [0u8; 8];
+    if !read_exact_polled(conn, &mut sum, false)? {
+        return Ok(None);
+    }
+    if u64::from_le_bytes(sum) != proto::checksum(&body) {
+        return Err(std::io::Error::new(
+            ErrorKind::InvalidData,
+            "frame integrity checksum mismatch",
+        ));
+    }
+    Ok(Some(body))
+}
+
+fn serve_conn(node: &NodeWorker, stop: &AtomicBool, mut conn: TcpStream) {
     let _ = conn.set_nodelay(true);
+    let _ = conn.set_read_timeout(Some(POLL_INTERVAL));
+    let should_stop =
+        || stop.load(Ordering::Relaxed) || node.crashed.load(Ordering::Relaxed);
     loop {
-        // EOF (peer closed or pooled connection dropped) ends the handler
-        let Ok(body) = proto::read_frame(&mut conn) else { return };
+        // a decode/integrity failure poisons the stream framing, so the
+        // handler drops the connection; the coordinator re-dials
+        let body = match read_frame_polled(&mut conn, &should_stop) {
+            Ok(Some(b)) => b,
+            Ok(None) | Err(_) => return,
+        };
+        if node.crashed.load(Ordering::Relaxed) {
+            return; // crashed: never write another byte
+        }
         let reply = match Msg::decode(&body) {
             Ok(msg) => node.serve(msg),
             Err(e) => Reply::Err(format!("bad request: {e}")),
         };
+        if node.crashed.load(Ordering::Relaxed) {
+            return;
+        }
         if proto::write_frame(&mut conn, &reply.encode()).is_err() {
             return;
         }
@@ -178,6 +347,17 @@ impl NodeWorker {
             }
             Msg::RecoverPlan { sid, block, block_len, sources } => {
                 self.recover_plan(sid, block, block_len as usize, &sources)
+            }
+            Msg::HashBlock { sid, block } => {
+                if *self.state.lock().unwrap() == STATE_FAILED {
+                    return Reply::Err(format!("failed node {} rejects reads", self.loc));
+                }
+                match self.store.lock().unwrap().get(&(sid, block)) {
+                    Some(b) => Reply::Sum(proto::checksum(b)),
+                    None => {
+                        Reply::Err(format!("block ({sid},{block}) missing at {}", self.loc))
+                    }
+                }
             }
         }
     }

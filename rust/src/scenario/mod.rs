@@ -21,6 +21,8 @@
 //! (multi-node, whole-rack — see Rashmi et al., arXiv:1309.0186) plus the
 //! front-end-load and degraded-read-burst mixes of §6.2.3–§6.2.4.
 
+pub mod trace;
+
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
@@ -320,6 +322,12 @@ pub struct ScenarioOutcome {
     /// the interference factor the QoS split trades against foreground
     /// tail latency (mixed-load kinds that execute recovery).
     pub recovery_slowdown: Option<f64>,
+    /// Chaos-layer fault counters (DESIGN.md §14) when injection was
+    /// armed on the fabric; `None` on the fluid backend and unarmed runs.
+    pub faults: Option<crate::metrics::FaultReport>,
+    /// Long-horizon failure-trace summary (`d3ctl chaos --trace`);
+    /// `None` for one-shot scenarios.
+    pub trace: Option<trace::TraceSummary>,
 }
 
 impl ScenarioOutcome {
@@ -392,6 +400,39 @@ impl ScenarioOutcome {
         if let Some(x) = self.recovery_slowdown {
             println!("  recovery slowdown under foreground load: {x:.2}x");
         }
+        if let Some(f) = &self.faults {
+            println!(
+                "  faults injected: {} (drop {} · delay {} · corrupt {} · truncate {}) — \
+                 retries {} · evictions {} · crashes {} · failovers {} · replans {} · \
+                 quarantined {} · scrub-repaired {}",
+                f.total_injected(),
+                f.drops,
+                f.delays,
+                f.corrupts,
+                f.truncates,
+                f.retries,
+                f.evictions,
+                f.crashes,
+                f.failovers,
+                f.replans,
+                f.quarantined,
+                f.scrub_repaired
+            );
+        }
+        if let Some(t) = &self.trace {
+            println!(
+                "  trace: {} failures over {:.0} s in {} repair rounds → arrival \
+                 {:.2} MB/s vs sustained repair {:.2} MB/s · backlog peak {} blocks \
+                 · lost stripes {}",
+                t.failures,
+                t.horizon_s,
+                t.rounds,
+                t.arrival_mb_s,
+                t.sustained_mb_s,
+                t.backlog_peak,
+                t.lost_stripes
+            );
+        }
     }
 
     /// The full outcome as a JSON document (`d3ctl scenario --json`), so
@@ -462,6 +503,33 @@ impl ScenarioOutcome {
         }
         if let Some(x) = self.recovery_slowdown {
             m.insert("recovery_slowdown".into(), Json::Num(x));
+        }
+        if let Some(f) = &self.faults {
+            let mut fm = BTreeMap::new();
+            fm.insert("drops".into(), Json::Num(f.drops as f64));
+            fm.insert("delays".into(), Json::Num(f.delays as f64));
+            fm.insert("corrupts".into(), Json::Num(f.corrupts as f64));
+            fm.insert("truncates".into(), Json::Num(f.truncates as f64));
+            fm.insert("retries".into(), Json::Num(f.retries as f64));
+            fm.insert("evictions".into(), Json::Num(f.evictions as f64));
+            fm.insert("crashes".into(), Json::Num(f.crashes as f64));
+            fm.insert("failovers".into(), Json::Num(f.failovers as f64));
+            fm.insert("replans".into(), Json::Num(f.replans as f64));
+            fm.insert("quarantined".into(), Json::Num(f.quarantined as f64));
+            fm.insert("scrub_repaired".into(), Json::Num(f.scrub_repaired as f64));
+            m.insert("faults".into(), Json::Obj(fm));
+        }
+        if let Some(t) = &self.trace {
+            let mut tm = BTreeMap::new();
+            tm.insert("failures".into(), Json::Num(t.failures as f64));
+            tm.insert("rounds".into(), Json::Num(t.rounds as f64));
+            tm.insert("blocks_repaired".into(), Json::Num(t.blocks_repaired as f64));
+            tm.insert("lost_stripes".into(), Json::Num(t.lost_stripes as f64));
+            tm.insert("arrival_mb_s".into(), Json::Num(t.arrival_mb_s));
+            tm.insert("sustained_mb_s".into(), Json::Num(t.sustained_mb_s));
+            tm.insert("backlog_peak".into(), Json::Num(t.backlog_peak as f64));
+            tm.insert("horizon_s".into(), Json::Num(t.horizon_s));
+            m.insert("trace".into(), Json::Obj(tm));
         }
         Json::Obj(m)
     }
@@ -689,6 +757,22 @@ mod tests {
             link_busy_stall: Some(vec![(0.5, 0.0)]),
             fg_latency: Some(crate::metrics::summarize(&[0.1, 0.2, 0.3, 0.4])),
             recovery_slowdown: Some(1.25),
+            faults: Some(crate::metrics::FaultReport {
+                drops: 2,
+                corrupts: 1,
+                retries: 3,
+                ..Default::default()
+            }),
+            trace: Some(trace::TraceSummary {
+                failures: 4,
+                rounds: 3,
+                blocks_repaired: 40,
+                lost_stripes: 0,
+                arrival_mb_s: 1.5,
+                sustained_mb_s: 6.0,
+                backlog_peak: 18,
+                horizon_s: 3600.0,
+            }),
         };
         let j = out.to_json();
         let parsed = Json::parse(&j.to_string()).unwrap();
@@ -700,5 +784,11 @@ mod tests {
             parsed.get("recovery_slowdown").and_then(Json::as_f64),
             Some(1.25)
         );
+        let fj = parsed.get("faults").expect("faults block");
+        assert_eq!(fj.get("drops").and_then(Json::as_usize), Some(2));
+        assert_eq!(fj.get("retries").and_then(Json::as_usize), Some(3));
+        let tj = parsed.get("trace").expect("trace block");
+        assert_eq!(tj.get("failures").and_then(Json::as_usize), Some(4));
+        assert_eq!(tj.get("sustained_mb_s").and_then(Json::as_f64), Some(6.0));
     }
 }

@@ -1,0 +1,407 @@
+//! Long-horizon failure traces (DESIGN.md §14): instead of one failure
+//! and one repair, node failures arrive over a modeled horizon — Poisson
+//! at a configured rate, or replayed from a trace file — and repair of
+//! one batch overlaps the arrival of the next.
+//!
+//! All backends drive the SAME batching loop against a shared *modeled*
+//! clock: each round's clock advance is its repair volume over the
+//! spec's modeled repair rate, never the backend's own measured time.
+//! That makes event batching — and therefore every counter (failures,
+//! rounds, blocks repaired, lost stripes, backlog peak) — identical on
+//! the fluid simulator, the in-process cluster and the socket-backed
+//! cluster, so trace runs stay cross-checkable. What each backend
+//! *measures* is its own sustained repair rate: rebuilt bytes over the
+//! seconds its repair path actually took (simulated seconds on the
+//! fluid backend, wall seconds on the physical fabrics), reported
+//! against the arrival rate the trace generated.
+
+use std::collections::HashSet;
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::fabric::{recover_with_plans_cfg, BlockFabric};
+use crate::placement::Placement;
+use crate::recovery::executor::ExecutorConfig;
+use crate::recovery::multi::stripe_repair_plans;
+use crate::recovery::plan::RepairPlan;
+use crate::sim::recovery::{run_recovery_multi, RecoveryConfig};
+use crate::topology::{ClusterSpec, Location, SystemSpec};
+use crate::util::Rng;
+
+use super::distinct_racks;
+
+/// A failure-arrival process over a modeled horizon.
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    /// Modeled horizon in seconds; no event arrives past it.
+    pub horizon_s: f64,
+    /// Poisson node-failure rate (events per hour) when no explicit
+    /// event list is given.
+    pub rate_per_hour: f64,
+    /// Modeled aggregate repair bandwidth (MB/s) that advances the
+    /// shared clock between rounds — the knob that decides how many
+    /// later arrivals pile into the next batch.
+    pub repair_mb_s: f64,
+    /// Explicit `(seconds, node)` failure events (the trace-file mode);
+    /// overrides the Poisson generator.
+    pub events: Option<Vec<(f64, Location)>>,
+}
+
+impl Default for TraceSpec {
+    fn default() -> TraceSpec {
+        TraceSpec {
+            horizon_s: 86_400.0,
+            rate_per_hour: 2.0,
+            repair_mb_s: 64.0,
+            events: None,
+        }
+    }
+}
+
+impl TraceSpec {
+    /// The deterministic failure-event sequence: the explicit list
+    /// (clamped to the horizon, sorted by time) or seeded Poisson
+    /// arrivals hitting uniformly random nodes.
+    pub fn arrivals(&self, cluster: &ClusterSpec, seed: u64) -> Vec<(f64, Location)> {
+        if let Some(ev) = &self.events {
+            let mut ev: Vec<(f64, Location)> = ev
+                .iter()
+                .copied()
+                .filter(|&(t, _)| t >= 0.0 && t <= self.horizon_s)
+                .collect();
+            ev.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            return ev;
+        }
+        let mut rng = Rng::keyed(seed, 0x7ace_0fa1, 0);
+        let mean = 3600.0 / self.rate_per_hour.max(1e-9);
+        let mut t = 0.0;
+        let mut out = Vec::new();
+        loop {
+            t += rng.exp(mean);
+            if t > self.horizon_s {
+                break;
+            }
+            out.push((t, cluster.unflat(rng.below(cluster.node_count()))));
+        }
+        out
+    }
+}
+
+/// What a trace run did over its horizon.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TraceSummary {
+    /// Node-failure events injected.
+    pub failures: u64,
+    /// Repair rounds executed (arrivals during a repair batch together).
+    pub rounds: u64,
+    /// Blocks rebuilt across all rounds.
+    pub blocks_repaired: u64,
+    /// Stripes that became unrecoverable (data loss) at some round.
+    pub lost_stripes: u64,
+    /// Repair work generated per second of horizon (MB/s).
+    pub arrival_mb_s: f64,
+    /// Rebuilt bytes over the backend's measured repair seconds (MB/s).
+    pub sustained_mb_s: f64,
+    /// Largest repair backlog (blocks) at any round start.
+    pub backlog_peak: u64,
+    /// Modeled horizon (s), echoed from the spec.
+    pub horizon_s: f64,
+}
+
+/// Parse a failure-trace file: one `seconds rack node` triple per line;
+/// `#` starts a comment, blank lines are skipped.
+pub fn parse_trace(text: &str, cluster: &ClusterSpec) -> Result<Vec<(f64, Location)>> {
+    let mut events = Vec::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(t), Some(r), Some(n)) = (it.next(), it.next(), it.next()) else {
+            bail!("trace line {}: expected `seconds rack node`, got {line:?}", ln + 1);
+        };
+        let t: f64 = t
+            .parse()
+            .with_context(|| format!("trace line {}: bad time {t:?}", ln + 1))?;
+        if !t.is_finite() || t < 0.0 {
+            bail!("trace line {}: time must be finite and non-negative", ln + 1);
+        }
+        let rack: usize = r
+            .parse()
+            .with_context(|| format!("trace line {}: bad rack {r:?}", ln + 1))?;
+        let node: usize = n
+            .parse()
+            .with_context(|| format!("trace line {}: bad node {n:?}", ln + 1))?;
+        if rack >= cluster.racks || node >= cluster.nodes_per_rack {
+            bail!(
+                "trace line {}: r{rack}n{node} outside the {}×{} cluster",
+                ln + 1,
+                cluster.racks,
+                cluster.nodes_per_rack
+            );
+        }
+        events.push((t, Location::new(rack, node)));
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    Ok(events)
+}
+
+/// Per-round repair plans against the canonical layout (every round
+/// starts canonical: failed nodes of the previous round rejoined and
+/// their blocks rebalanced home). Stripes that cannot be repaired are
+/// recorded in `lost` and never planned again; returns the plans and
+/// the number of newly lost stripes.
+fn round_plans(
+    policy: &dyn Placement,
+    stripes: u64,
+    failed: &[Location],
+    lost: &mut HashSet<u64>,
+    seed: u64,
+) -> (Vec<RepairPlan>, u64) {
+    let failed_set: HashSet<Location> = failed.iter().copied().collect();
+    let mut plans = Vec::new();
+    let mut newly_lost = 0u64;
+    for sid in 0..stripes {
+        if lost.contains(&sid) {
+            continue;
+        }
+        let sp = policy.stripe(sid);
+        let lost_blocks: Vec<usize> = (0..sp.locs.len())
+            .filter(|&b| failed_set.contains(&sp.locs[b]))
+            .collect();
+        if lost_blocks.is_empty() {
+            continue;
+        }
+        match stripe_repair_plans(policy, sid, &lost_blocks, &failed_set, seed) {
+            Ok(ps) => plans.extend(ps),
+            Err(_) => {
+                lost.insert(sid);
+                newly_lost += 1;
+            }
+        }
+    }
+    (plans, newly_lost)
+}
+
+/// The ONE batching loop every backend runs: pull due events, fail the
+/// batch, plan (tolerating unrecoverable stripes), execute via the
+/// backend's `execute` hook (which returns its measured repair seconds),
+/// rejoin the batch, and advance the shared modeled clock.
+#[allow(clippy::too_many_arguments)]
+fn drive<K, E, J>(
+    policy: &dyn Placement,
+    block_size: u64,
+    stripes: u64,
+    spec: &TraceSpec,
+    seed: u64,
+    mut fail: K,
+    mut execute: E,
+    mut rejoin: J,
+) -> Result<TraceSummary>
+where
+    K: FnMut(Location),
+    E: FnMut(&[RepairPlan], &[Location]) -> Result<f64>,
+    J: FnMut(Location) -> Result<()>,
+{
+    let cluster = policy.cluster();
+    let events = spec.arrivals(&cluster, seed);
+    let mut summary = TraceSummary {
+        failures: events.len() as u64,
+        horizon_s: spec.horizon_s,
+        ..TraceSummary::default()
+    };
+    let mut lost: HashSet<u64> = HashSet::new();
+    let mut clock = 0.0f64;
+    let mut repair_s = 0.0f64;
+    let mut i = 0usize;
+    while i < events.len() {
+        // idle until the next arrival, then batch everything already due
+        clock = clock.max(events[i].0);
+        let mut batch: Vec<Location> = Vec::new();
+        while i < events.len() && events[i].0 <= clock {
+            if !batch.contains(&events[i].1) {
+                batch.push(events[i].1);
+            }
+            i += 1;
+        }
+        summary.rounds += 1;
+        for &loc in &batch {
+            fail(loc);
+        }
+        let (plans, newly_lost) = round_plans(policy, stripes, &batch, &mut lost, seed);
+        summary.lost_stripes += newly_lost;
+        summary.backlog_peak = summary.backlog_peak.max(plans.len() as u64);
+        if !plans.is_empty() {
+            repair_s += execute(&plans, &batch)?;
+            summary.blocks_repaired += plans.len() as u64;
+        }
+        for &loc in &batch {
+            rejoin(loc)?;
+        }
+        // modeled makespan, NOT measured time: identical on every
+        // backend, so later arrivals batch identically everywhere
+        clock += plans.len() as f64 * block_size as f64 / (spec.repair_mb_s.max(1e-9) * 1e6);
+    }
+    let total_bytes = summary.blocks_repaired as f64 * block_size as f64;
+    summary.arrival_mb_s = total_bytes / spec.horizon_s.max(1e-9) / 1e6;
+    summary.sustained_mb_s =
+        if repair_s > 0.0 { total_bytes / repair_s / 1e6 } else { 0.0 };
+    Ok(summary)
+}
+
+/// Run a failure trace against a physical fabric (MiniCluster or
+/// NetCluster): real failures, real repairs through the pipelined
+/// executor, real rejoin-and-rebalance between rounds. Sustained rate is
+/// measured from the executor's wall clock.
+pub fn run_trace<F: BlockFabric>(
+    fabric: &F,
+    policy: &dyn Placement,
+    stripes: u64,
+    spec: &TraceSpec,
+    cfg: ExecutorConfig,
+    seed: u64,
+) -> Result<TraceSummary> {
+    drive(
+        policy,
+        fabric.block_size(),
+        stripes,
+        spec,
+        seed,
+        |loc| fabric.fail_node(loc),
+        |plans, batch| {
+            let racks = distinct_racks(batch);
+            let stats = recover_with_plans_cfg(fabric, plans.to_vec(), cfg, &racks)?;
+            Ok(stats.wall.as_secs_f64())
+        },
+        |loc| fabric.rejoin_node(loc).map(|_| ()),
+    )
+}
+
+/// Run a failure trace on the fluid simulator: the identical batching
+/// loop, with each round priced by [`run_recovery_multi`]'s simulated
+/// makespan. The simulator carries no persistent stores, so fail/rejoin
+/// are pure bookkeeping (the canonical layout IS its state).
+pub fn run_trace_sim(
+    spec: &SystemSpec,
+    policy: &dyn Placement,
+    stripes: u64,
+    tspec: &TraceSpec,
+    cfg: RecoveryConfig,
+    seed: u64,
+) -> Result<TraceSummary> {
+    let cfg = RecoveryConfig { period: cfg.period.or_else(|| policy.period()), ..cfg };
+    drive(
+        policy,
+        spec.block_size,
+        stripes,
+        tspec,
+        seed,
+        |_loc| {},
+        |plans, batch| {
+            let racks = distinct_racks(batch);
+            let (out, _) = run_recovery_multi(spec, plans, &racks, cfg, Vec::new());
+            Ok(out.makespan)
+        },
+        |_loc| Ok(()),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::CodeSpec;
+    use crate::placement::D3Placement;
+
+    fn policy() -> D3Placement {
+        D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, ClusterSpec::new(8, 3)).unwrap()
+    }
+
+    #[test]
+    fn poisson_arrivals_are_deterministic_and_inside_horizon() {
+        let cluster = ClusterSpec::new(8, 3);
+        let spec = TraceSpec { horizon_s: 7200.0, rate_per_hour: 6.0, ..TraceSpec::default() };
+        let a = spec.arrivals(&cluster, 42);
+        let b = spec.arrivals(&cluster, 42);
+        assert_eq!(a, b, "same seed, same trace");
+        assert!(!a.is_empty(), "6/h over 2 h should fire");
+        assert!(a.windows(2).all(|w| w[0].0 <= w[1].0), "sorted by time");
+        assert!(a.iter().all(|&(t, _)| t >= 0.0 && t <= 7200.0));
+        let c = spec.arrivals(&cluster, 43);
+        assert_ne!(a, c, "different seed, different trace");
+    }
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let cluster = ClusterSpec::new(8, 3);
+        let spec = TraceSpec {
+            horizon_s: 3600.0 * 1000.0,
+            rate_per_hour: 4.0,
+            ..TraceSpec::default()
+        };
+        let n = spec.arrivals(&cluster, 7).len() as f64;
+        let want = 4000.0;
+        assert!(
+            (n - want).abs() < want * 0.1,
+            "expected ≈{want} events, got {n}"
+        );
+    }
+
+    #[test]
+    fn parse_trace_accepts_comments_and_rejects_garbage() {
+        let cluster = ClusterSpec::new(8, 3);
+        let ev = parse_trace(
+            "# a comment\n10.5 0 1\n\n3 7 2  # inline comment\n",
+            &cluster,
+        )
+        .unwrap();
+        assert_eq!(
+            ev,
+            vec![(3.0, Location::new(7, 2)), (10.5, Location::new(0, 1))],
+            "sorted by time"
+        );
+        assert!(parse_trace("nonsense", &cluster).is_err());
+        assert!(parse_trace("1.0 0", &cluster).is_err(), "missing node");
+        assert!(parse_trace("-1 0 0", &cluster).is_err(), "negative time");
+        assert!(parse_trace("1 99 0", &cluster).is_err(), "rack out of range");
+    }
+
+    #[test]
+    fn explicit_events_clamp_to_horizon() {
+        let cluster = ClusterSpec::new(8, 3);
+        let spec = TraceSpec {
+            horizon_s: 100.0,
+            events: Some(vec![
+                (150.0, Location::new(0, 0)),
+                (50.0, Location::new(1, 1)),
+                (10.0, Location::new(2, 2)),
+            ]),
+            ..TraceSpec::default()
+        };
+        let ev = spec.arrivals(&cluster, 0);
+        assert_eq!(ev.len(), 2, "event past the horizon dropped");
+        assert_eq!(ev[0].0, 10.0);
+    }
+
+    #[test]
+    fn sim_trace_counters_are_seed_deterministic() {
+        let p = policy();
+        let mut spec = SystemSpec::paper_default();
+        spec.block_size = 1 << 20;
+        let tspec = TraceSpec {
+            horizon_s: 6.0 * 3600.0,
+            rate_per_hour: 1.0,
+            repair_mb_s: 16.0,
+            ..TraceSpec::default()
+        };
+        let a = run_trace_sim(&spec, &p, 40, &tspec, RecoveryConfig::default(), 5).unwrap();
+        let b = run_trace_sim(&spec, &p, 40, &tspec, RecoveryConfig::default(), 5).unwrap();
+        assert_eq!(a, b, "same seed must replay exactly");
+        assert_eq!(a.failures as usize, tspec.arrivals(&p.cluster(), 5).len());
+        assert!(a.rounds >= 1 && a.rounds <= a.failures);
+        assert!(a.blocks_repaired > 0, "a failing node should lose blocks");
+        assert_eq!(a.lost_stripes, 0, "single failures never lose stripes");
+        assert!(a.sustained_mb_s > 0.0);
+        assert!(a.arrival_mb_s > 0.0);
+    }
+}

@@ -470,6 +470,8 @@ impl crate::scenario::RecoveryBackend for SimBackend {
                 link_busy_stall: Some(fluid_link_busy_stall(&rack_loads, spec)),
                 fg_latency: summary,
                 recovery_slowdown: None,
+                faults: None,
+                trace: None,
             });
         }
 
@@ -546,6 +548,8 @@ fn sim_outcome(
         link_busy_stall: Some(fluid_link_busy_stall(&out.rack_loads, spec)),
         fg_latency: None,
         recovery_slowdown: None,
+        faults: None,
+        trace: None,
     }
 }
 

@@ -1,0 +1,315 @@
+//! Chaos-fabric integration (DESIGN.md §14): recovery under injected
+//! faults. Frame-level chaos (drop / delay / corrupt / truncate) must
+//! not change WHAT gets moved — only how long it takes — so a fault run
+//! is byte-identical to a fault-free run; same-seed runs reproduce the
+//! same injection counters; a worker crash mid-recovery is detected by
+//! the heartbeat sweep, the lost blocks are re-planned, and everything
+//! still matches the populate oracle; the scrub pass finds and repairs
+//! latent storage corruption on both physical fabrics; and trace-driven
+//! failure arrivals produce identical counters on the fluid simulator
+//! and the physical fabrics.
+//!
+//! The `net_`-prefixed tests are the loopback-socket suite CI runs under
+//! a hard timeout (`cargo test --test chaos_fabric net_`).
+
+use std::sync::Arc;
+
+use d3ec::cluster::fabric::{crash_victim, recover_with_replan, run_scrub};
+use d3ec::cluster::{deterministic_data, BlockFabric, MiniCluster};
+use d3ec::codes::CodeSpec;
+use d3ec::net::chaos::FaultSpec;
+use d3ec::net::{NetCluster, NetClusterBackend};
+use d3ec::placement::{D3Placement, Placement};
+use d3ec::recovery::{scenario_recovery_plans, ExecutorConfig};
+use d3ec::scenario::trace::{run_trace, run_trace_sim, TraceSpec};
+use d3ec::scenario::{FailureScenario, RecoveryBackend};
+use d3ec::sim::recovery::RecoveryConfig;
+use d3ec::topology::{Location, SystemSpec};
+
+fn fast_spec() -> SystemSpec {
+    let mut spec = SystemSpec::paper_default();
+    spec.block_size = 16 << 10;
+    spec.net.inner_mbps = 8000.0;
+    spec.net.cross_mbps = 1600.0;
+    spec
+}
+
+fn d3_policy(spec: &SystemSpec) -> Arc<dyn Placement> {
+    let code = CodeSpec::Rs { k: 3, m: 2 };
+    Arc::new(D3Placement::new(code, spec.cluster).unwrap())
+}
+
+fn cfg() -> ExecutorConfig {
+    ExecutorConfig { workers: 4, ..ExecutorConfig::default() }
+}
+
+/// Every live replica must match its write-time checksum — the oracle
+/// registered at populate, before any fault was armed.
+fn assert_oracle_clean<F: BlockFabric>(fabric: &F, stripes: u64, dead: &[Location]) {
+    let code_len = fabric.code().len();
+    let mut verified = 0u64;
+    for sid in 0..stripes {
+        for b in 0..code_len {
+            let loc = fabric.locate(sid, b);
+            assert!(
+                !dead.contains(&loc),
+                "stripe {sid} block {b} still homed on dead node {loc}"
+            );
+            let want = fabric.expected_checksum(sid, b).expect("missing registry entry");
+            let got = fabric.stored_checksum(sid, b).expect("unreadable replica");
+            assert_eq!(got, want, "stripe {sid} block {b} fails the oracle check");
+            verified += 1;
+        }
+    }
+    assert_eq!(verified, stripes * code_len as u64);
+}
+
+#[test]
+fn net_same_seed_fault_counters_are_deterministic() {
+    let spec = fast_spec();
+    let p = d3_policy(&spec);
+    let scenario = FailureScenario::single_node(40, 2);
+    let backend = NetClusterBackend {
+        block_size: 16 << 10,
+        faults: Some(FaultSpec::uniform(0.05, 42)),
+        ..NetClusterBackend::default()
+    };
+    let a = backend.run(&scenario, &p, &spec).unwrap();
+    let b = backend.run(&scenario, &p, &spec).unwrap();
+    let (fa, fb) = (a.faults.expect("no fault report"), b.faults.expect("no fault report"));
+    assert!(fa.total_injected() > 0, "5% chaos injected nothing over a full recovery");
+    // the injection stream is content-keyed, so identical seeds reproduce
+    // identical counters regardless of thread timing (failovers/replans
+    // are detector-path counters and excluded from this contract)
+    assert_eq!(fa.drops, fb.drops);
+    assert_eq!(fa.delays, fb.delays);
+    assert_eq!(fa.corrupts, fb.corrupts);
+    assert_eq!(fa.truncates, fb.truncates);
+    assert_eq!(fa.retries, fb.retries);
+    assert_eq!(fa.evictions, fb.evictions);
+    assert_eq!(fa.crashes, fb.crashes);
+    // a different seed draws a different stream
+    let other = NetClusterBackend {
+        block_size: 16 << 10,
+        faults: Some(FaultSpec::uniform(0.05, 43)),
+        ..NetClusterBackend::default()
+    };
+    let c = other.run(&scenario, &p, &spec).unwrap();
+    let fc = c.faults.unwrap();
+    assert_ne!(
+        (fa.drops, fa.delays, fa.corrupts, fa.truncates),
+        (fc.drops, fc.delays, fc.corrupts, fc.truncates),
+        "different chaos seeds drew identical injection streams"
+    );
+}
+
+#[test]
+fn net_chaos_parity_fault_run_matches_fault_free_bytes() {
+    // the chaos-parity acceptance: drop/delay/corrupt/truncate at 5%
+    // change retry counts and wall time, NEVER the byte accounting —
+    // transfers are charged exactly once, on success
+    let spec = fast_spec();
+    let p = d3_policy(&spec);
+    let scenario = FailureScenario::single_node(40, 2);
+    let clean = NetClusterBackend { block_size: 16 << 10, ..NetClusterBackend::default() };
+    let chaotic = NetClusterBackend {
+        block_size: 16 << 10,
+        faults: Some(FaultSpec::uniform(0.05, 42)),
+        ..NetClusterBackend::default()
+    };
+    let a = clean.run(&scenario, &p, &spec).unwrap();
+    let b = chaotic.run(&scenario, &p, &spec).unwrap();
+    assert!(b.faults.unwrap().total_injected() > 0);
+    assert_eq!(a.blocks, b.blocks, "chaos changed the rebuilt block count");
+    assert_eq!(
+        a.rack_cross_bytes, b.rack_cross_bytes,
+        "injected faults leaked into the byte accounting"
+    );
+}
+
+#[test]
+fn net_crash_mid_recovery_is_detected_replanned_and_oracle_clean() {
+    // tentpole acceptance: the busiest repair writer crashes mid-recovery
+    // (stops heartbeating), the coordinator's sweep escalates it to
+    // Failed, its blocks are re-planned onto survivors, and every block
+    // in the system still matches the populate oracle
+    let spec = fast_spec();
+    let p = d3_policy(&spec);
+    let stripes = 40u64;
+    let net = NetCluster::new(spec, p.clone(), 9).unwrap();
+    net.write_stripes_parallel(stripes, 4, |sid| {
+        deterministic_data(sid, 3, spec.block_size as usize)
+    })
+    .unwrap();
+    let failed = vec![Location::new(0, 0)];
+    BlockFabric::fail_node(&net, failed[0]);
+    let plans = scenario_recovery_plans(p.as_ref(), stripes, &failed, 9).unwrap();
+    assert!(!plans.is_empty());
+    net.arm_chaos(FaultSpec { crash_after_rpcs: Some(10), seed: 9, ..FaultSpec::default() });
+    let victim = crash_victim(&plans, &failed).expect("no live writer to crash");
+    assert!(!failed.contains(&victim));
+    BlockFabric::arm_crash_victim(&net, victim);
+    let (stats, replan) =
+        recover_with_replan(&net, p.as_ref(), stripes, failed.clone(), plans, cfg(), 9, 4)
+            .expect("recovery must survive the crash");
+    assert!(stats.blocks > 0);
+    assert!(replan.rounds >= 2, "crash should have forced a second round");
+    assert!(replan.detected >= 1, "the crashed worker was never detected");
+    assert!(replan.replanned > 0, "no blocks were re-planned after the failover");
+    let report = BlockFabric::fault_report(&net).expect("chaos armed but no report");
+    assert!(report.crashes >= 1, "the armed crash never fired");
+    assert!(report.failovers >= 1, "the heartbeat sweep never escalated the worker");
+    // the membership view agrees
+    let dead = BlockFabric::failed_nodes(&net);
+    assert!(dead.contains(&victim), "victim not in the failed set");
+    assert_oracle_clean(&net, stripes, &dead);
+}
+
+fn scrub_finds_and_repairs<F: BlockFabric>(fabric: &F, policy: &dyn Placement, stripes: u64) {
+    // three latent corruptions, two of them in the SAME stripe — the
+    // case that must go through the multi-erasure planner, because each
+    // corrupt block would otherwise be a repair source for the other
+    let planted = [(2u64, 0usize), (2, 1), (7, 4)];
+    for &(sid, b) in &planted {
+        fabric.corrupt_stored(sid, b).unwrap();
+        assert_ne!(
+            fabric.stored_checksum(sid, b).unwrap(),
+            fabric.expected_checksum(sid, b).unwrap(),
+            "corruption did not take"
+        );
+    }
+    let report = run_scrub(fabric, policy, stripes, cfg(), 3).unwrap();
+    assert_eq!(report.scanned, stripes * fabric.code().len() as u64);
+    assert_eq!(report.quarantined, planted.len() as u64);
+    assert_eq!(report.repaired, planted.len() as u64);
+    assert_oracle_clean(fabric, stripes, &[]);
+    // a second pass over the repaired system is clean
+    let again = run_scrub(fabric, policy, stripes, cfg(), 3).unwrap();
+    assert_eq!(again.quarantined, 0, "scrub re-quarantined a repaired block");
+}
+
+#[test]
+fn scrub_quarantines_and_repairs_on_the_minicluster() {
+    let spec = fast_spec();
+    let p = d3_policy(&spec);
+    let stripes = 20u64;
+    let mini = MiniCluster::new(spec, p.clone(), "native", 3).unwrap();
+    mini.write_stripes_parallel(stripes, 4, |sid| {
+        deterministic_data(sid, 3, spec.block_size as usize)
+    })
+    .unwrap();
+    scrub_finds_and_repairs(&mini, p.as_ref(), stripes);
+}
+
+#[test]
+fn net_scrub_quarantines_and_repairs() {
+    let spec = fast_spec();
+    let p = d3_policy(&spec);
+    let stripes = 20u64;
+    let net = NetCluster::new(spec, p.clone(), 3).unwrap();
+    net.write_stripes_parallel(stripes, 4, |sid| {
+        deterministic_data(sid, 3, spec.block_size as usize)
+    })
+    .unwrap();
+    scrub_finds_and_repairs(&net, p.as_ref(), stripes);
+}
+
+#[test]
+fn net_silent_worker_is_escalated_by_the_heartbeat_sweep() {
+    let spec = fast_spec();
+    let p = d3_policy(&spec);
+    let net = NetCluster::new(spec, p.clone(), 5).unwrap();
+    net.write_stripes_parallel(8, 4, |sid| {
+        deterministic_data(sid, 3, spec.block_size as usize)
+    })
+    .unwrap();
+    let silent = Location::new(4, 1);
+    net.crash_worker(silent);
+    let found = BlockFabric::detect_failures(&net);
+    assert_eq!(found, vec![silent], "sweep missed the silent worker");
+    assert!(BlockFabric::failed_nodes(&net).contains(&silent));
+    // a second sweep reports nothing new
+    assert!(BlockFabric::detect_failures(&net).is_empty());
+}
+
+/// A deterministic four-event trace whose modeled repair rate is slow
+/// enough that the second and third failures batch into one round.
+fn batching_trace() -> TraceSpec {
+    TraceSpec {
+        horizon_s: 4000.0,
+        repair_mb_s: 0.0001,
+        events: Some(vec![
+            (0.0, Location::new(0, 0)),
+            (1.0, Location::new(3, 1)),
+            (2.0, Location::new(5, 2)),
+            (2000.0, Location::new(0, 0)),
+        ]),
+        ..TraceSpec::default()
+    }
+}
+
+#[test]
+fn trace_counters_agree_between_sim_and_minicluster() {
+    let spec = fast_spec();
+    let p = d3_policy(&spec);
+    let stripes = 24u64;
+    let tspec = batching_trace();
+    let sim = run_trace_sim(
+        &spec,
+        p.as_ref(),
+        stripes,
+        &tspec,
+        RecoveryConfig { workers: 4, ..RecoveryConfig::default() },
+        7,
+    )
+    .unwrap();
+    let mini = MiniCluster::new(spec, p.clone(), "native", 7).unwrap();
+    mini.write_stripes_parallel(stripes, 4, |sid| {
+        deterministic_data(sid, 3, spec.block_size as usize)
+    })
+    .unwrap();
+    let phys = run_trace(&mini, p.as_ref(), stripes, &tspec, cfg(), 7).unwrap();
+    assert_eq!(sim.failures, 4);
+    assert_eq!(sim.failures, phys.failures);
+    assert_eq!(sim.rounds, phys.rounds, "backends batched events differently");
+    assert_eq!(sim.blocks_repaired, phys.blocks_repaired);
+    assert_eq!(sim.lost_stripes, phys.lost_stripes);
+    assert_eq!(sim.backlog_peak, phys.backlog_peak);
+    assert_eq!(sim.lost_stripes, 0, "a ≤2-failure batch lost a stripe under rs-3-2");
+    assert!(sim.rounds >= 2 && sim.rounds < sim.failures, "no batching happened");
+    assert!(sim.blocks_repaired > 0);
+    assert!(sim.sustained_mb_s > 0.0 && phys.sustained_mb_s > 0.0);
+    assert!(sim.arrival_mb_s > 0.0);
+    // after the last rejoin the layout is canonical and oracle-clean
+    assert_oracle_clean(&mini, stripes, &[]);
+}
+
+#[test]
+fn net_trace_counters_match_the_sim_twin() {
+    let spec = fast_spec();
+    let p = d3_policy(&spec);
+    let stripes = 16u64;
+    let tspec = batching_trace();
+    let sim = run_trace_sim(
+        &spec,
+        p.as_ref(),
+        stripes,
+        &tspec,
+        RecoveryConfig { workers: 4, ..RecoveryConfig::default() },
+        7,
+    )
+    .unwrap();
+    let net = NetCluster::new(spec, p.clone(), 7).unwrap();
+    net.write_stripes_parallel(stripes, 4, |sid| {
+        deterministic_data(sid, 3, spec.block_size as usize)
+    })
+    .unwrap();
+    let phys = run_trace(&net, p.as_ref(), stripes, &tspec, cfg(), 7).unwrap();
+    assert_eq!(sim.failures, phys.failures);
+    assert_eq!(sim.rounds, phys.rounds);
+    assert_eq!(sim.blocks_repaired, phys.blocks_repaired);
+    assert_eq!(sim.lost_stripes, phys.lost_stripes);
+    assert_eq!(sim.backlog_peak, phys.backlog_peak);
+    assert!(phys.sustained_mb_s > 0.0);
+    assert_oracle_clean(&net, stripes, &[]);
+}

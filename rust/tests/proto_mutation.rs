@@ -1,0 +1,189 @@
+//! Adversarial protocol sweep (DESIGN.md §14, a satellite of the chaos
+//! fabric): a canonical corpus covering every `Msg` and `Reply` shape is
+//! subjected to exhaustive truncation, a seeded bit-flip sweep, and
+//! hostile length prefixes. The decoder must never panic; any body it
+//! does accept must re-encode byte-identically (the encoding is
+//! canonical — fixed-width integers, length-prefixed strings, no
+//! trailing slack); and the frame layer must reject every single-bit
+//! wire mutation through its FNV integrity trailer.
+
+use d3ec::net::proto::{self, Msg, PlanSource, Reply, MAX_FRAME};
+use d3ec::util::Rng;
+
+fn msg_corpus() -> Vec<Msg> {
+    vec![
+        Msg::Heartbeat,
+        Msg::Join,
+        Msg::Drain,
+        Msg::Fail,
+        Msg::WriteBlock { sid: 7, block: 3, bytes: vec![0xa5; 24] },
+        Msg::FetchBlock { sid: u64::MAX, block: 11 },
+        Msg::FetchChunk { sid: 9, block: 0, off: 1 << 40, len: 4096 },
+        Msg::RemoveBlock { sid: 1, block: 2 },
+        Msg::ListBlocks,
+        Msg::Encode { k: 3, rows: vec![1, 2, 3, 4, 5, 6], shard_len: 2, shards: vec![9; 6] },
+        Msg::RecoverPlan {
+            sid: 42,
+            block: 4,
+            block_len: 65536,
+            sources: vec![
+                PlanSource { coeff: 0x1d, block: 0, addr: "127.0.0.1:4000".into() },
+                PlanSource { coeff: 1, block: 2, addr: "127.0.0.1:4001".into() },
+            ],
+        },
+        Msg::HashBlock { sid: 8, block: 4 },
+    ]
+}
+
+fn reply_corpus() -> Vec<Reply> {
+    vec![
+        Reply::Ok,
+        Reply::Err("node N1,2 is failed".into()),
+        Reply::Data(vec![0xab; 40]),
+        Reply::Blocks(vec![(0, 1), (9, 4), (u64::MAX, u32::MAX)]),
+        Reply::Beat { state: 1, blocks: 12 },
+        Reply::Sum(0xdead_beef_cafe),
+    ]
+}
+
+#[test]
+fn corpus_roundtrips() {
+    for m in msg_corpus() {
+        assert_eq!(Msg::decode(&m.encode()).unwrap(), m);
+    }
+    for r in reply_corpus() {
+        assert_eq!(Reply::decode(&r.encode()).unwrap(), r);
+    }
+}
+
+#[test]
+fn every_truncation_errs_or_reencodes_identically() {
+    for m in msg_corpus() {
+        let body = m.encode();
+        for cut in 0..body.len() {
+            if let Ok(decoded) = Msg::decode(&body[..cut]) {
+                assert_eq!(
+                    decoded.encode(),
+                    &body[..cut],
+                    "{m:?} truncated to {cut} bytes decoded non-canonically"
+                );
+            }
+        }
+    }
+    for r in reply_corpus() {
+        let body = r.encode();
+        for cut in 0..body.len() {
+            if let Ok(decoded) = Reply::decode(&body[..cut]) {
+                assert_eq!(
+                    decoded.encode(),
+                    &body[..cut],
+                    "{r:?} truncated to {cut} bytes decoded non-canonically"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn seeded_bit_flips_never_panic_and_accepted_bodies_are_canonical() {
+    let mut rng = Rng::keyed(0xd3, 0xfa117, 0);
+    for m in msg_corpus() {
+        let body = m.encode();
+        for _ in 0..256 {
+            let bit = rng.below(body.len() * 8);
+            let mut mutated = body.clone();
+            mutated[bit / 8] ^= 1 << (bit % 8);
+            if let Ok(decoded) = Msg::decode(&mutated) {
+                // a flipped body may still be a VALID message (e.g. a bit
+                // of `sid` changed) — but then it must be that message's
+                // canonical encoding, never a sloppy parse
+                assert_eq!(decoded.encode(), mutated, "non-canonical accept of a mutation");
+            }
+        }
+    }
+    for r in reply_corpus() {
+        let body = r.encode();
+        for _ in 0..256 {
+            let bit = rng.below(body.len() * 8);
+            let mut mutated = body.clone();
+            mutated[bit / 8] ^= 1 << (bit % 8);
+            if let Ok(decoded) = Reply::decode(&mutated) {
+                assert_eq!(decoded.encode(), mutated, "non-canonical accept of a mutation");
+            }
+        }
+    }
+}
+
+#[test]
+fn frame_integrity_rejects_every_seeded_wire_flip() {
+    // at the WIRE level nothing mutated may get through: a flip in the
+    // length prefix misframes the trailer, a flip in body or trailer
+    // fails the FNV check — this is what turns injected corruption into
+    // a clean connection error instead of silent data poisoning
+    let mut rng = Rng::keyed(0xd3, 0xf1a6, 1);
+    for m in msg_corpus() {
+        let body = m.encode();
+        let mut wire = Vec::new();
+        proto::write_frame(&mut wire, &body).unwrap();
+        for _ in 0..128 {
+            let bit = rng.below(wire.len() * 8);
+            let mut bad = wire.clone();
+            bad[bit / 8] ^= 1 << (bit % 8);
+            let mut r = &bad[..];
+            assert!(
+                proto::read_frame(&mut r).is_err(),
+                "{m:?}: single-bit wire flip at bit {bit} slipped through framing"
+            );
+        }
+        let mut r = &wire[..];
+        assert_eq!(proto::read_frame(&mut r).unwrap(), body, "pristine frame must read back");
+    }
+}
+
+#[test]
+fn hostile_length_prefixes_never_panic_or_overallocate() {
+    for claimed in [MAX_FRAME as u64 + 1, u32::MAX as u64, 1 << 31] {
+        let mut wire = (claimed as u32).to_le_bytes().to_vec();
+        wire.extend_from_slice(&[0u8; 16]);
+        let mut r = &wire[..];
+        assert!(proto::read_frame(&mut r).is_err(), "length {claimed} accepted");
+    }
+    // a frame that claims more bytes than the stream holds
+    let mut wire = 100u32.to_le_bytes().to_vec();
+    wire.extend_from_slice(&[0u8; 10]);
+    let mut r = &wire[..];
+    assert!(proto::read_frame(&mut r).is_err());
+}
+
+#[test]
+fn adversarial_source_count_errs_without_allocating() {
+    // a RecoverPlan body claiming u32::MAX sources must fail at the
+    // first missing source, not reserve gigabytes up front
+    let mut body = vec![0x0bu8]; // TAG_RECOVER_PLAN
+    body.extend_from_slice(&7u64.to_le_bytes());
+    body.extend_from_slice(&1u32.to_le_bytes());
+    body.extend_from_slice(&65536u32.to_le_bytes());
+    body.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Msg::decode(&body).is_err());
+    // same for a Blocks reply with a hostile count
+    let mut body = vec![0x83u8]; // TAG_BLOCKS
+    body.extend_from_slice(&u32::MAX.to_le_bytes());
+    assert!(Reply::decode(&body).is_err());
+}
+
+#[test]
+fn random_garbage_never_panics() {
+    let mut rng = Rng::keyed(0xd3, 0x6a5ba6e, 2);
+    for len in 0..96usize {
+        let mut buf = vec![0u8; len];
+        for b in buf.iter_mut() {
+            *b = rng.below(256) as u8;
+        }
+        if let Ok(decoded) = Msg::decode(&buf) {
+            assert_eq!(decoded.encode(), buf);
+        }
+        if let Ok(decoded) = Reply::decode(&buf) {
+            assert_eq!(decoded.encode(), buf);
+        }
+    }
+}
