@@ -33,7 +33,12 @@ pub use gen::{ArrivalModel, FgSpec, Request, RequestClass};
 
 /// The QoS policy a mixed-load scenario carries (DESIGN.md §11): how the
 /// cluster's scarce ports are split between recovery and foreground
-/// traffic.
+/// traffic. The background scrub daemon's probes
+/// ([`crate::scrub::run_daemon`]) are a third consumer of the same
+/// split: scrub-class traffic drains the identical `recovery_share`
+/// bucket bank while foreground load is active, so an installed split
+/// caps recovery and scrub *together* — the daemon can never take
+/// bandwidth the split reserved for client I/O (DESIGN.md §15).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct QosConfig {
     /// Fraction (0, 1] of every node port and rack link available to

@@ -311,6 +311,9 @@ pub fn recover_with_plans_cfg<F: BlockFabric>(
     if cfg.period.is_none() {
         cfg.period = fabric.period();
     }
+    // the scrub daemon's backoff signal (DESIGN.md §15): recovery is in
+    // flight on this fabric until the executor returns
+    let _recovery_mark = fabric.links().mark_recovery();
     let before = fabric.rack_byte_snapshot();
     let links_before = fabric.links().link_busy_stall();
     let blocks = plans.len();
@@ -534,21 +537,46 @@ pub fn run_scrub<F: BlockFabric>(
             }
         }
     }
+    let (quarantined, repaired) = quarantine_and_repair(fabric, policy, &bad, cfg, seed)?;
+    report.quarantined = quarantined;
+    report.repaired = repaired;
+    Ok(report)
+}
+
+/// Quarantine every `stripe → corrupt blocks` entry (drop the replicas),
+/// rebuild them from surviving sources through the normal repair planner
+/// — priced as recovery traffic — and re-verify the rebuilt bytes. The
+/// shared tail of the one-shot scrub pass and the continuous scrub
+/// daemon's cycles (DESIGN.md §15). Block lists must be ascending (the
+/// planner's contract); same-stripe multi-corruption goes through the
+/// multi-erasure planner as one stripe, so plans never read each other's
+/// quarantined replicas. Returns `(quarantined, repaired)`; a block that
+/// is still corrupt after its re-repair is an error.
+pub fn quarantine_and_repair<F: BlockFabric>(
+    fabric: &F,
+    policy: &dyn Placement,
+    bad: &BTreeMap<u64, Vec<usize>>,
+    cfg: ExecutorConfig,
+    seed: u64,
+) -> Result<(u64, u64)> {
+    let failed_set: HashSet<Location> = fabric.failed_nodes().into_iter().collect();
+    let mut quarantined = 0u64;
     let mut plans = Vec::new();
-    for (&sid, blocks) in &bad {
+    for (&sid, blocks) in bad {
         for &b in blocks {
             fabric.remove_block(sid, b, fabric.locate(sid, b))?;
-            report.quarantined += 1;
+            quarantined += 1;
         }
         plans.extend(crate::recovery::multi::stripe_repair_plans(
             policy, sid, blocks, &failed_set, seed,
         )?);
     }
     if plans.is_empty() {
-        return Ok(report);
+        return Ok((quarantined, 0));
     }
     recover_with_plans_cfg(fabric, plans, cfg, &[])?;
-    for (&sid, blocks) in &bad {
+    let mut repaired = 0u64;
+    for (&sid, blocks) in bad {
         for &b in blocks {
             let want = fabric
                 .expected_checksum(sid, b)
@@ -556,10 +584,10 @@ pub fn run_scrub<F: BlockFabric>(
             if fabric.stored_checksum(sid, b)? != want {
                 bail!("scrub re-repair of ({sid},{b}) left a corrupt replica");
             }
-            report.repaired += 1;
+            repaired += 1;
         }
     }
-    Ok(report)
+    Ok((quarantined, repaired))
 }
 
 /// Run recovery and a foreground request sequence concurrently under

@@ -21,14 +21,20 @@ fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
-/// Which traffic class a transfer belongs to (DESIGN.md §11): client I/O
-/// (reads, degraded reads, writes) is foreground; the recovery executor's
-/// fetches and aggregated-partial shipments are recovery. The QoS split
-/// ([`LinkSet::set_qos`]) throttles only the recovery class.
+/// Which traffic class a transfer belongs to (DESIGN.md §11, §15): client
+/// I/O (reads, degraded reads, writes) is foreground; the recovery
+/// executor's fetches and aggregated-partial shipments are recovery; the
+/// background scrub daemon's checksum probes are scrub. The QoS split
+/// ([`LinkSet::set_qos`]) throttles the recovery and scrub classes —
+/// scrub drains the same share-scaled bank as recovery (they compete for
+/// the non-foreground fraction of each port) but, like foreground, never
+/// holds the reconstruction in-flight gates: a throttled scrub pass must
+/// not occupy xmits slots queued repair chunks are waiting on.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TrafficClass {
     Foreground,
     Recovery,
+    Scrub,
 }
 
 /// Counting in-flight gate: at most `cap` concurrent holders, 0 = no limit.
@@ -43,6 +49,16 @@ pub struct Gate {
 
 /// RAII hold on a [`Gate`]; dropping releases the slot.
 pub struct GateGuard<'a>(Option<&'a Gate>);
+
+/// RAII marker for an in-flight recovery execution
+/// ([`LinkSet::mark_recovery`]); dropping decrements the counter.
+pub struct RecoveryMark<'a>(&'a LinkSet);
+
+impl Drop for RecoveryMark<'_> {
+    fn drop(&mut self) {
+        self.0.recovery_marks.fetch_sub(1, Ordering::Relaxed);
+    }
+}
 
 impl Drop for GateGuard<'_> {
     fn drop(&mut self) {
@@ -193,6 +209,10 @@ pub struct LinkSet {
     /// no-QoS recovery path never touches the mutex (DESIGN.md §9's
     /// zero-overhead hot path stays zero-overhead)
     qos_on: AtomicBool,
+    /// count of recovery executions currently in flight on this fabric;
+    /// the scrub daemon polls it ([`LinkSet::recovery_active`]) to back
+    /// off while repairs are running (DESIGN.md §15)
+    recovery_marks: AtomicUsize,
     /// full port rates (bytes/s), kept to size the QoS bank
     inner_rate: f64,
     cross_rate: f64,
@@ -215,6 +235,7 @@ impl LinkSet {
             meters: (0..spec.cluster.racks).map(|_| LinkMeter::default()).collect(),
             qos: Mutex::new(None),
             qos_on: AtomicBool::new(false),
+            recovery_marks: AtomicUsize::new(0),
             inner_rate: inner,
             cross_rate: cross,
             nodes_per_rack: spec.cluster.nodes_per_rack,
@@ -256,6 +277,63 @@ impl LinkSet {
     pub fn clear_qos(&self) {
         *lock_clean(&self.qos) = None;
         self.qos_on.store(false, Ordering::Relaxed);
+    }
+
+    /// True while client load is active under an installed QoS split.
+    /// Without a split there is no foreground-activity signal and this
+    /// reads false — the scrub daemon then only backs off for recovery.
+    pub fn fg_active(&self) -> bool {
+        if !self.qos_on.load(Ordering::Relaxed) {
+            return false;
+        }
+        lock_clean(&self.qos)
+            .as_deref()
+            .is_some_and(|q| q.fg_active.load(Ordering::Relaxed))
+    }
+
+    /// Mark a recovery execution in flight; drop the guard when it ends.
+    /// Nests across concurrent recoveries (a plain counter).
+    pub fn mark_recovery(&self) -> RecoveryMark<'_> {
+        self.recovery_marks.fetch_add(1, Ordering::Relaxed);
+        RecoveryMark(self)
+    }
+
+    /// True while at least one recovery execution is in flight.
+    pub fn recovery_active(&self) -> bool {
+        self.recovery_marks.load(Ordering::Relaxed) > 0
+    }
+
+    /// Charge a scrub checksum probe of `bytes` read at `at` (DESIGN.md
+    /// §15): the replica is read locally but leaves the node through its
+    /// port on the way to the verifier, so the probe drains the node's
+    /// up-NIC — and, while a QoS split is installed and foreground load
+    /// is active, the scrub/recovery bank's share-scaled bucket too, so
+    /// an aggressive scrub pass can never eat into the foreground
+    /// fraction of the port. Chunked like [`LinkSet::transfer_class`] so
+    /// the activity flag is honored mid-probe; never touches the
+    /// reconstruction gates.
+    pub fn scrub_probe(&self, at: Location, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        let i = at.rack as usize * self.nodes_per_rack + at.node as usize;
+        let qos: Option<Arc<QosSplit>> = if self.qos_on.load(Ordering::Relaxed) {
+            lock_clean(&self.qos).clone()
+        } else {
+            None
+        };
+        let chunk = 256 * 1024;
+        let mut left = bytes;
+        while left > 0 {
+            let take = left.min(chunk);
+            if let Some(q) = qos.as_deref() {
+                if q.fg_active.load(Ordering::Relaxed) {
+                    q.nodes[i].0.acquire(take);
+                }
+            }
+            self.nics[i].0.acquire(take);
+            left -= take;
+        }
     }
 
     /// Per-rack-link (busy seconds, stall seconds) accumulated by
@@ -421,8 +499,10 @@ impl LinkSet {
         bytes: u64,
         class: TrafficClass,
     ) {
+        let throttled =
+            matches!(class, TrafficClass::Recovery | TrafficClass::Scrub);
         let qos: Option<Arc<QosSplit>> =
-            if class == TrafficClass::Recovery && self.qos_on.load(Ordering::Relaxed) {
+            if throttled && self.qos_on.load(Ordering::Relaxed) {
                 lock_clean(&self.qos).clone()
             } else {
                 None
@@ -648,6 +728,48 @@ mod tests {
         let idle = t2.elapsed().as_secs_f64();
         assert!(idle < rec * 0.8, "idle split still throttles: {idle} vs {rec}");
         links.clear_qos();
+    }
+
+    #[test]
+    fn scrub_class_shares_the_qos_bank_but_skips_gates() {
+        let mut spec = SystemSpec::paper_default();
+        spec.net.inner_mbps = 160.0; // 20 MB/s node port
+        spec.net.cross_mbps = 160.0;
+        let links = LinkSet::new(&spec);
+        links.set_inflight_caps(1, 1);
+        // every reconstruction gate held: a gated scrub would deadlock
+        let holds: Vec<_> = links.node_gates.iter().map(|g| g.enter()).collect();
+        let fg = Arc::new(AtomicBool::new(true));
+        links.set_qos(0.25, fg.clone()); // scrub/recovery bank at 5 MB/s
+        let n = 2_000_000u64;
+        let t0 = Instant::now();
+        links.transfer_class(
+            Location::new(0, 1),
+            Location::new(0, 0),
+            n,
+            TrafficClass::Scrub,
+        );
+        let scrub = t0.elapsed().as_secs_f64();
+        assert!(scrub > 0.25, "scrub not paced by the shared bank: {scrub}s");
+        let t1 = Instant::now();
+        links.scrub_probe(Location::new(0, 2), n);
+        let probe = t1.elapsed().as_secs_f64();
+        assert!(probe > 0.25, "probe not paced by the shared bank: {probe}s");
+        fg.store(false, Ordering::Relaxed);
+        let t2 = Instant::now();
+        links.scrub_probe(Location::new(0, 2), n);
+        let idle = t2.elapsed().as_secs_f64();
+        assert!(idle < probe * 0.8, "idle probe still throttled: {idle} vs {probe}");
+        drop(holds);
+        links.clear_qos();
+        links.set_inflight_caps(0, 0);
+        // the daemon's backoff signals
+        assert!(!links.fg_active(), "fg_active without a split installed");
+        assert!(!links.recovery_active());
+        let mark = links.mark_recovery();
+        assert!(links.recovery_active());
+        drop(mark);
+        assert!(!links.recovery_active());
     }
 
     #[test]

@@ -20,6 +20,8 @@
 //! * [`cluster`] — mini-HDFS (NameNode + DataNodes) with a real data path;
 //! * [`net`] — the same cluster as N socket-served node workers behind a
 //!   coordinator with join/drain/fail membership (DESIGN.md §13);
+//! * [`scrub`] — the continuous background scrub daemon with adaptive
+//!   intensity throttling (DESIGN.md §15);
 //! * [`workloads`], [`metrics`], [`experiments`] — the paper's evaluation.
 
 pub mod client;
@@ -35,6 +37,7 @@ pub mod placement;
 pub mod recovery;
 pub mod runtime;
 pub mod scenario;
+pub mod scrub;
 pub mod sim;
 pub mod topology;
 pub mod util;

@@ -10,9 +10,13 @@
 //!                [--fg-rate RPS | --fg-clients N] [--fg-requests N]  # client engine
 //!                [--recovery-share S] [--fg-weight W] [--json]       # QoS + machine output
 //! d3ctl chaos [--backend cluster|net] [--drop P] [--delay P] [--delay-ms MS] [--corrupt P]
-//!             [--truncate P] [--corrupt-stored P] [--crash N] [--scrub] [--stripes N] [--seed S]
+//!             [--truncate P] [--corrupt-stored P] [--crash N] [--scrub] [--stripes N] [--seed S] [--json]
 //! d3ctl trace [--backend sim|cluster|net|all] [--rate PER_HOUR] [--horizon-h H]
-//!             [--repair-mb-s R] [--file TRACE] [--stripes N] [--seed S]
+//!             [--repair-mb-s R] [--file TRACE] [--stripes N] [--seed S] [--json]
+//! d3ctl scrub-daemon [--backend cluster|net] [--cycles N] [--interval-s S] [--idle-mb-s R]
+//!                    [--busy-mb-s R] [--batch N] [--corrupt-stored P] [--stripes N] [--seed S] [--json]
+//! d3ctl durability [--quick] [--backend sim|cluster|net|all] [--trials N] [--horizon-h H]
+//!                  [--rack-fail-prob P] [--scrub-interval-h H] [--repair-mb-s R] [--stripes N] [--json]
 //! d3ctl layout --policy d3|rdd|hdd --code rs-3-2 [--stripes N] [--racks R] [--nodes N]
 //! d3ctl mu --code rs-6-3               # Lemma 4 closed form vs planner
 //! d3ctl oa --n 5 [--cols 4]            # print + verify an orthogonal array
@@ -24,6 +28,7 @@
 //! ```
 
 use std::collections::HashMap;
+use std::sync::atomic::AtomicBool;
 
 use d3ec::client::{ArrivalModel, FgSpec, QosConfig};
 use d3ec::cluster::fabric::{crash_victim, recover_with_replan, run_scrub};
@@ -34,11 +39,16 @@ use d3ec::util::json::Json;
 use d3ec::net::chaos::{corrupt_set, FaultSpec};
 use d3ec::net::{NetCluster, NetClusterBackend};
 use d3ec::oa::{max_columns, OrthogonalArray};
+use d3ec::placement::Placement;
 use d3ec::recovery::mu::mu_rs;
 use d3ec::recovery::{scenario_recovery_plans, ExecutorConfig, SchedulePolicy};
 use d3ec::runtime::Coder;
+use d3ec::scenario::durability::{
+    run_durability_trial, run_durability_trial_model, run_matrix, DurabilitySpec,
+};
 use d3ec::scenario::trace::{parse_trace, run_trace, run_trace_sim, TraceSpec, TraceSummary};
 use d3ec::scenario::{run_cross_backend, FailureScenario, RecoveryBackend};
+use d3ec::scrub::{run_daemon, ScrubConfig};
 use d3ec::sim::recovery::RecoveryConfig;
 use d3ec::sim::SimBackend;
 use d3ec::topology::{Location, SystemSpec};
@@ -91,6 +101,8 @@ fn main() {
         "scenario" => cmd_scenario(&args, &flags),
         "chaos" => cmd_chaos(&flags),
         "trace" => cmd_trace(&flags),
+        "scrub-daemon" => cmd_scrub_daemon(&flags),
+        "durability" => cmd_durability(&flags),
         "layout" => cmd_layout(&flags),
         "mu" => cmd_mu(&flags),
         "oa" => cmd_oa(&flags),
@@ -101,7 +113,7 @@ fn main() {
         "bench-compare" => cmd_bench_compare(&flags),
         _ => {
             println!("d3ctl — Deterministic Data Distribution (D³) reproduction");
-            println!("{}", include_str!("main.rs").lines().skip(2).take(22)
+            println!("{}", include_str!("main.rs").lines().skip(2).take(26)
                 .map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
         }
     }
@@ -407,13 +419,16 @@ fn cmd_chaos(flags: &HashMap<String, String>) {
         ..ExecutorConfig::default()
     };
     let backend_sel: String = flag(flags, "backend", "net".into());
+    let json_out = flags.contains_key("json");
     let k = code.k();
     let bs = spec.block_size as usize;
-    println!(
-        "# chaos drill · {} · {} · {stripes} stripes · backend {backend_sel}",
-        policy.name(),
-        code.name()
-    );
+    if !json_out {
+        println!(
+            "# chaos drill · {} · {} · {stripes} stripes · backend {backend_sel}",
+            policy.name(),
+            code.name()
+        );
+    }
     match backend_sel.as_str() {
         "net" => {
             let cluster = NetCluster::new(spec, policy.clone(), seed).expect("net cluster");
@@ -426,7 +441,7 @@ fn cmd_chaos(flags: &HashMap<String, String>) {
             run_chaos_drill(&cluster, policy.as_ref(), stripes, &fspec, cfg, seed, flags);
         }
         "cluster" => {
-            if fspec.any_frame_faults() {
+            if fspec.any_frame_faults() && !json_out {
                 println!(
                     "note: frame faults apply to the net backend only; \
                      running storage-level faults"
@@ -447,16 +462,21 @@ fn cmd_chaos(flags: &HashMap<String, String>) {
 
 /// The backend-generic body of `d3ctl chaos`: fail one node, recover
 /// with replanning (surviving an armed crash), plant latent corruption,
-/// scrub, verify everything against write-time checksums.
+/// scrub, verify everything against write-time checksums. `--json`
+/// swaps the narrative for one JSON object (recovery, scrub, oracle,
+/// and the chaos layer's full `FaultReport`) on stdout.
 fn run_chaos_drill<F: BlockFabric>(
     fabric: &F,
-    policy: &dyn d3ec::placement::Placement,
+    policy: &dyn Placement,
     stripes: u64,
     fspec: &FaultSpec,
     cfg: ExecutorConfig,
     seed: u64,
     flags: &HashMap<String, String>,
 ) {
+    use std::collections::BTreeMap;
+    let json_out = flags.contains_key("json");
+    let mut doc = BTreeMap::new();
     let scenario = FailureScenario::single_node(stripes, seed);
     let failed = scenario.failed_nodes(policy);
     let plans = scenario_recovery_plans(policy, stripes, &failed, seed).expect("plans");
@@ -466,21 +486,40 @@ fn run_chaos_drill<F: BlockFabric>(
     if fspec.crash_after_rpcs.is_some() {
         if let Some(victim) = crash_victim(&plans, &failed) {
             fabric.arm_crash_victim(victim);
-            println!("crash armed on {victim} after {:?} RPCs", fspec.crash_after_rpcs);
+            if !json_out {
+                println!(
+                    "crash armed on {victim} after {:?} RPCs",
+                    fspec.crash_after_rpcs
+                );
+            }
         }
     }
     match recover_with_replan(fabric, policy, stripes, failed, plans, cfg, seed, 3) {
-        Ok((stats, replan)) => println!(
-            "recovered {} blocks ({:.1} MB) in {:.2?} → {:.1} MB/s · {} rounds, \
-             {} blocks replanned, {} extra failures detected",
-            stats.blocks,
-            stats.bytes as f64 / 1e6,
-            stats.wall,
-            stats.throughput_mb_s,
-            replan.rounds,
-            replan.replanned,
-            replan.detected,
-        ),
+        Ok((stats, replan)) => {
+            if json_out {
+                let mut r = BTreeMap::new();
+                r.insert("blocks".into(), Json::Num(stats.blocks as f64));
+                r.insert("bytes".into(), Json::Num(stats.bytes as f64));
+                r.insert("wall_s".into(), Json::Num(stats.wall.as_secs_f64()));
+                r.insert("throughput_mb_s".into(), Json::Num(stats.throughput_mb_s));
+                r.insert("replan_rounds".into(), Json::Num(replan.rounds as f64));
+                r.insert("replanned".into(), Json::Num(replan.replanned as f64));
+                r.insert("detected".into(), Json::Num(replan.detected as f64));
+                doc.insert("recovery".to_string(), Json::Obj(r));
+            } else {
+                println!(
+                    "recovered {} blocks ({:.1} MB) in {:.2?} → {:.1} MB/s · {} rounds, \
+                     {} blocks replanned, {} extra failures detected",
+                    stats.blocks,
+                    stats.bytes as f64 / 1e6,
+                    stats.wall,
+                    stats.throughput_mb_s,
+                    replan.rounds,
+                    replan.replanned,
+                    replan.detected,
+                );
+            }
+        }
         Err(e) => {
             eprintln!("recovery failed: {e}");
             return;
@@ -495,10 +534,20 @@ fn run_chaos_drill<F: BlockFabric>(
     }
     if !victims.is_empty() || flags.contains_key("scrub") {
         match run_scrub(fabric, policy, stripes, cfg, seed) {
-            Ok(rep) => println!(
-                "scrub: scanned {} blocks → quarantined {}, repaired {}",
-                rep.scanned, rep.quarantined, rep.repaired
-            ),
+            Ok(rep) => {
+                if json_out {
+                    let mut s = BTreeMap::new();
+                    s.insert("scanned".into(), Json::Num(rep.scanned as f64));
+                    s.insert("quarantined".into(), Json::Num(rep.quarantined as f64));
+                    s.insert("repaired".into(), Json::Num(rep.repaired as f64));
+                    doc.insert("scrub".to_string(), Json::Obj(s));
+                } else {
+                    println!(
+                        "scrub: scanned {} blocks → quarantined {}, repaired {}",
+                        rep.scanned, rep.quarantined, rep.repaired
+                    );
+                }
+            }
             Err(e) => eprintln!("scrub failed: {e}"),
         }
     }
@@ -513,22 +562,39 @@ fn run_chaos_drill<F: BlockFabric>(
             }
         }
     }
-    println!("oracle check: {checked} blocks match write-time checksums, {bad} corrupt");
+    if json_out {
+        let mut o = BTreeMap::new();
+        o.insert("checked".into(), Json::Num(checked as f64));
+        o.insert("corrupt".into(), Json::Num(bad as f64));
+        doc.insert("oracle".to_string(), Json::Obj(o));
+    } else {
+        println!("oracle check: {checked} blocks match write-time checksums, {bad} corrupt");
+    }
     if let Some(rep) = fabric.fault_report() {
-        println!(
-            "faults: {} injected (drops {} · delays {} · corrupts {} · truncates {}) · \
-             retries {} · evictions {} · crashes {} · failovers {} · replans {}",
-            rep.total_injected(),
-            rep.drops,
-            rep.delays,
-            rep.corrupts,
-            rep.truncates,
-            rep.retries,
-            rep.evictions,
-            rep.crashes,
-            rep.failovers,
-            rep.replans,
-        );
+        if json_out {
+            doc.insert("faults".to_string(), rep.to_json());
+        } else {
+            println!(
+                "faults: {} injected (drops {} · delays {} · corrupts {} · truncates {}) · \
+                 retries {} · evictions {} · crashes {} · failovers {} · replans {} · \
+                 quarantined {} · scrub-repaired {}",
+                rep.total_injected(),
+                rep.drops,
+                rep.delays,
+                rep.corrupts,
+                rep.truncates,
+                rep.retries,
+                rep.evictions,
+                rep.crashes,
+                rep.failovers,
+                rep.replans,
+                rep.quarantined,
+                rep.scrub_repaired,
+            );
+        }
+    }
+    if json_out {
+        println!("{}", Json::Obj(doc).to_string());
     }
 }
 
@@ -564,19 +630,31 @@ fn cmd_trace(flags: &HashMap<String, String>) {
         ..ExecutorConfig::default()
     };
     let backend_sel: String = flag(flags, "backend", "sim".into());
+    let json_out = flags.contains_key("json");
     let k = code.k();
     let bs = spec.block_size as usize;
-    println!(
-        "# trace · {} · {} · {stripes} stripes · horizon {:.1} h · rate {:.2}/h",
-        policy.name(),
-        code.name(),
-        tspec.horizon_s / 3600.0,
-        tspec.rate_per_hour
-    );
+    if !json_out {
+        println!(
+            "# trace · {} · {} · {stripes} stripes · horizon {:.1} h · rate {:.2}/h",
+            policy.name(),
+            code.name(),
+            tspec.horizon_s / 3600.0,
+            tspec.rate_per_hour
+        );
+    }
+    // `--json` emits one `{backend: TraceSummary}` object on stdout
+    let mut json_doc = std::collections::BTreeMap::new();
+    let mut emit = |backend: &str, s: &TraceSummary| {
+        if json_out {
+            json_doc.insert(backend.to_string(), s.to_json());
+        } else {
+            print_trace(backend, s);
+        }
+    };
     if matches!(backend_sel.as_str(), "sim" | "all") {
         let scfg = RecoveryConfig { workers: cfg.workers, ..RecoveryConfig::default() };
         match run_trace_sim(&spec, policy.as_ref(), stripes, &tspec, scfg, seed) {
-            Ok(s) => print_trace("sim", &s),
+            Ok(s) => emit("sim", &s),
             Err(e) => eprintln!("sim trace failed: {e}"),
         }
     }
@@ -588,7 +666,7 @@ fn cmd_trace(flags: &HashMap<String, String>) {
                 .expect("populate");
         }
         match run_trace(&cluster, policy.as_ref(), stripes, &tspec, cfg, seed) {
-            Ok(s) => print_trace("cluster", &s),
+            Ok(s) => emit("cluster", &s),
             Err(e) => eprintln!("cluster trace failed: {e}"),
         }
     }
@@ -600,12 +678,15 @@ fn cmd_trace(flags: &HashMap<String, String>) {
             })
             .expect("populate");
         match run_trace(&cluster, policy.as_ref(), stripes, &tspec, cfg, seed) {
-            Ok(s) => print_trace("net", &s),
+            Ok(s) => emit("net", &s),
             Err(e) => eprintln!("net trace failed: {e}"),
         }
     }
     if !matches!(backend_sel.as_str(), "sim" | "cluster" | "net" | "all") {
         eprintln!("unknown --backend {backend_sel} (sim, cluster, net, all)");
+    }
+    if json_out {
+        println!("{}", Json::Obj(json_doc).to_string());
     }
 }
 
@@ -621,6 +702,339 @@ fn print_trace(backend: &str, s: &TraceSummary) {
         s.arrival_mb_s,
         s.sustained_mb_s
     );
+}
+
+/// `d3ctl scrub-daemon`: populate a physical fabric, plant latent
+/// stored corruption (`--corrupt-stored P`), then run the continuous
+/// scrub daemon (DESIGN.md §15) for `--cycles` full registry passes and
+/// report each cycle's scan/repair counters and deadline verdict.
+fn cmd_scrub_daemon(flags: &HashMap<String, String>) {
+    let mut spec = spec_from(flags);
+    spec.block_size = flag::<u64>(flags, "cluster-block-kb", 64) << 10;
+    spec.net.inner_mbps = 8000.0;
+    spec.net.cross_mbps = 1600.0;
+    let code = CodeSpec::parse(&flag::<String>(flags, "code", "rs-6-3".into()))
+        .expect("bad --code (rs-K-M or lrc-K-L-G)");
+    let policy_name: String = flag(flags, "policy", "d3".into());
+    let seed: u64 = flag(flags, "seed", 1u64);
+    let stripes: u64 = flag(flags, "stripes", 100u64);
+    let policy = exp::build_policy(&policy_name, code, &spec, seed);
+    let scfg = ScrubConfig {
+        interval_s: flag(flags, "interval-s", 86_400.0),
+        idle_mb_s: flag(flags, "idle-mb-s", 64.0),
+        busy_mb_s: flag(flags, "busy-mb-s", 8.0),
+        batch: flag(flags, "batch", 64usize),
+    };
+    let cycles: u64 = flag(flags, "cycles", 2u64);
+    let cfg = ExecutorConfig {
+        workers: flag(flags, "workers", 8usize),
+        chunk_size: flag::<u64>(flags, "chunk-size", 16u64).max(1) << 10,
+        ..ExecutorConfig::default()
+    };
+    let fspec = FaultSpec {
+        corrupt_stored: flag(flags, "corrupt-stored", 0.02),
+        seed,
+        ..FaultSpec::default()
+    };
+    let json_out = flags.contains_key("json");
+    let backend_sel: String = flag(flags, "backend", "cluster".into());
+    let k = code.k();
+    let bs = spec.block_size as usize;
+    if !json_out {
+        println!(
+            "# scrub daemon · {} · {} · {stripes} stripes · backend {backend_sel} · \
+             {cycles} cycles · interval {:.0} s",
+            policy.name(),
+            code.name(),
+            scfg.interval_s
+        );
+    }
+    match backend_sel.as_str() {
+        "cluster" => {
+            let cluster =
+                MiniCluster::new(spec, policy.clone(), "native", seed).expect("cluster");
+            for sid in 0..stripes {
+                cluster
+                    .write_stripe(sid, deterministic_data(sid, k, bs))
+                    .expect("populate");
+            }
+            run_daemon_drill(&cluster, policy.as_ref(), stripes, &scfg, cfg, cycles, &fspec, seed, json_out);
+        }
+        "net" => {
+            let cluster = NetCluster::new(spec, policy.clone(), seed).expect("net cluster");
+            cluster
+                .write_stripes_parallel(stripes, cfg.workers.max(2), |sid| {
+                    deterministic_data(sid, k, bs)
+                })
+                .expect("populate");
+            run_daemon_drill(&cluster, policy.as_ref(), stripes, &scfg, cfg, cycles, &fspec, seed, json_out);
+        }
+        other => eprintln!("unknown --backend {other} (cluster, net)"),
+    }
+}
+
+/// Backend-generic body of `d3ctl scrub-daemon`: plant corruption, run
+/// the daemon to completion, print (or JSON-emit) the report.
+#[allow(clippy::too_many_arguments)]
+fn run_daemon_drill<F: BlockFabric>(
+    fabric: &F,
+    policy: &dyn Placement,
+    stripes: u64,
+    scfg: &ScrubConfig,
+    cfg: ExecutorConfig,
+    cycles: u64,
+    fspec: &FaultSpec,
+    seed: u64,
+    json_out: bool,
+) {
+    let victims = corrupt_set(fspec, stripes, policy.code().len());
+    for &(sid, b) in &victims {
+        if let Err(e) = fabric.corrupt_stored(sid, b) {
+            eprintln!("corrupt ({sid},{b}): {e}");
+        }
+    }
+    let stop = AtomicBool::new(false);
+    match run_daemon(fabric, policy, stripes, scfg, cfg, cycles, seed, &stop) {
+        Ok(rep) => {
+            if json_out {
+                println!("{}", rep.to_json().to_string());
+                return;
+            }
+            for (i, c) in rep.cycles.iter().enumerate() {
+                println!(
+                    "cycle {i}: scanned {} (skipped {}) → corrupt {} · repaired {} · \
+                     {} batches ({} throttled) · {:.0} s modeled · deadline {}",
+                    c.scanned,
+                    c.skipped,
+                    c.corrupt_found,
+                    c.repaired,
+                    c.batches,
+                    c.throttled_batches,
+                    c.modeled_s,
+                    if c.deadline_met { "met" } else { "MISSED" }
+                );
+            }
+            println!(
+                "daemon: planted {} · scanned {} · corrupt found {} · repaired {} · \
+                 deadline misses {}",
+                victims.len(),
+                rep.scanned(),
+                rep.corrupt_found(),
+                rep.repaired(),
+                rep.deadline_misses
+            );
+        }
+        Err(e) => {
+            eprintln!("scrub daemon failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// `d3ctl durability`: the Monte-Carlo MTTDL engine (DESIGN.md §15).
+/// Runs the D³-vs-RDD × RS-vs-LRC matrix of seeded trials on the model
+/// backend and reports MTTDL + loss-probability estimates with 95%
+/// confidence intervals; `--backend cluster|net|all` additionally
+/// replays one reduced-spec trial on the physical backend(s) and
+/// demands bit-identical counters against the model (the cross-backend
+/// spot check). `--quick` shrinks trials and horizon to CI size.
+fn cmd_durability(flags: &HashMap<String, String>) {
+    let spec = spec_from(flags);
+    let seed: u64 = flag(flags, "seed", 1u64);
+    let quick = flags.contains_key("quick");
+    let json_out = flags.contains_key("json");
+    let mut dspec = DurabilitySpec::default();
+    if quick {
+        dspec.trials = 12;
+        dspec.horizon_s = 48.0 * 3600.0;
+    }
+    dspec.trials = flag(flags, "trials", dspec.trials);
+    dspec.horizon_s = flag::<f64>(flags, "horizon-h", dspec.horizon_s / 3600.0) * 3600.0;
+    dspec.fail_rate_per_hour = flag(flags, "rate", dspec.fail_rate_per_hour);
+    dspec.rack_fail_prob = flag(flags, "rack-fail-prob", dspec.rack_fail_prob);
+    dspec.corrupt_rate_per_hour = flag(flags, "corrupt-rate", dspec.corrupt_rate_per_hour);
+    dspec.repair_mb_s = flag(flags, "repair-mb-s", dspec.repair_mb_s);
+    if let Some(v) = flags.get("scrub-interval-h") {
+        dspec.scrub_interval_s = v.parse::<f64>().ok().map(|h| h * 3600.0);
+    }
+    let stripes: u64 = flag(flags, "stripes", 60u64);
+    let policies: Vec<String> = flag::<String>(flags, "policies", "d3,rdd".into())
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    let codes: Vec<(String, CodeSpec)> =
+        flag::<String>(flags, "codes", "rs-6-3,lrc-4-2-1".into())
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| (s.to_string(), CodeSpec::parse(s).expect("bad code in --codes")))
+            .collect();
+    if !json_out {
+        println!(
+            "# durability · {} trials × {:.0} h horizon · fail {:.1}/h (rack {:.0}%) · \
+             corrupt {:.1}/h · scrub {} · repair {:.2} MB/s · {stripes} stripes",
+            dspec.trials,
+            dspec.horizon_s / 3600.0,
+            dspec.fail_rate_per_hour,
+            dspec.rack_fail_prob * 100.0,
+            dspec.corrupt_rate_per_hour,
+            dspec
+                .scrub_interval_s
+                .map_or("off".to_string(), |s| format!("{:.0} h", s / 3600.0)),
+            dspec.repair_mb_s
+        );
+    }
+    let cells = run_matrix(&spec, &dspec, &policies, &codes, stripes, seed)
+        .expect("durability matrix");
+    if !json_out {
+        for c in &cells {
+            let e = &c.est;
+            let fmt_h = |v: f64| {
+                if v.is_finite() { format!("{v:.1}") } else { "inf".to_string() }
+            };
+            println!(
+                "{:>4} × {:<11}: losses {}/{} · MTTDL {} h (95% CI [{}, {}]) · \
+                 P(loss) {:.2} [{:.2}, {:.2}] · lost {} stripes · {} corruptions \
+                 ({} scrub-detected)",
+                c.policy,
+                c.code,
+                e.losses,
+                e.trials,
+                e.mttdl_s.map_or("inf".to_string(), |s| format!("{:.1}", s / 3600.0)),
+                fmt_h(e.mttdl_lo_s / 3600.0),
+                fmt_h(e.mttdl_hi_s / 3600.0),
+                e.loss_prob,
+                e.loss_prob_lo,
+                e.loss_prob_hi,
+                c.lost_stripes,
+                c.corruptions,
+                c.scrub_detections
+            );
+        }
+    }
+    // cross-backend spot check: one reduced trial, bit-identical
+    // counters demanded between the model and each physical backend
+    let backend_sel: String = flag(flags, "backend", "sim".into());
+    let spot = match backend_sel.as_str() {
+        "sim" => Vec::new(),
+        "cluster" | "net" | "all" => durability_spot_check(&backend_sel, seed, json_out),
+        other => {
+            eprintln!("unknown --backend {other} (sim, cluster, net, all)");
+            return;
+        }
+    };
+    if json_out {
+        let mut doc = std::collections::BTreeMap::new();
+        doc.insert("spec".to_string(), dspec.to_json());
+        doc.insert(
+            "matrix".to_string(),
+            Json::Arr(cells.iter().map(|c| c.to_json()).collect()),
+        );
+        doc.insert("spot_check".to_string(), Json::Arr(spot));
+        println!("{}", Json::Obj(doc).to_string());
+    }
+}
+
+/// Replay durability trial 0 of a reduced spec on the model and on the
+/// selected physical backend(s); every modeled counter must agree
+/// exactly (`sustained_mb_s` is backend-measured and excluded). Exits
+/// non-zero on divergence — this is the acceptance gate CI runs.
+fn durability_spot_check(backend_sel: &str, seed: u64, json_out: bool) -> Vec<Json> {
+    let mut spec = SystemSpec::paper_default();
+    spec.block_size = 64 << 10;
+    spec.net.inner_mbps = 8000.0;
+    spec.net.cross_mbps = 1600.0;
+    let code = CodeSpec::Rs { k: 6, m: 3 };
+    let policy = exp::build_policy("d3", code, &spec, seed);
+    let dspec = DurabilitySpec {
+        horizon_s: 6.0 * 3600.0,
+        fail_rate_per_hour: 6.0,
+        rack_fail_prob: 0.25,
+        corrupt_rate_per_hour: 12.0,
+        scrub_interval_s: Some(2.0 * 3600.0),
+        repair_mb_s: 0.05,
+        trials: 1,
+    };
+    let stripes = 24u64;
+    let cfg = ExecutorConfig { workers: 4, ..ExecutorConfig::default() };
+    let model = run_durability_trial_model(
+        policy.as_ref(),
+        spec.block_size,
+        stripes,
+        &dspec,
+        seed,
+        0,
+    )
+    .expect("model trial");
+    let k = code.k();
+    let bs = spec.block_size as usize;
+    let mut out = Vec::new();
+    let mut check = |backend: &str, got: TraceSummary| {
+        let ok = counters_match(&model, &got);
+        if json_out {
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("backend".to_string(), Json::Str(backend.into()));
+            m.insert("consistent".to_string(), Json::Bool(ok));
+            m.insert("trial".to_string(), got.to_json());
+            out.push(Json::Obj(m));
+        } else {
+            println!(
+                "spot check {backend}: {} failures · {} rounds · {} lost stripes · \
+                 first loss {} → {}",
+                got.failures,
+                got.rounds,
+                got.lost_stripes,
+                got.first_loss_s.map_or("none".to_string(), |t| format!("{t:.0} s")),
+                if ok { "consistent with model" } else { "MISMATCH" }
+            );
+        }
+        if !ok {
+            eprintln!("durability spot check diverged from the model on {backend}");
+            std::process::exit(1);
+        }
+    };
+    if matches!(backend_sel, "cluster" | "all") {
+        let cluster =
+            MiniCluster::new(spec, policy.clone(), "native", seed).expect("cluster");
+        for sid in 0..stripes {
+            cluster
+                .write_stripe(sid, deterministic_data(sid, k, bs))
+                .expect("populate");
+        }
+        let got =
+            run_durability_trial(&cluster, policy.as_ref(), stripes, &dspec, cfg, seed, 0)
+                .expect("cluster trial");
+        check("cluster", got);
+    }
+    if matches!(backend_sel, "net" | "all") {
+        let cluster = NetCluster::new(spec, policy.clone(), seed).expect("net cluster");
+        cluster
+            .write_stripes_parallel(stripes, cfg.workers.max(2), |sid| {
+                deterministic_data(sid, k, bs)
+            })
+            .expect("populate");
+        let got =
+            run_durability_trial(&cluster, policy.as_ref(), stripes, &dspec, cfg, seed, 0)
+                .expect("net trial");
+        check("net", got);
+    }
+    out
+}
+
+/// Field-by-field equality of the modeled counters; `sustained_mb_s`
+/// is the one backend-measured (wall-clock) field and is excluded.
+fn counters_match(a: &TraceSummary, b: &TraceSummary) -> bool {
+    a.failures == b.failures
+        && a.rounds == b.rounds
+        && a.blocks_repaired == b.blocks_repaired
+        && a.lost_stripes == b.lost_stripes
+        && a.corruptions == b.corruptions
+        && a.scrub_detections == b.scrub_detections
+        && a.corrupt_repaired == b.corrupt_repaired
+        && a.backlog_peak == b.backlog_peak
+        && a.arrival_mb_s == b.arrival_mb_s
+        && a.horizon_s == b.horizon_s
+        && a.first_loss_s == b.first_loss_s
 }
 
 fn cmd_exp(args: &[String], flags: &HashMap<String, String>) {

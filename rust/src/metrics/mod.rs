@@ -155,6 +155,26 @@ impl FaultReport {
     pub fn total_injected(&self) -> u64 {
         self.drops + self.delays + self.corrupts + self.truncates
     }
+
+    /// The counters as a JSON object — the `faults` block of
+    /// `d3ctl scenario --json` and `d3ctl chaos --json` share this so
+    /// the two commands can never drift apart on key names.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("drops".into(), Json::Num(self.drops as f64));
+        m.insert("delays".into(), Json::Num(self.delays as f64));
+        m.insert("corrupts".into(), Json::Num(self.corrupts as f64));
+        m.insert("truncates".into(), Json::Num(self.truncates as f64));
+        m.insert("retries".into(), Json::Num(self.retries as f64));
+        m.insert("evictions".into(), Json::Num(self.evictions as f64));
+        m.insert("crashes".into(), Json::Num(self.crashes as f64));
+        m.insert("failovers".into(), Json::Num(self.failovers as f64));
+        m.insert("replans".into(), Json::Num(self.replans as f64));
+        m.insert("quarantined".into(), Json::Num(self.quarantined as f64));
+        m.insert("scrub_repaired".into(), Json::Num(self.scrub_repaired as f64));
+        Json::Obj(m)
+    }
 }
 
 /// Per-worker utilization: each worker's busy seconds as a fraction of the

@@ -1,0 +1,647 @@
+//! Monte-Carlo durability (DESIGN.md §15): MTTDL and data-loss
+//! probability from N seeded trials of the shared trace loop.
+//!
+//! Each trial is one accelerated life of the system: Poisson node
+//! failures (a configurable fraction of which take out a whole rack —
+//! the switch/power-domain events where placement policy decides
+//! survival), Poisson latent-corruption arrivals on uniformly random
+//! blocks, and the scrub daemon's deterministic detection schedule,
+//! all merged into one time-sorted [`TraceEvent`] stream and driven
+//! through [`super::trace`]'s batching loop. Repair overlaps later
+//! arrivals under the modeled clock, so a slow repair rate lets
+//! erasures pile up — the Luby (arXiv:2002.07904) failure-rate vs
+//! repair-rate race — and a stripe whose live erasures exceed the
+//! code's correction radius is a data-loss event stamped with its
+//! modeled time.
+//!
+//! The estimator treats trials as censored draws of an exponential
+//! time-to-data-loss (the XORing-Elephants availability model,
+//! arXiv:1301.3791): with `k` of `n` trials losing data and `T` the
+//! summed observed time (first-loss time, or the full horizon for
+//! loss-free trials), MTTDL ≈ `T / k`, with the exact censored-
+//! exponential 95% interval `[2T/χ²₀.₉₇₅(2k+2), 2T/χ²₀.₀₂₅(2k)]` —
+//! upper bound ∞ when no trial lost data. Loss probability carries a
+//! Wilson 95% interval. The model backend prices each repair round at
+//! the spec's modeled rate and moves no bytes, so big sweeps are cheap;
+//! the physical fabrics run the *identical* event stream through their
+//! real data paths and must reproduce every counter bit-for-bit.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::cluster::fabric::{recover_with_plans_cfg, BlockFabric};
+use crate::codes::CodeSpec;
+use crate::placement::Placement;
+use crate::recovery::executor::ExecutorConfig;
+use crate::topology::{ClusterSpec, Location, SystemSpec};
+use crate::util::json::Json;
+use crate::util::Rng;
+
+use super::distinct_racks;
+use super::trace::{drive, TraceEvent, TraceSummary};
+
+/// One durability experiment: the accelerated failure environment and
+/// how many seeded lives to run through it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DurabilitySpec {
+    /// Modeled horizon of one trial (seconds).
+    pub horizon_s: f64,
+    /// Poisson failure-arrival rate (events per hour) — accelerated far
+    /// beyond hardware AFRs so losses happen inside the horizon; MTTDL
+    /// comparisons are made at the same acceleration.
+    pub fail_rate_per_hour: f64,
+    /// Fraction of failure events that take out a whole rack instead of
+    /// one node (correlated switch/power failures).
+    pub rack_fail_prob: f64,
+    /// Poisson latent-corruption rate (events per hour), each flipping
+    /// one uniformly random block replica.
+    pub corrupt_rate_per_hour: f64,
+    /// Scrub full-cycle interval (seconds); `None` disables scrubbing —
+    /// latent corruption then stays latent until a failure repair of
+    /// the same stripe happens to rebuild it.
+    pub scrub_interval_s: Option<f64>,
+    /// Modeled aggregate repair bandwidth (MB/s) advancing the shared
+    /// clock — the knob that decides how long erasures stay exposed.
+    pub repair_mb_s: f64,
+    /// Seeded trials per matrix cell.
+    pub trials: u64,
+}
+
+impl Default for DurabilitySpec {
+    fn default() -> DurabilitySpec {
+        DurabilitySpec {
+            horizon_s: 168.0 * 3600.0,
+            fail_rate_per_hour: 3.0,
+            rack_fail_prob: 0.2,
+            corrupt_rate_per_hour: 6.0,
+            scrub_interval_s: Some(12.0 * 3600.0),
+            repair_mb_s: 0.25,
+            trials: 40,
+        }
+    }
+}
+
+impl DurabilitySpec {
+    /// Machine-readable spec echo (`d3ctl durability --json`).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("horizon_s".into(), Json::Num(self.horizon_s));
+        m.insert("fail_rate_per_hour".into(), Json::Num(self.fail_rate_per_hour));
+        m.insert("rack_fail_prob".into(), Json::Num(self.rack_fail_prob));
+        m.insert(
+            "corrupt_rate_per_hour".into(),
+            Json::Num(self.corrupt_rate_per_hour),
+        );
+        m.insert(
+            "scrub_interval_s".into(),
+            self.scrub_interval_s.map_or(Json::Null, Json::Num),
+        );
+        m.insert("repair_mb_s".into(), Json::Num(self.repair_mb_s));
+        m.insert("trials".into(), Json::Num(self.trials as f64));
+        Json::Obj(m)
+    }
+}
+
+const FAIL_KEY: u64 = 0xfa11_4a77;
+const CORRUPT_KEY: u64 = 0xc0bb_7e57;
+
+/// Deterministic event-kind order for same-instant events: failures
+/// land before the corruption they could erase, corruption before the
+/// scrub visit that could detect it.
+fn event_rank(e: &TraceEvent) -> (u8, u64, u64) {
+    match *e {
+        TraceEvent::Fail(loc) => (0, loc.rack as u64, loc.node as u64),
+        TraceEvent::Corrupt { sid, block } => (1, sid, block as u64),
+        TraceEvent::Scrub { sid, block } => (2, sid, block as u64),
+    }
+}
+
+/// The seeded event stream of one trial: failure arrivals (node or
+/// whole-rack), corruption arrivals, and — for every corruption — the
+/// scrub daemon's deterministic visit that would detect it. Block `i`
+/// of the flattened registry is visited at phase
+/// `((i + 0.5) / total_blocks) · interval` of every scrub cycle, so the
+/// detection time of a corruption is a pure function of its block and
+/// arrival time: the earliest cycle whose visit lands at or after the
+/// arrival. Identical streams feed the model and the physical fabrics.
+pub(crate) fn trial_events(
+    spec: &DurabilitySpec,
+    cluster: &ClusterSpec,
+    code_len: usize,
+    stripes: u64,
+    seed: u64,
+    trial: u64,
+) -> Vec<(f64, TraceEvent)> {
+    let mut out: Vec<(f64, TraceEvent)> = Vec::new();
+    if spec.fail_rate_per_hour > 0.0 {
+        let mut rng = Rng::keyed(seed, FAIL_KEY, trial);
+        let mean = 3600.0 / spec.fail_rate_per_hour;
+        let mut t = 0.0;
+        loop {
+            t += rng.exp(mean);
+            if t > spec.horizon_s {
+                break;
+            }
+            if rng.f64() < spec.rack_fail_prob {
+                let rack = rng.below(cluster.racks);
+                for node in 0..cluster.nodes_per_rack {
+                    out.push((t, TraceEvent::Fail(Location::new(rack, node))));
+                }
+            } else {
+                out.push((
+                    t,
+                    TraceEvent::Fail(cluster.unflat(rng.below(cluster.node_count()))),
+                ));
+            }
+        }
+    }
+    let total_blocks = stripes * code_len as u64;
+    if spec.corrupt_rate_per_hour > 0.0 && total_blocks > 0 {
+        let mut rng = Rng::keyed(seed, CORRUPT_KEY, trial);
+        let mean = 3600.0 / spec.corrupt_rate_per_hour;
+        let mut t = 0.0;
+        loop {
+            t += rng.exp(mean);
+            if t > spec.horizon_s {
+                break;
+            }
+            let i = rng.below_u64(total_blocks);
+            let (sid, block) = (i / code_len as u64, (i % code_len as u64) as usize);
+            out.push((t, TraceEvent::Corrupt { sid, block }));
+            if let Some(interval) = spec.scrub_interval_s {
+                let phase = (i as f64 + 0.5) / total_blocks as f64 * interval;
+                let cycle = ((t - phase) / interval).ceil().max(0.0);
+                let detect = cycle * interval + phase;
+                if detect <= spec.horizon_s {
+                    out.push((detect, TraceEvent::Scrub { sid, block }));
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| {
+        a.0.partial_cmp(&b.0)
+            .unwrap()
+            .then_with(|| event_rank(&a.1).cmp(&event_rank(&b.1)))
+    });
+    out
+}
+
+/// One trial on the pure model backend: the hooks move nothing, each
+/// repair round is priced at the spec's modeled rate, and the summary
+/// is a pure function of `(policy, spec, seed, trial)` — this is what
+/// the big sweeps run.
+pub fn run_durability_trial_model(
+    policy: &dyn Placement,
+    block_size: u64,
+    stripes: u64,
+    spec: &DurabilitySpec,
+    seed: u64,
+    trial: u64,
+) -> Result<TraceSummary> {
+    let events = trial_events(
+        spec,
+        &policy.cluster(),
+        policy.code().len(),
+        stripes,
+        seed,
+        trial,
+    );
+    drive(
+        policy,
+        block_size,
+        stripes,
+        &events,
+        spec.horizon_s,
+        spec.repair_mb_s,
+        seed,
+        |_loc| {},
+        |_sid, _b| Ok(()),
+        |plans, _batch| {
+            Ok(plans.len() as f64 * block_size as f64 / (spec.repair_mb_s.max(1e-9) * 1e6))
+        },
+        |_loc| Ok(()),
+    )
+}
+
+/// The same trial on a physical fabric (MiniCluster or NetCluster):
+/// real node failures, real corrupted replicas, real repairs through
+/// the pipelined executor, real rejoin-and-rebalance. Every counter
+/// must match [`run_durability_trial_model`] for the same
+/// `(seed, trial)` bit-for-bit — the spot check behind the sweeps.
+pub fn run_durability_trial<F: BlockFabric>(
+    fabric: &F,
+    policy: &dyn Placement,
+    stripes: u64,
+    spec: &DurabilitySpec,
+    cfg: ExecutorConfig,
+    seed: u64,
+    trial: u64,
+) -> Result<TraceSummary> {
+    let events = trial_events(
+        spec,
+        &policy.cluster(),
+        fabric.code().len(),
+        stripes,
+        seed,
+        trial,
+    );
+    drive(
+        policy,
+        fabric.block_size(),
+        stripes,
+        &events,
+        spec.horizon_s,
+        spec.repair_mb_s,
+        seed,
+        |loc| fabric.fail_node(loc),
+        |sid, b| fabric.corrupt_stored(sid, b),
+        |plans, batch| {
+            let racks = distinct_racks(batch);
+            let stats = recover_with_plans_cfg(fabric, plans.to_vec(), cfg, &racks)?;
+            Ok(stats.wall.as_secs_f64())
+        },
+        |loc| fabric.rejoin_node(loc).map(|_| ()),
+    )
+}
+
+/// MTTDL and loss-probability estimates over one cell's trials.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MttdlEstimate {
+    /// Trials run.
+    pub trials: u64,
+    /// Trials that lost at least one stripe.
+    pub losses: u64,
+    /// Summed observed time (s): first-loss time per losing trial, the
+    /// full horizon per censored (loss-free) trial.
+    pub observed_s: f64,
+    /// Censored-exponential MLE `observed_s / losses`; `None` when no
+    /// trial lost data (only the lower confidence bound is informative).
+    pub mttdl_s: Option<f64>,
+    /// 95% lower confidence bound on MTTDL (s).
+    pub mttdl_lo_s: f64,
+    /// 95% upper confidence bound on MTTDL (s); ∞ when `losses == 0`.
+    pub mttdl_hi_s: f64,
+    /// Fraction of trials losing data inside the horizon.
+    pub loss_prob: f64,
+    /// Wilson 95% interval on the loss probability.
+    pub loss_prob_lo: f64,
+    pub loss_prob_hi: f64,
+}
+
+impl MttdlEstimate {
+    /// JSON cell (`d3ctl durability --json`); hours, not seconds, and
+    /// `null` for the non-finite bounds JSON cannot carry.
+    pub fn to_json(&self) -> Json {
+        let finite = |v: f64| if v.is_finite() { Json::Num(v) } else { Json::Null };
+        let mut m = BTreeMap::new();
+        m.insert("trials".into(), Json::Num(self.trials as f64));
+        m.insert("losses".into(), Json::Num(self.losses as f64));
+        m.insert("observed_h".into(), Json::Num(self.observed_s / 3600.0));
+        m.insert(
+            "mttdl_h".into(),
+            self.mttdl_s.map_or(Json::Null, |s| Json::Num(s / 3600.0)),
+        );
+        m.insert(
+            "mttdl_ci95_h".into(),
+            Json::Arr(vec![
+                finite(self.mttdl_lo_s / 3600.0),
+                finite(self.mttdl_hi_s / 3600.0),
+            ]),
+        );
+        m.insert("loss_prob".into(), Json::Num(self.loss_prob));
+        m.insert(
+            "loss_prob_ci95".into(),
+            Json::Arr(vec![Json::Num(self.loss_prob_lo), Json::Num(self.loss_prob_hi)]),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Acklam's rational approximation of the standard normal quantile
+/// (|ε| < 1.2e-9 over (0, 1)) — no special-function dependency.
+fn normal_quantile(p: f64) -> f64 {
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if p >= 1.0 {
+        return f64::INFINITY;
+    }
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+/// Chi-square quantile: exact for 2 degrees of freedom (χ²₂ is
+/// exponential, the `losses ≤ 1` cases where tail accuracy matters
+/// most), Wilson–Hilferty otherwise (≤ a few percent at the small even
+/// dof the estimator uses).
+fn chi2_quantile(p: f64, df: f64) -> f64 {
+    if df <= 0.0 {
+        return 0.0;
+    }
+    if df == 2.0 {
+        return -2.0 * (1.0 - p).ln();
+    }
+    let a = 2.0 / (9.0 * df);
+    let x = 1.0 - a + normal_quantile(p) * a.sqrt();
+    df * x * x * x
+}
+
+/// Wilson 95% score interval for a binomial proportion `k / n`.
+fn wilson_ci(k: u64, n: u64) -> (f64, f64) {
+    if n == 0 {
+        return (0.0, 1.0);
+    }
+    let z = 1.959963984540054; // Φ⁻¹(0.975)
+    let nf = n as f64;
+    let p = k as f64 / nf;
+    let z2 = z * z;
+    let denom = 1.0 + z2 / nf;
+    let center = (p + z2 / (2.0 * nf)) / denom;
+    let half = z * (p * (1.0 - p) / nf + z2 / (4.0 * nf * nf)).sqrt() / denom;
+    ((center - half).max(0.0), (center + half).min(1.0))
+}
+
+/// Fold one cell's trial summaries into the censored-exponential MTTDL
+/// estimate (see module docs for the formula and its provenance).
+pub fn estimate_mttdl(trials: &[TraceSummary]) -> MttdlEstimate {
+    let n = trials.len() as u64;
+    let losses = trials.iter().filter(|t| t.lost_stripes > 0).count() as u64;
+    let observed_s: f64 =
+        trials.iter().map(|t| t.first_loss_s.unwrap_or(t.horizon_s)).sum();
+    let k = losses as f64;
+    let mttdl_lo_s = 2.0 * observed_s / chi2_quantile(0.975, 2.0 * k + 2.0);
+    let mttdl_hi_s = if losses > 0 {
+        2.0 * observed_s / chi2_quantile(0.025, 2.0 * k)
+    } else {
+        f64::INFINITY
+    };
+    let (loss_prob_lo, loss_prob_hi) = wilson_ci(losses, n);
+    MttdlEstimate {
+        trials: n,
+        losses,
+        observed_s,
+        mttdl_s: if losses > 0 { Some(observed_s / k) } else { None },
+        mttdl_lo_s,
+        mttdl_hi_s,
+        loss_prob: if n > 0 { k / n as f64 } else { 0.0 },
+        loss_prob_lo,
+        loss_prob_hi,
+    }
+}
+
+/// One cell of the policy × code durability matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatrixCell {
+    /// Placement policy name (`d3`, `rdd`, …).
+    pub policy: String,
+    /// Code name in CLI format (`rs-6-3`, `lrc-4-2-1`).
+    pub code: String,
+    /// The cell's MTTDL / loss-probability estimate.
+    pub est: MttdlEstimate,
+    /// Stripes lost across all trials.
+    pub lost_stripes: u64,
+    /// Corruption arrivals across all trials.
+    pub corruptions: u64,
+    /// Scrub detections across all trials.
+    pub scrub_detections: u64,
+}
+
+impl MatrixCell {
+    /// JSON row (`d3ctl durability --json`).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("policy".into(), Json::Str(self.policy.clone()));
+        m.insert("code".into(), Json::Str(self.code.clone()));
+        m.insert("estimate".into(), self.est.to_json());
+        m.insert("lost_stripes".into(), Json::Num(self.lost_stripes as f64));
+        m.insert("corruptions".into(), Json::Num(self.corruptions as f64));
+        m.insert(
+            "scrub_detections".into(),
+            Json::Num(self.scrub_detections as f64),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Run the full policy × code matrix on the model backend: every cell
+/// gets the same `spec.trials` seeded lives (trial `t` of every cell
+/// shares the trial index, not the event stream — placements differ,
+/// and failure locations are policy-independent by construction, so
+/// cells are directly comparable). Returns cells in
+/// `codes × policies` order.
+pub fn run_matrix(
+    spec: &SystemSpec,
+    dspec: &DurabilitySpec,
+    policies: &[String],
+    codes: &[(String, CodeSpec)],
+    stripes: u64,
+    seed: u64,
+) -> Result<Vec<MatrixCell>> {
+    let mut out = Vec::new();
+    for (cname, code) in codes {
+        for pname in policies {
+            let policy = crate::experiments::build_policy(pname, *code, spec, seed);
+            let mut trials = Vec::with_capacity(dspec.trials as usize);
+            for trial in 0..dspec.trials {
+                trials.push(run_durability_trial_model(
+                    policy.as_ref(),
+                    spec.block_size,
+                    stripes,
+                    dspec,
+                    seed,
+                    trial,
+                )?);
+            }
+            out.push(MatrixCell {
+                policy: pname.clone(),
+                code: cname.clone(),
+                est: estimate_mttdl(&trials),
+                lost_stripes: trials.iter().map(|t| t.lost_stripes).sum(),
+                corruptions: trials.iter().map(|t| t.corruptions).sum(),
+                scrub_detections: trials.iter().map(|t| t.scrub_detections).sum(),
+            });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::D3Placement;
+
+    fn policy() -> D3Placement {
+        D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, ClusterSpec::new(8, 3)).unwrap()
+    }
+
+    #[test]
+    fn trial_events_are_deterministic_sorted_and_typed() {
+        let spec = DurabilitySpec {
+            horizon_s: 24.0 * 3600.0,
+            fail_rate_per_hour: 2.0,
+            rack_fail_prob: 0.25,
+            corrupt_rate_per_hour: 4.0,
+            scrub_interval_s: Some(6.0 * 3600.0),
+            ..DurabilitySpec::default()
+        };
+        let cluster = ClusterSpec::new(8, 3);
+        let a = trial_events(&spec, &cluster, 5, 20, 9, 0);
+        let b = trial_events(&spec, &cluster, 5, 20, 9, 0);
+        assert_eq!(a, b, "same (seed, trial) must replay exactly");
+        assert!(a.windows(2).all(|w| w[0].0 <= w[1].0), "sorted by time");
+        assert!(a.iter().all(|&(t, _)| t >= 0.0 && t <= spec.horizon_s));
+        let kinds = |ev: &[(f64, TraceEvent)]| {
+            let f = ev.iter().filter(|(_, e)| matches!(e, TraceEvent::Fail(_))).count();
+            let c = ev
+                .iter()
+                .filter(|(_, e)| matches!(e, TraceEvent::Corrupt { .. }))
+                .count();
+            let s = ev
+                .iter()
+                .filter(|(_, e)| matches!(e, TraceEvent::Scrub { .. }))
+                .count();
+            (f, c, s)
+        };
+        let (f, c, s) = kinds(&a);
+        assert!(f > 0 && c > 0, "both processes should fire over a day");
+        assert!(s <= c, "at most one scrub visit per corruption");
+        assert!(s > 0, "a 6h scrub interval detects most of a day's corruption");
+        let other = trial_events(&spec, &cluster, 5, 20, 9, 1);
+        assert_ne!(a, other, "different trial, different stream");
+        // every scrub visit lands at or after its corruption's arrival
+        for (t, e) in &a {
+            if let TraceEvent::Scrub { sid, block } = e {
+                let arr = a
+                    .iter()
+                    .find(|(_, e2)| {
+                        matches!(e2, TraceEvent::Corrupt { sid: s2, block: b2 }
+                            if s2 == sid && b2 == block)
+                    })
+                    .expect("scrub event without a corruption");
+                assert!(*t >= arr.0, "detection before arrival");
+            }
+        }
+    }
+
+    #[test]
+    fn model_trials_are_deterministic_and_censoring_adds_up() {
+        let p = policy();
+        let spec = DurabilitySpec {
+            horizon_s: 48.0 * 3600.0,
+            fail_rate_per_hour: 6.0,
+            rack_fail_prob: 0.3,
+            corrupt_rate_per_hour: 6.0,
+            scrub_interval_s: Some(6.0 * 3600.0),
+            repair_mb_s: 0.05,
+            trials: 6,
+        };
+        let bs = 1 << 20;
+        let mut summaries = Vec::new();
+        for trial in 0..spec.trials {
+            let a = run_durability_trial_model(&p, bs, 24, &spec, 11, trial).unwrap();
+            let b = run_durability_trial_model(&p, bs, 24, &spec, 11, trial).unwrap();
+            assert_eq!(a, b, "same (seed, trial) must replay exactly");
+            if let Some(t) = a.first_loss_s {
+                assert!(a.lost_stripes > 0);
+                assert!((0.0..=spec.horizon_s).contains(&t));
+            } else {
+                assert_eq!(a.lost_stripes, 0);
+            }
+            assert!(a.corrupt_repaired + a.scrub_detections <= a.corruptions * 2);
+            summaries.push(a);
+        }
+        let est = estimate_mttdl(&summaries);
+        assert_eq!(est.trials, spec.trials);
+        assert_eq!(
+            est.losses as usize,
+            summaries.iter().filter(|s| s.lost_stripes > 0).count()
+        );
+        assert!(est.observed_s > 0.0 && est.observed_s <= spec.horizon_s * spec.trials as f64);
+    }
+
+    #[test]
+    fn estimator_brackets_the_point_and_handles_zero_losses() {
+        // three losses at known times + one censored trial
+        let mk = |loss: Option<f64>| TraceSummary {
+            lost_stripes: u64::from(loss.is_some()),
+            first_loss_s: loss,
+            horizon_s: 1000.0,
+            ..TraceSummary::default()
+        };
+        let trials =
+            vec![mk(Some(100.0)), mk(Some(400.0)), mk(Some(250.0)), mk(None)];
+        let est = estimate_mttdl(&trials);
+        assert_eq!((est.trials, est.losses), (4, 3));
+        let t = 100.0 + 400.0 + 250.0 + 1000.0;
+        assert_eq!(est.observed_s, t);
+        let point = est.mttdl_s.unwrap();
+        assert!((point - t / 3.0).abs() < 1e-9);
+        assert!(est.mttdl_lo_s < point && point < est.mttdl_hi_s);
+        assert!(est.mttdl_hi_s.is_finite());
+        assert!(est.loss_prob_lo <= est.loss_prob && est.loss_prob <= est.loss_prob_hi);
+        // no losses: point undefined, upper bound infinite, lower bound real
+        let censored: Vec<TraceSummary> = (0..5).map(|_| mk(None)).collect();
+        let est0 = estimate_mttdl(&censored);
+        assert_eq!(est0.losses, 0);
+        assert!(est0.mttdl_s.is_none());
+        assert!(est0.mttdl_hi_s.is_infinite());
+        assert!(est0.mttdl_lo_s > 0.0 && est0.mttdl_lo_s.is_finite());
+        assert_eq!(est0.loss_prob, 0.0);
+        // JSON carries null, never inf
+        let j = est0.to_json().to_string();
+        assert!(!j.contains("inf"), "non-finite leaked into JSON: {j}");
+    }
+
+    #[test]
+    fn quantile_helpers_match_known_values() {
+        assert!((normal_quantile(0.975) - 1.959964).abs() < 1e-5);
+        assert!((normal_quantile(0.5)).abs() < 1e-9);
+        assert!((chi2_quantile(0.975, 2.0) - 7.377759).abs() < 1e-4, "exact at df=2");
+        assert!((chi2_quantile(0.025, 2.0) - 0.050636).abs() < 1e-4);
+        // Wilson–Hilferty at df=8: true χ²₀.₉₇₅(8) = 17.5345
+        assert!((chi2_quantile(0.975, 8.0) - 17.5345).abs() < 0.2);
+    }
+}

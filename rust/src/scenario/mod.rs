@@ -21,6 +21,7 @@
 //! (multi-node, whole-rack — see Rashmi et al., arXiv:1309.0186) plus the
 //! front-end-load and degraded-read-burst mixes of §6.2.3–§6.2.4.
 
+pub mod durability;
 pub mod trace;
 
 use std::sync::Arc;
@@ -505,31 +506,12 @@ impl ScenarioOutcome {
             m.insert("recovery_slowdown".into(), Json::Num(x));
         }
         if let Some(f) = &self.faults {
-            let mut fm = BTreeMap::new();
-            fm.insert("drops".into(), Json::Num(f.drops as f64));
-            fm.insert("delays".into(), Json::Num(f.delays as f64));
-            fm.insert("corrupts".into(), Json::Num(f.corrupts as f64));
-            fm.insert("truncates".into(), Json::Num(f.truncates as f64));
-            fm.insert("retries".into(), Json::Num(f.retries as f64));
-            fm.insert("evictions".into(), Json::Num(f.evictions as f64));
-            fm.insert("crashes".into(), Json::Num(f.crashes as f64));
-            fm.insert("failovers".into(), Json::Num(f.failovers as f64));
-            fm.insert("replans".into(), Json::Num(f.replans as f64));
-            fm.insert("quarantined".into(), Json::Num(f.quarantined as f64));
-            fm.insert("scrub_repaired".into(), Json::Num(f.scrub_repaired as f64));
-            m.insert("faults".into(), Json::Obj(fm));
+            // shared with `d3ctl chaos --json` via FaultReport::to_json
+            m.insert("faults".into(), f.to_json());
         }
         if let Some(t) = &self.trace {
-            let mut tm = BTreeMap::new();
-            tm.insert("failures".into(), Json::Num(t.failures as f64));
-            tm.insert("rounds".into(), Json::Num(t.rounds as f64));
-            tm.insert("blocks_repaired".into(), Json::Num(t.blocks_repaired as f64));
-            tm.insert("lost_stripes".into(), Json::Num(t.lost_stripes as f64));
-            tm.insert("arrival_mb_s".into(), Json::Num(t.arrival_mb_s));
-            tm.insert("sustained_mb_s".into(), Json::Num(t.sustained_mb_s));
-            tm.insert("backlog_peak".into(), Json::Num(t.backlog_peak as f64));
-            tm.insert("horizon_s".into(), Json::Num(t.horizon_s));
-            m.insert("trace".into(), Json::Obj(tm));
+            // shared with `d3ctl trace --json` via TraceSummary::to_json
+            m.insert("trace".into(), t.to_json());
         }
         Json::Obj(m)
     }
@@ -772,6 +754,7 @@ mod tests {
                 sustained_mb_s: 6.0,
                 backlog_peak: 18,
                 horizon_s: 3600.0,
+                ..Default::default()
             }),
         };
         let j = out.to_json();

@@ -14,8 +14,18 @@
 //! seconds its repair path actually took (simulated seconds on the
 //! fluid backend, wall seconds on the physical fabrics), reported
 //! against the arrival rate the trace generated.
+//!
+//! The loop speaks [`TraceEvent`]s, not just node failures: latent
+//! corruption arrivals (a replica silently flips; the stripe still
+//! reads clean until something visits the block) and scrub visits (the
+//! daemon's checksum pass reaches the block and the corruption stops
+//! being latent) drive the durability engine (DESIGN.md §15). A repair
+//! of a stripe always rebuilds its latent-corrupt blocks too — corrupt
+//! replicas are never read as sources — and a stripe whose combined
+//! failed+corrupt blocks exceed the code's correction radius is data
+//! loss, recorded the round it happens.
 
-use std::collections::HashSet;
+use std::collections::{BTreeMap, BTreeSet, HashSet};
 
 use anyhow::{bail, Context, Result};
 
@@ -26,9 +36,23 @@ use crate::recovery::multi::stripe_repair_plans;
 use crate::recovery::plan::RepairPlan;
 use crate::sim::recovery::{run_recovery_multi, RecoveryConfig};
 use crate::topology::{ClusterSpec, Location, SystemSpec};
+use crate::util::json::Json;
 use crate::util::Rng;
 
 use super::distinct_racks;
+
+/// One event on a trace's modeled timeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// A node fails; its blocks are erasures until repaired + rejoined.
+    Fail(Location),
+    /// A replica silently corrupts (latent: reads still succeed until a
+    /// scrub visit or a repair of the stripe touches it).
+    Corrupt { sid: u64, block: usize },
+    /// The scrub daemon's cycle visits this block; if its corruption is
+    /// still latent, it is detected and the stripe repaired this round.
+    Scrub { sid: u64, block: usize },
+}
 
 /// A failure-arrival process over a modeled horizon.
 #[derive(Clone, Debug)]
@@ -98,6 +122,14 @@ pub struct TraceSummary {
     pub blocks_repaired: u64,
     /// Stripes that became unrecoverable (data loss) at some round.
     pub lost_stripes: u64,
+    /// Latent-corruption arrivals planted on live replicas.
+    pub corruptions: u64,
+    /// Latent corruptions found by a scrub visit (still latent when the
+    /// daemon's cycle reached the block).
+    pub scrub_detections: u64,
+    /// Latent-corrupt blocks rebuilt — by a scrub-triggered repair or
+    /// piggybacked on a failure repair of the same stripe.
+    pub corrupt_repaired: u64,
     /// Repair work generated per second of horizon (MB/s).
     pub arrival_mb_s: f64,
     /// Rebuilt bytes over the backend's measured repair seconds (MB/s).
@@ -106,6 +138,33 @@ pub struct TraceSummary {
     pub backlog_peak: u64,
     /// Modeled horizon (s), echoed from the spec.
     pub horizon_s: f64,
+    /// Modeled time of the first data-loss event, if any occurred.
+    pub first_loss_s: Option<f64>,
+}
+
+impl TraceSummary {
+    /// Machine-readable counters (`d3ctl trace --json`, the durability
+    /// engine's per-trial records). `sustained_mb_s` is the one
+    /// backend-measured field; everything else is modeled-clock exact.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("failures".into(), Json::Num(self.failures as f64));
+        m.insert("rounds".into(), Json::Num(self.rounds as f64));
+        m.insert("blocks_repaired".into(), Json::Num(self.blocks_repaired as f64));
+        m.insert("lost_stripes".into(), Json::Num(self.lost_stripes as f64));
+        m.insert("corruptions".into(), Json::Num(self.corruptions as f64));
+        m.insert("scrub_detections".into(), Json::Num(self.scrub_detections as f64));
+        m.insert("corrupt_repaired".into(), Json::Num(self.corrupt_repaired as f64));
+        m.insert("arrival_mb_s".into(), Json::Num(self.arrival_mb_s));
+        m.insert("sustained_mb_s".into(), Json::Num(self.sustained_mb_s));
+        m.insert("backlog_peak".into(), Json::Num(self.backlog_peak as f64));
+        m.insert("horizon_s".into(), Json::Num(self.horizon_s));
+        m.insert(
+            "first_loss_s".into(),
+            self.first_loss_s.map_or(Json::Null, Json::Num),
+        );
+        Json::Obj(m)
+    }
 }
 
 /// Parse a failure-trace file: one `seconds rack node` triple per line;
@@ -149,102 +208,205 @@ pub fn parse_trace(text: &str, cluster: &ClusterSpec) -> Result<Vec<(f64, Locati
 
 /// Per-round repair plans against the canonical layout (every round
 /// starts canonical: failed nodes of the previous round rejoined and
-/// their blocks rebalanced home). Stripes that cannot be repaired are
-/// recorded in `lost` and never planned again; returns the plans and
-/// the number of newly lost stripes.
+/// their blocks rebalanced home). A stripe is planned when a failed
+/// node holds one of its blocks or a scrub visit detected latent
+/// corruption on it; either way the plan also rebuilds every
+/// latent-corrupt block of the stripe — corrupt replicas must never be
+/// read as sources, and a repaired stripe comes back clean. Stripes
+/// whose combined failed+corrupt blocks exceed the code's correction
+/// radius are recorded in `lost` and never planned again; returns the
+/// plans, the number of newly lost stripes, and the planned stripe ids.
+#[allow(clippy::too_many_arguments)]
 fn round_plans(
     policy: &dyn Placement,
-    stripes: u64,
+    layout: &[Vec<Location>],
     failed: &[Location],
+    scrub_sids: &BTreeSet<u64>,
+    corrupt: &BTreeMap<u64, BTreeSet<usize>>,
     lost: &mut HashSet<u64>,
     seed: u64,
-) -> (Vec<RepairPlan>, u64) {
+) -> (Vec<RepairPlan>, u64, Vec<u64>) {
     let failed_set: HashSet<Location> = failed.iter().copied().collect();
     let mut plans = Vec::new();
     let mut newly_lost = 0u64;
-    for sid in 0..stripes {
+    let mut planned = Vec::new();
+    for (sid, locs) in layout.iter().enumerate() {
+        let sid = sid as u64;
         if lost.contains(&sid) {
             continue;
         }
-        let sp = policy.stripe(sid);
-        let lost_blocks: Vec<usize> = (0..sp.locs.len())
-            .filter(|&b| failed_set.contains(&sp.locs[b]))
+        let mut lost_blocks: Vec<usize> = (0..locs.len())
+            .filter(|&b| failed_set.contains(&locs[b]))
             .collect();
-        if lost_blocks.is_empty() {
+        if lost_blocks.is_empty() && !scrub_sids.contains(&sid) {
             continue;
         }
+        if let Some(bad) = corrupt.get(&sid) {
+            for &b in bad {
+                if !lost_blocks.contains(&b) {
+                    lost_blocks.push(b);
+                }
+            }
+            lost_blocks.sort_unstable();
+        }
         match stripe_repair_plans(policy, sid, &lost_blocks, &failed_set, seed) {
-            Ok(ps) => plans.extend(ps),
+            Ok(ps) => {
+                plans.extend(ps);
+                planned.push(sid);
+            }
             Err(_) => {
                 lost.insert(sid);
                 newly_lost += 1;
             }
         }
     }
-    (plans, newly_lost)
+    (plans, newly_lost, planned)
 }
 
 /// The ONE batching loop every backend runs: pull due events, fail the
-/// batch, plan (tolerating unrecoverable stripes), execute via the
-/// backend's `execute` hook (which returns its measured repair seconds),
-/// rejoin the batch, and advance the shared modeled clock.
+/// batch and plant its corruption, plan (tolerating unrecoverable
+/// stripes), execute via the backend's `execute` hook (which returns
+/// its measured repair seconds), rejoin the batch, and advance the
+/// shared modeled clock. Counters are a pure function of (layout,
+/// events, seed) — the hooks move real bytes or nothing at all, and
+/// every backend batches identically because the clock is modeled.
 #[allow(clippy::too_many_arguments)]
-fn drive<K, E, J>(
+pub(crate) fn drive<K, P, E, J>(
     policy: &dyn Placement,
     block_size: u64,
     stripes: u64,
-    spec: &TraceSpec,
+    events: &[(f64, TraceEvent)],
+    horizon_s: f64,
+    repair_mb_s: f64,
     seed: u64,
     mut fail: K,
+    mut plant: P,
     mut execute: E,
     mut rejoin: J,
 ) -> Result<TraceSummary>
 where
     K: FnMut(Location),
+    P: FnMut(u64, usize) -> Result<()>,
     E: FnMut(&[RepairPlan], &[Location]) -> Result<f64>,
     J: FnMut(Location) -> Result<()>,
 {
-    let cluster = policy.cluster();
-    let events = spec.arrivals(&cluster, seed);
+    // the canonical layout, resolved once: round planning is a pure
+    // scan over it, and long trials visit every stripe every round
+    let layout: Vec<Vec<Location>> =
+        (0..stripes).map(|sid| policy.stripe(sid).locs).collect();
     let mut summary = TraceSummary {
-        failures: events.len() as u64,
-        horizon_s: spec.horizon_s,
+        failures: events
+            .iter()
+            .filter(|(_, e)| matches!(e, TraceEvent::Fail(_)))
+            .count() as u64,
+        horizon_s,
         ..TraceSummary::default()
     };
     let mut lost: HashSet<u64> = HashSet::new();
+    // latent corruption: stripe → set of silently-flipped block indices
+    let mut corrupt: BTreeMap<u64, BTreeSet<usize>> = BTreeMap::new();
     let mut clock = 0.0f64;
     let mut repair_s = 0.0f64;
     let mut i = 0usize;
     while i < events.len() {
         // idle until the next arrival, then batch everything already due
         clock = clock.max(events[i].0);
-        let mut batch: Vec<Location> = Vec::new();
+        let mut fails: Vec<Location> = Vec::new();
+        let mut plants: Vec<(u64, usize)> = Vec::new();
+        let mut detects: Vec<(u64, usize)> = Vec::new();
         while i < events.len() && events[i].0 <= clock {
-            if !batch.contains(&events[i].1) {
-                batch.push(events[i].1);
+            match events[i].1 {
+                TraceEvent::Fail(loc) => {
+                    if !fails.contains(&loc) {
+                        fails.push(loc);
+                    }
+                }
+                TraceEvent::Corrupt { sid, block } => plants.push((sid, block)),
+                TraceEvent::Scrub { sid, block } => detects.push((sid, block)),
             }
             i += 1;
         }
-        summary.rounds += 1;
-        for &loc in &batch {
+        let failed_set: HashSet<Location> = fails.iter().copied().collect();
+        for &loc in &fails {
             fail(loc);
         }
-        let (plans, newly_lost) = round_plans(policy, stripes, &batch, &mut lost, seed);
+        // corruption arrivals: skip stripes already lost and replicas
+        // erased by this same batch's failures (nothing left to flip);
+        // the set insert dedups so a double arrival can't flip a
+        // physical replica back to clean
+        let mut touched: Vec<u64> = Vec::new();
+        for (sid, b) in plants {
+            if lost.contains(&sid) || b >= layout[sid as usize].len() {
+                continue;
+            }
+            if failed_set.contains(&layout[sid as usize][b]) {
+                continue;
+            }
+            if corrupt.entry(sid).or_default().insert(b) {
+                summary.corruptions += 1;
+                plant(sid, b)?;
+                if !touched.contains(&sid) {
+                    touched.push(sid);
+                }
+            }
+        }
+        // scrub visits: only still-latent corruption is a detection
+        let mut scrub_sids: BTreeSet<u64> = BTreeSet::new();
+        for (sid, b) in detects {
+            if lost.contains(&sid) {
+                continue;
+            }
+            if corrupt.get(&sid).is_some_and(|s| s.contains(&b)) {
+                summary.scrub_detections += 1;
+                scrub_sids.insert(sid);
+            }
+        }
+        let (plans, newly_lost, planned) =
+            round_plans(policy, &layout, &fails, &scrub_sids, &corrupt, &mut lost, seed);
         summary.lost_stripes += newly_lost;
+        // recoverability probe for stripes that only accumulated latent
+        // corruption this round: nothing repairs them yet, but if the
+        // corruption alone already exceeds the code's correction radius
+        // the data is gone — record the loss at arrival time
+        for &sid in &touched {
+            if lost.contains(&sid) || planned.contains(&sid) {
+                continue;
+            }
+            let bad: Vec<usize> = corrupt[&sid].iter().copied().collect();
+            if stripe_repair_plans(policy, sid, &bad, &failed_set, seed).is_err() {
+                lost.insert(sid);
+                summary.lost_stripes += 1;
+            }
+        }
+        if summary.first_loss_s.is_none() && summary.lost_stripes > 0 {
+            summary.first_loss_s = Some(clock);
+        }
         summary.backlog_peak = summary.backlog_peak.max(plans.len() as u64);
+        // corruption-only batches don't open a repair round; failure
+        // batches always do (even when no stripe was hit), exactly as
+        // the failure-only loop counted them
+        if !fails.is_empty() || !plans.is_empty() {
+            summary.rounds += 1;
+        }
         if !plans.is_empty() {
-            repair_s += execute(&plans, &batch)?;
+            repair_s += execute(&plans, &fails)?;
             summary.blocks_repaired += plans.len() as u64;
         }
-        for &loc in &batch {
+        // repaired stripes come back fully clean: their latent set dies
+        for &sid in &planned {
+            if let Some(bad) = corrupt.remove(&sid) {
+                summary.corrupt_repaired += bad.len() as u64;
+            }
+        }
+        for &loc in &fails {
             rejoin(loc)?;
         }
         // modeled makespan, NOT measured time: identical on every
         // backend, so later arrivals batch identically everywhere
-        clock += plans.len() as f64 * block_size as f64 / (spec.repair_mb_s.max(1e-9) * 1e6);
+        clock += plans.len() as f64 * block_size as f64 / (repair_mb_s.max(1e-9) * 1e6);
     }
     let total_bytes = summary.blocks_repaired as f64 * block_size as f64;
-    summary.arrival_mb_s = total_bytes / spec.horizon_s.max(1e-9) / 1e6;
+    summary.arrival_mb_s = total_bytes / horizon_s.max(1e-9) / 1e6;
     summary.sustained_mb_s =
         if repair_s > 0.0 { total_bytes / repair_s / 1e6 } else { 0.0 };
     Ok(summary)
@@ -262,13 +424,17 @@ pub fn run_trace<F: BlockFabric>(
     cfg: ExecutorConfig,
     seed: u64,
 ) -> Result<TraceSummary> {
+    let events = fail_events(spec, &policy.cluster(), seed);
     drive(
         policy,
         fabric.block_size(),
         stripes,
-        spec,
+        &events,
+        spec.horizon_s,
+        spec.repair_mb_s,
         seed,
         |loc| fabric.fail_node(loc),
+        |sid, b| fabric.corrupt_stored(sid, b),
         |plans, batch| {
             let racks = distinct_racks(batch);
             let stats = recover_with_plans_cfg(fabric, plans.to_vec(), cfg, &racks)?;
@@ -291,13 +457,17 @@ pub fn run_trace_sim(
     seed: u64,
 ) -> Result<TraceSummary> {
     let cfg = RecoveryConfig { period: cfg.period.or_else(|| policy.period()), ..cfg };
+    let events = fail_events(tspec, &policy.cluster(), seed);
     drive(
         policy,
         spec.block_size,
         stripes,
-        tspec,
+        &events,
+        tspec.horizon_s,
+        tspec.repair_mb_s,
         seed,
         |_loc| {},
+        |_sid, _b| Ok(()),
         |plans, batch| {
             let racks = distinct_racks(batch);
             let (out, _) = run_recovery_multi(spec, plans, &racks, cfg, Vec::new());
@@ -305,6 +475,20 @@ pub fn run_trace_sim(
         },
         |_loc| Ok(()),
     )
+}
+
+/// A [`TraceSpec`]'s failure arrivals as a [`TraceEvent`] stream (the
+/// failure-only trace mode; the durability engine merges corruption and
+/// scrub events in on top).
+fn fail_events(
+    spec: &TraceSpec,
+    cluster: &ClusterSpec,
+    seed: u64,
+) -> Vec<(f64, TraceEvent)> {
+    spec.arrivals(cluster, seed)
+        .into_iter()
+        .map(|(t, loc)| (t, TraceEvent::Fail(loc)))
+        .collect()
 }
 
 #[cfg(test)]

@@ -1,0 +1,11 @@
+//! Continuous background scrubbing (DESIGN.md §15): where
+//! [`crate::cluster::fabric::run_scrub`] is a one-shot explicit pass,
+//! the daemon here cycles the checksum registry forever (or for a
+//! requested number of cycles) on any [`crate::cluster::fabric::BlockFabric`],
+//! throttling its probe intensity against live foreground and recovery
+//! activity and repairing what it finds through the shared
+//! quarantine-and-repair tail.
+
+pub mod daemon;
+
+pub use daemon::{run_daemon, CycleReport, DaemonReport, ScrubConfig};
