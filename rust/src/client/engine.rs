@@ -297,6 +297,7 @@ mod tests {
             read_weight: 2,
             degraded_weight: 1,
             write_weight: 1,
+            zipf: 0.0,
         };
         let failed = vec![p.stripe(2).locs[1]];
         let reqs = fg.generate(&p, 30, &failed, 4).unwrap();
@@ -325,6 +326,7 @@ mod tests {
             read_weight: 1,
             degraded_weight: 1,
             write_weight: 1,
+            zipf: 0.0,
         };
         let reqs = fg.generate(&p, 30, &[p.stripe(0).locs[3]], 8).unwrap();
         let (r, d, w) = class_counts(&reqs);

@@ -71,12 +71,25 @@ pub struct FgSpec {
     pub degraded_weight: u32,
     /// Relative weight of [`RequestClass::Write`].
     pub write_weight: u32,
+    /// Zipf skew exponent θ for read targets. 0.0 (the default everywhere)
+    /// keeps the original uniform draws and their exact RNG stream;
+    /// θ > 0 makes stripe 0 the hottest object (and, for degraded reads,
+    /// skews which lost block is hammered) — the millions-of-users
+    /// popularity model the hot-block cache is measured against.
+    pub zipf: f64,
 }
 
 impl FgSpec {
     /// Pure normal-read traffic.
     pub fn reads(requests: usize, arrival: ArrivalModel) -> FgSpec {
-        FgSpec { requests, arrival, read_weight: 1, degraded_weight: 0, write_weight: 0 }
+        FgSpec {
+            requests,
+            arrival,
+            read_weight: 1,
+            degraded_weight: 0,
+            write_weight: 0,
+            zipf: 0.0,
+        }
     }
 
     /// The degraded-read burst (paper Exp 3 as a concurrent burst): all
@@ -88,7 +101,14 @@ impl FgSpec {
             read_weight: 0,
             degraded_weight: 1,
             write_weight: 0,
+            zipf: 0.0,
         }
+    }
+
+    /// Same spec with a Zipf skew exponent applied to read targets.
+    pub fn with_zipf(mut self, theta: f64) -> FgSpec {
+        self.zipf = theta.max(0.0);
+        self
     }
 
     /// A MapReduce-shaped job (paper Table 2) as a block-request mix: the
@@ -106,6 +126,7 @@ impl FgSpec {
             read_weight: reads as u32,
             degraded_weight: 0,
             write_weight: writes as u32,
+            zipf: 0.0,
         }
     }
 
@@ -150,13 +171,14 @@ impl FgSpec {
         if total_weight == 0 {
             bail!("foreground spec has an all-zero class mix");
         }
-        // lost blocks (any block on a failed node) for the degraded class
+        // lost blocks (any block on a failed node) for the degraded class;
+        // probed per block via the alloc-free `block_at` lookup
         let lost: Vec<(u64, usize)> = if self.degraded_weight > 0 {
+            let len = table.code().len();
             let mut lost = Vec::new();
             for sid in 0..stripes {
-                let sp = table.stripe(sid);
-                for (bi, loc) in sp.locs.iter().enumerate() {
-                    if failed.contains(loc) {
+                for bi in 0..len {
+                    if failed.contains(&table.block_at(sid, bi)) {
                         lost.push((sid, bi));
                     }
                 }
@@ -179,9 +201,13 @@ impl FgSpec {
                 // every data block of every stripe in practice)
                 let mut choice = None;
                 for _ in 0..64 {
-                    let sid = rng.below_u64(stripes);
+                    let sid = if self.zipf > 0.0 {
+                        zipf_rank(&mut rng, stripes, self.zipf)
+                    } else {
+                        rng.below_u64(stripes)
+                    };
                     let block = rng.below(k);
-                    if !failed.contains(&table.stripe(sid).locs[block]) {
+                    if !failed.contains(&table.block_at(sid, block)) {
                         choice = Some(RequestClass::NormalRead { stripe: sid, block });
                         break;
                     }
@@ -191,7 +217,12 @@ impl FgSpec {
                 };
                 c
             } else if pick < self.read_weight + self.degraded_weight {
-                let (stripe, block) = lost[rng.below(lost.len())];
+                let idx = if self.zipf > 0.0 {
+                    zipf_rank(&mut rng, lost.len() as u64, self.zipf) as usize
+                } else {
+                    rng.below(lost.len())
+                };
+                let (stripe, block) = lost[idx];
                 RequestClass::DegradedRead { stripe, block }
             } else {
                 // fresh stripes land beyond the stored population
@@ -225,6 +256,24 @@ impl FgSpec {
     }
 }
 
+/// Inverse-CDF draw from the continuous bounded-Pareto approximation of a
+/// Zipf(θ) law over ranks `0..n` (rank 0 hottest): for u ~ U[0,1),
+/// x = (1 − u + u·n^(1−θ))^(1/(1−θ)) on [1, n], degenerating to x = n^u at
+/// θ = 1; rank = ⌊x⌋ − 1. One uniform per draw, no per-n precomputation,
+/// fully deterministic under the seeded [`Rng`].
+fn zipf_rank(rng: &mut Rng, n: u64, theta: f64) -> u64 {
+    debug_assert!(n > 0 && theta > 0.0);
+    let u = rng.f64();
+    let nf = n as f64;
+    let x = if (theta - 1.0).abs() < 1e-9 {
+        nf.powf(u)
+    } else {
+        let q = 1.0 - theta;
+        (1.0 - u + u * nf.powf(q)).powf(1.0 / q)
+    };
+    (x.floor() as u64).saturating_sub(1).min(n - 1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -247,6 +296,7 @@ mod tests {
             read_weight: 3,
             degraded_weight: 1,
             write_weight: 1,
+            zipf: 0.0,
         };
         // a node that certainly stores blocks
         let failed = vec![p.stripe(0).locs[0]];
@@ -267,6 +317,7 @@ mod tests {
             read_weight: 2,
             degraded_weight: 1,
             write_weight: 0,
+            zipf: 0.0,
         };
         let reqs = spec.generate(&p, 60, &failed, 3).unwrap();
         assert_eq!(reqs.len(), 80);
@@ -340,6 +391,7 @@ mod tests {
             read_weight: 0,
             degraded_weight: 0,
             write_weight: 1,
+            zipf: 0.0,
         };
         let reqs = spec.generate(&p, 30, &[], 2).unwrap();
         let sids: Vec<u64> = reqs
@@ -353,6 +405,57 @@ mod tests {
     }
 
     #[test]
+    fn zipf_zero_is_exactly_the_uniform_stream() {
+        let p = policy();
+        let spec = FgSpec::reads(60, ArrivalModel::Open { rate_rps: 8.0 });
+        let uniform = spec.generate(&p, 200, &[], 13).unwrap();
+        let zipfed = spec.clone().with_zipf(0.0).generate(&p, 200, &[], 13).unwrap();
+        assert_eq!(uniform, zipfed, "θ = 0 must not perturb the RNG stream");
+    }
+
+    #[test]
+    fn zipf_skew_concentrates_reads_on_hot_stripes() {
+        let p = policy();
+        let spec = FgSpec::reads(2000, ArrivalModel::Open { rate_rps: f64::INFINITY });
+        let stripes = 1000u64;
+        let count_top10 = |reqs: &[Request]| {
+            reqs.iter()
+                .filter(|r| matches!(r.class, RequestClass::NormalRead { stripe, .. } if stripe < 10))
+                .count()
+        };
+        let uniform = spec.generate(&p, stripes, &[], 21).unwrap();
+        let skewed = spec.clone().with_zipf(0.99).generate(&p, stripes, &[], 21).unwrap();
+        let (u10, s10) = (count_top10(&uniform), count_top10(&skewed));
+        // Uniform puts ~1% of reads on the 10 hottest stripes; Zipf(0.99)
+        // puts ~ln(11)/ln(1001) ≈ 35% there.
+        assert!(u10 < 100, "uniform top-10 share unexpectedly high: {u10}");
+        assert!(s10 > 400, "zipf top-10 share too low: {s10}");
+        // Deterministic and in bounds.
+        let again = spec.with_zipf(0.99).generate(&p, stripes, &[], 21).unwrap();
+        assert_eq!(skewed, again);
+        for r in &skewed {
+            if let RequestClass::NormalRead { stripe, .. } = r.class {
+                assert!(stripe < stripes);
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_rank_sampler_is_bounded_and_hot_at_rank_zero() {
+        let mut rng = Rng::keyed(7, 1, 2);
+        let mut counts = [0usize; 16];
+        for _ in 0..4000 {
+            let r = zipf_rank(&mut rng, 16, 1.2);
+            assert!(r < 16);
+            counts[r as usize] += 1;
+        }
+        assert!(counts[0] > counts[8], "rank 0 must dominate mid ranks");
+        assert!(counts[0] > 4000 / 16, "rank 0 must beat the uniform share");
+        // degenerate n = 1 never panics and always returns rank 0
+        assert_eq!(zipf_rank(&mut rng, 1, 0.9), 0);
+    }
+
+    #[test]
     fn empty_mix_and_vacuous_degraded_are_errors() {
         let p = policy();
         let none = FgSpec {
@@ -361,6 +464,7 @@ mod tests {
             read_weight: 0,
             degraded_weight: 0,
             write_weight: 0,
+            zipf: 0.0,
         };
         assert!(none.generate(&p, 10, &[], 0).is_err());
         // a degraded mix against an empty failure set is vacuous

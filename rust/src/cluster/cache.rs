@@ -1,0 +1,403 @@
+//! Multi-level hot-block read cache (DESIGN.md §16): a byte-bounded,
+//! sharded, **segmented LRU** with popularity-aware admission, layered in
+//! front of the [`crate::cluster::store::BlockStore`] on the client read
+//! path.
+//!
+//! Levels:
+//!
+//! * **ghost** — a payload-free recency list of recently *seen* keys. A
+//!   first-touch miss only records the key here; the payload is not
+//!   admitted. One-hit wonders (the long Zipf tail) therefore never
+//!   displace resident bytes — admission requires a second touch while
+//!   the ghost remembers the first.
+//! * **probation** — newly admitted payloads. Eviction pressure lands
+//!   here first.
+//! * **protected** — payloads re-referenced *after* admission. A
+//!   protected overflow demotes the coldest entry back to probation
+//!   rather than evicting it, so the hot set survives scan traffic.
+//!
+//! Capacity is bytes of resident payload, split across shards (keyed by
+//! block id) so concurrent readers do not serialize. Hit/miss/admission
+//! counters are relaxed atomics — the scenario runner and the
+//! `cache_hit_vs_miss_degraded_read` bench row read them lock-free.
+//!
+//! The cache is a *client-side* tier: a hit serves the payload without
+//! touching the store **or** the modeled network (no link tokens, no
+//! transfer latency), which is exactly how it bends the degraded-read
+//! tail — a hot lost block is rebuilt once and then served from memory
+//! while recovery grinds on behind it.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::cluster::store::BlockKey;
+
+const SHARDS: usize = 16;
+/// Fraction of a shard's byte budget reserved for the protected segment.
+const PROTECTED_NUM: usize = 4;
+const PROTECTED_DEN: usize = 5;
+/// Ghost entries kept per shard (keys only, no payload bytes).
+const GHOST_CAP: usize = 4096;
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Segment {
+    Probation,
+    Protected,
+}
+
+struct Entry {
+    bytes: Vec<u8>,
+    seg: Segment,
+    /// Recency tick; also the key into the shard's order maps.
+    tick: u64,
+}
+
+struct Shard {
+    map: HashMap<BlockKey, Entry>,
+    /// tick → key, per segment: first entry is the coldest.
+    probation: BTreeMap<u64, BlockKey>,
+    protected: BTreeMap<u64, BlockKey>,
+    ghost: HashMap<BlockKey, u64>,
+    ghost_order: BTreeMap<u64, BlockKey>,
+    probation_bytes: usize,
+    protected_bytes: usize,
+    tick: u64,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            map: HashMap::new(),
+            probation: BTreeMap::new(),
+            protected: BTreeMap::new(),
+            ghost: HashMap::new(),
+            ghost_order: BTreeMap::new(),
+            probation_bytes: 0,
+            protected_bytes: 0,
+            tick: 0,
+        }
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    fn remember_ghost(&mut self, key: BlockKey) {
+        let tick = self.next_tick();
+        if let Some(old) = self.ghost.insert(key, tick) {
+            self.ghost_order.remove(&old);
+        }
+        self.ghost_order.insert(tick, key);
+        while self.ghost.len() > GHOST_CAP {
+            let (_, victim) = self.ghost_order.pop_first().expect("ghost order in sync");
+            self.ghost.remove(&victim);
+        }
+    }
+
+    fn forget_ghost(&mut self, key: BlockKey) -> bool {
+        if let Some(tick) = self.ghost.remove(&key) {
+            self.ghost_order.remove(&tick);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Move `key` to the warm end of its segment (possibly switching
+    /// segment), keeping byte counters straight.
+    fn touch(&mut self, key: BlockKey, promote: bool) {
+        let tick = self.next_tick();
+        let Some(entry) = self.map.get_mut(&key) else { return };
+        let size = entry.bytes.len();
+        match entry.seg {
+            Segment::Probation => {
+                self.probation.remove(&entry.tick);
+                if promote {
+                    entry.seg = Segment::Protected;
+                    entry.tick = tick;
+                    self.protected.insert(tick, key);
+                    self.probation_bytes -= size;
+                    self.protected_bytes += size;
+                } else {
+                    entry.tick = tick;
+                    self.probation.insert(tick, key);
+                }
+            }
+            Segment::Protected => {
+                self.protected.remove(&entry.tick);
+                entry.tick = tick;
+                self.protected.insert(tick, key);
+            }
+        }
+    }
+
+    /// Demote protected's coldest entries into probation until protected
+    /// fits its slice of the budget.
+    fn rebalance(&mut self, shard_capacity: usize) {
+        let protected_cap = shard_capacity * PROTECTED_NUM / PROTECTED_DEN;
+        while self.protected_bytes > protected_cap {
+            let Some((_, key)) = self.protected.pop_first() else { break };
+            let tick = self.next_tick();
+            let entry = self.map.get_mut(&key).expect("order maps in sync");
+            let size = entry.bytes.len();
+            entry.seg = Segment::Probation;
+            entry.tick = tick;
+            self.probation.insert(tick, key);
+            self.protected_bytes -= size;
+            self.probation_bytes += size;
+        }
+    }
+
+    /// Evict probation's coldest entries until the shard fits. Returns
+    /// how many entries were dropped.
+    fn evict_to(&mut self, shard_capacity: usize) -> u64 {
+        let mut evicted = 0;
+        while self.probation_bytes + self.protected_bytes > shard_capacity {
+            let Some((_, key)) = self.probation.pop_first() else {
+                // probation empty but still over budget: spill protected
+                let Some((_, key)) = self.protected.pop_first() else { break };
+                let entry = self.map.remove(&key).expect("order maps in sync");
+                self.protected_bytes -= entry.bytes.len();
+                evicted += 1;
+                continue;
+            };
+            let entry = self.map.remove(&key).expect("order maps in sync");
+            self.probation_bytes -= entry.bytes.len();
+            evicted += 1;
+        }
+        evicted
+    }
+
+    fn invalidate(&mut self, key: BlockKey) {
+        self.forget_ghost(key);
+        if let Some(entry) = self.map.remove(&key) {
+            match entry.seg {
+                Segment::Probation => {
+                    self.probation.remove(&entry.tick);
+                    self.probation_bytes -= entry.bytes.len();
+                }
+                Segment::Protected => {
+                    self.protected.remove(&entry.tick);
+                    self.protected_bytes -= entry.bytes.len();
+                }
+            }
+        }
+    }
+}
+
+/// Lock-free snapshot of the cache's counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Payloads admitted into probation (second touch within the ghost's
+    /// memory).
+    pub admitted: u64,
+    /// First-touch misses recorded only in the ghost (payload rejected).
+    pub rejected: u64,
+    pub evicted: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The cache tier. Cheap to share behind an `Arc`; every method is
+/// `&self`.
+pub struct HotBlockCache {
+    shards: Vec<Mutex<Shard>>,
+    shard_capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    evicted: AtomicU64,
+}
+
+impl HotBlockCache {
+    /// `capacity_bytes` of resident payload across all shards.
+    pub fn new(capacity_bytes: u64) -> HotBlockCache {
+        let shard_capacity = ((capacity_bytes as usize) / SHARDS).max(1);
+        HotBlockCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(Shard::new())).collect(),
+            shard_capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, key: BlockKey) -> &Mutex<Shard> {
+        let h = key.0.wrapping_mul(0x9e3779b97f4a7c15) ^ (key.1 as u64).wrapping_mul(31);
+        &self.shards[(h as usize) & (SHARDS - 1)]
+    }
+
+    /// Look up a block. A probation hit promotes to protected; any hit
+    /// refreshes recency.
+    pub fn get(&self, key: BlockKey) -> Option<Vec<u8>> {
+        let mut shard = self.shard(key).lock().unwrap();
+        if let Some(entry) = shard.map.get(&key) {
+            let bytes = entry.bytes.clone();
+            shard.touch(key, true);
+            shard.rebalance(self.shard_capacity);
+            drop(shard);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(bytes);
+        }
+        drop(shard);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Offer a payload after a miss was served from the store. Admission
+    /// is popularity-gated: first touch only records the key in the ghost
+    /// list; a second touch (while the ghost remembers) admits the bytes
+    /// into probation.
+    pub fn admit(&self, key: BlockKey, bytes: &[u8]) {
+        if bytes.len() > self.shard_capacity {
+            return; // larger than a whole shard: never cacheable
+        }
+        let mut shard = self.shard(key).lock().unwrap();
+        if shard.map.contains_key(&key) {
+            shard.touch(key, false);
+            return;
+        }
+        if !shard.forget_ghost(key) {
+            shard.remember_ghost(key);
+            drop(shard);
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let tick = shard.next_tick();
+        shard.map.insert(key, Entry { bytes: bytes.to_vec(), seg: Segment::Probation, tick });
+        shard.probation.insert(tick, key);
+        shard.probation_bytes += bytes.len();
+        let evicted = shard.evict_to(self.shard_capacity);
+        drop(shard);
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        self.evicted.fetch_add(evicted, Ordering::Relaxed);
+    }
+
+    /// Drop a (possibly stale) payload — corruption injection and block
+    /// rewrites call this so the cache never serves bytes the store
+    /// disowned.
+    pub fn invalidate(&self, key: BlockKey) {
+        self.shard(key).lock().unwrap().invalidate(key);
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Resident payload bytes (all shards).
+    pub fn resident_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                let s = s.lock().unwrap();
+                s.probation_bytes + s.protected_bytes
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(i: u64) -> BlockKey {
+        (i, 0)
+    }
+
+    #[test]
+    fn first_touch_is_rejected_second_touch_admits() {
+        let c = HotBlockCache::new(1 << 20);
+        assert!(c.get(key(1)).is_none());
+        c.admit(key(1), &[1, 2, 3]);
+        assert!(c.get(key(1)).is_none(), "one-hit wonder stays out");
+        c.admit(key(1), &[1, 2, 3]);
+        assert_eq!(c.get(key(1)).unwrap(), vec![1, 2, 3]);
+        let stats = c.stats();
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.admitted, 1);
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.misses, 2);
+    }
+
+    #[test]
+    fn capacity_is_bounded_and_evicts_cold_probation_first() {
+        // one shard's budget is capacity/16; use blocks sized so ~4 fit
+        let c = HotBlockCache::new(16 * 4 * 100);
+        let block = vec![0u8; 100];
+        // admit many distinct keys twice each; resident bytes stay bounded
+        for i in 0..200u64 {
+            c.admit(key(i), &block);
+            c.admit(key(i), &block);
+        }
+        assert!(
+            c.resident_bytes() <= 16 * 4 * 100,
+            "resident {} exceeds capacity",
+            c.resident_bytes()
+        );
+        assert!(c.stats().evicted > 0);
+    }
+
+    #[test]
+    fn hot_keys_survive_a_scan() {
+        let c = HotBlockCache::new(16 * 8 * 100);
+        let block = vec![0u8; 100];
+        // make key 0 hot: admitted and repeatedly re-referenced
+        c.admit(key(0), &block);
+        c.admit(key(0), &block);
+        for _ in 0..5 {
+            assert!(c.get(key(0)).is_some());
+        }
+        // now scan a pile of cold keys through the same shard set
+        for i in 1..500u64 {
+            c.admit(key(i), &block);
+            c.admit(key(i), &block);
+        }
+        assert!(c.get(key(0)).is_some(), "protected entry evicted by scan traffic");
+    }
+
+    #[test]
+    fn invalidate_removes_payload_and_ghost_memory() {
+        let c = HotBlockCache::new(1 << 20);
+        c.admit(key(9), &[1]);
+        c.invalidate(key(9)); // ghost forgotten too
+        c.admit(key(9), &[1]);
+        assert!(c.get(key(9)).is_none(), "ghost should have been reset");
+        c.admit(key(9), &[1]);
+        assert!(c.get(key(9)).is_some());
+        c.invalidate(key(9));
+        assert!(c.get(key(9)).is_none());
+    }
+
+    #[test]
+    fn oversized_payloads_are_never_admitted() {
+        let c = HotBlockCache::new(160); // shard budget: 10 bytes
+        let big = vec![0u8; 64];
+        c.admit(key(1), &big);
+        c.admit(key(1), &big);
+        assert!(c.get(key(1)).is_none());
+        assert_eq!(c.resident_bytes(), 0);
+    }
+}

@@ -9,12 +9,14 @@
 //! lives in [`MiniCluster`]. The discrete-event simulator answers the
 //! paper's parameter sweeps; this cluster proves the layers compose.
 
+pub mod cache;
 pub mod fabric;
 pub mod links;
 pub mod service;
+pub mod store;
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
@@ -30,11 +32,24 @@ use crate::recovery::plan::{plan_coefficients, plan_degraded_read, plan_repair, 
 use crate::recovery::schedule::SchedulePolicy;
 use crate::topology::{Location, SystemSpec};
 
+pub use cache::{CacheStats, HotBlockCache};
 pub use fabric::BlockFabric;
 use links::{LinkSet, TrafficClass};
 use service::CoderService;
+pub use store::{
+    BlockKey, BlockStore, ChecksumRegistry, ChunkError, MaterializedStore, SyntheticStore,
+};
 
-type BlockKey = (u64, usize);
+/// Relocation-table shards (block map overrides after recovery): keyed by
+/// block, so the executor's persist path and the NameNode's lookups only
+/// collide when they touch the same key neighborhood.
+const RELOC_SHARDS: usize = 64;
+
+#[inline]
+fn reloc_shard(key: BlockKey) -> usize {
+    let h = key.0.wrapping_mul(0x9e3779b97f4a7c15) ^ (key.1 as u64).wrapping_mul(31);
+    (h as usize) & (RELOC_SHARDS - 1)
+}
 
 /// Outcome of [`MiniCluster::recover_node`].
 #[derive(Clone, Debug)]
@@ -69,14 +84,23 @@ pub struct MiniCluster {
     /// every stripe encode reuses them instead of rebuilding the
     /// generator matrix per stripe.
     parity_rows: crate::gf::Matrix,
-    /// per-node block store
-    stores: Vec<Arc<Mutex<HashMap<BlockKey, Vec<u8>>>>>,
-    /// metadata overrides after recovery (NameNode block map)
-    relocated: Mutex<HashMap<BlockKey, Location>>,
+    /// Block payload storage behind the [`BlockStore`] trait (DESIGN.md
+    /// §16): materialized per-node maps, or the synthetic
+    /// regenerate-on-read store for at-scale runs.
+    store: Box<dyn BlockStore>,
+    /// Metadata overrides after recovery (NameNode block map), sharded by
+    /// block key; `relocated_count` mirrors the total entry count so the
+    /// common no-override lookup is a single relaxed atomic load.
+    relocated: Vec<Mutex<HashMap<BlockKey, Location>>>,
+    relocated_count: AtomicUsize,
     failed: Mutex<Vec<Location>>,
     /// Write-time checksum registry (first write wins): the scrub pass's
     /// oracle for detecting silent replica corruption (DESIGN.md §14).
-    checksums: Mutex<HashMap<BlockKey, u64>>,
+    /// Sharded — 8-writer ingest used to serialize on one global mutex.
+    checksums: ChecksumRegistry,
+    /// Optional hot-block read cache tier (DESIGN.md §16): a hit serves
+    /// client reads without touching the store or the modeled links.
+    cache: Option<Arc<HotBlockCache>>,
     /// cross-rack traffic accounting (up, down) per rack
     rack_up: Vec<AtomicU64>,
     rack_down: Vec<AtomicU64>,
@@ -102,24 +126,59 @@ struct QosRuntime {
 }
 
 impl MiniCluster {
-    /// `backend`: "native" or "pjrt".
+    /// `backend`: "native" or "pjrt". Blocks live in the materialized
+    /// per-node store — the original representation.
     pub fn new(
         spec: SystemSpec,
         policy: Arc<dyn Placement>,
         backend: &str,
         seed: u64,
     ) -> anyhow::Result<MiniCluster> {
+        let store = Box::new(MaterializedStore::new(spec.cluster.node_count()));
+        MiniCluster::with_store(spec, policy, backend, seed, store)
+    }
+
+    /// [`MiniCluster::new`] on the synthetic regenerate-on-read store
+    /// (DESIGN.md §16): payloads are derived from the canonical populate
+    /// generator plus the code's parity rows, so resident memory is
+    /// O(metadata). Pair with [`MiniCluster::populate_synthetic`] instead
+    /// of writing stripes.
+    pub fn new_synthetic(
+        spec: SystemSpec,
+        policy: Arc<dyn Placement>,
+        backend: &str,
+        seed: u64,
+    ) -> anyhow::Result<MiniCluster> {
+        let code = policy.code();
+        let store = Box::new(SyntheticStore::new(
+            spec.cluster.node_count(),
+            code.k(),
+            code.len(),
+            spec.block_size as usize,
+            parity_matrix(&code),
+        ));
+        MiniCluster::with_store(spec, policy, backend, seed, store)
+    }
+
+    /// Construct on an explicit [`BlockStore`] implementation.
+    pub fn with_store(
+        spec: SystemSpec,
+        policy: Arc<dyn Placement>,
+        backend: &str,
+        seed: u64,
+        store: Box<dyn BlockStore>,
+    ) -> anyhow::Result<MiniCluster> {
         assert_eq!(policy.cluster(), spec.cluster, "policy/topology mismatch");
         let coder = CoderService::spawn_pool(backend, encode_pool_size())?;
         let parity_rows = parity_matrix(&policy.code());
         Ok(MiniCluster {
             links: Arc::new(LinkSet::new(&spec)),
-            stores: (0..spec.cluster.node_count())
-                .map(|_| Arc::new(Mutex::new(HashMap::new())))
-                .collect(),
-            relocated: Mutex::new(HashMap::new()),
+            store,
+            relocated: (0..RELOC_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            relocated_count: AtomicUsize::new(0),
             failed: Mutex::new(Vec::new()),
-            checksums: Mutex::new(HashMap::new()),
+            checksums: ChecksumRegistry::new(),
+            cache: None,
             rack_up: (0..spec.cluster.racks).map(|_| AtomicU64::new(0)).collect(),
             rack_down: (0..spec.cluster.racks).map(|_| AtomicU64::new(0)).collect(),
             accounting: RwLock::new(()),
@@ -133,6 +192,31 @@ impl MiniCluster {
         })
     }
 
+    /// Adopt `stripes` canonically-placed stripes without materializing a
+    /// byte — the synthetic store's populate path. No modeled transfers
+    /// run (the scenario runner diffs its byte counters *after* populate,
+    /// so accounting parity with the written-out path holds) and the
+    /// checksum registry stays empty: the write-time oracle is derivable
+    /// on demand ([`BlockStore::baseline_checksum`]).
+    pub fn populate_synthetic(&self, stripes: u64) -> anyhow::Result<()> {
+        if !self.store.populate(stripes) {
+            bail!("this store materializes payloads — write stripes instead");
+        }
+        Ok(())
+    }
+
+    /// Install a hot-block read cache tier of `capacity_bytes` (DESIGN.md
+    /// §16). Off by default; a cache changes *latency*, never bytes-on-
+    /// disk correctness.
+    pub fn set_cache(&mut self, capacity_bytes: u64) {
+        self.cache = Some(Arc::new(HotBlockCache::new(capacity_bytes)));
+    }
+
+    /// Counters of the installed cache tier, if any.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
+
     pub fn spec(&self) -> &SystemSpec {
         &self.spec
     }
@@ -141,16 +225,41 @@ impl MiniCluster {
         self.policy.as_ref()
     }
 
-    fn store_of(&self, loc: Location) -> &Arc<Mutex<HashMap<BlockKey, Vec<u8>>>> {
-        &self.stores[self.spec.cluster.flat(loc)]
-    }
-
     /// Current location of a block (NameNode metadata).
     pub fn locate(&self, sid: u64, block: usize) -> Location {
-        if let Some(loc) = self.relocated.lock().unwrap().get(&(sid, block)) {
-            return *loc;
+        self.locate_flat(sid, block).0
+    }
+
+    /// One-pass metadata lookup for the chunk hot path: location and flat
+    /// node index together, so store access never re-derives
+    /// `cluster.flat(loc)` (or worse, a full stripe placement) per call.
+    /// When no block has ever been relocated the override check is a
+    /// single relaxed load — no lock.
+    fn locate_flat(&self, sid: u64, block: usize) -> (Location, usize) {
+        let key = (sid, block);
+        if self.relocated_count.load(Ordering::Relaxed) > 0 {
+            if let Some(&loc) = self.relocated[reloc_shard(key)].lock().unwrap().get(&key) {
+                return (loc, self.spec.cluster.flat(loc));
+            }
         }
-        self.policy.stripe(sid).locs[block]
+        let loc = self.policy.block_at(sid, block);
+        (loc, self.spec.cluster.flat(loc))
+    }
+
+    /// Point the block map's override for `key` at `loc`.
+    fn set_relocation(&self, key: BlockKey, loc: Location) {
+        let prev = self.relocated[reloc_shard(key)].lock().unwrap().insert(key, loc);
+        if prev.is_none() {
+            self.relocated_count.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Drop the override for `key` (the block is home).
+    fn clear_relocation(&self, key: BlockKey) {
+        let prev = self.relocated[reloc_shard(key)].lock().unwrap().remove(&key);
+        if prev.is_some() {
+            self.relocated_count.fetch_sub(1, Ordering::Relaxed);
+        }
     }
 
     fn transfer(&self, src: Location, dst: Location, bytes: u64, class: TrafficClass) {
@@ -275,15 +384,16 @@ impl MiniCluster {
             let dst = sp.locs[bi];
             // register the checksum even when the replica is skipped —
             // it is the oracle the eventual recovery is verified against
-            self.checksums
-                .lock()
-                .unwrap()
-                .insert((sid, bi), crate::net::proto::checksum(&bytes));
+            self.checksums.insert((sid, bi), crate::net::proto::checksum(&bytes));
             if failed.contains(&dst) {
                 continue;
             }
             self.transfer(client, dst, bytes.len() as u64, TrafficClass::Foreground);
-            self.store_of(dst).lock().unwrap().insert((sid, bi), bytes);
+            if let Some(cache) = &self.cache {
+                // a rewrite must never leave stale payloads servable
+                cache.invalidate((sid, bi));
+            }
+            self.store.insert(self.spec.cluster.flat(dst), (sid, bi), bytes);
         }
         Ok(())
     }
@@ -321,37 +431,41 @@ impl MiniCluster {
         Ok(())
     }
 
-    /// Plain read of a healthy block at `client`.
+    /// Plain read of a healthy block at `client`. A cache-tier hit serves
+    /// the payload without touching the store *or* the modeled links —
+    /// the client already holds the bytes in local memory.
     pub fn read_block(&self, sid: u64, block: usize, client: Location) -> anyhow::Result<Vec<u8>> {
-        let loc = self.locate(sid, block);
+        if let Some(cache) = &self.cache {
+            if let Some(data) = cache.get((sid, block)) {
+                return Ok(data);
+            }
+        }
+        let (loc, at) = self.locate_flat(sid, block);
         if self.failed.lock().unwrap().contains(&loc) {
             bail!("block ({sid},{block}) is on failed node {loc} — use degraded_read");
         }
         let data = self
-            .store_of(loc)
-            .lock()
-            .unwrap()
-            .get(&(sid, block))
-            .cloned()
+            .store
+            .read(at, (sid, block))
             .ok_or_else(|| anyhow!("block ({sid},{block}) missing at {loc}"))?;
         self.transfer(loc, client, data.len() as u64, TrafficClass::Foreground);
+        if let Some(cache) = &self.cache {
+            cache.admit((sid, block), &data);
+        }
         Ok(data)
     }
 
     /// Kill a node: erase its storage (recovery must rebuild from peers).
     pub fn fail_node(&self, loc: Location) {
         self.failed.lock().unwrap().push(loc);
-        self.store_of(loc).lock().unwrap().clear();
+        self.store.clear_node(self.spec.cluster.flat(loc));
     }
 
     fn fetch(&self, sid: u64, block: usize, to: Location) -> anyhow::Result<Vec<u8>> {
-        let loc = self.locate(sid, block);
+        let (loc, at) = self.locate_flat(sid, block);
         let data = self
-            .store_of(loc)
-            .lock()
-            .unwrap()
-            .get(&(sid, block))
-            .cloned()
+            .store
+            .read(at, (sid, block))
             .ok_or_else(|| anyhow!("source block ({sid},{block}) missing at {loc}"))?;
         self.transfer(loc, to, data.len() as u64, TrafficClass::Foreground);
         Ok(data)
@@ -370,22 +484,18 @@ impl MiniCluster {
         len: usize,
         buf: &mut Vec<u8>,
     ) -> anyhow::Result<Location> {
-        let loc = self.locate(sid, block);
-        let store = self.store_of(loc).lock().unwrap();
-        let blk = store
-            .get(&(sid, block))
-            .ok_or_else(|| anyhow!("source block ({sid},{block}) missing at {loc}"))?;
+        let (loc, at) = self.locate_flat(sid, block);
         let off = off as usize;
-        if off + len > blk.len() {
-            bail!(
-                "chunk [{off}, {}) out of range for block ({sid},{block}) of {} bytes",
+        match self.store.read_chunk(at, (sid, block), off, len, buf) {
+            Ok(()) => Ok(loc),
+            Err(ChunkError::Missing) => {
+                Err(anyhow!("source block ({sid},{block}) missing at {loc}"))
+            }
+            Err(ChunkError::OutOfRange { have }) => Err(anyhow!(
+                "chunk [{off}, {}) out of range for block ({sid},{block}) of {have} bytes",
                 off + len,
-                blk.len()
-            );
+            )),
         }
-        buf.clear();
-        buf.extend_from_slice(&blk[off..off + len]);
-        Ok(loc)
     }
 
     /// Execute one repair plan: inner-rack aggregation (D³) or direct
@@ -461,19 +571,18 @@ impl MiniCluster {
         }
         let rebuilt = self.coder.combine(final_coeffs, final_shards)?;
         if plan.persist {
-            self.store_of(plan.writer)
-                .lock()
-                .unwrap()
-                .insert((plan.stripe, plan.failed_block), rebuilt.clone());
-            self.relocated
-                .lock()
-                .unwrap()
-                .insert((plan.stripe, plan.failed_block), plan.writer);
+            let key = (plan.stripe, plan.failed_block);
+            self.store.insert(self.spec.cluster.flat(plan.writer), key, rebuilt.clone());
+            self.set_relocation(key, plan.writer);
         }
         Ok(rebuilt)
     }
 
-    /// Degraded read: rebuild `(sid, block)` at `client` (paper Exp 3).
+    /// Degraded read: rebuild `(sid, block)` at `client` (paper Exp 3). A
+    /// cache-tier hit short-circuits the whole rebuild — no source
+    /// fetches, no combine, no modeled transfers — which is how the hot
+    /// tail of a Zipf-skewed degraded burst stops paying the k-fetch
+    /// latency on every repeat access.
     pub fn degraded_read(
         &self,
         sid: u64,
@@ -481,8 +590,16 @@ impl MiniCluster {
         client: Location,
     ) -> anyhow::Result<(Vec<u8>, Duration)> {
         let t0 = Instant::now();
+        if let Some(cache) = &self.cache {
+            if let Some(data) = cache.get((sid, block)) {
+                return Ok((data, t0.elapsed()));
+            }
+        }
         let plan = plan_degraded_read(self.policy.as_ref(), sid, block, client, self.seed);
         let data = self.execute_plan(&plan)?;
+        if let Some(cache) = &self.cache {
+            cache.admit((sid, block), &data);
+        }
         Ok((data, t0.elapsed()))
     }
 
@@ -561,28 +678,25 @@ impl MiniCluster {
     /// [`crate::net::NetCluster::join`]. Returns the blocks moved home.
     pub fn rejoin_node(&self, loc: Location) -> anyhow::Result<usize> {
         self.relive_node(loc);
-        let mut moves: Vec<(BlockKey, Location)> = self
-            .relocated
-            .lock()
-            .unwrap()
-            .iter()
-            .filter(|&(&(sid, block), &cur)| {
-                cur != loc && self.policy.stripe(sid).locs[block] == loc
-            })
-            .map(|(&key, &cur)| (key, cur))
-            .collect();
+        let mut moves: Vec<(BlockKey, Location)> = Vec::new();
+        for shard in &self.relocated {
+            let guard = shard.lock().unwrap();
+            for (&(sid, block), &cur) in guard.iter() {
+                if cur != loc && self.policy.block_at(sid, block) == loc {
+                    moves.push(((sid, block), cur));
+                }
+            }
+        }
         moves.sort_unstable_by_key(|&(key, _)| key);
         for &((sid, block), from) in &moves {
+            let from_at = self.spec.cluster.flat(from);
             let bytes = self
-                .store_of(from)
-                .lock()
-                .unwrap()
-                .get(&(sid, block))
-                .cloned()
+                .store
+                .read(from_at, (sid, block))
                 .ok_or_else(|| anyhow!("relocated block ({sid},{block}) missing at {from}"))?;
             self.transfer(from, loc, bytes.len() as u64, TrafficClass::Recovery);
             BlockFabric::persist_block(self, sid, block, loc, bytes)?;
-            self.store_of(from).lock().unwrap().remove(&(sid, block));
+            self.store.remove(from_at, (sid, block));
         }
         Ok(moves.len())
     }
@@ -606,9 +720,10 @@ impl MiniCluster {
         fabric::run_mixed_load(self, plans, cfg, failed_racks, reqs, arrival, fg_workers, qos)
     }
 
-    /// Blocks currently stored on `loc`.
+    /// Blocks currently stored on `loc` (for the synthetic store: resident
+    /// overlay entries — the implicit base population is not enumerated).
     pub fn block_count(&self, loc: Location) -> usize {
-        self.store_of(loc).lock().unwrap().len()
+        self.store.len(self.spec.cluster.flat(loc))
     }
 
     /// Snapshot of the per-rack cross-rack byte counters (up, down) —
@@ -671,23 +786,20 @@ impl BlockFabric for MiniCluster {
         bytes: Vec<u8>,
     ) -> anyhow::Result<()> {
         let sum = crate::net::proto::checksum(&bytes);
-        self.store_of(at).lock().unwrap().insert((sid, block), bytes);
-        let canonical = self.policy.stripe(sid).locs[block];
-        let mut rel = self.relocated.lock().unwrap();
-        if canonical == at {
-            rel.remove(&(sid, block));
+        self.store.insert(self.spec.cluster.flat(at), (sid, block), bytes);
+        if self.policy.block_at(sid, block) == at {
+            self.clear_relocation((sid, block));
         } else {
-            rel.insert((sid, block), at);
+            self.set_relocation((sid, block), at);
         }
-        drop(rel);
         // first write wins: a recovered block must reproduce the bytes
         // the original write registered, never redefine them
-        self.checksums.lock().unwrap().entry((sid, block)).or_insert(sum);
+        self.checksums.or_insert((sid, block), sum);
         Ok(())
     }
 
     fn remove_block(&self, sid: u64, block: usize, at: Location) -> anyhow::Result<()> {
-        self.store_of(at).lock().unwrap().remove(&(sid, block));
+        self.store.remove(self.spec.cluster.flat(at), (sid, block));
         Ok(())
     }
 
@@ -719,29 +831,29 @@ impl BlockFabric for MiniCluster {
     }
 
     fn stored_checksum(&self, sid: u64, block: usize) -> anyhow::Result<u64> {
-        let loc = MiniCluster::locate(self, sid, block);
-        let store = self.store_of(loc).lock().unwrap();
-        let blk = store
-            .get(&(sid, block))
-            .ok_or_else(|| anyhow!("block ({sid},{block}) missing at {loc}"))?;
-        Ok(crate::net::proto::checksum(blk))
+        let (loc, at) = self.locate_flat(sid, block);
+        self.store
+            .stored_checksum(at, (sid, block))
+            .ok_or_else(|| anyhow!("block ({sid},{block}) missing at {loc}"))
     }
 
     fn expected_checksum(&self, sid: u64, block: usize) -> Option<u64> {
-        self.checksums.lock().unwrap().get(&(sid, block)).copied()
+        // the registry wins; the synthetic store derives the write-time
+        // oracle for its unregistered base population on demand
+        self.checksums
+            .get((sid, block))
+            .or_else(|| self.store.baseline_checksum((sid, block)))
     }
 
     fn corrupt_stored(&self, sid: u64, block: usize) -> anyhow::Result<()> {
-        let loc = MiniCluster::locate(self, sid, block);
-        let mut store = self.store_of(loc).lock().unwrap();
-        let blk = store
-            .get_mut(&(sid, block))
-            .ok_or_else(|| anyhow!("block ({sid},{block}) missing at {loc}"))?;
-        let Some(byte) = blk.first_mut() else {
-            bail!("block ({sid},{block}) at {loc} is empty");
-        };
-        *byte ^= 1;
-        Ok(())
+        let (loc, at) = self.locate_flat(sid, block);
+        if let Some(cache) = &self.cache {
+            // never serve bytes the store just disowned
+            cache.invalidate((sid, block));
+        }
+        self.store
+            .corrupt(at, (sid, block))
+            .map_err(|e| anyhow!("{e} at {loc}"))
     }
 
     fn rejoin_node(&self, loc: Location) -> anyhow::Result<usize> {
@@ -827,6 +939,50 @@ pub struct ClusterBackend {
     /// Move each task's same-destination fetches in one batched gated
     /// round trip (`--batched-fetch`, DESIGN.md §10).
     pub batched_fetch: bool,
+    /// Block representation (`--store`, DESIGN.md §16): materialized
+    /// payloads, synthetic regenerate-on-read, or auto by footprint.
+    pub store: StoreMode,
+    /// Hot-block read cache capacity in MiB (`--cache-mb`); 0 disables
+    /// the tier (DESIGN.md §16).
+    pub cache_mb: u64,
+}
+
+/// Which [`BlockStore`] a scenario run populates (DESIGN.md §16).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StoreMode {
+    /// Synthetic iff the virtual payload footprint
+    /// (stripes × code len × block size) exceeds 1 GiB.
+    #[default]
+    Auto,
+    Materialized,
+    Synthetic,
+}
+
+impl StoreMode {
+    /// Resolve against a scenario's virtual payload footprint.
+    pub fn synthetic_for(self, stripes: u64, code_len: usize, block_size: u64) -> bool {
+        match self {
+            StoreMode::Materialized => false,
+            StoreMode::Synthetic => true,
+            StoreMode::Auto => {
+                let virt = stripes as u128 * code_len as u128 * block_size as u128;
+                virt > (1u128 << 30)
+            }
+        }
+    }
+}
+
+impl std::str::FromStr for StoreMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> anyhow::Result<StoreMode> {
+        match s {
+            "auto" => Ok(StoreMode::Auto),
+            "materialized" => Ok(StoreMode::Materialized),
+            "synthetic" => Ok(StoreMode::Synthetic),
+            other => bail!("unknown store mode {other:?} (auto|materialized|synthetic)"),
+        }
+    }
 }
 
 impl Default for ClusterBackend {
@@ -841,6 +997,8 @@ impl Default for ClusterBackend {
             schedule: SchedulePolicy::Fifo,
             coalesce: 1,
             batched_fetch: false,
+            store: StoreMode::Auto,
+            cache_mb: 0,
         }
     }
 }
@@ -894,12 +1052,24 @@ impl crate::scenario::RecoveryBackend for ClusterBackend {
         cspec.net.cross_mbps = self.cross_mbps;
         let k = policy.code().k();
         let bs = self.block_size as usize;
+        let synthetic =
+            self.store.synthetic_for(scenario.stripes, policy.code().len(), self.block_size);
         let populate = || -> anyhow::Result<MiniCluster> {
-            let cluster =
-                MiniCluster::new(cspec, policy.clone(), &self.data_backend, scenario.seed)?;
-            cluster.write_stripes_parallel(scenario.stripes, self.workers.max(2), |sid| {
-                deterministic_data(sid, k, bs)
-            })?;
+            let mut cluster = if synthetic {
+                MiniCluster::new_synthetic(cspec, policy.clone(), &self.data_backend, scenario.seed)?
+            } else {
+                MiniCluster::new(cspec, policy.clone(), &self.data_backend, scenario.seed)?
+            };
+            if self.cache_mb > 0 {
+                cluster.set_cache(self.cache_mb << 20);
+            }
+            if synthetic {
+                cluster.populate_synthetic(scenario.stripes)?;
+            } else {
+                cluster.write_stripes_parallel(scenario.stripes, self.workers.max(2), |sid| {
+                    deterministic_data(sid, k, bs)
+                })?;
+            }
             Ok(cluster)
         };
         fabric::run_scenario(
@@ -1071,6 +1241,85 @@ mod tests {
                 assert_eq!(got, originals[sid as usize][b], "sid={sid} b={b}");
             }
         }
+    }
+
+    #[test]
+    fn synthetic_cluster_serves_identical_bytes() {
+        let spec = small_spec();
+        let policy =
+            Arc::new(D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, spec.cluster).unwrap());
+        let mat = MiniCluster::new(spec, policy.clone(), "native", 7).unwrap();
+        let syn = MiniCluster::new_synthetic(spec, policy, "native", 7).unwrap();
+        let stripes = 6u64;
+        mat.write_stripes_parallel(stripes, 2, |sid| deterministic_data(sid, 3, 64 * 1024))
+            .unwrap();
+        syn.populate_synthetic(stripes).unwrap();
+        let client = Location::new(0, 0);
+        for sid in 0..stripes {
+            for b in 0..5 {
+                assert_eq!(
+                    mat.read_block(sid, b, client).unwrap(),
+                    syn.read_block(sid, b, client).unwrap(),
+                    "sid={sid} b={b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_degraded_read_and_recovery_work() {
+        let spec = small_spec();
+        let policy =
+            Arc::new(D3Placement::new(CodeSpec::Rs { k: 2, m: 1 }, spec.cluster).unwrap());
+        let cluster = MiniCluster::new_synthetic(spec, policy, "native", 3).unwrap();
+        let stripes = 24u64;
+        cluster.populate_synthetic(stripes).unwrap();
+        let failed = Location::new(1, 1);
+        cluster.fail_node(failed);
+        // degraded read of any block on the dead node rebuilds canonical
+        for sid in 0..stripes {
+            let sp = cluster.policy().stripe(sid);
+            for (b, &loc) in sp.locs.iter().enumerate() {
+                if loc != failed || b >= 2 {
+                    continue;
+                }
+                let (got, _) = cluster.degraded_read(sid, b, Location::new(0, 0)).unwrap();
+                assert_eq!(got, deterministic_data(sid, 2, 64 * 1024)[b], "sid={sid} b={b}");
+            }
+        }
+        let stats = cluster.recover_node(failed, stripes, 4).unwrap();
+        assert!(stats.blocks > 0);
+        // recovered blocks read back canonical from their new homes
+        for sid in 0..stripes {
+            for b in 0..2 {
+                let got = cluster.read_block(sid, b, Location::new(0, 0)).unwrap();
+                assert_eq!(got, deterministic_data(sid, 2, 64 * 1024)[b], "sid={sid} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn cache_hit_skips_the_rebuild_after_admission() {
+        let spec = small_spec();
+        let policy =
+            Arc::new(D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, spec.cluster).unwrap());
+        let mut cluster = MiniCluster::new(spec, policy, "native", 7).unwrap();
+        cluster.set_cache(8 << 20);
+        let data = data_for(5, 3, 64 * 1024);
+        cluster.write_stripe(5, data.clone()).unwrap();
+        let victim = cluster.locate(5, 1);
+        cluster.fail_node(victim);
+        let client = Location::new(6, 2);
+        // popularity-aware admission: first rebuild only registers the
+        // key in the ghost list, the second admits, the third hits
+        for _ in 0..3 {
+            let (got, _) = cluster.degraded_read(5, 1, client).unwrap();
+            assert_eq!(got, data[1]);
+        }
+        let stats = cluster.cache_stats().unwrap();
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.misses, 2);
+        assert_eq!(stats.admitted, 1);
     }
 
     #[test]

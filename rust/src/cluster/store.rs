@@ -1,0 +1,670 @@
+//! Block storage behind the [`BlockStore`] trait (DESIGN.md §16): the
+//! fabric's NameNode layer addresses per-node block payloads through this
+//! narrow surface, so the *representation* of a block is swappable.
+//!
+//! Two implementations:
+//!
+//! * [`MaterializedStore`] — the original per-node `HashMap<BlockKey,
+//!   Vec<u8>>`, every payload resident. Memory is O(data).
+//! * [`SyntheticStore`] — regenerates canonical payloads on read from the
+//!   seeded per-stripe generator (the same xorshift stream
+//!   [`crate::cluster::deterministic_data`] feeds the populate path) and
+//!   the code's parity rows. Only *divergent* state is resident — an
+//!   overlay of markers and materialized exceptions — so memory is
+//!   O(metadata) while scenarios address terabytes of virtual payload.
+//!
+//! Regeneration proof sketch: data shard `b < k` of stripe `sid` is a pure
+//! function of `(sid, b)` (xorshift keyed by `sid·φ + b`), and parity
+//! shard `b ≥ k` is `Σ_j P[b−k][j] · data_j` over GF(256) — a *bytewise*
+//! combine, so any window `[off, off+len)` of any block regenerates from
+//! the same-window data shards. A read through the synthetic store is
+//! therefore bit-identical to a read of the materialized bytes the encode
+//! path would have stored, which the differential suite
+//! (`tests/store_parity.rs`) asserts end to end.
+//!
+//! [`ChecksumRegistry`] shards the write-time checksum oracle by block key
+//! so 8-writer ingest does not serialize on one global mutex (the
+//! `checksums_sharded_vs_global_8w` bench row measures the win).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail};
+
+use crate::gf;
+
+/// `(stripe id, block index)` — the NameNode's block name.
+pub type BlockKey = (u64, usize);
+
+/// Why a chunk read failed — callers format the location context.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkError {
+    /// No such block on the node.
+    Missing,
+    /// The window exceeds the stored block of `have` bytes.
+    OutOfRange { have: usize },
+}
+
+/// Per-node block payload storage, addressed by flat node index. All
+/// methods are `&self` and internally locked per node, so the recovery
+/// executor's workers operate on distinct nodes without contention.
+pub trait BlockStore: Send + Sync {
+    /// Store `bytes` for `key` on node `at` (replacing any prior copy).
+    fn insert(&self, at: usize, key: BlockKey, bytes: Vec<u8>);
+
+    /// Full copy of the block's bytes, if present.
+    fn read(&self, at: usize, key: BlockKey) -> Option<Vec<u8>>;
+
+    /// Copy bytes `[off, off + len)` into `buf` (cleared first).
+    fn read_chunk(
+        &self,
+        at: usize,
+        key: BlockKey,
+        off: usize,
+        len: usize,
+        buf: &mut Vec<u8>,
+    ) -> Result<(), ChunkError>;
+
+    /// Drop the block from node `at` (no-op if absent).
+    fn remove(&self, at: usize, key: BlockKey);
+
+    /// Erase every block on node `at` (node death).
+    fn clear_node(&self, at: usize);
+
+    /// Resident blocks on node `at`. For the synthetic store this counts
+    /// only overlay entries — the implicit base population is not
+    /// enumerated (doing so would require a placement scan).
+    fn len(&self, at: usize) -> usize;
+
+    /// Checksum of the bytes a [`BlockStore::read`] would return.
+    fn stored_checksum(&self, at: usize, key: BlockKey) -> Option<u64>;
+
+    /// Flip the first stored byte (scrub-fault injection).
+    fn corrupt(&self, at: usize, key: BlockKey) -> anyhow::Result<()>;
+
+    /// Write-time checksum derivable without a registry entry — the
+    /// synthetic store computes it from the canonical generator for
+    /// base-population stripes; materialized stores return `None`.
+    fn baseline_checksum(&self, key: BlockKey) -> Option<u64>;
+
+    /// Adopt `stripes` canonically-placed, canonically-filled stripes
+    /// without materializing them. Returns `false` when the store cannot
+    /// (materialized backends need a physical write per block).
+    fn populate(&self, stripes: u64) -> bool;
+}
+
+// ---------------------------------------------------------------- material
+
+/// The original representation: every payload resident in a per-node map.
+pub struct MaterializedStore {
+    nodes: Vec<Mutex<HashMap<BlockKey, Vec<u8>>>>,
+}
+
+impl MaterializedStore {
+    pub fn new(nodes: usize) -> MaterializedStore {
+        MaterializedStore { nodes: (0..nodes).map(|_| Mutex::new(HashMap::new())).collect() }
+    }
+
+    /// All block keys on node `at`, ascending — the worker's ListBlocks
+    /// inventory path.
+    pub fn keys_sorted(&self, at: usize) -> Vec<BlockKey> {
+        let mut keys: Vec<BlockKey> =
+            self.nodes[at].lock().unwrap().keys().copied().collect();
+        keys.sort_unstable();
+        keys
+    }
+}
+
+impl BlockStore for MaterializedStore {
+    fn insert(&self, at: usize, key: BlockKey, bytes: Vec<u8>) {
+        self.nodes[at].lock().unwrap().insert(key, bytes);
+    }
+
+    fn read(&self, at: usize, key: BlockKey) -> Option<Vec<u8>> {
+        self.nodes[at].lock().unwrap().get(&key).cloned()
+    }
+
+    fn read_chunk(
+        &self,
+        at: usize,
+        key: BlockKey,
+        off: usize,
+        len: usize,
+        buf: &mut Vec<u8>,
+    ) -> Result<(), ChunkError> {
+        let node = self.nodes[at].lock().unwrap();
+        let blk = node.get(&key).ok_or(ChunkError::Missing)?;
+        if off + len > blk.len() {
+            return Err(ChunkError::OutOfRange { have: blk.len() });
+        }
+        buf.clear();
+        buf.extend_from_slice(&blk[off..off + len]);
+        Ok(())
+    }
+
+    fn remove(&self, at: usize, key: BlockKey) {
+        self.nodes[at].lock().unwrap().remove(&key);
+    }
+
+    fn clear_node(&self, at: usize) {
+        self.nodes[at].lock().unwrap().clear();
+    }
+
+    fn len(&self, at: usize) -> usize {
+        self.nodes[at].lock().unwrap().len()
+    }
+
+    fn stored_checksum(&self, at: usize, key: BlockKey) -> Option<u64> {
+        self.nodes[at].lock().unwrap().get(&key).map(|b| crate::net::proto::checksum(b))
+    }
+
+    fn corrupt(&self, at: usize, key: BlockKey) -> anyhow::Result<()> {
+        let mut node = self.nodes[at].lock().unwrap();
+        let blk = node
+            .get_mut(&key)
+            .ok_or_else(|| anyhow!("block ({},{}) not stored", key.0, key.1))?;
+        let Some(byte) = blk.first_mut() else {
+            bail!("block ({},{}) is empty", key.0, key.1);
+        };
+        *byte ^= 1;
+        Ok(())
+    }
+
+    fn baseline_checksum(&self, _key: BlockKey) -> Option<u64> {
+        None
+    }
+
+    fn populate(&self, _stripes: u64) -> bool {
+        false
+    }
+}
+
+// ----------------------------------------------------------------- synthetic
+
+/// How a block on a synthetic node diverges from the canonical base.
+enum Overlay {
+    /// Present with exactly the canonical generator bytes (marker only —
+    /// a recovered block that reproduced the original payload).
+    Canonical,
+    /// Explicitly absent (removed, or skipped at write time).
+    Absent,
+    /// Present with non-canonical bytes, kept materialized (foreground
+    /// writes beyond the base population, partial blocks).
+    Bytes(Vec<u8>),
+    /// Canonical bytes with the first byte flipped (scrub-fault injection
+    /// — regenerated with the flip applied on read).
+    Corrupt,
+}
+
+struct NodeState {
+    /// Node died: the implicit base population on it is gone.
+    cleared: bool,
+    overlay: HashMap<BlockKey, Overlay>,
+}
+
+/// What a read should produce, decided under the node lock, executed
+/// (payload generation) after it is dropped.
+enum ReadAction {
+    Canonical,
+    CanonicalCorrupt,
+    Bytes(Vec<u8>),
+    Missing,
+}
+
+/// Regenerate-on-read block store: stripes `0..base` exist implicitly on
+/// their canonical nodes; everything else is an overlay entry.
+pub struct SyntheticStore {
+    k: usize,
+    code_len: usize,
+    block_size: usize,
+    /// Parity rows of the code's generator, `(code_len − k) × k`.
+    parity: gf::Matrix,
+    /// Stripes `0..base` are implicitly present (canonical placement,
+    /// canonical payload) on every non-cleared node the NameNode
+    /// addresses them at.
+    base: AtomicU64,
+    nodes: Vec<Mutex<NodeState>>,
+}
+
+impl SyntheticStore {
+    pub fn new(
+        nodes: usize,
+        k: usize,
+        code_len: usize,
+        block_size: usize,
+        parity: gf::Matrix,
+    ) -> SyntheticStore {
+        assert_eq!(parity.rows(), code_len - k, "parity rows must cover the code");
+        SyntheticStore {
+            k,
+            code_len,
+            block_size,
+            parity,
+            base: AtomicU64::new(0),
+            nodes: (0..nodes)
+                .map(|_| Mutex::new(NodeState { cleared: false, overlay: HashMap::new() }))
+                .collect(),
+        }
+    }
+
+    fn base_stripes(&self) -> u64 {
+        self.base.load(Ordering::Relaxed)
+    }
+
+    /// Canonical bytes `[off, off + len)` of block `block` of stripe
+    /// `sid`: data shards replay the populate generator's xorshift stream;
+    /// parity shards combine the k same-window data shards through the
+    /// code's parity row (GF combine is bytewise, so windows compose).
+    pub fn canonical_window(&self, sid: u64, block: usize, off: usize, len: usize) -> Vec<u8> {
+        assert!(block < self.code_len, "block index out of code range");
+        if block < self.k {
+            let mut out = vec![0u8; len];
+            fill_data_window(sid, block, off, &mut out);
+            return out;
+        }
+        let shards: Vec<Vec<u8>> = (0..self.k)
+            .map(|b| {
+                let mut v = vec![0u8; len];
+                fill_data_window(sid, b, off, &mut v);
+                v
+            })
+            .collect();
+        let mut out = vec![0u8; len];
+        let pairs: Vec<(u8, &[u8])> = self
+            .parity
+            .row(block - self.k)
+            .iter()
+            .zip(&shards)
+            .map(|(&c, s)| (c, s.as_slice()))
+            .collect();
+        gf::combine_many_into(&mut out, &pairs);
+        out
+    }
+
+    /// Checksum of the canonical full block (the write-time oracle the
+    /// populate path would have registered).
+    pub fn canonical_checksum(&self, sid: u64, block: usize) -> u64 {
+        crate::net::proto::checksum(&self.canonical_window(sid, block, 0, self.block_size))
+    }
+
+    /// Decide a read's outcome under the node lock; generation happens
+    /// after the lock is dropped so regeneration never serializes peers.
+    fn plan_read(&self, at: usize, key: BlockKey) -> ReadAction {
+        let node = self.nodes[at].lock().unwrap();
+        match node.overlay.get(&key) {
+            Some(Overlay::Canonical) => ReadAction::Canonical,
+            Some(Overlay::Corrupt) => ReadAction::CanonicalCorrupt,
+            Some(Overlay::Bytes(v)) => ReadAction::Bytes(v.clone()),
+            Some(Overlay::Absent) => ReadAction::Missing,
+            None if !node.cleared && key.0 < self.base_stripes() => ReadAction::Canonical,
+            None => ReadAction::Missing,
+        }
+    }
+}
+
+impl BlockStore for SyntheticStore {
+    fn insert(&self, at: usize, key: BlockKey, bytes: Vec<u8>) {
+        // A byte-exact reproduction of a base-population block (the common
+        // case: recovery rebuilt the canonical payload) collapses to a
+        // marker — O(1) resident per relocated block.
+        let canonical = key.0 < self.base_stripes()
+            && key.1 < self.code_len
+            && bytes.len() == self.block_size
+            && bytes == self.canonical_window(key.0, key.1, 0, self.block_size);
+        let ov = if canonical { Overlay::Canonical } else { Overlay::Bytes(bytes) };
+        self.nodes[at].lock().unwrap().overlay.insert(key, ov);
+    }
+
+    fn read(&self, at: usize, key: BlockKey) -> Option<Vec<u8>> {
+        match self.plan_read(at, key) {
+            ReadAction::Canonical => {
+                Some(self.canonical_window(key.0, key.1, 0, self.block_size))
+            }
+            ReadAction::CanonicalCorrupt => {
+                let mut v = self.canonical_window(key.0, key.1, 0, self.block_size);
+                v[0] ^= 1;
+                Some(v)
+            }
+            ReadAction::Bytes(v) => Some(v),
+            ReadAction::Missing => None,
+        }
+    }
+
+    fn read_chunk(
+        &self,
+        at: usize,
+        key: BlockKey,
+        off: usize,
+        len: usize,
+        buf: &mut Vec<u8>,
+    ) -> Result<(), ChunkError> {
+        match self.plan_read(at, key) {
+            ReadAction::Canonical | ReadAction::CanonicalCorrupt => {
+                if off + len > self.block_size {
+                    return Err(ChunkError::OutOfRange { have: self.block_size });
+                }
+                let corrupt = matches!(self.plan_read(at, key), ReadAction::CanonicalCorrupt);
+                let window = self.canonical_window(key.0, key.1, off, len);
+                buf.clear();
+                buf.extend_from_slice(&window);
+                if corrupt && off == 0 && len > 0 {
+                    buf[0] ^= 1;
+                }
+                Ok(())
+            }
+            ReadAction::Bytes(v) => {
+                if off + len > v.len() {
+                    return Err(ChunkError::OutOfRange { have: v.len() });
+                }
+                buf.clear();
+                buf.extend_from_slice(&v[off..off + len]);
+                Ok(())
+            }
+            ReadAction::Missing => Err(ChunkError::Missing),
+        }
+    }
+
+    fn remove(&self, at: usize, key: BlockKey) {
+        let mut node = self.nodes[at].lock().unwrap();
+        let implicit = !node.cleared && key.0 < self.base_stripes();
+        if implicit {
+            node.overlay.insert(key, Overlay::Absent);
+        } else {
+            node.overlay.remove(&key);
+        }
+    }
+
+    fn clear_node(&self, at: usize) {
+        let mut node = self.nodes[at].lock().unwrap();
+        node.cleared = true;
+        node.overlay.clear();
+    }
+
+    fn len(&self, at: usize) -> usize {
+        self.nodes[at]
+            .lock()
+            .unwrap()
+            .overlay
+            .values()
+            .filter(|ov| !matches!(ov, Overlay::Absent))
+            .count()
+    }
+
+    fn stored_checksum(&self, at: usize, key: BlockKey) -> Option<u64> {
+        self.read(at, key).map(|b| crate::net::proto::checksum(&b))
+    }
+
+    fn corrupt(&self, at: usize, key: BlockKey) -> anyhow::Result<()> {
+        let mut node = self.nodes[at].lock().unwrap();
+        let implicit = !node.cleared && key.0 < self.base_stripes();
+        match node.overlay.get_mut(&key) {
+            Some(Overlay::Canonical) => {
+                node.overlay.insert(key, Overlay::Corrupt);
+            }
+            // a second flip restores the canonical bytes
+            Some(Overlay::Corrupt) => {
+                node.overlay.insert(key, Overlay::Canonical);
+            }
+            Some(Overlay::Bytes(v)) => {
+                let Some(byte) = v.first_mut() else {
+                    bail!("block ({},{}) is empty", key.0, key.1);
+                };
+                *byte ^= 1;
+            }
+            Some(Overlay::Absent) => {
+                bail!("block ({},{}) not stored", key.0, key.1)
+            }
+            None if implicit => {
+                node.overlay.insert(key, Overlay::Corrupt);
+            }
+            None => bail!("block ({},{}) not stored", key.0, key.1),
+        }
+        Ok(())
+    }
+
+    fn baseline_checksum(&self, key: BlockKey) -> Option<u64> {
+        if key.0 < self.base_stripes() && key.1 < self.code_len {
+            // computed on demand, never memoized: a scrub scan over
+            // millions of blocks must not accumulate O(total blocks)
+            Some(self.canonical_checksum(key.0, key.1))
+        } else {
+            None
+        }
+    }
+
+    fn populate(&self, stripes: u64) -> bool {
+        self.base.store(stripes, Ordering::Relaxed);
+        true
+    }
+}
+
+/// The populate generator's per-shard xorshift stream, started at byte
+/// `off` — must stay bit-identical to
+/// [`crate::cluster::deterministic_data`].
+fn fill_data_window(sid: u64, shard: usize, off: usize, out: &mut [u8]) {
+    let mut s = sid.wrapping_mul(0x9e3779b9).wrapping_add(shard as u64) | 1;
+    for _ in 0..off {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+    }
+    for byte in out.iter_mut() {
+        s ^= s << 13;
+        s ^= s >> 7;
+        s ^= s << 17;
+        *byte = (s >> 24) as u8;
+    }
+}
+
+// ------------------------------------------------------------------ registry
+
+const REGISTRY_SHARDS: usize = 64;
+
+/// Write-time checksum registry, sharded by block key so concurrent
+/// writers and the recovery executor's persist path do not serialize on
+/// one global mutex (the PR 10 contention fix for `cluster/mod.rs`'s old
+/// `checksums: Mutex<HashMap<..>>`).
+pub struct ChecksumRegistry {
+    shards: Vec<Mutex<HashMap<BlockKey, u64>>>,
+}
+
+impl Default for ChecksumRegistry {
+    fn default() -> ChecksumRegistry {
+        ChecksumRegistry::new()
+    }
+}
+
+impl ChecksumRegistry {
+    pub fn new() -> ChecksumRegistry {
+        ChecksumRegistry {
+            shards: (0..REGISTRY_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, key: BlockKey) -> &Mutex<HashMap<BlockKey, u64>> {
+        let h = key.0.wrapping_mul(0x9e3779b97f4a7c15) ^ (key.1 as u64).wrapping_mul(31);
+        &self.shards[(h as usize) & (REGISTRY_SHARDS - 1)]
+    }
+
+    pub fn get(&self, key: BlockKey) -> Option<u64> {
+        self.shard(key).lock().unwrap().get(&key).copied()
+    }
+
+    /// Register (overwriting) — the client write path.
+    pub fn insert(&self, key: BlockKey, sum: u64) {
+        self.shard(key).lock().unwrap().insert(key, sum);
+    }
+
+    /// First write wins — the recovery persist path: a recovered block
+    /// must reproduce the bytes the original write registered, never
+    /// redefine them.
+    pub fn or_insert(&self, key: BlockKey, sum: u64) {
+        self.shard(key).lock().unwrap().entry(key).or_insert(sum);
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::CodeSpec;
+
+    fn synthetic(k: usize, m: usize, bs: usize) -> SyntheticStore {
+        let parity = crate::cluster::parity_matrix(&CodeSpec::Rs { k, m });
+        SyntheticStore::new(4, k, k + m, bs, parity)
+    }
+
+    #[test]
+    fn synthetic_data_matches_populate_generator() {
+        let s = synthetic(3, 2, 4096);
+        s.populate(5);
+        let want = crate::cluster::deterministic_data(2, 3, 4096);
+        for b in 0..3 {
+            assert_eq!(s.read(0, (2, b)).unwrap(), want[b], "data shard {b}");
+        }
+    }
+
+    #[test]
+    fn synthetic_parity_matches_encode() {
+        let (k, m, bs) = (3usize, 2usize, 2048usize);
+        let s = synthetic(k, m, bs);
+        s.populate(4);
+        let data = crate::cluster::deterministic_data(3, k, bs);
+        let refs: Vec<&[u8]> = data.iter().map(|v| v.as_slice()).collect();
+        let parity = crate::codes::RsCode::new(k, m).encode(&refs);
+        for (i, want) in parity.iter().enumerate() {
+            assert_eq!(&s.read(1, (3, k + i)).unwrap(), want, "parity {i}");
+        }
+    }
+
+    #[test]
+    fn windows_compose_for_data_and_parity() {
+        let s = synthetic(2, 2, 1024);
+        s.populate(2);
+        for b in 0..4usize {
+            let full = s.read(0, (1, b)).unwrap();
+            for (off, len) in [(0usize, 100usize), (511, 13), (1000, 24)] {
+                let mut buf = Vec::new();
+                s.read_chunk(0, (1, b), off, len, &mut buf).unwrap();
+                assert_eq!(buf, &full[off..off + len], "b={b} off={off}");
+            }
+        }
+    }
+
+    #[test]
+    fn overlay_transitions() {
+        let s = synthetic(2, 1, 256);
+        s.populate(10);
+        // implicit present
+        assert!(s.read(0, (3, 0)).is_some());
+        // remove → absent marker beats the implicit base
+        s.remove(0, (3, 0));
+        assert!(s.read(0, (3, 0)).is_none());
+        assert_eq!(
+            s.read_chunk(0, (3, 0), 0, 16, &mut Vec::new()),
+            Err(ChunkError::Missing)
+        );
+        // a canonical re-insert collapses to a marker and reads back
+        let canon = s.canonical_window(3, 0, 0, 256);
+        s.insert(0, (3, 0), canon.clone());
+        assert_eq!(s.read(0, (3, 0)).unwrap(), canon);
+        // divergent insert is kept materialized
+        s.insert(1, (20, 0), vec![7u8; 256]);
+        assert_eq!(s.read(1, (20, 0)).unwrap(), vec![7u8; 256]);
+        // clear_node kills the implicit base and the overlay
+        s.clear_node(1);
+        assert!(s.read(1, (20, 0)).is_none());
+        assert!(s.read(1, (4, 0)).is_none());
+        // other nodes unaffected
+        assert!(s.read(0, (4, 0)).is_some());
+    }
+
+    #[test]
+    fn corrupt_flips_first_byte_and_double_flip_restores() {
+        let s = synthetic(2, 1, 128);
+        s.populate(3);
+        let clean = s.read(0, (1, 1)).unwrap();
+        let sum = s.stored_checksum(0, (1, 1)).unwrap();
+        s.corrupt(0, (1, 1)).unwrap();
+        let dirty = s.read(0, (1, 1)).unwrap();
+        assert_eq!(dirty[0], clean[0] ^ 1);
+        assert_eq!(&dirty[1..], &clean[1..]);
+        assert_ne!(s.stored_checksum(0, (1, 1)).unwrap(), sum);
+        // chunked read off the front carries the flip; tails do not
+        let mut buf = Vec::new();
+        s.read_chunk(0, (1, 1), 0, 4, &mut buf).unwrap();
+        assert_eq!(buf[0], clean[0] ^ 1);
+        s.read_chunk(0, (1, 1), 64, 4, &mut buf).unwrap();
+        assert_eq!(buf, &clean[64..68]);
+        s.corrupt(0, (1, 1)).unwrap();
+        assert_eq!(s.read(0, (1, 1)).unwrap(), clean);
+        // corrupting a missing block errors
+        assert!(s.corrupt(0, (99, 0)).is_err());
+    }
+
+    #[test]
+    fn baseline_checksum_only_covers_the_base_population() {
+        let s = synthetic(2, 1, 512);
+        s.populate(4);
+        let sum = s.baseline_checksum((2, 1)).unwrap();
+        assert_eq!(sum, s.stored_checksum(0, (2, 1)).unwrap());
+        assert!(s.baseline_checksum((4, 0)).is_none(), "beyond base");
+        assert!(s.baseline_checksum((2, 3)).is_none(), "beyond code len");
+    }
+
+    #[test]
+    fn materialized_store_roundtrip_and_bounds() {
+        let m = MaterializedStore::new(2);
+        assert!(!m.populate(5), "materialized cannot adopt a synthetic base");
+        m.insert(0, (1, 0), vec![1, 2, 3, 4]);
+        assert_eq!(m.read(0, (1, 0)).unwrap(), vec![1, 2, 3, 4]);
+        assert_eq!(m.len(0), 1);
+        assert_eq!(m.len(1), 0);
+        let mut buf = Vec::new();
+        m.read_chunk(0, (1, 0), 1, 2, &mut buf).unwrap();
+        assert_eq!(buf, vec![2, 3]);
+        assert_eq!(
+            m.read_chunk(0, (1, 0), 2, 10, &mut buf),
+            Err(ChunkError::OutOfRange { have: 4 })
+        );
+        assert_eq!(m.read_chunk(1, (1, 0), 0, 1, &mut buf), Err(ChunkError::Missing));
+        m.insert(0, (2, 1), vec![9]);
+        assert_eq!(m.keys_sorted(0), vec![(1, 0), (2, 1)]);
+        m.remove(0, (1, 0));
+        assert!(m.read(0, (1, 0)).is_none());
+        m.clear_node(0);
+        assert_eq!(m.len(0), 0);
+    }
+
+    #[test]
+    fn registry_shards_agree_with_a_flat_map() {
+        let reg = ChecksumRegistry::new();
+        let mut flat = HashMap::new();
+        for sid in 0..200u64 {
+            for b in 0..5usize {
+                let sum = sid * 31 + b as u64;
+                reg.insert((sid, b), sum);
+                flat.insert((sid, b), sum);
+            }
+        }
+        assert_eq!(reg.len(), flat.len());
+        for (&key, &want) in &flat {
+            assert_eq!(reg.get(key), Some(want));
+        }
+        // first-write-wins
+        reg.or_insert((0, 0), 999);
+        assert_eq!(reg.get((0, 0)), Some(0));
+        reg.insert((0, 0), 999);
+        assert_eq!(reg.get((0, 0)), Some(999));
+        assert_eq!(reg.get((1000, 0)), None);
+    }
+}

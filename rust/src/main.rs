@@ -9,6 +9,7 @@
 //!                [--schedule fifo|balanced] [--coalesce N] [--batched-fetch true|false]
 //!                [--fg-rate RPS | --fg-clients N] [--fg-requests N]  # client engine
 //!                [--recovery-share S] [--fg-weight W] [--json]       # QoS + machine output
+//!                [--store auto|materialized|synthetic] [--cache-mb N] [--zipf THETA]
 //! d3ctl chaos [--backend cluster|net] [--drop P] [--delay P] [--delay-ms MS] [--corrupt P]
 //!             [--truncate P] [--corrupt-stored P] [--crash N] [--scrub] [--stripes N] [--seed S] [--json]
 //! d3ctl trace [--backend sim|cluster|net|all] [--rate PER_HOUR] [--horizon-h H]
@@ -23,7 +24,7 @@
 //! d3ctl cluster-demo [--backend pjrt|native] [--stripes N]
 //! d3ctl calibrate                      # coding throughput, native vs PJRT
 //! d3ctl kernel-info                    # CPU features + selected GF kernel lane
-//! d3ctl bench [--quick] [--json PATH]  # hot-path suite → BENCH_PR6.json
+//! d3ctl bench [--quick] [--json PATH]  # hot-path suite → BENCH_PR10.json
 //! d3ctl bench-compare --old A.json --new B.json [--tolerance 0.15]
 //! ```
 
@@ -32,7 +33,7 @@ use std::sync::atomic::AtomicBool;
 
 use d3ec::client::{ArrivalModel, FgSpec, QosConfig};
 use d3ec::cluster::fabric::{crash_victim, recover_with_replan, run_scrub};
-use d3ec::cluster::{deterministic_data, BlockFabric, ClusterBackend, MiniCluster};
+use d3ec::cluster::{deterministic_data, BlockFabric, ClusterBackend, MiniCluster, StoreMode};
 use d3ec::codes::CodeSpec;
 use d3ec::experiments as exp;
 use d3ec::util::json::Json;
@@ -113,7 +114,7 @@ fn main() {
         "bench-compare" => cmd_bench_compare(&flags),
         _ => {
             println!("d3ctl — Deterministic Data Distribution (D³) reproduction");
-            println!("{}", include_str!("main.rs").lines().skip(2).take(26)
+            println!("{}", include_str!("main.rs").lines().skip(2).take(27)
                 .map(|l| l.trim_start_matches("//! ")).collect::<Vec<_>>().join("\n"));
         }
     }
@@ -145,7 +146,7 @@ fn cmd_kernel_info() {
 
 /// `d3ctl bench`: the machine-readable hot-path suite (same harness as
 /// `cargo bench --bench hotpath`, DESIGN.md §9). Writes the
-/// `{bench_name: ns_per_byte}` perf-trajectory file — `BENCH_PR6.json`
+/// `{bench_name: ns_per_byte}` perf-trajectory file — `BENCH_PR10.json`
 /// by default, `--json PATH` to override; `--quick` for CI-sized runs.
 fn cmd_bench(args: &[String]) {
     let quick = args.iter().any(|a| a == "--quick");
@@ -154,7 +155,7 @@ fn cmd_bench(args: &[String]) {
         .position(|a| a == "--json")
         .and_then(|i| args.get(i + 1))
         .cloned()
-        .unwrap_or_else(|| "BENCH_PR6.json".to_string());
+        .unwrap_or_else(|| "BENCH_PR10.json".to_string());
     let report = d3ec::perf::run_hotpath(&d3ec::perf::BenchOpts { quick });
     if let Some(r) = report.ratio("sched_fifo_8w", "sched_balanced_8w") {
         println!("headline: balanced schedule is {r:.2}x FIFO on contended links");
@@ -174,16 +175,19 @@ fn cmd_bench(args: &[String]) {
 /// `d3ctl bench-compare`: diff two `{bench_name: ns_per_byte}` reports
 /// and fail (exit 1) when any tracked kernel regressed beyond the
 /// tolerance — the CI perf gate between the previous PR's trajectory
-/// file and `BENCH_PR6.json` (lower ns/B is better; ratio rows are
-/// skipped by default via the key list).
+/// file and `BENCH_PR10.json` (lower is better for every tracked key:
+/// raw kernel rows are ns/B, and the two tracked store/cache rows are
+/// cost ratios that must not grow).
 fn cmd_bench_compare(flags: &HashMap<String, String>) {
-    let old: String = flag(flags, "old", "BENCH_PR5.json".into());
-    let new: String = flag(flags, "new", "BENCH_PR6.json".into());
+    let old: String = flag(flags, "old", "BENCH_PR6.json".into());
+    let new: String = flag(flags, "new", "BENCH_PR10.json".into());
     let tolerance: f64 = flag(flags, "tolerance", 0.15);
     let keys: String = flag(
         flags,
         "keys",
-        "mac_16mb,mac_16kb_chunks_cached,xor_16mb_swar,combine_k6_fused".into(),
+        "mac_16mb,mac_16kb_chunks_cached,xor_16mb_swar,combine_k6_fused,\
+         store_synthetic_vs_materialized_read,cache_hit_vs_miss_degraded_read"
+            .into(),
     );
     let keys: Vec<&str> = keys.split(',').filter(|k| !k.is_empty()).collect();
     match d3ec::perf::compare_bench_json(
@@ -268,6 +272,7 @@ fn cmd_scenario(args: &[String], flags: &HashMap<String, String>) {
     }
     let fg_rate: f64 = flag(flags, "fg-rate", 0.0);
     let fg_clients: usize = flag(flags, "fg-clients", 0);
+    let zipf: f64 = flag(flags, "zipf", 0.0);
     if fg_rate > 0.0 || fg_clients > 0 {
         let requests: usize = flag(flags, "fg-requests", 64);
         let arrival = if fg_rate > 0.0 {
@@ -278,7 +283,13 @@ fn cmd_scenario(args: &[String], flags: &HashMap<String, String>) {
                 think_s: flag(flags, "fg-think", 0.0),
             }
         };
-        scenario = scenario.with_fg(FgSpec::reads(requests, arrival));
+        scenario = scenario.with_fg(FgSpec::reads(requests, arrival).with_zipf(zipf));
+    } else if zipf > 0.0 {
+        // skew the kind-derived foreground spec (degraded-burst reads,
+        // frontend-mix) without changing anything else about it
+        if let Ok(Some(fg)) = scenario.fg_spec() {
+            scenario = scenario.with_fg(fg.with_zipf(zipf));
+        }
     }
     let json_out = args.iter().any(|a| a == "--json");
     let policy = exp::build_policy(&policy_name, code, &spec, seed);
@@ -313,6 +324,11 @@ fn cmd_scenario(args: &[String], flags: &HashMap<String, String>) {
     cluster.schedule = schedule;
     cluster.coalesce = coalesce;
     cluster.batched_fetch = batched;
+    // PR 10 scale knobs: block-store representation (synthetic regenerates
+    // payloads on read, bounding memory by metadata) and the client-side
+    // hot-block cache budget (0 = off)
+    cluster.store = flag::<StoreMode>(flags, "store", StoreMode::Auto);
+    cluster.cache_mb = flag(flags, "cache-mb", 0u64);
     // the socket-backed backend shares the cluster backend's knobs, so
     // `--backend all` runs all three at matched block size / schedule
     let mut net = NetClusterBackend::default();

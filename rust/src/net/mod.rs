@@ -32,7 +32,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::client::QosConfig;
 use crate::cluster::fabric::{self, BlockFabric};
 use crate::cluster::links::{LinkSet, TrafficClass};
-use crate::cluster::{deterministic_data, parity_matrix, ClusterRecoveryStats};
+use crate::cluster::{deterministic_data, parity_matrix, ChecksumRegistry, ClusterRecoveryStats};
 use crate::codes::CodeSpec;
 use crate::gf;
 use crate::placement::Placement;
@@ -94,7 +94,7 @@ pub struct NetCluster {
     qos_on: AtomicBool,
     /// Expected block checksums, recorded at write/persist time — the
     /// NameNode-style integrity registry the scrub pass compares against.
-    checksums: Mutex<HashMap<BlockKey, u64>>,
+    checksums: ChecksumRegistry,
     /// Armed fault-injection runtime (DESIGN.md §14); `chaos_on` mirrors
     /// it so the fault-free RPC fast path stays branch-cheap.
     chaos: Mutex<Option<Arc<chaos::ChaosRuntime>>>,
@@ -149,7 +149,7 @@ impl NetCluster {
             accounting: RwLock::new(()),
             qos: Mutex::new(None),
             qos_on: AtomicBool::new(false),
-            checksums: Mutex::new(HashMap::new()),
+            checksums: ChecksumRegistry::new(),
             chaos: Mutex::new(None),
             chaos_on: AtomicBool::new(false),
             spec,
@@ -602,11 +602,7 @@ impl NetCluster {
             }
             drop(rel);
             // first write wins: the registry keeps the populate-time oracle
-            self.checksums
-                .lock()
-                .unwrap()
-                .entry((plan.stripe, plan.failed_block))
-                .or_insert(sum);
+            self.checksums.or_insert((plan.stripe, plan.failed_block), sum);
         }
         Ok(sum)
     }
@@ -658,7 +654,7 @@ impl NetCluster {
             // record the expected checksum for every block — including
             // ones whose destination is down: their canonical content is
             // still what any later rebuild must reproduce
-            self.checksums.lock().unwrap().insert((sid, bi), proto::checksum(&bytes));
+            self.checksums.insert((sid, bi), proto::checksum(&bytes));
             let dst = sp.locs[bi];
             if failed.contains(&dst) {
                 continue;
@@ -836,7 +832,7 @@ impl BlockFabric for NetCluster {
         }
         drop(rel);
         // first write wins: the registry keeps the populate-time oracle
-        self.checksums.lock().unwrap().entry((sid, block)).or_insert(sum);
+        self.checksums.or_insert((sid, block), sum);
         Ok(())
     }
 
@@ -881,7 +877,7 @@ impl BlockFabric for NetCluster {
     }
 
     fn expected_checksum(&self, sid: u64, block: usize) -> Option<u64> {
-        self.checksums.lock().unwrap().get(&(sid, block)).copied()
+        self.checksums.get((sid, block))
     }
 
     fn corrupt_stored(&self, sid: u64, block: usize) -> Result<()> {

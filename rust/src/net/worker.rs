@@ -21,7 +21,6 @@
 //! `corrupt_block()` flips a bit in a stored replica to model latent
 //! disk corruption for the scrub pass.
 
-use std::collections::HashMap;
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -31,6 +30,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::cluster::{BlockStore, MaterializedStore};
 use crate::gf;
 use crate::topology::Location;
 
@@ -106,13 +106,7 @@ impl WorkerHandle {
     /// This models silent disk corruption, not a network event, so it is
     /// an in-process hook rather than an RPC.
     pub fn corrupt_block(&self, sid: u64, block: u32) -> bool {
-        match self.node.store.lock().unwrap().get_mut(&(sid, block)) {
-            Some(b) if !b.is_empty() => {
-                b[0] ^= 1;
-                true
-            }
-            _ => false,
-        }
+        self.node.store.corrupt(0, (sid, block as usize)).is_ok()
     }
 }
 
@@ -127,7 +121,9 @@ struct NodeWorker {
     loc: Location,
     /// One of [`STATE_UP`], [`STATE_DRAINING`], [`STATE_FAILED`].
     state: Mutex<u8>,
-    store: Mutex<HashMap<(u64, u32), Vec<u8>>>,
+    /// Single-node [`MaterializedStore`] (flat index 0) — the same store
+    /// type the in-process fabric uses, so payload semantics match.
+    store: MaterializedStore,
     /// Chaos crash flag: when set the worker never writes another byte.
     crashed: AtomicBool,
 }
@@ -143,7 +139,7 @@ pub fn spawn_worker(loc: Location) -> Result<WorkerHandle> {
     let node = Arc::new(NodeWorker {
         loc,
         state: Mutex::new(STATE_UP),
-        store: Mutex::new(HashMap::new()),
+        store: MaterializedStore::new(1),
         crashed: AtomicBool::new(false),
     });
     let stop = shutdown.clone();
@@ -270,11 +266,11 @@ impl NodeWorker {
         match msg {
             Msg::Heartbeat => Reply::Beat {
                 state: *self.state.lock().unwrap(),
-                blocks: self.store.lock().unwrap().len() as u64,
+                blocks: self.store.len(0) as u64,
             },
             Msg::Join => {
                 // a replacement machine at the same address: empty store
-                self.store.lock().unwrap().clear();
+                self.store.clear_node(0);
                 *self.state.lock().unwrap() = STATE_UP;
                 Reply::Ok
             }
@@ -283,13 +279,13 @@ impl NodeWorker {
                 Reply::Ok
             }
             Msg::Fail => {
-                self.store.lock().unwrap().clear();
+                self.store.clear_node(0);
                 *self.state.lock().unwrap() = STATE_FAILED;
                 Reply::Ok
             }
             Msg::WriteBlock { sid, block, bytes } => match *self.state.lock().unwrap() {
                 STATE_UP => {
-                    self.store.lock().unwrap().insert((sid, block), bytes);
+                    self.store.insert(0, (sid, block as usize), bytes);
                     Reply::Ok
                 }
                 STATE_DRAINING => {
@@ -301,8 +297,8 @@ impl NodeWorker {
                 if *self.state.lock().unwrap() == STATE_FAILED {
                     return Reply::Err(format!("failed node {} rejects reads", self.loc));
                 }
-                match self.store.lock().unwrap().get(&(sid, block)) {
-                    Some(b) => Reply::Data(b.clone()),
+                match self.store.read(0, (sid, block as usize)) {
+                    Some(b) => Reply::Data(b),
                     None => {
                         Reply::Err(format!("block ({sid},{block}) missing at {}", self.loc))
                     }
@@ -312,31 +308,31 @@ impl NodeWorker {
                 if *self.state.lock().unwrap() == STATE_FAILED {
                     return Reply::Err(format!("failed node {} rejects reads", self.loc));
                 }
-                let store = self.store.lock().unwrap();
-                let Some(blk) = store.get(&(sid, block)) else {
-                    return Reply::Err(format!(
+                let (off, len) = (off as usize, len as usize);
+                let mut buf = Vec::new();
+                match self.store.read_chunk(0, (sid, block as usize), off, len, &mut buf) {
+                    Ok(()) => Reply::Data(buf),
+                    Err(crate::cluster::ChunkError::Missing) => Reply::Err(format!(
                         "block ({sid},{block}) missing at {}",
                         self.loc
-                    ));
-                };
-                let (off, len) = (off as usize, len as usize);
-                if off + len > blk.len() {
-                    return Reply::Err(format!(
-                        "chunk [{off}, {}) out of range for block ({sid},{block}) of {} bytes",
-                        off + len,
-                        blk.len()
-                    ));
+                    )),
+                    Err(crate::cluster::ChunkError::OutOfRange { have }) => Reply::Err(format!(
+                        "chunk [{off}, {}) out of range for block ({sid},{block}) of {have} bytes",
+                        off + len
+                    )),
                 }
-                Reply::Data(blk[off..off + len].to_vec())
             }
             Msg::RemoveBlock { sid, block } => {
-                self.store.lock().unwrap().remove(&(sid, block));
+                self.store.remove(0, (sid, block as usize));
                 Reply::Ok
             }
             Msg::ListBlocks => {
-                let mut blocks: Vec<(u64, u32)> =
-                    self.store.lock().unwrap().keys().copied().collect();
-                blocks.sort_unstable();
+                let blocks: Vec<(u64, u32)> = self
+                    .store
+                    .keys_sorted(0)
+                    .into_iter()
+                    .map(|(sid, b)| (sid, b as u32))
+                    .collect();
                 Reply::Blocks(blocks)
             }
             Msg::Encode { k, rows, shard_len, shards } => {
@@ -352,8 +348,8 @@ impl NodeWorker {
                 if *self.state.lock().unwrap() == STATE_FAILED {
                     return Reply::Err(format!("failed node {} rejects reads", self.loc));
                 }
-                match self.store.lock().unwrap().get(&(sid, block)) {
-                    Some(b) => Reply::Sum(proto::checksum(b)),
+                match self.store.stored_checksum(0, (sid, block as usize)) {
+                    Some(sum) => Reply::Sum(sum),
                     None => {
                         Reply::Err(format!("block ({sid},{block}) missing at {}", self.loc))
                     }
@@ -424,7 +420,7 @@ impl NodeWorker {
         let mut acc = vec![0u8; block_len];
         gf::combine_many_into(&mut acc, &pairs);
         let sum = proto::checksum(&acc);
-        self.store.lock().unwrap().insert((sid, block), acc);
+        self.store.insert(0, (sid, block as usize), acc);
         Reply::Sum(sum)
     }
 }

@@ -6,6 +6,7 @@
 //! add/mul tables indexed by element id (digits base p).
 
 /// A finite field GF(p^e) with dense operation tables.
+#[derive(Clone, Debug)]
 pub struct PrimePowerField {
     pub p: u64,
     pub e: u32,

@@ -22,8 +22,62 @@ use field::{factorize, PrimePowerField};
 pub struct OrthogonalArray {
     n: usize,
     cols: usize,
+    storage: Storage,
+}
+
+/// Dense arrays are fast to index but cost n² × cols entries; past
+/// [`DENSE_LIMIT_ENTRIES`] we keep only the component fields and evaluate
+/// the linear form `i·x_c + j` per lookup, so OA(10000, ·) costs kilobytes
+/// instead of gigabytes.
+#[derive(Clone, Debug)]
+enum Storage {
     /// Row-major n² × cols.
-    data: Vec<u16>,
+    Dense(Vec<u16>),
+    Lazy {
+        comps: Vec<PrimePowerField>,
+        orders: Vec<usize>,
+    },
+}
+
+/// Entry-count threshold (n² × cols) above which construction switches to
+/// lazy evaluation: 2²² entries = 8 MiB of u16, cheap enough to keep dense.
+const DENSE_LIMIT_ENTRIES: usize = 1 << 22;
+
+/// Max distinct prime factors of any n ≤ u16::MAX (2·3·5·7·11·13 = 30030,
+/// adding 17 exceeds 65535) — bounds the stack scratch in `linear_entry`.
+const MAX_COMPONENTS: usize = 8;
+
+/// The linear-construction entry for row = i·n + j, column c: per component
+/// field f_t, digit = f_t.add(f_t.mul(i_t, x_c), j_t), recomposed in the
+/// same mixed radix. Matches `to_mixed` (most-significant component first)
+/// and `from_mixed` (ascending) exactly — the dense table is filled from
+/// this same function, so Dense and Lazy agree bit-for-bit.
+fn linear_entry(
+    comps: &[PrimePowerField],
+    orders: &[usize],
+    n: usize,
+    row: usize,
+    col: usize,
+) -> usize {
+    let (i, j) = (row / n, row % n);
+    let m = orders.len();
+    debug_assert!(m <= MAX_COMPONENTS);
+    let mut di = [0usize; MAX_COMPONENTS];
+    let mut dj = [0usize; MAX_COMPONENTS];
+    let (mut vi, mut vj) = (i, j);
+    for t in (0..m).rev() {
+        di[t] = vi % orders[t];
+        vi /= orders[t];
+        dj[t] = vj % orders[t];
+        vj /= orders[t];
+    }
+    // Column id is uniform across components (cols ≤ min order), so x_c = col
+    // in every component.
+    let mut v = 0;
+    for (t, f) in comps.iter().enumerate() {
+        v = v * orders[t] + f.add(f.mul(di[t], col), dj[t]);
+    }
+    v
 }
 
 /// Errors from OA construction.
@@ -51,7 +105,17 @@ pub fn max_columns(n: usize) -> usize {
 
 impl OrthogonalArray {
     /// Construct OA(n, cols) in canonical form (first n rows identical).
+    /// Dense-materialized up to [`DENSE_LIMIT_ENTRIES`] total entries,
+    /// lazily evaluated above it.
     pub fn construct(n: usize, cols: usize) -> Result<OrthogonalArray, OaError> {
+        Self::construct_with_limit(n, cols, DENSE_LIMIT_ENTRIES)
+    }
+
+    fn construct_with_limit(
+        n: usize,
+        cols: usize,
+        dense_limit: usize,
+    ) -> Result<OrthogonalArray, OaError> {
         if n < 2 {
             return Err(OaError::TooSmall { n });
         }
@@ -59,31 +123,30 @@ impl OrthogonalArray {
         if cols < 2 || cols > max {
             return Err(OaError::TooManyColumns { n, cols, max });
         }
+        // Row id = i * n + j with i, j in mixed radix over the components
+        // (component fields f_0.. with orders n_0..; id = ((d_0)*n_1 + d_1)..).
         let comps: Vec<PrimePowerField> = factorize(n as u64)
             .iter()
             .map(|&(p, e)| PrimePowerField::new((p as usize).pow(e)))
             .collect();
-        let mut data = vec![0u16; n * n * cols];
-        // Row id = i * n + j with i, j in mixed radix over the components
-        // (component fields f_0.. with orders n_0..; id = ((d_0)*n_1 + d_1)..).
         let orders: Vec<usize> = comps.iter().map(|f| f.n).collect();
-        for i in 0..n {
-            let di = to_mixed(i, &orders);
-            for j in 0..n {
-                let dj = to_mixed(j, &orders);
-                let row = i * n + j;
+        let storage = if n * n * cols <= dense_limit {
+            let mut data = vec![0u16; n * n * cols];
+            for row in 0..n * n {
                 for c in 0..cols {
-                    let dc = to_mixed_uniform(c, &orders);
-                    // per-component linear form: i_t * x_c,t + j_t
-                    let mut digs = Vec::with_capacity(comps.len());
-                    for (t, f) in comps.iter().enumerate() {
-                        digs.push(f.add(f.mul(di[t], dc[t]), dj[t]));
-                    }
-                    data[row * cols + c] = from_mixed(&digs, &orders) as u16;
+                    data[row * cols + c] = linear_entry(&comps, &orders, n, row, c) as u16;
                 }
             }
-        }
-        Ok(OrthogonalArray { n, cols, data })
+            Storage::Dense(data)
+        } else {
+            Storage::Lazy { comps, orders }
+        };
+        Ok(OrthogonalArray { n, cols, storage })
+    }
+
+    /// True when entries are computed per lookup instead of materialized.
+    pub fn is_lazy(&self) -> bool {
+        matches!(self.storage, Storage::Lazy { .. })
     }
 
     pub fn n(&self) -> usize {
@@ -101,11 +164,10 @@ impl OrthogonalArray {
     #[inline]
     pub fn entry(&self, row: usize, col: usize) -> usize {
         debug_assert!(row < self.rows() && col < self.cols);
-        self.data[row * self.cols + col] as usize
-    }
-
-    pub fn row(&self, row: usize) -> &[u16] {
-        &self.data[row * self.cols..(row + 1) * self.cols]
+        match &self.storage {
+            Storage::Dense(data) => data[row * self.cols + col] as usize,
+            Storage::Lazy { comps, orders } => linear_entry(comps, orders, self.n, row, col),
+        }
     }
 
     /// Exhaustive check of Definition 1 (O(cols² · n²)).
@@ -137,13 +199,10 @@ impl OrthogonalArray {
     }
 
     /// The 𝓜 submatrix (paper §4.3): all rows except the first n identical
-    /// ones — n(n−1) rows used to place stripe regions.
+    /// ones — n(n−1) rows used to place stripe regions. A view over the
+    /// parent array (rows offset by n), so it inherits lazy evaluation.
     pub fn m_matrix(&self) -> MMatrix {
-        MMatrix {
-            n: self.n,
-            cols: self.cols,
-            data: self.data[self.n * self.cols..].to_vec(),
-        }
+        MMatrix { a: self.clone() }
     }
 }
 
@@ -151,24 +210,22 @@ impl OrthogonalArray {
 /// regions to racks; the last used column addresses recovered blocks.
 #[derive(Clone, Debug)]
 pub struct MMatrix {
-    n: usize,
-    cols: usize,
-    data: Vec<u16>,
+    a: OrthogonalArray,
 }
 
 impl MMatrix {
     pub fn rows(&self) -> usize {
-        self.n * (self.n - 1)
+        self.a.n * (self.a.n - 1)
     }
 
     pub fn cols(&self) -> usize {
-        self.cols
+        self.a.cols
     }
 
     #[inline]
     pub fn entry(&self, row: usize, col: usize) -> usize {
-        debug_assert!(row < self.rows() && col < self.cols);
-        self.data[row * self.cols + col] as usize
+        debug_assert!(row < self.rows() && col < self.cols());
+        self.a.entry(row + self.a.n, col)
     }
 
     /// Within any row, all entries of the used columns are pairwise
@@ -177,8 +234,8 @@ impl MMatrix {
     /// c ↦ i·x_c + j are injective). D³ relies on this: a stripe region's
     /// groups land in distinct racks.
     pub fn row_entries_distinct(&self, row: usize) -> bool {
-        let mut seen = vec![false; self.n];
-        for c in 0..self.cols {
+        let mut seen = vec![false; self.a.n];
+        for c in 0..self.cols() {
             let v = self.entry(row, c);
             if seen[v] {
                 return false;
@@ -187,30 +244,6 @@ impl MMatrix {
         }
         true
     }
-}
-
-fn to_mixed(mut v: usize, orders: &[usize]) -> Vec<usize> {
-    // most-significant component first
-    let mut out = vec![0; orders.len()];
-    for (slot, &o) in out.iter_mut().zip(orders).rev() {
-        *slot = v % o;
-        v /= o;
-    }
-    out
-}
-
-/// Column index -> per-component element id; columns only go up to
-/// min(orders), so the same id is valid in every component.
-fn to_mixed_uniform(c: usize, orders: &[usize]) -> Vec<usize> {
-    vec![c; orders.len()]
-}
-
-fn from_mixed(digs: &[usize], orders: &[usize]) -> usize {
-    let mut v = 0;
-    for (&d, &o) in digs.iter().zip(orders) {
-        v = v * o + d;
-    }
-    v
 }
 
 #[cfg(test)]
@@ -298,6 +331,44 @@ mod tests {
             }
             assert!(counts.iter().all(|&x| x == 7), "col {c}: {counts:?}");
         }
+    }
+
+    #[test]
+    fn lazy_and_dense_storage_agree_entry_for_entry() {
+        // Force both storages at a size where full comparison is cheap.
+        for (n, cols) in [(12, 3), (9, 4), (20, 4)] {
+            let dense = OrthogonalArray::construct_with_limit(n, cols, usize::MAX).unwrap();
+            let lazy = OrthogonalArray::construct_with_limit(n, cols, 0).unwrap();
+            assert!(!dense.is_lazy() && lazy.is_lazy());
+            for r in 0..dense.rows() {
+                for c in 0..cols {
+                    assert_eq!(dense.entry(r, c), lazy.entry(r, c), "n={n} ({r},{c})");
+                }
+            }
+            assert!(lazy.verify() && lazy.first_rows_identical());
+            let (md, ml) = (dense.m_matrix(), lazy.m_matrix());
+            for r in 0..md.rows() {
+                for c in 0..cols {
+                    assert_eq!(md.entry(r, c), ml.entry(r, c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn large_arrays_go_lazy_automatically() {
+        // 1024² × 8 entries > DENSE_LIMIT_ENTRIES: must not materialize.
+        let oa = OrthogonalArray::construct(1024, 8).unwrap();
+        assert!(oa.is_lazy());
+        // Spot-check the linear form against a small dense slice rebuilt at
+        // the same n (first rows identical, Property-1 column balance on a
+        // sampled column).
+        assert!(oa.first_rows_identical());
+        let mut counts = vec![0usize; 1024];
+        for r in 0..oa.rows() {
+            counts[oa.entry(r, 3)] += 1;
+        }
+        assert!(counts.iter().all(|&x| x == 1024));
     }
 
     #[test]

@@ -518,6 +518,193 @@ pub fn run_fg_benches(opts: &BenchOpts, report: &mut BenchReport) {
     );
 }
 
+/// DESIGN.md §16 rows: what regenerate-on-read costs against a resident
+/// block map, how far a warm hot-block cache bends the degraded-read
+/// path, and the sharded checksum registry against a single global mutex
+/// under 8 writers. The two ratio rows
+/// (`store_synthetic_vs_materialized_read`,
+/// `cache_hit_vs_miss_degraded_read`) are gated by `bench-compare`.
+pub fn run_store_benches(opts: &BenchOpts, report: &mut BenchReport) {
+    use crate::cluster::{
+        parity_matrix, BlockStore, ChecksumRegistry, MaterializedStore, SyntheticStore,
+    };
+
+    let block: usize = 64 << 10;
+    let code = CodeSpec::Rs { k: 3, m: 2 };
+    let len = code.len();
+    let stripes: u64 = if opts.quick { 32 } else { 128 };
+    println!(
+        "=== block store: synthetic regenerate-on-read vs materialized \
+         ({stripes} stripes, {} KiB blocks) ===",
+        block >> 10
+    );
+
+    // Store-layer head-to-head on one node: the synthetic store derives
+    // every payload from the canonical generator; the materialized store
+    // holds byte-identical copies written up front. Both sinks fold the
+    // same bytes, so asserting them equal doubles as a parity check and
+    // keeps the reads from being optimized away.
+    let synthetic = SyntheticStore::new(1, code.k(), len, block, parity_matrix(&code));
+    assert!(synthetic.populate(stripes));
+    let materialized = MaterializedStore::new(1);
+    for sid in 0..stripes {
+        for b in 0..len {
+            materialized.insert(0, (sid, b), synthetic.canonical_window(sid, b, 0, block));
+        }
+    }
+    let iters = if opts.quick { 2 } else { 4 };
+    let total = stripes as usize * len * block;
+    let mut sink_mat = 0u64;
+    let mat = bench_ns_per_byte(iters, total, || {
+        for sid in 0..stripes {
+            for b in 0..len {
+                let v = materialized.read(0, (sid, b)).expect("materialized block");
+                sink_mat = sink_mat.wrapping_add(u64::from(v[0]) + u64::from(v[block - 1]));
+            }
+        }
+    });
+    let mut sink_syn = 0u64;
+    let syn = bench_ns_per_byte(iters, total, || {
+        for sid in 0..stripes {
+            for b in 0..len {
+                let v = synthetic.read(0, (sid, b)).expect("synthetic block");
+                sink_syn = sink_syn.wrapping_add(u64::from(v[0]) + u64::from(v[block - 1]));
+            }
+        }
+    });
+    assert_eq!(sink_mat, sink_syn, "synthetic reads diverged from materialized");
+    report.record("store_read_materialized", mat);
+    report.record("store_read_synthetic", syn);
+    report.record("store_synthetic_vs_materialized_read", syn / mat);
+    println!(
+        "  read: materialized {mat:.3} vs synthetic {syn:.3} ns/B → \
+         regeneration costs {:.2}x (buys O(metadata) memory)",
+        syn / mat
+    );
+
+    // Hot-block cache tier on the degraded-read path: a 4x4 cluster with
+    // a failed node; the miss leg reconstructs every lost block through
+    // the modeled links, the hit leg serves the same keys from a warmed
+    // cache (which skips the store *and* the links).
+    println!("=== hot-block cache: degraded read, warm hit vs reconstruction miss ===");
+    let fg_stripes: u64 = if opts.quick { 8 } else { 16 };
+    let build = || -> (Arc<dyn Placement>, MiniCluster) {
+        let mut cspec = SystemSpec::paper_default();
+        cspec.cluster = ClusterSpec::new(4, 4);
+        cspec.block_size = block as u64;
+        let policy: Arc<dyn Placement> =
+            Arc::new(D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, cspec.cluster).unwrap());
+        let cluster = MiniCluster::new(cspec, policy.clone(), "native", 17).unwrap();
+        cluster
+            .write_stripes_parallel(fg_stripes, 8, |sid| {
+                (0..3).map(|b| deterministic_bytes(block, sid * 3 + b)).collect()
+            })
+            .unwrap();
+        (policy, cluster)
+    };
+    let cspec = ClusterSpec::new(4, 4);
+    let probe = D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, cspec).unwrap();
+    let failed = (0..cspec.node_count())
+        .map(|i| cspec.unflat(i))
+        .find(|&l| (0..fg_stripes).any(|sid| probe.stripe(sid).locs.contains(&l)))
+        .expect("no node holds blocks");
+    let client = (0..cspec.node_count())
+        .map(|i| cspec.unflat(i))
+        .find(|l| l.rack != failed.rack)
+        .expect("no healthy client rack");
+    let lost: Vec<(u64, usize)> = (0..fg_stripes)
+        .flat_map(|sid| (0..len).map(move |b| (sid, b)))
+        .filter(|&(sid, b)| probe.block_at(sid, b) == failed)
+        .collect();
+    assert!(!lost.is_empty());
+    let lost_bytes = lost.len() * block;
+
+    let miss = {
+        let (_, cluster) = build();
+        cluster.fail_node(failed);
+        bench_ns_per_byte(iters, lost_bytes, || {
+            for &(sid, b) in &lost {
+                cluster.degraded_read(sid, b, client).expect("degraded read");
+            }
+        })
+    };
+    let hit = {
+        let (_, mut cluster) = build();
+        cluster.set_cache(64 << 20);
+        cluster.fail_node(failed);
+        // first touch lands in the ghost list, second admits; after the
+        // warmup sweep inside bench_ns_per_byte every timed read hits
+        for &(sid, b) in &lost {
+            cluster.degraded_read(sid, b, client).expect("cache warm");
+        }
+        let ns = bench_ns_per_byte(iters, lost_bytes, || {
+            for &(sid, b) in &lost {
+                cluster.degraded_read(sid, b, client).expect("cached read");
+            }
+        });
+        let stats = cluster.cache_stats().expect("cache installed");
+        assert!(stats.hits > 0, "warmed cache never hit");
+        ns
+    };
+    report.record("cache_miss_read", miss);
+    report.record("cache_hit_read", hit);
+    report.record("cache_hit_vs_miss_degraded_read", hit / miss);
+    println!(
+        "  degraded read over {} lost blocks: miss {miss:.3} vs hit {hit:.3} ns/B → \
+         cache serves at {:.3}x of reconstruction cost",
+        lost.len(),
+        hit / miss
+    );
+
+    // Checksum registry under write contention: 8 workers hammering a
+    // single global mutex vs the 64-shard registry. Reported in ns per
+    // *operation* (one or_insert + one get), not ns/B.
+    println!("=== checksum registry: 8-worker contention, global mutex vs 64 shards ===");
+    let workers: u64 = 8;
+    let ops_per: u64 = if opts.quick { 20_000 } else { 80_000 };
+    let total_ops = (workers * ops_per) as f64;
+    let global: std::sync::Mutex<std::collections::HashMap<(u64, usize), u64>> =
+        std::sync::Mutex::new(std::collections::HashMap::new());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let global = &global;
+            s.spawn(move || {
+                for i in 0..ops_per {
+                    let key = (i % 4096, w as usize);
+                    let mut g = global.lock().unwrap();
+                    g.entry(key).or_insert(i);
+                    let _ = g.get(&key);
+                }
+            });
+        }
+    });
+    let global_ns = t0.elapsed().as_secs_f64() * 1e9 / total_ops;
+    let sharded = ChecksumRegistry::new();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let sharded = &sharded;
+            s.spawn(move || {
+                for i in 0..ops_per {
+                    let key = (i % 4096, w as usize);
+                    sharded.or_insert(key, i);
+                    let _ = sharded.get(key);
+                }
+            });
+        }
+    });
+    let sharded_ns = t0.elapsed().as_secs_f64() * 1e9 / total_ops;
+    report.record("checksums_global_8w", global_ns);
+    report.record("checksums_sharded_8w", sharded_ns);
+    report.record("checksums_sharded_vs_global_8w", sharded_ns / global_ns);
+    println!(
+        "  or_insert+get: global {global_ns:.1} vs sharded {sharded_ns:.1} ns/op → \
+         shards run at {:.2}x of the global lock",
+        sharded_ns / global_ns
+    );
+}
+
 /// The full hot-path suite (`d3ctl bench`, `cargo bench --bench hotpath`).
 pub fn run_hotpath(opts: &BenchOpts) -> BenchReport {
     let mut report = BenchReport::default();
@@ -526,6 +713,7 @@ pub fn run_hotpath(opts: &BenchOpts) -> BenchReport {
     run_encode_benches(opts, &mut report);
     run_sched_benches(opts, &mut report);
     run_fg_benches(opts, &mut report);
+    run_store_benches(opts, &mut report);
     report
 }
 

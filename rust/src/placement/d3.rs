@@ -44,9 +44,6 @@ pub struct D3Placement {
     /// 𝓜 from OA(r, N_g + 1): region-group → rack, plus recovery column.
     m: MMatrix,
     variant: D3Variant,
-    /// `rank[col][value]` = rows i of 𝓐's column `col` holding `value`,
-    /// ascending — used for round-robin node choice in new racks.
-    rank: Vec<Vec<Vec<u16>>>,
 }
 
 /// Errors from D³ construction (§4.5 validity conditions).
@@ -95,8 +92,7 @@ impl D3Placement {
             return Err(D3Error::RackOa { r, cols: ng + 1, max: max_columns(r) });
         }
         let m_matrix = a_prime.m_matrix();
-        let rank = build_rank(&a, ng);
-        Ok(D3Placement { code, cluster, groups, ng, a, m: m_matrix, variant, rank })
+        Ok(D3Placement { code, cluster, groups, ng, a, m: m_matrix, variant })
     }
 
     pub fn groups(&self) -> &[std::ops::Range<usize>] {
@@ -156,25 +152,17 @@ impl D3Placement {
     /// Round-robin rank of within-region stripe `i` among the region's
     /// stripes whose 𝓐 entry at column `j` equals 𝓐's entry for `i`
     /// (used for node assignment inside a *new* rack, Fig 4(b)).
-    fn new_rack_node(&self, i: usize, j: usize) -> usize {
-        let v = self.a.entry(i, j);
-        let list = &self.rank[j][v];
-        let pos = list.iter().position(|&x| x as usize == i).expect("row in rank list");
-        pos % self.cluster.nodes_per_rack
+    ///
+    /// Closed form: with row id `i = i₁·n + i₂`, the linear OA entry at
+    /// column c is `i₁·c + i₂` over the component fields, so within a
+    /// value class each `i₁` appears exactly once and ascending row order
+    /// is ascending `i₁` — the rank of row `i` in its class is `i / n`
+    /// for every column. (The old explicit rank lists also stored row ids
+    /// as `u16`, overflowing silently at n ≥ 256; the closed form scales
+    /// to any n and is O(1).)
+    fn new_rack_node(&self, i: usize, _j: usize) -> usize {
+        (i / self.a.n()) % self.cluster.nodes_per_rack
     }
-}
-
-fn build_rank(a: &OrthogonalArray, ng: usize) -> Vec<Vec<Vec<u16>>> {
-    let n = a.n();
-    (0..ng)
-        .map(|col| {
-            let mut per_value = vec![Vec::new(); n];
-            for row in 0..a.rows() {
-                per_value[a.entry(row, col)].push(row as u16);
-            }
-            per_value
-        })
-        .collect()
 }
 
 fn splitmix(mut x: u64) -> u64 {
@@ -213,6 +201,18 @@ impl Placement for D3Placement {
             }
         }
         StripePlacement { locs }
+    }
+
+    /// Alloc-free single-block lookup (DESIGN.md §16): the same group
+    /// arithmetic as [`D3Placement::stripe`] restricted to `block`'s
+    /// group — no `Vec` of the whole stripe on the NameNode hot path.
+    fn block_at(&self, sid: u64, block: usize) -> Location {
+        let (i, row) = self.decompose(sid);
+        let j = d3_group_of(&self.groups, block);
+        let rack = self.group_rack(row, j);
+        let base = self.group_base_node(sid, i, j);
+        let n = self.cluster.nodes_per_rack;
+        Location::new(rack, (base + (block - self.groups[j].start)) % n)
     }
 
     /// §5.1 target selection. Cases keyed by b = len mod m:
@@ -400,6 +400,46 @@ mod tests {
         let max = per_node.values().max().unwrap();
         let min = per_node.values().min().unwrap();
         assert!(max - min <= 1, "unbalanced round robin: {per_node:?}");
+    }
+
+    #[test]
+    fn block_at_agrees_with_stripe() {
+        for (k, m) in [(2usize, 1usize), (3, 2), (6, 3)] {
+            let p = d3(k, m, paper_cluster());
+            for sid in 0..800u64 {
+                let sp = p.stripe(sid);
+                for (bi, &want) in sp.locs.iter().enumerate() {
+                    assert_eq!(p.block_at(sid, bi), want, "({k},{m}) sid={sid} b={bi}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn closed_form_rank_matches_explicit_rank_lists() {
+        // the i/n closed form must reproduce the old per-column rank-list
+        // scan: within each OA column's value class, ascending rows rank
+        // by their i₁ component
+        for cluster in [ClusterSpec::new(8, 3), ClusterSpec::new(5, 4), ClusterSpec::new(8, 6)] {
+            let p = d3(3, 2, cluster);
+            let a = &p.a;
+            let n = a.n();
+            for col in 0..p.ng() {
+                let mut per_value: Vec<Vec<usize>> = vec![Vec::new(); n];
+                for row in 0..a.rows() {
+                    per_value[a.entry(row, col)].push(row);
+                }
+                for list in &per_value {
+                    for (pos, &row) in list.iter().enumerate() {
+                        assert_eq!(
+                            row / n,
+                            pos,
+                            "n={n} col={col}: closed-form rank diverges at row {row}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -62,6 +62,15 @@ pub trait Placement: Send + Sync {
     /// Placement of stripe `sid` (deterministic per policy + seed).
     fn stripe(&self, sid: u64) -> StripePlacement;
 
+    /// Location of a single block — the non-cloning hot-path lookup
+    /// (DESIGN.md §16). The default derives it from [`Placement::stripe`];
+    /// policies with direct per-block arithmetic (D³) and the table
+    /// override it to avoid materializing a full `StripePlacement` per
+    /// call.
+    fn block_at(&self, sid: u64, block: usize) -> Location {
+        self.stripe(sid).locs[block]
+    }
+
     /// Where the recovered copy of block `block` of stripe `sid` goes when
     /// node `failed` fails. Must not be `failed` itself, must not collide
     /// with a surviving block of the stripe, and must preserve the rack
@@ -93,6 +102,12 @@ pub struct PlacementTable {
 }
 
 impl PlacementTable {
+    /// Hard cap on cached stripe placements, so at-scale runs (millions
+    /// of stripes, or D³ periods in the billions at n = 10k) build in
+    /// bounded memory: lookups past the cap stream through the wrapped
+    /// policy's arithmetic instead (DESIGN.md §16).
+    pub const MAX_CACHED: u64 = 1 << 18;
+
     /// Precompute the lookup table for a run over stripes `0..stripes`.
     pub fn build(inner: std::sync::Arc<dyn Placement>, stripes: u64) -> PlacementTable {
         let stripes = stripes.max(1);
@@ -100,7 +115,7 @@ impl PlacementTable {
             Some(p) if p <= stripes => (p, Some(p)),
             Some(_) | None => (stripes, None),
         };
-        let table = (0..len).map(|sid| inner.stripe(sid)).collect();
+        let table = (0..len.min(Self::MAX_CACHED)).map(|sid| inner.stripe(sid)).collect();
         PlacementTable {
             inner,
             table,
@@ -145,6 +160,19 @@ impl Placement for PlacementTable {
         self.fallback_computes
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.inner.stripe(sid)
+    }
+
+    fn block_at(&self, sid: u64, block: usize) -> Location {
+        let idx = match self.full_period {
+            Some(p) => sid % p,
+            None => sid,
+        };
+        if let Some(sp) = self.table.get(idx as usize) {
+            return sp.locs[block];
+        }
+        self.fallback_computes
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.inner.block_at(sid, block)
     }
 
     fn recovery_target(&self, sid: u64, block: usize, failed: Location) -> Location {
@@ -307,6 +335,39 @@ mod tests {
             assert_eq!(table.stripe(sid), inner.stripe(sid), "sid={sid}");
         }
         assert_eq!(table.fallback_computes(), 2, "two out-of-range lookups");
+    }
+
+    #[test]
+    fn block_at_matches_stripe_everywhere() {
+        let inner = std::sync::Arc::new(
+            D3Placement::new(CodeSpec::Rs { k: 3, m: 2 }, ClusterSpec::new(5, 3)).unwrap(),
+        );
+        let table = PlacementTable::build(inner.clone(), 64);
+        for sid in 0..500u64 {
+            let sp = inner.stripe(sid);
+            for (b, &want) in sp.locs.iter().enumerate() {
+                assert_eq!(inner.block_at(sid, b), want, "policy sid={sid} b={b}");
+                assert_eq!(table.block_at(sid, b), want, "table sid={sid} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn placement_table_is_capped_but_exact_beyond_the_cap() {
+        let inner = std::sync::Arc::new(RddPlacement::new(
+            CodeSpec::Rs { k: 2, m: 1 },
+            ClusterSpec::new(8, 3),
+            11,
+        ));
+        let stripes = PlacementTable::MAX_CACHED + 2;
+        let table = PlacementTable::build(inner.clone(), stripes);
+        assert_eq!(table.cached_stripes() as u64, PlacementTable::MAX_CACHED);
+        // beyond-cap lookups stream through the wrapped policy, exactly
+        for sid in [PlacementTable::MAX_CACHED, stripes - 1] {
+            assert_eq!(table.stripe(sid), inner.stripe(sid), "sid={sid}");
+            assert_eq!(table.block_at(sid, 0), inner.block_at(sid, 0), "sid={sid}");
+        }
+        assert_eq!(table.fallback_computes(), 4);
     }
 
     #[test]

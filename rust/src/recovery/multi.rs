@@ -47,11 +47,14 @@ pub fn scenario_recovery_plans(
     seed: u64,
 ) -> Result<Vec<RepairPlan>> {
     let failed_set: HashSet<Location> = failed.iter().copied().collect();
+    let len = policy.code().len();
     let mut plans = Vec::new();
     for sid in 0..stripes {
-        let sp = policy.stripe(sid);
-        let lost: Vec<usize> = (0..sp.locs.len())
-            .filter(|&b| failed_set.contains(&sp.locs[b]))
+        // Alloc-free miss path: most stripes lose nothing, so probe block
+        // locations one at a time and only plan (which materializes the
+        // full stripe) on a hit.
+        let lost: Vec<usize> = (0..len)
+            .filter(|&b| failed_set.contains(&policy.block_at(sid, b)))
             .collect();
         if lost.is_empty() {
             continue;

@@ -202,9 +202,18 @@ impl FailureScenario {
                     None => self.stripes,
                 };
                 let mut holds = vec![false; count];
-                for sid in 0..probe {
-                    for &loc in &policy.stripe(sid).locs {
-                        holds[cluster.flat(loc)] = true;
+                let len = policy.code().len();
+                let mut missing = count;
+                'probe: for sid in 0..probe {
+                    for b in 0..len {
+                        let slot = cluster.flat(policy.block_at(sid, b));
+                        if !holds[slot] {
+                            holds[slot] = true;
+                            missing -= 1;
+                            if missing == 0 {
+                                break 'probe;
+                            }
+                        }
                     }
                 }
                 for off in 0..count {

@@ -1,0 +1,104 @@
+//! Bounded-memory regression for the synthetic block store (DESIGN.md
+//! §16): a scenario whose *virtual* payload footprint is several GB must
+//! run with a live-heap peak orders of magnitude smaller, because the
+//! synthetic store regenerates payloads on read instead of holding them
+//! resident. Enforced with a counting global allocator — the same
+//! mechanism that would catch an accidental `Vec<Vec<u8>>` block map
+//! sneaking back into the scenario path.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use d3ec::cluster::{ClusterBackend, StoreMode};
+use d3ec::codes::CodeSpec;
+use d3ec::placement::{D3Placement, Placement};
+use d3ec::scenario::{FailureScenario, RecoveryBackend};
+use d3ec::topology::{ClusterSpec, SystemSpec};
+
+/// Live bytes right now, and the high-water mark since process start.
+static CURRENT: AtomicU64 = AtomicU64::new(0);
+static PEAK: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+fn bump(n: u64) {
+    let live = CURRENT.fetch_add(n, Ordering::Relaxed) + n;
+    PEAK.fetch_max(live, Ordering::Relaxed);
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            bump(layout.size() as u64);
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc_zeroed(layout);
+        if !p.is_null() {
+            bump(layout.size() as u64);
+        }
+        p
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            CURRENT.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+            bump(new_size as u64);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        CURRENT.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn multi_gb_scenario_peaks_far_below_its_virtual_footprint() {
+    // 128 nodes (n = 16 per rack keeps the D³ orthogonal array wide
+    // enough for rs-6-3), 20k stripes, 32 KiB blocks: ~5.9 GB of virtual
+    // payload. Auto mode must flip to the synthetic store and the whole
+    // run — populate, probe, plan, recover — must stay O(metadata).
+    let mut spec = SystemSpec::paper_default();
+    spec.cluster = ClusterSpec::new(8, 16);
+    spec.block_size = 32 << 10;
+    let code = CodeSpec::Rs { k: 6, m: 3 };
+    let stripes = 20_000u64;
+    let virt = stripes as u128 * code.len() as u128 * spec.block_size as u128;
+    assert!(virt > 5 << 30, "test footprint shrank — bump stripes");
+    assert!(StoreMode::Auto.synthetic_for(stripes, code.len(), spec.block_size));
+
+    let policy: Arc<dyn Placement> = Arc::new(D3Placement::new(code, spec.cluster).unwrap());
+    let backend = ClusterBackend { block_size: spec.block_size, ..ClusterBackend::default() };
+    let scenario = FailureScenario::single_node(stripes, 2);
+
+    PEAK.store(CURRENT.load(Ordering::Relaxed), Ordering::Relaxed);
+    let out = backend.run(&scenario, &policy, &spec).unwrap();
+    let peak = PEAK.load(Ordering::Relaxed);
+
+    assert!(out.blocks > 500, "failed node held suspiciously few blocks: {}", out.blocks);
+    assert!(peak > 0, "allocator counter never engaged");
+    let cap: u64 = 192 << 20;
+    assert!(
+        peak < cap,
+        "live-heap peak {} MB exceeds the {} MB bound (virtual footprint {} MB)",
+        peak >> 20,
+        cap >> 20,
+        (virt >> 20) as u64
+    );
+    assert!(
+        (peak as u128) * 20 < virt,
+        "peak {} MB is not far below the {} MB virtual footprint",
+        peak >> 20,
+        (virt >> 20) as u64
+    );
+}

@@ -1,0 +1,189 @@
+//! Differential suite for the DESIGN.md §16 block-store refactor: the
+//! synthetic regenerate-on-read store must be observationally identical
+//! to the materialized store everywhere except resident memory. Scenario
+//! outcomes (blocks, bytes, per-rack byte accounting, λ, plan structure)
+//! are compared field-for-field, block reads are compared byte-for-byte,
+//! and the scrub/repair loop is exercised against the synthetic overlay.
+//! Wall-clock fields (seconds, latency values) are explicitly *not*
+//! compared — only sample counts.
+
+use std::sync::Arc;
+
+use d3ec::client::FgSpec;
+use d3ec::cluster::fabric::run_scrub;
+use d3ec::cluster::{
+    deterministic_data, BlockFabric, ClusterBackend, MiniCluster, StoreMode,
+};
+use d3ec::codes::CodeSpec;
+use d3ec::placement::{D3Placement, Placement};
+use d3ec::recovery::ExecutorConfig;
+use d3ec::scenario::{FailureScenario, RecoveryBackend, ScenarioOutcome};
+use d3ec::topology::{Location, SystemSpec};
+
+fn d3_policy(spec: &SystemSpec, code: CodeSpec) -> Arc<dyn Placement> {
+    Arc::new(D3Placement::new(code, spec.cluster).unwrap())
+}
+
+fn backend(store: StoreMode, cache_mb: u64) -> ClusterBackend {
+    ClusterBackend { block_size: 16 << 10, store, cache_mb, ..ClusterBackend::default() }
+}
+
+/// The deterministic half of a [`ScenarioOutcome`]: everything that must
+/// be bit-identical across block-store representations.
+fn deterministic_fields(
+    out: &ScenarioOutcome,
+) -> (usize, u64, usize, f64, Vec<(u64, u64)>, Option<usize>) {
+    (
+        out.blocks,
+        out.bytes,
+        out.planned_cross_rack_blocks,
+        out.lambda,
+        out.rack_cross_bytes.clone(),
+        out.fg_latency.as_ref().map(|s| s.count),
+    )
+}
+
+#[test]
+fn synthetic_and_materialized_backends_agree_exactly() {
+    let spec = SystemSpec::paper_default();
+    let policy = d3_policy(&spec, CodeSpec::Rs { k: 6, m: 3 });
+    let scenarios = [
+        FailureScenario::single_node(40, 2),
+        FailureScenario::multi_node(2, 40, 9),
+        FailureScenario::rack_failure(0, 30, 3),
+        FailureScenario::degraded_burst(24, 30, 5),
+    ];
+    for scenario in scenarios {
+        let mat = backend(StoreMode::Materialized, 0).run(&scenario, &policy, &spec).unwrap();
+        let syn = backend(StoreMode::Synthetic, 0).run(&scenario, &policy, &spec).unwrap();
+        assert!(mat.blocks > 0, "{}: empty scenario", scenario.name());
+        assert_eq!(
+            deterministic_fields(&mat),
+            deterministic_fields(&syn),
+            "{}: synthetic store diverged from materialized",
+            scenario.name()
+        );
+    }
+}
+
+#[test]
+fn synthetic_cluster_serves_byte_identical_blocks() {
+    let mut spec = SystemSpec::paper_default();
+    spec.block_size = 16 << 10;
+    spec.net.inner_mbps = 8000.0;
+    spec.net.cross_mbps = 1600.0;
+    let code = CodeSpec::Rs { k: 3, m: 2 };
+    let policy = d3_policy(&spec, code);
+    let stripes = 30u64;
+    let bs = spec.block_size as usize;
+
+    let written = MiniCluster::new(spec, policy.clone(), "native", 7).unwrap();
+    written
+        .write_stripes_parallel(stripes, 4, |sid| deterministic_data(sid, 3, bs))
+        .unwrap();
+    let synthetic = MiniCluster::new_synthetic(spec, policy.clone(), "native", 7).unwrap();
+    synthetic.populate_synthetic(stripes).unwrap();
+
+    let client = Location::new(0, 0);
+    for sid in 0..stripes {
+        for b in 0..code.len() {
+            let want = written.read_block(sid, b, client).unwrap();
+            let got = synthetic.read_block(sid, b, client).unwrap();
+            assert_eq!(got, want, "sid={sid} b={b}: synthetic bytes diverged");
+            assert_eq!(
+                BlockFabric::stored_checksum(&synthetic, sid, b).unwrap(),
+                BlockFabric::stored_checksum(&written, sid, b).unwrap(),
+                "sid={sid} b={b}: checksum diverged"
+            );
+        }
+    }
+
+    // degraded reads reconstruct the same bytes on both representations
+    let victim = written.locate(5, 1);
+    written.fail_node(victim);
+    synthetic.fail_node(victim);
+    let (want, _) = written.degraded_read(5, 1, Location::new(1, 0)).unwrap();
+    let (got, _) = synthetic.degraded_read(5, 1, Location::new(1, 0)).unwrap();
+    assert_eq!(got, want, "degraded read diverged across stores");
+}
+
+#[test]
+fn scrub_repairs_planted_corruption_on_the_synthetic_store() {
+    let mut spec = SystemSpec::paper_default();
+    spec.block_size = 16 << 10;
+    spec.net.inner_mbps = 8000.0;
+    spec.net.cross_mbps = 1600.0;
+    let policy = d3_policy(&spec, CodeSpec::Rs { k: 3, m: 2 });
+    let stripes = 20u64;
+    let cluster = MiniCluster::new_synthetic(spec, policy.clone(), "native", 3).unwrap();
+    cluster.populate_synthetic(stripes).unwrap();
+
+    // two corruptions in the same stripe force the multi-erasure planner;
+    // the synthetic store represents them as overlay entries over an
+    // otherwise unmaterialized base population
+    let planted = [(2u64, 0usize), (2, 1), (7, 4)];
+    for &(sid, b) in &planted {
+        cluster.corrupt_stored(sid, b).unwrap();
+        assert_ne!(
+            BlockFabric::stored_checksum(&cluster, sid, b).unwrap(),
+            cluster.expected_checksum(sid, b).unwrap(),
+            "corruption did not take on the synthetic overlay"
+        );
+    }
+    let cfg = ExecutorConfig { workers: 4, ..ExecutorConfig::default() };
+    let report = run_scrub(&cluster, policy.as_ref(), stripes, cfg, 3).unwrap();
+    assert_eq!(report.scanned, stripes * cluster.code().len() as u64);
+    assert_eq!(report.quarantined, planted.len() as u64);
+    assert_eq!(report.repaired, planted.len() as u64);
+    // every repaired block matches the write-time oracle again
+    for &(sid, b) in &planted {
+        assert_eq!(
+            BlockFabric::stored_checksum(&cluster, sid, b).unwrap(),
+            cluster.expected_checksum(sid, b).unwrap(),
+        );
+    }
+    let again = run_scrub(&cluster, policy.as_ref(), stripes, cfg, 3).unwrap();
+    assert_eq!(again.quarantined, 0, "scrub re-quarantined a repaired block");
+}
+
+#[test]
+fn auto_mode_picks_synthetic_only_past_the_footprint_threshold() {
+    // 40 stripes x 9 blocks x 16 KiB = 5.6 MB: stays materialized
+    assert!(!StoreMode::Auto.synthetic_for(40, 9, 16 << 10));
+    // the ISSUE's 10k-node invocation: 2M stripes x 9 x 256 KiB = 4.5 TB
+    assert!(StoreMode::Auto.synthetic_for(2_000_000, 9, 256 << 10));
+    assert!(!StoreMode::Materialized.synthetic_for(2_000_000, 9, 256 << 10));
+    assert!(StoreMode::Synthetic.synthetic_for(1, 9, 16 << 10));
+}
+
+#[test]
+fn warm_cache_bends_the_zipf_degraded_read_tail() {
+    // Zipf-skewed degraded burst: the same hot lost blocks are hit over
+    // and over, so with the cache tier on, all but the first touches are
+    // served from memory and skip both the store and the modeled links.
+    // With enough requests, the tail lands in cache-hit territory too.
+    let spec = SystemSpec::paper_default();
+    let policy = d3_policy(&spec, CodeSpec::Rs { k: 6, m: 3 });
+    let reads = 4000;
+    let scenario = FailureScenario::degraded_burst(reads, 16, 7)
+        .with_fg(FgSpec::burst(reads).with_zipf(1.2));
+
+    let off = backend(StoreMode::Synthetic, 0).run(&scenario, &policy, &spec).unwrap();
+    let on = backend(StoreMode::Synthetic, 64).run(&scenario, &policy, &spec).unwrap();
+    let off_lat = off.fg_latency.expect("burst always reports latency");
+    let on_lat = on.fg_latency.expect("burst always reports latency");
+    assert_eq!(off_lat.count, reads);
+    assert_eq!(on_lat.count, reads);
+    assert!(
+        on_lat.p50 < off_lat.p50,
+        "cache did not bend the median: on {} vs off {}",
+        on_lat.p50,
+        off_lat.p50
+    );
+    assert!(
+        on_lat.p99 < off_lat.p99,
+        "cache did not bend the tail: on {} vs off {}",
+        on_lat.p99,
+        off_lat.p99
+    );
+}
